@@ -1,0 +1,72 @@
+//! TeraSort: burst computing's single-flare all-to-all shuffle vs the
+//! serverless-MapReduce baseline staged through object storage (paper
+//! §5.4.3 / Fig. 11).
+//!
+//! Run: `make artifacts && cargo run --release --example terasort_shuffle`
+
+use burstc::apps::{self, mapreduce, terasort, AppEnv};
+use burstc::cluster::netmodel::NetParams;
+use burstc::platform::{Controller, FlareOptions};
+use burstc::runtime::engine::global_pool;
+use burstc::storage::ObjectStore;
+use burstc::util::bytes;
+use burstc::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = burstc::util::cli::Args::from_env();
+    let workers = args.usize("workers", 16);
+    let keys = args.usize("keys-per-worker", 30_000);
+
+    let net = NetParams::default();
+    let controller = Controller::new(
+        burstc::cluster::ClusterSpec::uniform(2, 96),
+        Default::default(),
+        net.clone(),
+    );
+    let env = AppEnv { store: ObjectStore::new(net), pool: global_pool()? };
+    apps::register_all(&env);
+    terasort::generate(&env, "demo", workers, keys, 42);
+    println!("sorting {} keys across {workers} workers", workers * keys);
+
+    // --- serverless MapReduce: two FaaS rounds via storage ---
+    mapreduce::deploy(&controller)?;
+    let mr = mapreduce::run_terasort_mapreduce(&controller, "demo", workers)?;
+    terasort::validate_outputs(&mr.reduce.outputs, workers * keys)?;
+    println!(
+        "\nMapReduce: map {:.2}s + sync {:.2}s + reduce {:.2}s = {:.2}s, shuffle via storage: {}",
+        mr.map.total_s(),
+        mr.stage_gap_s,
+        mr.reduce.total_s(),
+        mr.total_s(),
+        bytes::human(mr.shuffle_storage_bytes(&env, "demo")),
+    );
+
+    // --- burst computing: one flare, locality-aware all-to-all ---
+    controller.deploy("ts", terasort::WORK_NAME, Default::default())?;
+    let params: Vec<Json> =
+        (0..workers).map(|_| Json::obj(vec![("job", "demo".into())])).collect();
+    let burst = controller.flare(
+        "ts",
+        params,
+        &FlareOptions {
+            granularity: Some(workers / 2),
+            strategy: Some("homogeneous".into()),
+            ..Default::default()
+        },
+    )?;
+    terasort::validate_outputs(&burst.outputs, workers * keys)?;
+    let burst_total = burst.startup.all_ready_s + burst.work_wall_s;
+    println!(
+        "burst:     invoke {:.2}s + work {:.2}s = {:.2}s, remote shuffle: {} (locality {:.0}%)",
+        burst.startup.all_ready_s,
+        burst.work_wall_s,
+        burst_total,
+        bytes::human(burst.traffic.remote()),
+        100.0 * burst.traffic.locality_ratio(),
+    );
+    println!("\nspeed-up: {:.2}x (paper: ~2x)", mr.total_s() / burst_total);
+
+    println!("\nburst worker timeline:");
+    print!("{}", burst.timeline.render_ascii(60));
+    Ok(())
+}

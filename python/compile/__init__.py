@@ -1,0 +1,6 @@
+"""burstc build-time Python package: L2 JAX models + L1 Pallas kernels + AOT.
+
+This package is only ever executed at build time (``make artifacts``); the
+Rust coordinator loads the lowered HLO artifacts through PJRT and Python is
+never on the request path.
+"""

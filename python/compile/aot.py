@@ -1,0 +1,71 @@
+"""AOT pipeline: lower every L2 unit to HLO text + write the manifest.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla_extension
+0.5.1 bundled with the Rust ``xla`` crate rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md). Everything is lowered with ``return_tuple=True``
+and unwrapped tuple-wise on the Rust side.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "units": {}}
+    for name, (fn, args) in model.aot_units().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            _spec_json(o) for o in jax.eval_shape(fn, *args)
+        ]
+        manifest["units"][name] = {
+            "file": fname,
+            "inputs": [_spec_json(a) for a in args],
+            "outputs": out_shapes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    manifest["shapes"] = model.SHAPES
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['units'])} units")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

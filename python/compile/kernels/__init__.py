@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for burstc worker compute.
+
+Each kernel is the compute hot-spot of one burst application from the paper's
+evaluation (Section 5.4):
+
+- ``pagerank``  — blocked rank-contribution SpMV (dense blocks) used by the
+  PageRank burst worker each iteration.
+- ``sgd``       — fused logistic-regression gradient step used by the
+  hyperparameter-tuning (grid search) burst workers.
+- ``histogram`` — key-partition histogram used by TeraSort map workers to
+  split records into range buckets ahead of the all-to-all shuffle.
+- ``kmeans``    — assignment + accumulation step for the k-means burst
+  (extension application mentioned in the paper's intro).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU efficiency is estimated in DESIGN.md §Perf
+from the BlockSpec tiling (VMEM footprint + MXU alignment).
+"""

@@ -1,0 +1,72 @@
+"""Key-partition histogram kernel for the TeraSort burst.
+
+TeraSort (paper §5.4.3) range-partitions records by key before the all-to-all
+shuffle: every map worker must count (and later scatter) its records into
+``P`` key ranges delimited by ``P - 1`` sorted splitters. The hot spot is the
+partition histogram over millions of keys.
+
+The kernel walks key blocks of ``bn`` keys; for each block it computes every
+key's bucket as ``sum(key >= splitter)`` — a (bn, P-1) broadcast compare that
+maps onto the VPU — then accumulates a one-hot count matrix into the
+``P``-wide histogram kept resident in VMEM across the grid.
+
+Padding convention: callers pad the key array to a multiple of ``bn`` with
+``i32::MAX`` sentinels and subtract the pad count from the last bucket.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 2048  # keys per grid step
+
+
+def _hist_kernel(keys_ref, splits_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    keys = keys_ref[...]  # (bn, 1) i32
+    splits = splits_ref[...]  # (1, P-1) i32
+    # bucket id of each key: number of splitters <= key.
+    bucket = jnp.sum((keys >= splits).astype(jnp.int32), axis=1)  # (bn,)
+    p = o_ref.shape[1]
+    onehot = (bucket[:, None] == jax.lax.iota(jnp.int32, p)[None, :]).astype(
+        jnp.int32
+    )  # (bn, P)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def partition_hist(keys, splits, *, bn: int = BN):
+    """Histogram of ``keys`` over the ranges defined by sorted ``splits``.
+
+    Args:
+      keys: i32[N] keys; N must be a multiple of ``bn`` (pad with i32::MAX).
+      splits: i32[P-1] sorted range splitters (bucket p holds keys in
+        ``[splits[p-1], splits[p])``).
+      bn: keys per grid step.
+
+    Returns:
+      i32[P] counts per bucket.
+    """
+    (n,) = keys.shape
+    (pm1,) = splits.shape
+    p = pm1 + 1
+    assert n % bn == 0, (n, bn)
+    out = pl.pallas_call(
+        _hist_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, pm1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.int32),
+        interpret=True,
+    )(keys.reshape(n, 1), splits.reshape(1, pm1))
+    return out.reshape(p)

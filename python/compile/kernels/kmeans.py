@@ -1,0 +1,86 @@
+"""k-means assignment + accumulation kernel.
+
+k-means is one of the iterative, reduce-heavy bursts the paper's intro
+motivates ("iterative algorithms like PageRank or k-means ... are unfeasible
+with [the FaaS] approach"). Each burst worker holds a shard of the points;
+per iteration it assigns its points to the nearest centroid and produces the
+partial centroid sums + counts + cost, which the BCM ``reduce`` collective
+aggregates before the root recomputes centroids and broadcasts them.
+
+The kernel fuses distance computation, argmin, and the one-hot accumulation
+over point tiles: the ``(bn, D)`` point tile and the full ``(K, D)`` centroid
+matrix are VMEM-resident; the ``-2 X C^T`` term is an MXU matmul; the sums,
+counts and cost outputs are revisited across the grid for accumulation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256  # points per grid step
+
+
+def _kmeans_kernel(x_ref, c_ref, sums_ref, cnt_ref, cost_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        cost_ref[...] = jnp.zeros_like(cost_ref)
+
+    x = x_ref[...]  # (bn, D)
+    c = c_ref[...]  # (K, D)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bn, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    d2 = x2 - 2.0 * (x @ c.T) + c2  # (bn, K)
+    assign = jnp.argmin(d2, axis=1)  # (bn,)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jax.lax.iota(jnp.int32, k)[None, :]).astype(
+        x.dtype
+    )  # (bn, K)
+    sums_ref[...] += onehot.T @ x  # (K, D)
+    cnt_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)  # (1, K)
+    cost_ref[...] += jnp.sum(
+        jnp.maximum(jnp.min(d2, axis=1), 0.0), keepdims=True
+    ).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def assign_accumulate(x, c, *, bn: int = BN):
+    """One k-means E-step + partial M-step over this worker's shard.
+
+    Args:
+      x: f32[N, D] points; N must be a multiple of ``bn``.
+      c: f32[K, D] current centroids.
+      bn: points per grid step.
+
+    Returns:
+      (sums, counts, cost): f32[K, D] per-centroid coordinate sums,
+      f32[K] member counts, f32[] summed squared distance.
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2 and n % bn == 0, (x.shape, c.shape, bn)
+    sums, cnt, cost = pl.pallas_call(
+        _kmeans_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), x.dtype),
+            jax.ShapeDtypeStruct((1, k), x.dtype),
+            jax.ShapeDtypeStruct((1, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, c)
+    return sums, cnt.reshape(k), cost.reshape(())

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert ``allclose(kernel(...), ref(...))`` across shapes and dtypes. They are
+also what the AOT pipeline falls back to when a model variant does not need
+the Pallas path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_contrib(block, x):
+    """f32[N,K] @ f32[K] -> f32[N]."""
+    return block @ x
+
+
+def logreg_grad(x, y, w):
+    """Mean BCE gradient and loss of logistic regression."""
+    b = x.shape[0]
+    logits = x @ w
+    p = jax.nn.sigmoid(logits)
+    g = x.T @ (p - y) / b
+    nll = jnp.logaddexp(0.0, logits) - y * logits
+    return g, jnp.mean(nll)
+
+
+def partition_hist(keys, splits):
+    """i32[N], i32[P-1] -> i32[P] bucket counts."""
+    bucket = jnp.sum((keys[:, None] >= splits[None, :]).astype(jnp.int32), axis=1)
+    p = splits.shape[0] + 1
+    return jnp.sum(
+        (bucket[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32), axis=0
+    )
+
+
+def kmeans_assign_accumulate(x, c):
+    """One k-means E-step + partial M-step."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d2 = x2 - 2.0 * (x @ c.T) + c2
+    assign = jnp.argmin(d2, axis=1)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    cost = jnp.sum(jnp.maximum(jnp.min(d2, axis=1), 0.0))
+    return sums, counts, cost

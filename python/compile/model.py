@@ -1,0 +1,150 @@
+"""L2 JAX compute graphs for burstc workers.
+
+Each function here is one AOT unit: it is lowered once by ``aot.py`` to HLO
+text and executed from Rust worker threads through PJRT. The graphs call the
+L1 Pallas kernels so the kernels lower into the same HLO module.
+
+Shape policy (AOT is shape-specialized): every artifact is compiled for the
+fixed shapes in ``SHAPES``; the Rust side pads or loops chunks to fit, which
+keeps one executable per variant regardless of burst size (DESIGN.md §2).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import histogram, kmeans, pagerank, sgd
+
+# ---------------------------------------------------------------------------
+# Fixed AOT shapes. Mirrored in artifacts/manifest.json for the Rust runtime.
+# ---------------------------------------------------------------------------
+SHAPES = {
+    # PageRank: N global nodes, K node-columns per kernel call (Rust loops
+    # ceil(local_nodes / K) chunks, zero-padding the last one).
+    "pagerank": {"n": 1024, "k": 128},
+    # Grid search: B samples per epoch chunk, D features (incl. bias col),
+    # MB minibatch rows for the scan.
+    "sgd": {"b": 1024, "d": 64, "mb": 128},
+    # TeraSort: KEYS keys per kernel call, P partitions (max burst size for
+    # the shuffle; smaller bursts merge trailing buckets).
+    "histogram": {"keys": 65536, "p": 256},
+    # k-means: N points per shard chunk, D dims, K centroids.
+    "kmeans": {"n": 1024, "d": 16, "k": 16},
+}
+
+DAMPING = 0.85  # PageRank damping factor (paper uses the classic setting).
+
+
+# ---------------------------------------------------------------------------
+# PageRank
+# ---------------------------------------------------------------------------
+def pagerank_contrib(block, x):
+    """Worker-side contribution: dense transition block @ (rank/outdeg).
+
+    block: f32[N, K], x: f32[K] -> f32[N].
+    """
+    return (pagerank.rank_contrib(block, x),)
+
+
+def pagerank_finalize(contrib_sum, prev_ranks):
+    """Root-side step: damping + L1 convergence error.
+
+    contrib_sum: f32[N] (BCM-reduced over workers), prev_ranks: f32[N].
+    Returns (new_ranks f32[N], err f32[]).
+    """
+    n = contrib_sum.shape[0]
+    new_ranks = (1.0 - DAMPING) / n + DAMPING * contrib_sum
+    err = jnp.sum(jnp.abs(new_ranks - prev_ranks))
+    return new_ranks, err
+
+
+# ---------------------------------------------------------------------------
+# Grid search (hyperparameter tuning)
+# ---------------------------------------------------------------------------
+def sgd_epoch(x, y, w, lr, reg):
+    """One epoch of minibatch gradient descent on logistic regression.
+
+    ``lax.scan`` over minibatches (no unrolling — keeps the HLO small and
+    lets XLA pipeline the fused kernel). x: f32[B, D], y: f32[B], w: f32[D],
+    lr/reg: f32[]. Returns (w' f32[D], mean epoch loss f32[]).
+    """
+    b, d = x.shape
+    mb = SHAPES["sgd"]["mb"]
+    steps = b // mb
+    xb = x.reshape(steps, mb, d)
+    yb = y.reshape(steps, mb)
+
+    def step(w, batch):
+        xi, yi = batch
+        g, loss = sgd.logreg_grad(xi, yi, w)
+        w = w - lr * (g + reg * w)
+        return w, loss
+
+    w, losses = lax.scan(step, w, (xb, yb))
+    return w, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# TeraSort
+# ---------------------------------------------------------------------------
+def histogram_partition(keys, splits):
+    """Partition histogram for the shuffle. keys: i32[KEYS], splits: i32[P-1]."""
+    return (histogram.partition_hist(keys, splits),)
+
+
+def sort_keys(keys):
+    """Per-worker final sort of its shuffled key range (XLA sort)."""
+    return (jnp.sort(keys),)
+
+
+# ---------------------------------------------------------------------------
+# k-means
+# ---------------------------------------------------------------------------
+def kmeans_step(x, c):
+    """E-step + partial M-step over this worker's shard."""
+    return kmeans.assign_accumulate(x, c)
+
+
+def kmeans_update(sums, counts):
+    """Root-side centroid update from BCM-reduced partials.
+
+    Guards empty clusters by keeping the previous scale (count clamped to 1).
+    """
+    safe = jnp.maximum(counts, 1.0)
+    return (sums / safe[:, None],)
+
+
+# ---------------------------------------------------------------------------
+# AOT unit registry: name -> (fn, example args)
+# ---------------------------------------------------------------------------
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def aot_units():
+    pr = SHAPES["pagerank"]
+    sg = SHAPES["sgd"]
+    hi = SHAPES["histogram"]
+    km = SHAPES["kmeans"]
+    return {
+        "pagerank_contrib": (
+            pagerank_contrib,
+            (f32(pr["n"], pr["k"]), f32(pr["k"])),
+        ),
+        "pagerank_finalize": (pagerank_finalize, (f32(pr["n"]), f32(pr["n"]))),
+        "sgd_epoch": (
+            sgd_epoch,
+            (f32(sg["b"], sg["d"]), f32(sg["b"]), f32(sg["d"]), f32(), f32()),
+        ),
+        "histogram_partition": (
+            histogram_partition,
+            (i32(hi["keys"]), i32(hi["p"] - 1)),
+        ),
+        "sort_keys": (sort_keys, (i32(hi["keys"]),)),
+        "kmeans_step": (kmeans_step, (f32(km["n"], km["d"]), f32(km["k"], km["d"]))),
+        "kmeans_update": (kmeans_update, (f32(km["k"], km["d"]), f32(km["k"]))),
+    }

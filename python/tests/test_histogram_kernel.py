@@ -1,0 +1,75 @@
+"""Partition-histogram kernel vs oracle + bucket invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import histogram, ref
+
+I32_MAX = 2**31 - 1
+
+
+def _keys(rng, n, hi=I32_MAX):
+    return jnp.asarray(rng.integers(0, hi, size=n).astype(np.int32))
+
+
+def _splits(rng, p, hi=I32_MAX):
+    return jnp.asarray(np.sort(rng.integers(0, hi, size=p - 1)).astype(np.int32))
+
+
+def test_matches_ref(rng):
+    keys = _keys(rng, 65536)
+    splits = _splits(rng, 256)
+    got = histogram.partition_hist(keys, splits)
+    want = ref.partition_hist(keys, splits)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_counts_sum_to_n(rng):
+    keys = _keys(rng, 8192)
+    splits = _splits(rng, 64)
+    counts = histogram.partition_hist(keys, splits, bn=1024)
+    assert int(counts.sum()) == 8192
+
+
+def test_all_keys_in_one_bucket(rng):
+    keys = jnp.full((2048,), 42, jnp.int32)
+    splits = jnp.asarray([100, 200, 300], jnp.int32)
+    counts = histogram.partition_hist(keys, splits, bn=1024)
+    np.testing.assert_array_equal(counts, [2048, 0, 0, 0])
+
+
+def test_boundary_key_goes_right():
+    # A key equal to a splitter belongs to the bucket to its right
+    # ([splits[p-1], splits[p]) semantics).
+    keys = jnp.full((1024,), 100, jnp.int32)
+    splits = jnp.asarray([100], jnp.int32)
+    counts = histogram.partition_hist(keys, splits, bn=1024)
+    np.testing.assert_array_equal(counts, [0, 1024])
+
+
+def test_sentinel_padding_lands_in_last_bucket(rng):
+    # The Rust caller pads to the block size with i32::MAX; those sentinels
+    # must all land in the last bucket so it can subtract them.
+    keys = np.full(2048, I32_MAX, np.int32)
+    keys[:100] = 5
+    splits = jnp.asarray([10, 20], jnp.int32)
+    counts = histogram.partition_hist(jnp.asarray(keys), splits, bn=1024)
+    np.testing.assert_array_equal(counts, [100, 0, 1948])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    p=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(nb, p, seed):
+    rng = np.random.default_rng(seed)
+    n = 256 * nb
+    keys = _keys(rng, n, hi=10_000)
+    splits = _splits(rng, p, hi=10_000)
+    got = histogram.partition_hist(keys, splits, bn=256)
+    want = ref.partition_hist(keys, splits)
+    np.testing.assert_array_equal(got, want)
+    assert int(got.sum()) == n

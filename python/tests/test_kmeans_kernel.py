@@ -1,0 +1,79 @@
+"""k-means assign+accumulate kernel vs oracle + Lloyd-step invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import kmeans, ref
+
+
+def _data(rng, n, d, k):
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    return x, c
+
+
+def test_matches_ref(rng):
+    x, c = _data(rng, 1024, 16, 16)
+    s1, n1, co1 = kmeans.assign_accumulate(x, c)
+    s2, n2, co2 = ref.kmeans_assign_accumulate(x, c)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(n1, n2)
+    np.testing.assert_allclose(co1, co2, rtol=1e-4)
+
+
+def test_counts_sum_to_n(rng):
+    x, c = _data(rng, 512, 8, 4)
+    _, counts, _ = kmeans.assign_accumulate(x, c, bn=256)
+    assert abs(float(counts.sum()) - 512.0) < 1e-3
+
+
+def test_points_on_centroids_have_zero_cost(rng):
+    c = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    x = jnp.tile(c, (64, 1))  # 256 points, each exactly on a centroid
+    _, counts, cost = kmeans.assign_accumulate(x, c, bn=256)
+    assert float(cost) < 1e-3
+    np.testing.assert_array_equal(np.asarray(counts), [64.0] * 4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    d=st.integers(1, 16),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(nb, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x, c = _data(rng, 128 * nb, d, k)
+    s1, n1, co1 = kmeans.assign_accumulate(x, c, bn=128)
+    s2, n2, co2 = ref.kmeans_assign_accumulate(x, c)
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(n1, n2)
+    np.testing.assert_allclose(co1, co2, rtol=1e-3, atol=1e-3)
+
+
+def test_lloyd_iterations_decrease_cost(rng):
+    # Full L2 loop: assign+accumulate, then kmeans_update; cost must be
+    # non-increasing (Lloyd's algorithm invariant).
+    n, d, k = (
+        model.SHAPES["kmeans"]["n"],
+        model.SHAPES["kmeans"]["d"],
+        model.SHAPES["kmeans"]["k"],
+    )
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = x[:k]
+    costs = []
+    for _ in range(5):
+        sums, counts, cost = model.kmeans_step(x, c)
+        costs.append(float(cost))
+        (c,) = model.kmeans_update(sums, counts)
+    assert all(a >= b - 1e-3 for a, b in zip(costs, costs[1:])), costs
+
+
+def test_update_guards_empty_clusters():
+    sums = jnp.zeros((4, 8), jnp.float32)
+    counts = jnp.zeros((4,), jnp.float32)
+    (c,) = model.kmeans_update(sums, counts)
+    assert bool(jnp.all(jnp.isfinite(c)))

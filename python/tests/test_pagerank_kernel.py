@@ -1,0 +1,82 @@
+"""Pallas PageRank SpMV kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import pagerank, ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def test_matches_ref_default_tiles(rng):
+    a = _rand(rng, 1024, 128)
+    x = _rand(rng, 128)
+    got = pagerank.rank_contrib(a, x)
+    want = ref.rank_contrib(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_zero_matrix(rng):
+    a = jnp.zeros((256, 128), jnp.float32)
+    x = _rand(rng, 128)
+    np.testing.assert_array_equal(pagerank.rank_contrib(a, x), jnp.zeros(256))
+
+
+def test_identity_block(rng):
+    a = jnp.eye(128, dtype=jnp.float32)
+    x = _rand(rng, 128)
+    np.testing.assert_allclose(
+        pagerank.rank_contrib(a, x, bm=8, bk=128), x, rtol=1e-6
+    )
+
+
+def test_column_stochastic_preserves_mass(rng):
+    # A column-stochastic block applied to a probability slice keeps total
+    # mass — the PageRank invariant the reduce collective relies on.
+    a = rng.random((512, 128)).astype(np.float32)
+    a /= a.sum(axis=0, keepdims=True)
+    x = rng.random(128).astype(np.float32)
+    x /= x.sum()
+    out = pagerank.rank_contrib(jnp.asarray(a), jnp.asarray(x))
+    assert abs(float(out.sum()) - 1.0) < 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 16),
+    kb=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(nb, kb, seed):
+    # Sweep tile-divisible shapes: n multiples of 8, k multiples of 128.
+    rng = np.random.default_rng(seed)
+    n, k = 8 * nb, 128 * kb
+    a = _rand(rng, n, k)
+    x = _rand(rng, k)
+    got = pagerank.rank_contrib(a, x, bm=8, bk=128)
+    want = ref.rank_contrib(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_finalize_damping_and_error(rng):
+    n = model.SHAPES["pagerank"]["n"]
+    s = jnp.asarray(rng.random(n).astype(np.float32))
+    prev = jnp.asarray(rng.random(n).astype(np.float32))
+    new, err = model.pagerank_finalize(s, prev)
+    want = (1.0 - model.DAMPING) / n + model.DAMPING * s
+    np.testing.assert_allclose(new, want, rtol=1e-6)
+    np.testing.assert_allclose(err, jnp.sum(jnp.abs(want - prev)), rtol=1e-5)
+
+
+def test_finalize_fixed_point():
+    # If contrib_sum equals the stationary ranks, error is ~0.
+    n = 64
+    ranks = jnp.full((n,), 1.0 / n, jnp.float32)
+    new, err = model.pagerank_finalize(ranks, ranks)
+    # (1-d)/n + d/n == 1/n
+    np.testing.assert_allclose(new, ranks, rtol=1e-6)
+    assert float(err) < 1e-5

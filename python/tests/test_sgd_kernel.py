@@ -1,0 +1,85 @@
+"""Fused logistic-regression kernel vs oracle + jax.grad cross-check."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, sgd
+
+
+def _data(rng, b, d):
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = jnp.asarray((rng.random(b) > 0.5).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=d) * 0.1).astype(np.float32))
+    return x, y, w
+
+
+def test_matches_ref(rng):
+    x, y, w = _data(rng, 1024, 64)
+    g1, l1 = sgd.logreg_grad(x, y, w)
+    g2, l2 = ref.logreg_grad(x, y, w)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_matches_autodiff(rng):
+    # The fused kernel's gradient must equal jax.grad of the BCE loss.
+    x, y, w = _data(rng, 256, 16)
+
+    def loss(w):
+        logits = x @ w
+        return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)
+
+    g_auto = jax.grad(loss)(w)
+    g_kernel, l_kernel = sgd.logreg_grad(x, y, w, bb=128)
+    np.testing.assert_allclose(g_kernel, g_auto, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(l_kernel, loss(w), rtol=1e-5)
+
+
+def test_loss_at_zero_weights_is_log2(rng):
+    x, y, w = _data(rng, 128, 8)
+    _, loss = sgd.logreg_grad(x, y, jnp.zeros_like(w))
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 8),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(blocks, d, seed):
+    rng = np.random.default_rng(seed)
+    b = 8 * blocks
+    x, y, w = _data(rng, b, d)
+    g1, l1 = sgd.logreg_grad(x, y, w, bb=8)
+    g2, l2 = ref.logreg_grad(x, y, w)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+
+def test_epoch_reduces_loss_on_separable_data(rng):
+    # A full L2 epoch on linearly-separable data must make progress.
+    b, d = model.SHAPES["sgd"]["b"], model.SHAPES["sgd"]["d"]
+    true_w = rng.normal(size=d).astype(np.float32)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    y = (x @ true_w > 0).astype(np.float32)
+    w = jnp.zeros(d, jnp.float32)
+    lr = jnp.float32(0.5)
+    reg = jnp.float32(0.0)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    w1, loss1 = model.sgd_epoch(x, y, w, lr, reg)
+    w2, loss2 = model.sgd_epoch(x, y, w1, lr, reg)
+    assert float(loss2) < float(loss1) < np.log(2.0) + 1e-3
+
+
+def test_epoch_regularizer_shrinks_weights(rng):
+    b, d = model.SHAPES["sgd"]["b"], model.SHAPES["sgd"]["d"]
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = jnp.asarray((rng.random(b) > 0.5).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    w_noreg, _ = model.sgd_epoch(x, y, w, jnp.float32(0.1), jnp.float32(0.0))
+    w_reg, _ = model.sgd_epoch(x, y, w, jnp.float32(0.1), jnp.float32(1.0))
+    assert float(jnp.linalg.norm(w_reg)) < float(jnp.linalg.norm(w_noreg))

@@ -1,0 +1,118 @@
+//! Micro-benchmarks of the BCM hot path: local zero-copy delivery, chunk
+//! split/reassembly, counter bookkeeping, and raw backend ops with all
+//! modeled service time disabled (time_scale ≈ 0) — this measures *our*
+//! middleware overhead, the target of the §Perf optimization pass.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use burstc::bcm::chunk::{self, Op};
+use burstc::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+use burstc::cluster::netmodel::NetParams;
+use burstc::util::benchkit::{section, time_iters, Table};
+use burstc::util::bytes::MIB;
+
+fn fabric(size: usize, g: usize) -> Arc<CommFabric> {
+    let params = NetParams::scaled(1e-9);
+    CommFabric::new(
+        "hot",
+        PackTopology::contiguous(size, g),
+        BackendKind::DragonflyList.build(&params),
+        &params,
+        FabricConfig { timeout: Duration::from_secs(10), ..FabricConfig::default() },
+    )
+}
+
+fn main() {
+    section("BCM hot path micro-benchmarks (modeled time disabled)");
+    let mut t = Table::new(&["operation", "payload", "median", "p95", "throughput"]);
+
+    // 1. Local zero-copy send/recv between two co-located workers.
+    {
+        let f = fabric(2, 2);
+        let a = BurstContext::new(0, f.clone());
+        let b = BurstContext::new(1, f.clone());
+        let payload = vec![7u8; MIB];
+        let s = time_iters(50, 500, || {
+            a.send(1, payload.clone()).unwrap();
+            let got = b.recv(0).unwrap();
+            assert_eq!(got.len(), MIB);
+        });
+        t.row(vec![
+            "local send+recv".into(),
+            "1 MiB".into(),
+            format!("{:.1}us", s.median * 1e6),
+            format!("{:.1}us", s.p95 * 1e6),
+            format!("{:.2} GiB/s", MIB as f64 / s.median / (1 << 30) as f64),
+        ]);
+    }
+
+    // 2. Chunk split + reassembly round trip.
+    for payload_mib in [1usize, 16] {
+        let payload = vec![3u8; payload_mib * MIB];
+        let s = time_iters(20, 200, || {
+            let chunks = chunk::split(Op::Direct, 0, 1, 0, &payload, MIB);
+            let (mut r, _) = chunk::Reassembly::from_first(&chunks[0]).unwrap();
+            for c in &chunks[1..] {
+                r.accept(c).unwrap();
+            }
+            assert_eq!(r.into_payload().unwrap().len(), payload.len());
+        });
+        t.row(vec![
+            "chunk split+reassemble".into(),
+            format!("{payload_mib} MiB"),
+            format!("{:.1}us", s.median * 1e6),
+            format!("{:.1}us", s.p95 * 1e6),
+            format!("{:.2} GiB/s", (payload_mib * MIB) as f64 / s.median / (1 << 30) as f64),
+        ]);
+    }
+
+    // 3. Remote send+recv through the backend core (no modeled sleeps):
+    // measures lock/queue overhead of the middleware itself.
+    {
+        let f = fabric(2, 1);
+        let payload = vec![1u8; 4 * MIB];
+        let mut ctr = 0u64;
+        let s = time_iters(20, 200, || {
+            f.remote_send(Op::Direct, 0, Some(1), ctr, &payload).unwrap();
+            let got = f.remote_recv(Op::Direct, 0, Some(1), ctr, 1, true).unwrap();
+            assert_eq!(got.len(), payload.len());
+            ctr += 1;
+        });
+        t.row(vec![
+            "remote send+recv (4 chunks)".into(),
+            "4 MiB".into(),
+            format!("{:.1}us", s.median * 1e6),
+            format!("{:.1}us", s.p95 * 1e6),
+            format!("{:.2} GiB/s", (4 * MIB) as f64 / s.median / (1 << 30) as f64),
+        ]);
+    }
+
+    // 4. Broadcast fan-out within one pack of 16 (pure pointer passing).
+    {
+        let f = fabric(16, 16);
+        let ctxs: Vec<Arc<BurstContext>> =
+            (0..16).map(|w| Arc::new(BurstContext::new(w, f.clone()))).collect();
+        let payload = vec![9u8; MIB];
+        let s = time_iters(10, 100, || {
+            std::thread::scope(|sc| {
+                for ctx in &ctxs {
+                    let payload = &payload;
+                    sc.spawn(move || {
+                        let data = (ctx.worker_id == 0).then(|| payload.clone());
+                        ctx.broadcast(0, data).unwrap();
+                    });
+                }
+            });
+        });
+        t.row(vec![
+            "pack broadcast (16 workers)".into(),
+            "1 MiB".into(),
+            format!("{:.1}us", s.median * 1e6),
+            format!("{:.1}us", s.p95 * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    t.print();
+}

@@ -1,0 +1,5 @@
+//! Bench: Figure 10 — PageRank per-phase times vs granularity (full scale).
+
+fn main() {
+    burstc::experiments::fig10_pagerank::run(false);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig11_terasort`.
+//! Run with `cargo bench fig11_terasort` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig11_terasort::run(false);
+}

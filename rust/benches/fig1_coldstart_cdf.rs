@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig1_coldstart`.
+//! Run with `cargo bench fig1_coldstart_cdf` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig1_coldstart::run(false);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig5_startup`.
+//! Run with `cargo bench fig5_startup_granularity` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig5_startup::run(false);
+}

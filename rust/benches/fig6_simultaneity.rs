@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig6_simultaneity`.
+//! Run with `cargo bench fig6_simultaneity` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig6_simultaneity::run(false);
+}

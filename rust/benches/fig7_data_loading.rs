@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig7_dataloading`.
+//! Run with `cargo bench fig7_data_loading` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig7_dataloading::run(false);
+}

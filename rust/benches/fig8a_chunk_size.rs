@@ -1,0 +1,5 @@
+//! Bench: Figure 8a — backend throughput vs chunk size (full scale).
+
+fn main() {
+    burstc::experiments::fig8_backends::run_chunk_size(false);
+}

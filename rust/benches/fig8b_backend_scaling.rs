@@ -1,0 +1,5 @@
+//! Bench: Figure 8b — aggregate backend throughput vs burst size.
+
+fn main() {
+    burstc::experiments::fig8_backends::run_scaling(false);
+}

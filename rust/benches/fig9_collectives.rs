@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::fig9_collectives`.
+//! Run with `cargo bench fig9_collectives` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::fig9_collectives::run(false);
+}

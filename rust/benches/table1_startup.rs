@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::table1_clusters`.
+//! Run with `cargo bench table1_startup` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::table1_clusters::run(false);
+}

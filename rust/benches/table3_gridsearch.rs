@@ -1,0 +1,6 @@
+//! Bench: regenerates the paper artifact via `burstc::experiments::table3_gridsearch`.
+//! Run with `cargo bench table3_gridsearch` (full scale) — see DESIGN.md §5.
+
+fn main() {
+    burstc::experiments::table3_gridsearch::run(false);
+}

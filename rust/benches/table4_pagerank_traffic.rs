@@ -1,0 +1,21 @@
+//! Bench: Table 4 — PageRank network-traffic reduction vs granularity.
+//! Shares the Figure 10 runs; prints the traffic columns.
+
+use burstc::experiments::fig10_pagerank;
+use burstc::util::benchkit::{section, Table};
+use burstc::util::bytes;
+
+fn main() {
+    let cfg = fig10_pagerank::Config::new(false);
+    let rows = fig10_pagerank::compute(&cfg);
+    section("Table 4: PageRank aggregated network traffic");
+    let mut t = Table::new(&["Granularity", "Traffic", "% Reduction"]);
+    for r in &rows {
+        t.row(vec![
+            r.granularity.to_string(),
+            bytes::human(r.traffic_bytes),
+            if r.granularity == 1 { "n/a".into() } else { format!("{:.1}%", r.traffic_reduction_pct) },
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,189 @@
+//! Hyperparameter tuning / grid search burst (paper §5.4.1).
+//!
+//! Every worker trains an SGD logistic-regression classifier on the *same*
+//! dataset with its own `(lr, reg)` combination. The burst optimization is
+//! collaborative data loading (Fig. 7 / Table 3): each pack's leader
+//! downloads the dataset once with pack-parallel byte-range reads and
+//! shares it zero-copy via `pack_share`, instead of every worker paying a
+//! full download like FaaS does.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{phases, AppEnv};
+use crate::bcm::BurstContext;
+use crate::platform::register_work;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::timing::Stopwatch;
+
+pub const WORK_NAME: &str = "gridsearch";
+
+/// Dataset dims — fixed by the AOT artifact (`SHAPES["sgd"]`).
+pub const B: usize = 1024;
+pub const D: usize = 64;
+
+/// Generate a binary-classification dataset under `gridsearch/<job>/data`.
+/// `pad_bytes` inflates the object so download behaviour can be scaled
+/// toward the paper's 500 MiB CSV without inflating the training problem.
+pub fn generate(env: &AppEnv, job: &str, seed: u64, pad_bytes: usize) {
+    let mut rng = Pcg::new(seed);
+    let true_w: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
+    let mut x = Vec::with_capacity(B * D);
+    let mut y = Vec::with_capacity(B);
+    for _ in 0..B {
+        let row: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
+        let dot: f32 = row.iter().zip(&true_w).map(|(a, b)| a * b).sum();
+        y.push(if dot > 0.0 { 1.0f32 } else { 0.0 });
+        x.extend(row);
+    }
+    let mut buf = Tensor::f32_to_bytes(&x);
+    buf.extend(Tensor::f32_to_bytes(&y));
+    buf.resize(buf.len() + pad_bytes, 0);
+    env.store.preload(&format!("gridsearch/{job}/data"), buf);
+}
+
+fn parse_dataset(raw: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let need = 4 * (B * D + B);
+    if raw.len() < need {
+        return Err(anyhow!("dataset too short: {} < {need}", raw.len()));
+    }
+    let x = Tensor::f32_from_bytes(&raw[..4 * B * D])?;
+    let y = Tensor::f32_from_bytes(&raw[4 * B * D..need])?;
+    Ok((x, y))
+}
+
+fn work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let lr = params.num_or("lr", 0.1) as f32;
+    let reg = params.num_or("reg", 0.0) as f32;
+    let epochs = params.num_or("epochs", 3.0) as usize;
+    // FaaS mode (granularity 1) degenerates naturally: the pack leader is
+    // the only member, so every worker downloads its own copy.
+
+    // --- collaborative fetch (once per pack, pack-parallel range reads) ---
+    let sw = Stopwatch::start();
+    let raw = if ctx.is_leader() {
+        let conns = ctx.pack_members().len();
+        let data = env.store.get_parallel(&format!("gridsearch/{job}/data"), conns)?;
+        ctx.pack_share(Some(data))?
+    } else {
+        ctx.pack_share(None)?
+    };
+    let fetch_s = sw.secs();
+    let (x, y) = parse_dataset(&raw)?;
+
+    // --- train: E epochs of the fused AOT SGD unit ---
+    let sw = Stopwatch::start();
+    let mut w = vec![0.0f32; D];
+    let mut loss = f32::INFINITY;
+    for _ in 0..epochs {
+        let out = env.pool.execute(
+            "sgd_epoch",
+            vec![
+                Tensor::f32_2d(x.clone(), B, D),
+                Tensor::f32_1d(y.clone()),
+                Tensor::f32_1d(w),
+                Tensor::f32_scalar(lr),
+                Tensor::f32_scalar(reg),
+            ],
+        )?;
+        w = out[0].as_f32()?.to_vec();
+        loss = out[1].scalar_f32()?;
+    }
+    let compute_s = sw.secs();
+
+    Ok(Json::obj(vec![
+        ("worker", ctx.worker_id.into()),
+        ("lr", Json::from(lr as f64)),
+        ("reg", Json::from(reg as f64)),
+        ("loss", Json::from(loss as f64)),
+        ("ready_s", fetch_s.into()), // + invocation added by the driver
+        (phases::FETCH, fetch_s.into()),
+        (phases::COMPUTE, compute_s.into()),
+        (phases::COMM, 0.0.into()),
+    ]))
+}
+
+pub fn register(env: &AppEnv) {
+    let env = env.clone();
+    register_work(WORK_NAME, Arc::new(move |p, ctx| work(&env, p, ctx)));
+}
+
+/// Build the parameter grid for a burst of `n` workers (lr × reg sweep).
+pub fn param_grid(n: usize, job: &str, epochs: usize) -> Vec<Json> {
+    let lrs = [0.01, 0.05, 0.1, 0.5];
+    (0..n)
+        .map(|i| {
+            Json::obj(vec![
+                ("job", job.into()),
+                ("lr", Json::from(lrs[i % lrs.len()])),
+                ("reg", Json::from(0.001 * (i / lrs.len()) as f64)),
+                ("epochs", epochs.into()),
+            ])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::{BurstConfig, Controller, FlareOptions};
+    use crate::runtime::engine::global_pool;
+    use crate::storage::ObjectStore;
+
+    fn env() -> AppEnv {
+        AppEnv {
+            store: ObjectStore::new(NetParams::scaled(1e-6)),
+            pool: global_pool().expect("artifacts present"),
+        }
+    }
+
+    #[test]
+    fn grid_search_trains_and_finds_best() {
+        let env = env();
+        generate(&env, "g1", 17, 0);
+        register(&env);
+        let c = Controller::test_platform(1, 48, 1e-6);
+        c.deploy("gs", WORK_NAME, BurstConfig { granularity: 4, ..Default::default() })
+            .unwrap();
+        let r = c.flare("gs", param_grid(8, "g1", 4), &FlareOptions::default()).unwrap();
+        // All workers produce finite losses; the best is below log(2)
+        // (separable data must beat the trivial classifier).
+        let losses: Vec<f64> =
+            r.outputs.iter().map(|o| o.get("loss").unwrap().as_f64().unwrap()).collect();
+        assert!(losses.iter().all(|l| l.is_finite()));
+        let best = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best < 0.69, "best loss {best}");
+        // No collectives: fully local sharing only.
+        assert_eq!(r.traffic.remote(), 0);
+    }
+
+    #[test]
+    fn pack_download_count_matches_packs_not_workers() {
+        use std::sync::atomic::Ordering;
+        let env = env();
+        generate(&env, "g2", 23, 0);
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy(
+            "gs2",
+            WORK_NAME,
+            BurstConfig { granularity: 4, strategy: "homogeneous".into(), ..Default::default() },
+        )
+        .unwrap();
+        let gets_before = env.store.stats.gets.load(Ordering::Relaxed);
+        c.flare("gs2", param_grid(8, "g2", 1), &FlareOptions::default()).unwrap();
+        let gets = env.store.stats.gets.load(Ordering::Relaxed) - gets_before;
+        // 2 packs × 4 parallel range reads each = 8 GETs — not 8 full
+        // downloads of the whole object (FaaS would be 8 whole-object GETs
+        // *per worker* = same count here but 4× the bytes; check bytes):
+        let bytes = env.store.stats.bytes_read.load(Ordering::Relaxed);
+        let obj = env.store.size("gridsearch/g2/data").unwrap() as u64;
+        assert!(gets <= 8, "gets {gets}");
+        assert!(bytes >= 2 * obj && bytes < 3 * obj, "bytes {bytes} obj {obj}");
+    }
+}

@@ -1,0 +1,202 @@
+//! k-means burst: the iterative, reduce-heavy workload the paper's intro
+//! calls out as unfeasible on staged FaaS ("iterative algorithms like
+//! PageRank or k-means ... constantly aggregate data").
+//!
+//! Each worker holds a point shard; per Lloyd iteration it runs the AOT
+//! Pallas `kmeans_step` (assign + partial sums), the partials are
+//! BCM-`reduce`d to the root, the root recomputes centroids with
+//! `kmeans_update` and broadcasts them.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{phases, AppEnv};
+use crate::bcm::BurstContext;
+use crate::platform::register_work;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::timing::Stopwatch;
+
+pub const WORK_NAME: &str = "kmeans";
+
+/// Shard dims — fixed by the AOT artifact (`SHAPES["kmeans"]`).
+pub const N: usize = 1024;
+pub const D: usize = 16;
+pub const KC: usize = 16;
+
+/// Generate `n_workers` point shards around `KC` well-separated centers.
+pub fn generate(env: &AppEnv, job: &str, n_workers: usize, seed: u64) {
+    let mut rng = Pcg::new(seed);
+    let centers: Vec<f32> = (0..KC * D).map(|_| rng.normal() as f32 * 8.0).collect();
+    for w in 0..n_workers {
+        let mut pts = Vec::with_capacity(N * D);
+        for _ in 0..N {
+            let c = rng.usize(0, KC);
+            for d in 0..D {
+                pts.push(centers[c * D + d] + rng.normal() as f32 * 0.5);
+            }
+        }
+        env.store.preload(&format!("kmeans/{job}/part{w}"), Tensor::f32_to_bytes(&pts));
+    }
+    env.store.preload(&format!("kmeans/{job}/centers"), Tensor::f32_to_bytes(&centers));
+}
+
+/// Reduce payload layout: `[sums f32 KC×D][counts f32 KC][cost f32]`.
+fn pack_partials(sums: &[f32], counts: &[f32], cost: f32) -> Vec<u8> {
+    let mut b = Tensor::f32_to_bytes(sums);
+    b.extend(Tensor::f32_to_bytes(counts));
+    b.extend(cost.to_le_bytes());
+    b
+}
+
+fn add_partials(acc: &mut Vec<u8>, b: &[u8]) {
+    // In-place f32 add over the packed [sums|counts|cost] payload.
+    for (a4, b4) in acc.chunks_exact_mut(4).zip(b.chunks_exact(4)) {
+        let x = f32::from_le_bytes(a4.try_into().unwrap());
+        let y = f32::from_le_bytes(b4.try_into().unwrap());
+        a4.copy_from_slice(&(x + y).to_le_bytes());
+    }
+}
+
+fn work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let iters = params.num_or("iters", 5.0) as usize;
+    let root = 0usize;
+    let me = ctx.worker_id;
+
+    let sw = Stopwatch::start();
+    let raw = env.store.get(&format!("kmeans/{job}/part{me}"))?;
+    let pts = Tensor::f32_from_bytes(&raw)?;
+    // Initial centroids: first KC points of the root's shard, broadcast.
+    let fetch_s = sw.secs();
+
+    let mut compute_s = 0.0;
+    let mut comm_s = 0.0;
+
+    let sw = Stopwatch::start();
+    let init = (me == root).then(|| Tensor::f32_to_bytes(&pts[..KC * D]));
+    let mut centroids = Tensor::f32_from_bytes(&ctx.broadcast(root, init)?)?;
+    comm_s += sw.secs();
+
+    let mut cost = f32::INFINITY;
+    let mut costs = Vec::new();
+    for _ in 0..iters {
+        // E-step + partial M-step on the engine.
+        let sw = Stopwatch::start();
+        let out = env.pool.execute(
+            "kmeans_step",
+            vec![
+                Tensor::f32_2d(pts.clone(), N, D),
+                Tensor::f32_2d(centroids.clone(), KC, D),
+            ],
+        )?;
+        let sums = out[0].as_f32()?.to_vec();
+        let counts = out[1].as_f32()?.to_vec();
+        let my_cost = out[2].scalar_f32()?;
+        compute_s += sw.secs();
+
+        // Reduce partials to root.
+        let sw = Stopwatch::start();
+        let reduced =
+            ctx.reduce(root, pack_partials(&sums, &counts, my_cost), &add_partials)?;
+        comm_s += sw.secs();
+
+        // Root: new centroids; broadcast.
+        let cent_bytes = if me == root {
+            let r = reduced.unwrap();
+            let all = Tensor::f32_from_bytes(&r)?;
+            let (sums, rest) = all.split_at(KC * D);
+            let (counts, costv) = rest.split_at(KC);
+            cost = costv[0];
+            let sw_c = Stopwatch::start();
+            let out = env.pool.execute(
+                "kmeans_update",
+                vec![
+                    Tensor::f32_2d(sums.to_vec(), KC, D),
+                    Tensor::f32_1d(counts.to_vec()),
+                ],
+            )?;
+            compute_s += sw_c.secs();
+            let mut b = Tensor::f32_to_bytes(out[0].as_f32()?);
+            b.extend(cost.to_le_bytes());
+            Some(b)
+        } else {
+            None
+        };
+        let sw = Stopwatch::start();
+        let got = ctx.broadcast(root, cent_bytes)?;
+        comm_s += sw.secs();
+        centroids = Tensor::f32_from_bytes(&got[..4 * KC * D])?;
+        cost = f32::from_le_bytes(got[4 * KC * D..4 * KC * D + 4].try_into().unwrap());
+        costs.push(cost as f64);
+    }
+
+    Ok(Json::obj(vec![
+        ("worker", me.into()),
+        ("cost", Json::from(cost as f64)),
+        ("costs", Json::Arr(costs.into_iter().map(Json::Num).collect())),
+        (phases::FETCH, fetch_s.into()),
+        (phases::COMPUTE, compute_s.into()),
+        (phases::COMM, comm_s.into()),
+    ]))
+}
+
+pub fn register(env: &AppEnv) {
+    let env = env.clone();
+    register_work(WORK_NAME, Arc::new(move |p, ctx| work(&env, p, ctx)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::{BurstConfig, Controller, FlareOptions};
+    use crate::runtime::engine::global_pool;
+    use crate::storage::ObjectStore;
+
+    fn env() -> AppEnv {
+        AppEnv {
+            store: ObjectStore::new(NetParams::scaled(1e-6)),
+            pool: global_pool().expect("artifacts present"),
+        }
+    }
+
+    #[test]
+    fn kmeans_cost_decreases_across_iterations() {
+        let env = env();
+        generate(&env, "k1", 4, 21);
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy(
+            "km",
+            WORK_NAME,
+            BurstConfig { granularity: 2, strategy: "homogeneous".into(), ..Default::default() },
+        )
+        .unwrap();
+        let params: Vec<Json> = (0..4)
+            .map(|_| Json::obj(vec![("job", "k1".into()), ("iters", 5.into())]))
+            .collect();
+        let r = c.flare("km", params, &FlareOptions::default()).unwrap();
+        let costs: Vec<f64> = r.outputs[0]
+            .get("costs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap())
+            .collect();
+        assert_eq!(costs.len(), 5);
+        // Lloyd's monotonicity (within fp tolerance).
+        for w in costs.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "{costs:?}");
+        }
+        // Every worker agrees on the final cost (broadcast consistency).
+        for o in &r.outputs {
+            let c = o.get("cost").unwrap().as_f64().unwrap();
+            assert!((c - costs.last().unwrap()).abs() < 1e-3);
+        }
+        assert!(r.traffic.remote() > 0);
+    }
+}

@@ -1,0 +1,402 @@
+//! Serverless MapReduce baseline (paper §5.4.3, Fig. 11a): the FaaS way of
+//! running TeraSort — two rounds of independent function invocations with
+//! the shuffle staged through object storage and an external orchestrator
+//! syncing the stages (friction F2 made concrete).
+//!
+//! Map worker `m`: fetch partition → split into `R` ranges by fixed uniform
+//! splitters → PUT each bucket to `shuffle/<job>/m<m>/r<r>`.
+//! Reduce worker `r`: GET all `shuffle/<job>/m*/r<r>` → sort → report.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::terasort::engine_sort;
+use super::{phases, AppEnv};
+use crate::bcm::BurstContext;
+use crate::platform::{register_work, Controller, FlareOptions, FlareResult};
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+use crate::util::timing::Stopwatch;
+
+pub const MAP_WORK: &str = "terasort-map";
+pub const REDUCE_WORK: &str = "terasort-reduce";
+
+/// Orchestrator poll interval: how often the external process checks
+/// whether all map functions finished (paper: FaaS offers no monitoring
+/// mechanisms, footnote 4).
+pub const POLL_INTERVAL_S: f64 = 1.0;
+
+/// Uniform range splitter for bucket `r` of `n` (keys are non-negative i32).
+fn uniform_bucket(key: i32, n: usize) -> usize {
+    ((key as i64 * n as i64) / (i32::MAX as i64 + 1)) as usize
+}
+
+fn map_work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let n_reducers = params.num_or("reducers", ctx.burst_size() as f64) as usize;
+    let me = ctx.worker_id;
+
+    let sw = Stopwatch::start();
+    let raw = env.store.get(&format!("terasort/{job}/part{me}"))?;
+    let keys = Tensor::i32_from_bytes(&raw)?;
+    let fetch_s = sw.secs();
+
+    let sw = Stopwatch::start();
+    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); n_reducers];
+    for &k in &keys {
+        buckets[uniform_bucket(k, n_reducers)].push(k);
+    }
+    let compute_s = sw.secs();
+
+    // Shuffle-out: one object per (mapper, reducer) pair, through storage.
+    let sw = Stopwatch::start();
+    for (r, b) in buckets.iter().enumerate() {
+        env.store.put(&format!("shuffle/{job}/m{me}/r{r}"), Tensor::i32_to_bytes(b));
+    }
+    let comm_s = sw.secs();
+
+    Ok(Json::obj(vec![
+        ("worker", me.into()),
+        ("keys", keys.len().into()),
+        (phases::FETCH, fetch_s.into()),
+        (phases::COMPUTE, compute_s.into()),
+        (phases::COMM, comm_s.into()),
+    ]))
+}
+
+fn reduce_work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let n_mappers = params.num_or("mappers", ctx.burst_size() as f64) as usize;
+    let rid = ctx.worker_id;
+
+    // Shuffle-in: read every mapper's bucket for my range.
+    let sw = Stopwatch::start();
+    let mut mine: Vec<i32> = Vec::new();
+    for m in 0..n_mappers {
+        let raw = env.store.get(&format!("shuffle/{job}/m{m}/r{rid}"))?;
+        mine.extend(Tensor::i32_from_bytes(&raw)?);
+    }
+    let comm_s = sw.secs();
+
+    let sw = Stopwatch::start();
+    let sorted = engine_sort(env, mine)?;
+    let compute_s = sw.secs();
+
+    let checksum: i64 = sorted.iter().map(|&k| k as i64).sum();
+    Ok(Json::obj(vec![
+        ("worker", rid.into()),
+        ("count", sorted.len().into()),
+        ("min", Json::from(sorted.first().copied().unwrap_or(i32::MAX) as i64)),
+        ("max", Json::from(sorted.last().copied().unwrap_or(i32::MIN) as i64)),
+        ("checksum", Json::from(checksum)),
+        (phases::FETCH, 0.0.into()),
+        (phases::COMPUTE, compute_s.into()),
+        (phases::COMM, comm_s.into()),
+    ]))
+}
+
+pub fn register(env: &AppEnv) {
+    let e1 = env.clone();
+    register_work(MAP_WORK, Arc::new(move |p, ctx| map_work(&e1, p, ctx)));
+    let e2 = env.clone();
+    register_work(REDUCE_WORK, Arc::new(move |p, ctx| reduce_work(&e2, p, ctx)));
+}
+
+/// Result of a staged MapReduce run.
+pub struct MapReduceResult {
+    pub map: FlareResult,
+    pub reduce: FlareResult,
+    /// Modeled orchestrator synchronization gap between the stages.
+    pub stage_gap_s: f64,
+}
+
+impl MapReduceResult {
+    /// End-to-end modeled time: map round + sync gap + reduce round.
+    pub fn total_s(&self) -> f64 {
+        self.map.total_s() + self.stage_gap_s + self.reduce.total_s()
+    }
+
+    /// Total bytes moved through storage for the shuffle (write + read).
+    pub fn shuffle_storage_bytes(&self, env: &AppEnv, job: &str) -> u64 {
+        let keys: Vec<String> = env.store.list_prefix(&format!("shuffle/{job}/"));
+        let written: u64 = keys.iter().filter_map(|k| env.store.size(k)).sum::<usize>() as u64;
+        written * 2 // staged shuffle pays the volume twice: PUT then GET
+    }
+}
+
+/// Run TeraSort the serverless-MapReduce way: two FaaS rounds (independent
+/// invocations, granularity 1) with an orchestrated sync in between.
+pub fn run_terasort_mapreduce(
+    controller: &Controller,
+    job: &str,
+    n_workers: usize,
+) -> Result<MapReduceResult> {
+    let faas = FlareOptions { faas: true, ..Default::default() };
+    let map_params: Vec<Json> = (0..n_workers)
+        .map(|_| Json::obj(vec![("job", job.into()), ("reducers", n_workers.into())]))
+        .collect();
+    let map = controller.flare("terasort-mr-map", map_params, &faas)?;
+
+    // External orchestrator: polls for map completion, then issues the
+    // reduce round (friction F2's extra latency).
+    let stage_gap_s = POLL_INTERVAL_S / 2.0 + POLL_INTERVAL_S;
+
+    let reduce_params: Vec<Json> = (0..n_workers)
+        .map(|_| Json::obj(vec![("job", job.into()), ("mappers", n_workers.into())]))
+        .collect();
+    let reduce = controller.flare("terasort-mr-reduce", reduce_params, &faas)?;
+    Ok(MapReduceResult { map, reduce, stage_gap_s })
+}
+
+/// Deploy both stage definitions on a controller.
+pub fn deploy(controller: &Controller) -> Result<()> {
+    controller.deploy("terasort-mr-map", MAP_WORK, Default::default())?;
+    controller.deploy("terasort-mr-reduce", REDUCE_WORK, Default::default())
+}
+
+// ---------------------------------------------------------------------------
+// Staged PageRank — the FaaS pattern the paper calls "obviously slower" and
+// skips reporting (§5.4.2). Every iteration costs TWO function rounds
+// (compute partials → aggregate) plus orchestrator sync, with all state
+// staged through object storage. Implemented here so the ablation bench can
+// quantify exactly how much slower it is than one burst flare.
+// ---------------------------------------------------------------------------
+
+pub const PR_COMPUTE_WORK: &str = "pagerank-mr-compute";
+pub const PR_AGGREGATE_WORK: &str = "pagerank-mr-aggregate";
+
+fn pr_compute_work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    use crate::apps::pagerank::{K, N};
+    let job = params.str_or("job", "default");
+    let iter = params.num_or("iter", 0.0) as usize;
+    let me = ctx.worker_id;
+
+    // Fresh worker every round: re-fetch the partition AND the rank vector
+    // (no locality, no retained state — friction F2's recreation overhead).
+    let raw = env.store.get(&format!("pagerank/{job}/part{me}"))?;
+    let ncols = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
+    let col0 = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let outdeg = Tensor::f32_from_bytes(&raw[8..8 + 4 * ncols])?;
+    let block = Tensor::f32_from_bytes(&raw[8 + 4 * ncols..])?;
+    let ranks_raw = env.store.get(&format!("pagerank/{job}/mr/ranks{iter}"))?;
+    let ranks = Tensor::f32_from_bytes(&ranks_raw)?;
+
+    let mut sum = vec![0.0f32; N];
+    for c0 in (0..ncols).step_by(K) {
+        let hi = (c0 + K).min(ncols);
+        let mut chunk = vec![0.0f32; N * K];
+        for i in 0..N {
+            chunk[i * K..i * K + (hi - c0)]
+                .copy_from_slice(&block[i * ncols + c0..i * ncols + hi]);
+        }
+        let mut xk = vec![0.0f32; K];
+        for c in c0..hi {
+            xk[c - c0] = ranks[col0 + c] / outdeg[c].max(1.0);
+        }
+        let out = env.pool.execute(
+            "pagerank_contrib",
+            vec![Tensor::f32_2d(chunk, N, K), Tensor::f32_1d(xk)],
+        )?;
+        for (s, v) in sum.iter_mut().zip(out[0].as_f32()?) {
+            *s += v;
+        }
+    }
+    // Stage the partial through storage for the aggregation round.
+    env.store.put(
+        &format!("pagerank/{job}/mr/partial{iter}/w{me}"),
+        Tensor::f32_to_bytes(&sum),
+    );
+    Ok(Json::obj(vec![("worker", me.into())]))
+}
+
+fn pr_aggregate_work(env: &AppEnv, params: &Json, _ctx: &BurstContext) -> Result<Json> {
+    use crate::apps::pagerank::N;
+    let job = params.str_or("job", "default");
+    let iter = params.num_or("iter", 0.0) as usize;
+    let n_workers = params.num_or("workers", 1.0) as usize;
+
+    let mut total = vec![0.0f32; N];
+    for w in 0..n_workers {
+        let raw = env.store.get(&format!("pagerank/{job}/mr/partial{iter}/w{w}"))?;
+        for (t, v) in total.iter_mut().zip(Tensor::f32_from_bytes(&raw)?) {
+            *t += v;
+        }
+    }
+    let prev_raw = env.store.get(&format!("pagerank/{job}/mr/ranks{iter}"))?;
+    let prev = Tensor::f32_from_bytes(&prev_raw)?;
+    let out = env.pool.execute(
+        "pagerank_finalize",
+        vec![Tensor::f32_1d(total), Tensor::f32_1d(prev)],
+    )?;
+    let new_ranks = out[0].as_f32()?.to_vec();
+    let err = out[1].scalar_f32()?;
+    env.store.put(
+        &format!("pagerank/{job}/mr/ranks{}", iter + 1),
+        Tensor::f32_to_bytes(&new_ranks),
+    );
+    Ok(Json::obj(vec![("err", Json::from(err as f64))]))
+}
+
+/// Run iterative PageRank the staged-FaaS way: 2 function rounds per
+/// iteration, all state through storage, orchestrator syncs between rounds.
+pub struct StagedPageRankResult {
+    pub total_s: f64,
+    pub rounds: usize,
+    pub final_err: f64,
+    pub storage_bytes: u64,
+}
+
+pub fn run_pagerank_staged(
+    controller: &Controller,
+    env: &AppEnv,
+    job: &str,
+    n_workers: usize,
+    iters: usize,
+) -> Result<StagedPageRankResult> {
+    use crate::apps::pagerank::N;
+    use std::sync::atomic::Ordering;
+    controller.deploy("pagerank-mr-compute", PR_COMPUTE_WORK, Default::default())?;
+    controller.deploy("pagerank-mr-aggregate", PR_AGGREGATE_WORK, Default::default())?;
+    env.store
+        .preload(&format!("pagerank/{job}/mr/ranks0"), Tensor::f32_to_bytes(&vec![1.0 / N as f32; N]));
+
+    let faas = FlareOptions { faas: true, ..Default::default() };
+    let before = env.store.stats.bytes_written.load(Ordering::Relaxed)
+        + env.store.stats.bytes_read.load(Ordering::Relaxed);
+    let mut total_s = 0.0;
+    let mut final_err = f64::NAN;
+    for iter in 0..iters {
+        let params: Vec<Json> = (0..n_workers)
+            .map(|_| Json::obj(vec![("job", job.into()), ("iter", iter.into())]))
+            .collect();
+        let map = controller.flare("pagerank-mr-compute", params, &faas)?;
+        total_s += map.total_s() + POLL_INTERVAL_S;
+        let agg = controller.flare(
+            "pagerank-mr-aggregate",
+            vec![Json::obj(vec![
+                ("job", job.into()),
+                ("iter", iter.into()),
+                ("workers", n_workers.into()),
+            ])],
+            &faas,
+        )?;
+        total_s += agg.total_s() + POLL_INTERVAL_S;
+        final_err = agg.outputs[0].num_or("err", f64::NAN);
+    }
+    let after = env.store.stats.bytes_written.load(Ordering::Relaxed)
+        + env.store.stats.bytes_read.load(Ordering::Relaxed);
+    Ok(StagedPageRankResult {
+        total_s,
+        rounds: 2 * iters,
+        final_err,
+        storage_bytes: after - before,
+    })
+}
+
+/// Register the staged PageRank work functions.
+pub fn register_pagerank_staged(env: &AppEnv) {
+    let e1 = env.clone();
+    register_work(PR_COMPUTE_WORK, Arc::new(move |p, ctx| pr_compute_work(&e1, p, ctx)));
+    let e2 = env.clone();
+    register_work(PR_AGGREGATE_WORK, Arc::new(move |p, ctx| pr_aggregate_work(&e2, p, ctx)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::terasort;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::Controller;
+    use crate::runtime::engine::global_pool;
+    use crate::storage::ObjectStore;
+
+    fn env() -> AppEnv {
+        AppEnv {
+            store: ObjectStore::new(NetParams::scaled(1e-6)),
+            pool: global_pool().expect("artifacts present"),
+        }
+    }
+
+    #[test]
+    fn mapreduce_terasort_sorts_correctly() {
+        let env = env();
+        let n = 4;
+        let kpw = 10_000;
+        terasort::generate(&env, "mr1", n, kpw, 31);
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        deploy(&c).unwrap();
+        let r = run_terasort_mapreduce(&c, "mr1", n).unwrap();
+        terasort::validate_outputs(&r.reduce.outputs, n * kpw).unwrap();
+        assert!(r.total_s() > r.stage_gap_s);
+        // Two FaaS rounds: both flares ran at granularity 1.
+        assert_eq!(r.map.packs.len(), n);
+        assert_eq!(r.reduce.packs.len(), n);
+    }
+
+    #[test]
+    fn staged_shuffle_moves_data_through_storage() {
+        use std::sync::atomic::Ordering;
+        let env = env();
+        let n = 3;
+        terasort::generate(&env, "mr2", n, 5_000, 37);
+        register(&env);
+        let c = Controller::test_platform(1, 48, 1e-6);
+        deploy(&c).unwrap();
+        let before_w = env.store.stats.bytes_written.load(Ordering::Relaxed);
+        let r = run_terasort_mapreduce(&c, "mr2", n).unwrap();
+        let written = env.store.stats.bytes_written.load(Ordering::Relaxed) - before_w;
+        // All keys crossed storage (4 bytes each), unlike the burst version
+        // where same-pack traffic stays in memory.
+        assert!(written >= (n * 5_000 * 4) as u64, "written {written}");
+        assert!(r.shuffle_storage_bytes(&env, "mr2") >= written);
+    }
+
+    #[test]
+    fn staged_pagerank_matches_burst_convergence() {
+        let env = env();
+        let workers = 4;
+        let iters = 3;
+        crate::apps::pagerank::generate(&env, "spr", workers, 5).unwrap();
+        crate::apps::pagerank::register(&env);
+        register_pagerank_staged(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        let staged = run_pagerank_staged(&c, &env, "spr", workers, iters).unwrap();
+        assert_eq!(staged.rounds, 2 * iters);
+        assert!(staged.storage_bytes > 0);
+
+        // The burst flare must converge to the same error.
+        c.deploy("spr-b", crate::apps::pagerank::WORK_NAME, Default::default()).unwrap();
+        let params: Vec<Json> = (0..workers)
+            .map(|_| Json::obj(vec![("job", "spr".into()), ("iters", iters.into())]))
+            .collect();
+        let burst = c
+            .flare(
+                "spr-b",
+                params,
+                &FlareOptions { granularity: Some(2), strategy: Some("homogeneous".into()), ..Default::default() },
+            )
+            .unwrap();
+        let burst_err = burst.outputs[0].num_or("err", f64::NAN);
+        assert!(
+            (staged.final_err - burst_err).abs() < 1e-5,
+            "staged {} vs burst {}",
+            staged.final_err,
+            burst_err
+        );
+        // Staged pays many more modeled seconds (2 rounds/iter + sync).
+        assert!(staged.total_s > burst.total_s());
+    }
+
+    #[test]
+    fn uniform_buckets_cover_range() {
+        for n in [1usize, 2, 7, 64] {
+            assert_eq!(uniform_bucket(0, n), 0);
+            assert_eq!(uniform_bucket(i32::MAX, n), n - 1);
+            for k in [1i32 << 10, 1 << 20, 1 << 30] {
+                assert!(uniform_bucket(k, n) < n);
+            }
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Burst applications (paper §5.4): PageRank, TeraSort, hyperparameter
+//! tuning (grid search), k-means, and the serverless-MapReduce baselines.
+//!
+//! Each app is a `work` function registered with the platform: its compute
+//! hot path executes the AOT-compiled JAX/Pallas kernels through the PJRT
+//! engine pool, and coordination goes through the BCM. Apps report their
+//! per-phase times (fetch/compute/comm) in their output JSON, which the
+//! experiment drivers aggregate into the paper's figures.
+
+pub mod gridsearch;
+pub mod kmeans;
+pub mod mapreduce;
+pub mod pagerank;
+pub mod terasort;
+
+use std::sync::Arc;
+
+use crate::runtime::EnginePool;
+use crate::storage::ObjectStore;
+
+/// Shared application environment: the object store (input data + staged
+/// shuffles) and the PJRT engine pool (kernel execution).
+#[derive(Clone)]
+pub struct AppEnv {
+    pub store: Arc<ObjectStore>,
+    pub pool: Arc<EnginePool>,
+}
+
+/// Register every app's work functions with the platform registry.
+pub fn register_all(env: &AppEnv) {
+    pagerank::register(env);
+    terasort::register(env);
+    gridsearch::register(env);
+    kmeans::register(env);
+    mapreduce::register(env);
+    mapreduce::register_pagerank_staged(env);
+}
+
+/// Phase timing helper: apps report fetch/compute/comm seconds in their
+/// output JSON under these keys.
+pub mod phases {
+    pub const FETCH: &str = "fetch_s";
+    pub const COMPUTE: &str = "compute_s";
+    pub const COMM: &str = "comm_s";
+}

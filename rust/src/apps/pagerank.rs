@@ -1,0 +1,330 @@
+//! PageRank burst (paper §4.3 / §5.4.2, Listing 1).
+//!
+//! Each worker owns a column slice of the (dense) adjacency matrix; per
+//! iteration the root broadcasts the rank vector, workers compute their
+//! contribution with the AOT Pallas SpMV kernel (`pagerank_contrib`),
+//! contributions are BCM-`reduce`d to the root, and the root applies
+//! damping + convergence check with `pagerank_finalize` and broadcasts the
+//! error. The `comm_pad` parameter inflates collective payloads so the
+//! communication volume can be scaled toward the paper's 40 MiB vectors
+//! without inflating the node count.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{phases, AppEnv};
+use crate::bcm::BurstContext;
+use crate::platform::register_work;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::timing::Stopwatch;
+
+/// Node count — fixed by the AOT artifact shape (`SHAPES["pagerank"]`).
+pub const N: usize = 1024;
+/// Column-chunk width of the SpMV kernel.
+pub const K: usize = 128;
+
+pub const WORK_NAME: &str = "pagerank";
+
+/// Generate a power-law graph and write per-worker column partitions.
+///
+/// Layout per partition object (`pagerank/<job>/part<w>`):
+/// `[ncols u32][col0 u32][outdeg f32 × ncols][block f32 × N·ncols]` with the
+/// dense adjacency block stored row-major.
+pub fn generate(env: &AppEnv, job: &str, n_workers: usize, seed: u64) -> Result<()> {
+    if n_workers == 0 || n_workers > N {
+        return Err(anyhow!("n_workers must be in 1..={N}"));
+    }
+    let mut rng = Pcg::new(seed);
+    // Power-law out-degrees (HiBench-style skew), at least 1 link per node.
+    let mut adj = vec![0.0f32; N * N]; // adj[i*N + j] = 1 if edge j -> i
+    let mut outdeg = vec![0.0f32; N];
+    for j in 0..N {
+        let d = 1 + rng.zipf(32, 1.3);
+        for _ in 0..d {
+            let i = rng.usize(0, N);
+            if adj[i * N + j] == 0.0 {
+                adj[i * N + j] = 1.0;
+                outdeg[j] += 1.0;
+            }
+        }
+    }
+    // Column partitions, contiguous and balanced.
+    let base = N / n_workers;
+    let extra = N % n_workers;
+    let mut col0 = 0usize;
+    for w in 0..n_workers {
+        let ncols = base + usize::from(w < extra);
+        let mut buf = Vec::with_capacity(8 + 4 * ncols + 4 * N * ncols);
+        buf.extend_from_slice(&(ncols as u32).to_le_bytes());
+        buf.extend_from_slice(&(col0 as u32).to_le_bytes());
+        for c in 0..ncols {
+            buf.extend_from_slice(&outdeg[col0 + c].to_le_bytes());
+        }
+        // Row-major (N × ncols) block of columns [col0, col0+ncols).
+        for i in 0..N {
+            for c in 0..ncols {
+                buf.extend_from_slice(&adj[i * N + col0 + c].to_le_bytes());
+            }
+        }
+        env.store.preload(&format!("pagerank/{job}/part{w}"), buf);
+        col0 += ncols;
+    }
+    Ok(())
+}
+
+struct Partition {
+    ncols: usize,
+    col0: usize,
+    outdeg: Vec<f32>,
+    /// Pre-padded (N × K) row-major kernel chunks.
+    chunks: Vec<Vec<f32>>,
+}
+
+fn parse_partition(raw: &[u8]) -> Result<Partition> {
+    if raw.len() < 8 {
+        return Err(anyhow!("partition too short"));
+    }
+    let ncols = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
+    let col0 = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let outdeg = Tensor::f32_from_bytes(&raw[8..8 + 4 * ncols])?;
+    let block = Tensor::f32_from_bytes(&raw[8 + 4 * ncols..])?;
+    if block.len() != N * ncols {
+        return Err(anyhow!("bad block size {} for ncols {ncols}", block.len()));
+    }
+    // Pre-pad into kernel chunks once (not per iteration).
+    let n_chunks = ncols.div_ceil(K);
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let lo = c * K;
+        let hi = ((c + 1) * K).min(ncols);
+        let mut chunk = vec![0.0f32; N * K];
+        for i in 0..N {
+            chunk[i * K..i * K + (hi - lo)]
+                .copy_from_slice(&block[i * ncols + lo..i * ncols + hi]);
+        }
+        chunks.push(chunk);
+    }
+    Ok(Partition { ncols, col0, outdeg, chunks })
+}
+
+fn add_f32_prefix(acc: &mut Vec<u8>, b: &[u8]) {
+    // In-place fold for reduce: element-wise f32 add over the vector
+    // prefix; the comm_pad tail is carried through untouched (§Perf: no
+    // per-fold allocation/copy of the padded payload).
+    let n = 4 * N;
+    for i in 0..n / 4 {
+        let x = f32::from_le_bytes(acc[4 * i..4 * i + 4].try_into().unwrap());
+        let y = f32::from_le_bytes(b[4 * i..4 * i + 4].try_into().unwrap());
+        acc[4 * i..4 * i + 4].copy_from_slice(&(x + y).to_le_bytes());
+    }
+}
+
+fn work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let iters = params.num_or("iters", 10.0) as usize;
+    let comm_pad = params.num_or("comm_pad", 0.0) as usize;
+    let tol = params.num_or("tol", 0.0);
+    let root = 0usize;
+    let me = ctx.worker_id;
+
+    // --- fetch phase ---
+    let sw = Stopwatch::start();
+    let raw = env.store.get(&format!("pagerank/{job}/part{me}"))?;
+    let part = parse_partition(&raw)?;
+    let fetch_s = sw.secs();
+
+    let mut compute_s = 0.0;
+    let mut comm_s = 0.0;
+    let mut ranks = vec![1.0f32 / N as f32; N]; // root's authoritative copy
+    let mut err = f32::INFINITY;
+    let mut iters_done = 0usize;
+
+    for _ in 0..iters {
+        // Broadcast current ranks from the root (padded to comm_pad).
+        let sw = Stopwatch::start();
+        let ranks_bytes = if me == root {
+            let mut b = Tensor::f32_to_bytes(&ranks);
+            b.resize(b.len() + comm_pad, 0);
+            Some(b)
+        } else {
+            None
+        };
+        let got = ctx.broadcast(root, ranks_bytes)?;
+        comm_s += sw.secs();
+        let cur_ranks = Tensor::f32_from_bytes(&got[..4 * N])?;
+
+        // Compute contribution via the AOT Pallas SpMV kernel.
+        let sw = Stopwatch::start();
+        let mut x = vec![0.0f32; part.ncols];
+        for c in 0..part.ncols {
+            let d = part.outdeg[c].max(1.0);
+            x[c] = cur_ranks[part.col0 + c] / d;
+        }
+        let mut sum = vec![0.0f32; N];
+        for (ci, chunk) in part.chunks.iter().enumerate() {
+            let lo = ci * K;
+            let hi = ((ci + 1) * K).min(part.ncols);
+            let mut xk = vec![0.0f32; K];
+            xk[..hi - lo].copy_from_slice(&x[lo..hi]);
+            let out = env.pool.execute(
+                "pagerank_contrib",
+                vec![Tensor::f32_2d(chunk.clone(), N, K), Tensor::f32_1d(xk)],
+            )?;
+            for (s, v) in sum.iter_mut().zip(out[0].as_f32()?) {
+                *s += v;
+            }
+        }
+        compute_s += sw.secs();
+
+        // Reduce contributions to the root (padded), tree over pack leaders.
+        let sw = Stopwatch::start();
+        let mut payload = Tensor::f32_to_bytes(&sum);
+        payload.resize(payload.len() + comm_pad, 0);
+        let reduced = ctx.reduce(root, payload, &add_f32_prefix)?;
+        comm_s += sw.secs();
+
+        // Root: damping + convergence via the finalize unit; broadcast err.
+        let err_bytes = if me == root {
+            let contrib = Tensor::f32_from_bytes(&reduced.unwrap()[..4 * N])?;
+            let sw_c = Stopwatch::start();
+            let out = env.pool.execute(
+                "pagerank_finalize",
+                vec![Tensor::f32_1d(contrib), Tensor::f32_1d(ranks.clone())],
+            )?;
+            compute_s += sw_c.secs();
+            ranks = out[0].as_f32()?.to_vec();
+            let e = out[1].scalar_f32()?;
+            Some(e.to_le_bytes().to_vec())
+        } else {
+            None
+        };
+        let sw = Stopwatch::start();
+        let got = ctx.broadcast(root, err_bytes)?;
+        comm_s += sw.secs();
+        err = f32::from_le_bytes(got[..4].try_into().unwrap());
+        iters_done += 1;
+        if (err as f64) < tol {
+            break;
+        }
+    }
+
+    let mut out = vec![
+        ("worker", Json::from(me)),
+        ("iters", Json::from(iters_done)),
+        ("err", Json::from(err as f64)),
+        (phases::FETCH, Json::from(fetch_s)),
+        (phases::COMPUTE, Json::from(compute_s)),
+        (phases::COMM, Json::from(comm_s)),
+    ];
+    if me == root {
+        let mass: f32 = ranks.iter().sum();
+        out.push(("rank_mass", Json::from(mass as f64)));
+        out.push(("rank_max", Json::from(ranks.iter().cloned().fold(0.0f32, f32::max) as f64)));
+    }
+    Ok(Json::obj(out))
+}
+
+/// Register the PageRank work function.
+pub fn register(env: &AppEnv) {
+    let env = env.clone();
+    register_work(WORK_NAME, Arc::new(move |p, ctx| work(&env, p, ctx)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::{BurstConfig, Controller, FlareOptions};
+    use crate::runtime::engine::global_pool;
+    use crate::storage::ObjectStore;
+
+    fn env() -> AppEnv {
+        AppEnv {
+            store: ObjectStore::new(NetParams::scaled(1e-6)),
+            pool: global_pool().expect("artifacts present"),
+        }
+    }
+
+    #[test]
+    fn partition_roundtrip_and_coverage() {
+        let env = env();
+        generate(&env, "t", 4, 7).unwrap();
+        let mut cols = 0;
+        for w in 0..4 {
+            let raw = env.store.get(&format!("pagerank/t/part{w}")).unwrap();
+            let p = parse_partition(&raw).unwrap();
+            assert_eq!(p.col0, cols);
+            cols += p.ncols;
+            assert_eq!(p.chunks.len(), p.ncols.div_ceil(K));
+        }
+        assert_eq!(cols, N);
+    }
+
+    #[test]
+    fn pagerank_converges_and_preserves_mass() {
+        let env = env();
+        generate(&env, "conv", 4, 11).unwrap();
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy(
+            "pr",
+            WORK_NAME,
+            BurstConfig { granularity: 2, strategy: "homogeneous".into(), ..Default::default() },
+        )
+        .unwrap();
+        let params: Vec<Json> = (0..4)
+            .map(|_| Json::obj(vec![("job", "conv".into()), ("iters", 8.into())]))
+            .collect();
+        let r = c.flare("pr", params, &FlareOptions::default()).unwrap();
+        let root_out = &r.outputs[0];
+        // Total rank mass stays ~1 (column-stochastic + damping invariant)
+        // for a graph without dangling nodes.
+        let mass = root_out.get("rank_mass").unwrap().as_f64().unwrap();
+        assert!((mass - 1.0).abs() < 0.05, "mass {mass}");
+        // Error decreases to something small after 8 iterations.
+        let err = root_out.get("err").unwrap().as_f64().unwrap();
+        assert!(err < 0.2, "err {err}");
+        assert!(r.traffic.remote() > 0);
+    }
+
+    #[test]
+    fn higher_granularity_reduces_remote_traffic() {
+        let env = env();
+        generate(&env, "tr", 8, 13).unwrap();
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy("pr2", WORK_NAME, BurstConfig::default()).unwrap();
+        let params = |_g: usize| -> Vec<Json> {
+            (0..8)
+                .map(|_| {
+                    Json::obj(vec![
+                        ("job", "tr".into()),
+                        ("iters", 2.into()),
+                        ("comm_pad", 8192.into()),
+                    ])
+                })
+                .collect()
+        };
+        let mut remotes = Vec::new();
+        for g in [1usize, 4, 8] {
+            let r = c
+                .flare(
+                    "pr2",
+                    params(g),
+                    &FlareOptions {
+                        granularity: Some(g),
+                        strategy: Some("homogeneous".into()),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            remotes.push(r.traffic.remote());
+        }
+        assert!(remotes[0] > remotes[1], "{remotes:?}");
+        assert!(remotes[1] > remotes[2], "{remotes:?}");
+        assert_eq!(remotes[2], 0, "single pack must be fully local");
+    }
+}

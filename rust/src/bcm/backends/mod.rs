@@ -1,0 +1,10 @@
+//! Simulated remote backends for the BCM (paper §4.5 / §5.2): Redis,
+//! DragonflyDB (list & stream flavors), RabbitMQ, and S3. Each moves real
+//! bytes through real shared structures; only service times and structural
+//! limits (threading model, payload caps, rate limits) are modeled — see
+//! DESIGN.md §1.
+
+pub mod flaky;
+pub mod kv;
+pub mod rabbitmq;
+pub mod s3;

@@ -1,0 +1,223 @@
+//! Simulated RabbitMQ backend.
+//!
+//! Structural properties from the paper's Fig. 8: a handful of broker IO
+//! threads, a *global* pipeline throughput cap (~1 GiB/s — RabbitMQ does not
+//! scale with parallel producers), and the AMQP payload limit of 128 MiB
+//! (larger chunks are rejected, which is why Fig. 8a's RabbitMQ series stops
+//! at 128 MiB). One-to-one messages use direct exchanges (consume-once
+//! queues); one-to-many use fan-out exchanges (read-many).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::mailbox::Bytes;
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::timing::{precise_sleep, secs_f64};
+
+#[derive(Default)]
+struct BrokerStore {
+    direct: HashMap<String, VecDeque<Bytes>>,
+    fanout: HashMap<String, Bytes>,
+}
+
+pub struct RabbitBackend {
+    store: Mutex<BrokerStore>,
+    cv: Condvar,
+    /// IO thread pool: limits op concurrency.
+    io_slots: Arc<TokenBucket>,
+    /// Global pipeline throughput cap.
+    pipeline: TokenBucket,
+    op_latency_s: f64,
+    time_scale: f64,
+    max_payload: usize,
+    counters: BackendCounters,
+}
+
+impl RabbitBackend {
+    pub fn new(params: &NetParams) -> Arc<RabbitBackend> {
+        let scale = params.time_scale.max(1e-9);
+        Arc::new(RabbitBackend {
+            store: Mutex::new(BrokerStore::default()),
+            cv: Condvar::new(),
+            io_slots: Arc::new(TokenBucket::new(
+                params.rabbit_io_threads as f64 / params.rabbit_op_latency_s / scale,
+                params.rabbit_io_threads as f64,
+            )),
+            pipeline: TokenBucket::new(
+                params.rabbit_pipeline_bw / scale,
+                params.rabbit_pipeline_bw / 8.0,
+            ),
+            op_latency_s: params.rabbit_op_latency_s,
+            time_scale: params.time_scale,
+            max_payload: params.rabbit_max_payload,
+            counters: BackendCounters::default(),
+        })
+    }
+
+    fn serve(&self, bytes: usize) -> Result<()> {
+        if bytes > self.max_payload {
+            return Err(anyhow!(
+                "rabbitmq: payload {} exceeds AMQP limit {}",
+                bytes,
+                self.max_payload
+            ));
+        }
+        // One IO-thread slot per op, then pay the pipeline for the bytes.
+        self.io_slots.take(1.0);
+        precise_sleep(secs_f64(self.op_latency_s * self.time_scale));
+        self.pipeline.take(bytes as f64);
+        Ok(())
+    }
+}
+
+impl RemoteBackend for RabbitBackend {
+    fn name(&self) -> String {
+        "rabbitmq".into()
+    }
+
+    fn put(&self, key: &str, data: Bytes) -> Result<()> {
+        self.serve(data.len())?;
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = self.store.lock().unwrap();
+        st.direct.entry(key.to_string()).or_default().push_back(data);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = self.store.lock().unwrap();
+            loop {
+                if let Some(q) = st.direct.get_mut(key) {
+                    if let Some(v) = q.pop_front() {
+                        break v;
+                    }
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("rabbitmq: fetch('{key}') timed out"));
+                }
+                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.serve(data.len())?;
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn publish(&self, key: &str, data: Bytes) -> Result<()> {
+        self.serve(data.len())?;
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = self.store.lock().unwrap();
+        st.fanout.insert(key.to_string(), data);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = self.store.lock().unwrap();
+            loop {
+                if let Some(v) = st.fanout.get(key) {
+                    break v.clone();
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("rabbitmq: read('{key}') timed out"));
+                }
+                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.serve(data.len())?;
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn clear_prefix(&self, prefix: &str) {
+        let mut st = self.store.lock().unwrap();
+        st.direct.retain(|k, _| !k.starts_with(prefix));
+        st.fanout.retain(|k, _| !k.starts_with(prefix));
+    }
+
+    fn max_payload(&self) -> Option<usize> {
+        Some(self.max_payload)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    fn fast() -> NetParams {
+        NetParams::scaled(1e-6)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let b = RabbitBackend::new(&fast());
+        b.put("q", Arc::new(vec![1])).unwrap();
+        assert_eq!(b.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![1]);
+    }
+
+    #[test]
+    fn rejects_oversized_payload() {
+        let b = RabbitBackend::new(&fast());
+        let too_big = Arc::new(vec![0u8; 129 * MIB]);
+        assert!(b.put("k", too_big).is_err());
+        let ok = Arc::new(vec![0u8; MIB]);
+        assert!(b.put("k", ok).is_ok());
+    }
+
+    #[test]
+    fn fanout_read_many() {
+        let b = RabbitBackend::new(&fast());
+        b.publish("x", Arc::new(vec![7])).unwrap();
+        for _ in 0..4 {
+            assert_eq!(b.read("x", Duration::from_millis(10)).unwrap().as_ref(), &vec![7]);
+        }
+    }
+
+    #[test]
+    fn pipeline_cap_limits_parallel_throughput() {
+        // 8 threads × 16 MiB through a 1 GiB/s pipeline compressed 2×:
+        // modeled 128 MiB / 1 GiB/s = 125 ms. Compare with a single put to
+        // show aggregation doesn't scale.
+        let _guard = crate::util::timing::timing_test_lock();
+        let params = NetParams::scaled(0.5);
+        let b = RabbitBackend::new(&params);
+        // Drain the pipeline's burst allowance so steady-state rate shows.
+        b.put("warmup", Arc::new(vec![0u8; 128 * MIB])).unwrap();
+        let t = crate::util::timing::Stopwatch::start();
+        b.put("single", Arc::new(vec![0u8; 16 * MIB])).unwrap();
+        let single = t.secs();
+        let t = crate::util::timing::Stopwatch::start();
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let b = &b;
+                s.spawn(move || b.put(&format!("k{i}"), Arc::new(vec![0u8; 16 * MIB])).unwrap());
+            }
+        });
+        let parallel8 = t.secs();
+        // 8 puts should take ~8× a single put (no parallel speed-up).
+        assert!(parallel8 > single * 4.0, "parallel {parallel8} single {single}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Simulated S3 backend for the BCM.
+//!
+//! Object storage as a message channel: very high per-request latency,
+//! modest per-connection bandwidth, but effectively unlimited request-level
+//! parallelism — bounded by the service's request-rate limits (the paper
+//! notes 1 MiB chunks "exceed the allowed service request rate limits",
+//! which is why S3 prefers large chunks in Fig. 8a while scaling with
+//! parallelism in Fig. 8b).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::mailbox::Bytes;
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::timing::{precise_sleep, secs_f64};
+
+#[derive(Default)]
+struct S3Store {
+    queues: HashMap<String, VecDeque<Bytes>>,
+    objects: HashMap<String, Bytes>,
+}
+
+pub struct S3Backend {
+    store: Mutex<S3Store>,
+    cv: Condvar,
+    get_rate: TokenBucket,
+    put_rate: TokenBucket,
+    get_latency_s: f64,
+    put_latency_s: f64,
+    per_byte_s: f64,
+    time_scale: f64,
+    counters: BackendCounters,
+}
+
+impl S3Backend {
+    pub fn new(params: &NetParams) -> Arc<S3Backend> {
+        let scale = params.time_scale.max(1e-9);
+        Arc::new(S3Backend {
+            store: Mutex::new(S3Store::default()),
+            cv: Condvar::new(),
+            get_rate: TokenBucket::new(params.s3_get_rate / scale, params.s3_get_rate / 4.0),
+            put_rate: TokenBucket::new(params.s3_put_rate / scale, params.s3_put_rate / 4.0),
+            get_latency_s: params.s3_get_latency_s,
+            put_latency_s: params.s3_put_latency_s,
+            per_byte_s: 1.0 / params.s3_conn_bw,
+            time_scale: params.time_scale,
+            counters: BackendCounters::default(),
+        })
+    }
+
+    /// Requests run fully in parallel (no executor lock): S3 scales with
+    /// connections; only the rate limiter and per-connection bandwidth bind.
+    fn serve(&self, latency: f64, bytes: usize) {
+        precise_sleep(secs_f64(
+            (latency + bytes as f64 * self.per_byte_s) * self.time_scale,
+        ));
+    }
+}
+
+impl RemoteBackend for S3Backend {
+    fn name(&self) -> String {
+        "s3".into()
+    }
+
+    fn put(&self, key: &str, data: Bytes) -> Result<()> {
+        self.put_rate.take(1.0);
+        self.serve(self.put_latency_s, data.len());
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = self.store.lock().unwrap();
+        st.queues.entry(key.to_string()).or_default().push_back(data);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        // S3 has no blocking read: consumers poll. We model the poll loop
+        // with rate-limited existence checks, then pay the GET.
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = self.store.lock().unwrap();
+            loop {
+                if let Some(q) = st.queues.get_mut(key) {
+                    if let Some(v) = q.pop_front() {
+                        break v;
+                    }
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("s3: fetch('{key}') timed out"));
+                }
+                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.get_rate.take(1.0);
+        self.serve(self.get_latency_s, data.len());
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn publish(&self, key: &str, data: Bytes) -> Result<()> {
+        self.put_rate.take(1.0);
+        self.serve(self.put_latency_s, data.len());
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
+        let mut st = self.store.lock().unwrap();
+        st.objects.insert(key.to_string(), data);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let deadline = Instant::now() + timeout;
+        let data = {
+            let mut st = self.store.lock().unwrap();
+            loop {
+                if let Some(v) = st.objects.get(key) {
+                    break v.clone();
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow!("s3: read('{key}') timed out"));
+                }
+                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        };
+        self.get_rate.take(1.0);
+        self.serve(self.get_latency_s, data.len());
+        self.counters.gets.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn clear_prefix(&self, prefix: &str) {
+        let mut st = self.store.lock().unwrap();
+        st.queues.retain(|k, _| !k.starts_with(prefix));
+        st.objects.retain(|k, _| !k.starts_with(prefix));
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+    use crate::util::timing::Stopwatch;
+
+    fn fast() -> NetParams {
+        NetParams::scaled(1e-6)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = S3Backend::new(&fast());
+        s.put("k", Arc::new(vec![3, 4])).unwrap();
+        assert_eq!(s.fetch("k", Duration::from_millis(50)).unwrap().as_ref(), &vec![3, 4]);
+    }
+
+    #[test]
+    fn publish_read_many() {
+        let s = S3Backend::new(&fast());
+        s.publish("o", Arc::new(vec![1])).unwrap();
+        for _ in 0..3 {
+            assert_eq!(s.read("o", Duration::from_millis(50)).unwrap().as_ref(), &vec![1]);
+        }
+    }
+
+    #[test]
+    fn scales_with_parallel_connections() {
+        // Unlike redis, 8 parallel 16 MiB puts ≈ 1 put (modulo rate limits).
+        // (Lenient threshold: suite runs in parallel, wall clock is noisy.)
+        let _guard = crate::util::timing::timing_test_lock();
+        let params = NetParams::scaled(0.5);
+        let s = S3Backend::new(&params);
+        let t = Stopwatch::start();
+        s.put("one", Arc::new(vec![0u8; 16 * MIB])).unwrap();
+        let single = t.secs();
+        let t = Stopwatch::start();
+        std::thread::scope(|sc| {
+            for i in 0..8 {
+                let s = &s;
+                sc.spawn(move || s.put(&format!("k{i}"), Arc::new(vec![0u8; 16 * MIB])).unwrap());
+            }
+        });
+        let parallel = t.secs();
+        assert!(parallel < single * 4.0, "single {single} parallel {parallel}");
+    }
+
+    #[test]
+    fn high_latency_per_op() {
+        // Many tiny ops are slow on S3 (the Fig 8a penalty for small
+        // chunks): 20 sequential zero-byte puts pay 20 × put latency.
+        let _guard = crate::util::timing::timing_test_lock();
+        let params = NetParams::scaled(0.05);
+        let s = S3Backend::new(&params);
+        let t = Stopwatch::start();
+        for i in 0..20 {
+            s.put(&format!("t{i}"), Arc::new(vec![])).unwrap();
+        }
+        let took = t.secs();
+        let expected = 20.0 * params.s3_put_latency_s * params.time_scale;
+        assert!(took >= expected * 0.8, "took {took} expected >= {expected}");
+    }
+}

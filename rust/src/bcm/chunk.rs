@@ -1,0 +1,304 @@
+//! Remote message chunking protocol (paper §4.5).
+//!
+//! Large messages are split into fixed-size chunks sent/received
+//! concurrently to maximize network utilization and let readers start from
+//! the first chunk. Every chunk carries a header with the source and
+//! destination worker, the operation class, a per-pair/collective counter,
+//! and its chunk index/count; the reassembly buffer reserves the full
+//! payload up front, writes chunks at their offsets as they arrive
+//! (out-of-order safe), and ignores duplicates (at-least-once semantics).
+
+use anyhow::{anyhow, Result};
+
+pub const MAGIC: u16 = 0xB57C;
+pub const HEADER_LEN: usize = 32;
+
+/// Operation classes, part of the message key space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Direct = 0,
+    Broadcast = 1,
+    Reduce = 2,
+    AllToAll = 3,
+    Gather = 4,
+    Scatter = 5,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Result<Op> {
+        Ok(match v {
+            0 => Op::Direct,
+            1 => Op::Broadcast,
+            2 => Op::Reduce,
+            3 => Op::AllToAll,
+            4 => Op::Gather,
+            5 => Op::Scatter,
+            _ => return Err(anyhow!("bad op byte {v}")),
+        })
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Op::Direct => "d",
+            Op::Broadcast => "b",
+            Op::Reduce => "r",
+            Op::AllToAll => "a",
+            Op::Gather => "g",
+            Op::Scatter => "s",
+        }
+    }
+}
+
+/// Chunk header (32 bytes, little-endian).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub op: Op,
+    pub src: u32,
+    pub dst: u32,
+    pub counter: u64,
+    pub chunk_idx: u32,
+    pub n_chunks: u32,
+    pub total_len: u32,
+}
+
+impl Header {
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..2].copy_from_slice(&MAGIC.to_le_bytes());
+        b[2] = 1; // version
+        b[3] = self.op as u8;
+        b[4..8].copy_from_slice(&self.src.to_le_bytes());
+        b[8..12].copy_from_slice(&self.dst.to_le_bytes());
+        b[12..20].copy_from_slice(&self.counter.to_le_bytes());
+        b[20..24].copy_from_slice(&self.chunk_idx.to_le_bytes());
+        b[24..28].copy_from_slice(&self.n_chunks.to_le_bytes());
+        b[28..32].copy_from_slice(&self.total_len.to_le_bytes());
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Header> {
+        if b.len() < HEADER_LEN {
+            return Err(anyhow!("short header: {} bytes", b.len()));
+        }
+        let magic = u16::from_le_bytes([b[0], b[1]]);
+        if magic != MAGIC {
+            return Err(anyhow!("bad magic {magic:#06x}"));
+        }
+        if b[2] != 1 {
+            return Err(anyhow!("unsupported chunk version {}", b[2]));
+        }
+        Ok(Header {
+            op: Op::from_u8(b[3])?,
+            src: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            dst: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+            counter: u64::from_le_bytes(b[12..20].try_into().unwrap()),
+            chunk_idx: u32::from_le_bytes(b[20..24].try_into().unwrap()),
+            n_chunks: u32::from_le_bytes(b[24..28].try_into().unwrap()),
+            total_len: u32::from_le_bytes(b[28..32].try_into().unwrap()),
+        })
+    }
+}
+
+/// Split a payload into framed chunks of at most `chunk_size` payload bytes.
+/// Empty payloads produce a single empty chunk so receivers always get one.
+pub fn split(
+    op: Op,
+    src: u32,
+    dst: u32,
+    counter: u64,
+    payload: &[u8],
+    chunk_size: usize,
+) -> Vec<Vec<u8>> {
+    assert!(chunk_size > 0);
+    let n_chunks = payload.len().div_ceil(chunk_size).max(1);
+    (0..n_chunks)
+        .map(|i| {
+            let lo = i * chunk_size;
+            let hi = ((i + 1) * chunk_size).min(payload.len());
+            let hdr = Header {
+                op,
+                src,
+                dst,
+                counter,
+                chunk_idx: i as u32,
+                n_chunks: n_chunks as u32,
+                total_len: payload.len() as u32,
+            };
+            let mut out = Vec::with_capacity(HEADER_LEN + hi - lo);
+            out.extend_from_slice(&hdr.encode());
+            out.extend_from_slice(&payload[lo..hi]);
+            out
+        })
+        .collect()
+}
+
+/// Reassembly buffer: the full payload is reserved up front and chunks are
+/// written to their offsets as they come in (paper §4.5).
+#[derive(Debug)]
+pub struct Reassembly {
+    buf: Vec<u8>,
+    seen: Vec<bool>,
+    remaining: usize,
+    n_chunks: usize,
+}
+
+impl Reassembly {
+    /// Build from the first chunk to arrive (any index).
+    pub fn from_first(chunk: &[u8]) -> Result<(Reassembly, Header)> {
+        let hdr = Header::decode(chunk)?;
+        let n = hdr.n_chunks as usize;
+        let total = hdr.total_len as usize;
+        let mut r = Reassembly {
+            buf: vec![0u8; total],
+            seen: vec![false; n],
+            remaining: n,
+            n_chunks: n,
+        };
+        r.accept(chunk)?;
+        Ok((r, hdr))
+    }
+
+    /// Accept a chunk; duplicates are ignored (returns false).
+    ///
+    /// Offsets are computed per chunk: every non-final chunk carries a full
+    /// `chunk_size` payload so `off = idx * payload_len`; the final chunk's
+    /// offset is anchored to the end of the buffer (`total - payload_len`),
+    /// which is consistent regardless of arrival order.
+    pub fn accept(&mut self, chunk: &[u8]) -> Result<bool> {
+        let hdr = Header::decode(chunk)?;
+        let idx = hdr.chunk_idx as usize;
+        if idx >= self.n_chunks {
+            return Err(anyhow!("chunk idx {idx} out of range {}", self.n_chunks));
+        }
+        if self.seen[idx] {
+            return Ok(false); // duplicate — at-least-once tolerated
+        }
+        let payload = &chunk[HEADER_LEN..];
+        let off = if idx == self.n_chunks - 1 {
+            self.buf.len().checked_sub(payload.len()).ok_or_else(|| {
+                anyhow!("final chunk larger than payload ({} > {})", payload.len(), self.buf.len())
+            })?
+        } else {
+            idx * payload.len()
+        };
+        if off + payload.len() > self.buf.len() {
+            return Err(anyhow!(
+                "chunk {idx} overflows buffer ({} + {} > {})",
+                off,
+                payload.len(),
+                self.buf.len()
+            ));
+        }
+        self.buf[off..off + payload.len()].copy_from_slice(payload);
+        self.seen[idx] = true;
+        self.remaining -= 1;
+        Ok(true)
+    }
+
+    pub fn complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn into_payload(self) -> Result<Vec<u8>> {
+        if !self.complete() {
+            return Err(anyhow!("reassembly incomplete: {} chunks missing", self.remaining));
+        }
+        Ok(self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(payload: &[u8], chunk_size: usize, order: Option<Vec<usize>>) -> Vec<u8> {
+        let chunks = split(Op::Direct, 1, 2, 7, payload, chunk_size);
+        let idxs: Vec<usize> = order.unwrap_or_else(|| (0..chunks.len()).collect());
+        let (mut r, hdr) = Reassembly::from_first(&chunks[idxs[0]]).unwrap();
+        assert_eq!(hdr.src, 1);
+        assert_eq!(hdr.dst, 2);
+        assert_eq!(hdr.counter, 7);
+        for &i in &idxs[1..] {
+            r.accept(&chunks[i]).unwrap();
+        }
+        r.into_payload().unwrap()
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            op: Op::AllToAll,
+            src: 12,
+            dst: 300,
+            counter: u64::MAX - 3,
+            chunk_idx: 5,
+            n_chunks: 9,
+            total_len: 123456,
+        };
+        assert_eq!(Header::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        assert!(Header::decode(&[0u8; 10]).is_err());
+        assert!(Header::decode(&[0u8; 32]).is_err()); // bad magic
+    }
+
+    #[test]
+    fn split_exact_multiple() {
+        let payload = vec![7u8; 4096];
+        let chunks = split(Op::Direct, 0, 1, 0, &payload, 1024);
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|c| c.len() == 1024 + HEADER_LEN));
+    }
+
+    #[test]
+    fn roundtrip_in_order() {
+        let payload: Vec<u8> = (0..10_000).map(|i| (i % 256) as u8).collect();
+        assert_eq!(roundtrip(&payload, 1024, None), payload);
+    }
+
+    #[test]
+    fn roundtrip_reverse_order() {
+        let payload: Vec<u8> = (0..5000).map(|i| (i % 251) as u8).collect();
+        let n = payload.len().div_ceil(512);
+        assert_eq!(roundtrip(&payload, 512, Some((0..n).rev().collect())), payload);
+    }
+
+    #[test]
+    fn roundtrip_last_chunk_first() {
+        let payload: Vec<u8> = (0..3000).map(|i| (i % 13) as u8).collect();
+        let n = payload.len().div_ceil(1024); // 3 chunks, last one short
+        let mut order: Vec<usize> = (0..n).collect();
+        order.rotate_right(1); // last chunk arrives first
+        assert_eq!(roundtrip(&payload, 1024, Some(order)), payload);
+    }
+
+    #[test]
+    fn duplicates_ignored() {
+        let payload = vec![1u8; 2048];
+        let chunks = split(Op::Direct, 0, 1, 0, &payload, 1024);
+        let (mut r, _) = Reassembly::from_first(&chunks[0]).unwrap();
+        assert!(!r.accept(&chunks[0]).unwrap()); // dup
+        assert!(r.accept(&chunks[1]).unwrap());
+        assert!(!r.accept(&chunks[1]).unwrap()); // dup
+        assert_eq!(r.into_payload().unwrap(), payload);
+    }
+
+    #[test]
+    fn empty_payload_one_chunk() {
+        let chunks = split(Op::Direct, 0, 1, 0, &[], 1024);
+        assert_eq!(chunks.len(), 1);
+        let (r, _) = Reassembly::from_first(&chunks[0]).unwrap();
+        assert!(r.complete());
+        assert_eq!(r.into_payload().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn incomplete_reassembly_errors() {
+        let chunks = split(Op::Direct, 0, 1, 0, &vec![0u8; 4096], 1024);
+        let (r, _) = Reassembly::from_first(&chunks[0]).unwrap();
+        assert!(!r.complete());
+        assert!(r.into_payload().is_err());
+    }
+}

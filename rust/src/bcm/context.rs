@@ -1,0 +1,405 @@
+//! `BurstContext`: the per-worker handle the platform passes to the `work`
+//! function (paper Table 2). Exposes the flare's job context (worker id,
+//! burst size, pack distribution) and the BCM communication primitives:
+//! `send`/`recv`, `broadcast`, `reduce`, `all_to_all` — plus `gather`,
+//! `scatter` and `barrier` (the paper's "future work" collectives).
+//!
+//! All primitives are **locality-aware but locality-agnostic to the
+//! program** (paper §4.2): co-located workers exchange `Arc` pointers over
+//! mailboxes; only cross-pack edges touch the remote backend, and
+//! collectives are structured so remote volume is proportional to packs,
+//! not workers (broadcast: one publish, one read per pack; reduce: a
+//! pack-leader tree).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::chunk::Op;
+use super::fabric::CommFabric;
+use super::mailbox::Bytes;
+
+/// Per-worker burst context.
+pub struct BurstContext {
+    pub worker_id: usize,
+    fabric: Arc<CommFabric>,
+    /// Per-destination send counters (at-least-once bookkeeping, §4.5).
+    send_ctrs: Mutex<HashMap<(Op, usize), u64>>,
+    /// Per-source receive counters.
+    recv_ctrs: Mutex<HashMap<(Op, usize), u64>>,
+    /// Collective-call counter; SPMD programs call collectives in the same
+    /// order on every worker, so these agree across the burst.
+    coll_ctr: AtomicU64,
+}
+
+impl BurstContext {
+    pub fn new(worker_id: usize, fabric: Arc<CommFabric>) -> BurstContext {
+        BurstContext {
+            worker_id,
+            fabric,
+            send_ctrs: Mutex::new(HashMap::new()),
+            recv_ctrs: Mutex::new(HashMap::new()),
+            coll_ctr: AtomicU64::new(0),
+        }
+    }
+
+    // --- job context (paper §4.2) ---
+
+    pub fn burst_size(&self) -> usize {
+        self.fabric.topology.burst_size()
+    }
+
+    pub fn pack_id(&self) -> usize {
+        self.fabric.topology.pack_of(self.worker_id)
+    }
+
+    pub fn n_packs(&self) -> usize {
+        self.fabric.topology.n_packs()
+    }
+
+    pub fn granularity(&self) -> usize {
+        self.fabric.topology.granularity()
+    }
+
+    pub fn pack_members(&self) -> &[usize] {
+        self.fabric.topology.members(self.pack_id())
+    }
+
+    /// Is this worker its pack's designated remote reader/leader?
+    pub fn is_leader(&self) -> bool {
+        self.fabric.topology.leader(self.pack_id()) == self.worker_id
+    }
+
+    pub fn fabric(&self) -> &Arc<CommFabric> {
+        &self.fabric
+    }
+
+    fn next_send(&self, op: Op, dst: usize) -> u64 {
+        let mut m = self.send_ctrs.lock().unwrap();
+        let c = m.entry((op, dst)).or_insert(0);
+        let v = *c;
+        *c += 1;
+        v
+    }
+
+    fn next_recv(&self, op: Op, src: usize) -> u64 {
+        let mut m = self.recv_ctrs.lock().unwrap();
+        let c = m.entry((op, src)).or_insert(0);
+        let v = *c;
+        *c += 1;
+        v
+    }
+
+    fn next_coll(&self) -> u64 {
+        self.coll_ctr.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn local_key(op: Op, src: usize, ctr: u64) -> String {
+        format!("{}/{}/{}", op.tag(), src, ctr)
+    }
+
+    // --- point-to-point (paper Table 2) ---
+
+    /// `send(data, dest)`: point-to-point send. Zero-copy if `dest` shares
+    /// this worker's pack.
+    pub fn send(&self, dst: usize, data: Vec<u8>) -> Result<()> {
+        self.send_op(Op::Direct, dst, data, self.next_send(Op::Direct, dst))
+    }
+
+    fn send_op(&self, op: Op, dst: usize, data: Vec<u8>, ctr: u64) -> Result<()> {
+        if dst >= self.burst_size() {
+            return Err(anyhow!("send: dst {dst} out of range {}", self.burst_size()));
+        }
+        let t = &self.fabric.topology;
+        if t.same_pack(self.worker_id, dst) {
+            self.fabric.deliver_local(
+                dst,
+                Self::local_key(op, self.worker_id, ctr),
+                Arc::new(data),
+            );
+            Ok(())
+        } else {
+            self.fabric.remote_send(op, self.worker_id, Some(dst), ctr, &data)
+        }
+    }
+
+    /// `recv(source)`: blocking point-to-point receive.
+    pub fn recv(&self, src: usize) -> Result<Bytes> {
+        self.recv_op(Op::Direct, src, self.next_recv(Op::Direct, src))
+    }
+
+    fn recv_op(&self, op: Op, src: usize, ctr: u64) -> Result<Bytes> {
+        if src >= self.burst_size() {
+            return Err(anyhow!("recv: src {src} out of range {}", self.burst_size()));
+        }
+        let t = &self.fabric.topology;
+        if t.same_pack(self.worker_id, src) {
+            self.fabric
+                .mailbox(self.worker_id)
+                .take(&Self::local_key(op, src, ctr), self.fabric.config.timeout)
+        } else {
+            let payload = self.fabric.remote_recv(
+                op,
+                src,
+                Some(self.worker_id),
+                ctr,
+                self.pack_id(),
+                true,
+            )?;
+            Ok(Arc::new(payload))
+        }
+    }
+
+    // --- collectives (paper Table 2) ---
+
+    /// `broadcast(data, root)`: root's payload is delivered to every
+    /// worker. Remotely the data is published **once** and read **once per
+    /// pack** (the pack leader fans it out locally) — remote volume is
+    /// proportional to the number of packs, not workers (paper §5.3).
+    pub fn broadcast(&self, root: usize, data: Option<Vec<u8>>) -> Result<Bytes> {
+        let ctr = self.next_coll();
+        let t = &self.fabric.topology;
+        let my_pack = self.pack_id();
+        let root_pack = t.pack_of(root);
+        let key = Self::local_key(Op::Broadcast, root, ctr);
+
+        if self.worker_id == root {
+            let data =
+                Arc::new(data.ok_or_else(|| anyhow!("broadcast: root must supply data"))?);
+            // Local fan-out within the root's pack.
+            for &w in t.members(my_pack) {
+                if w != root {
+                    self.fabric.deliver_local(w, key.clone(), data.clone());
+                }
+            }
+            // One publish regardless of how many packs read it.
+            if t.n_packs() > 1 {
+                self.fabric.remote_send(Op::Broadcast, root, None, ctr, &data)?;
+            }
+            return Ok(data);
+        }
+
+        if my_pack == root_pack {
+            return self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout);
+        }
+
+        // Remote pack: the leader reads once and fans out locally.
+        if self.is_leader() {
+            let payload =
+                self.fabric.remote_recv(Op::Broadcast, root, None, ctr, my_pack, false)?;
+            let data = Arc::new(payload);
+            for &w in t.members(my_pack) {
+                if w != self.worker_id {
+                    self.fabric.deliver_local(w, key.clone(), data.clone());
+                }
+            }
+            Ok(data)
+        } else {
+            self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout)
+        }
+    }
+
+    /// `reduce(data, f)`: fold every worker's payload with `f` and deliver
+    /// the result to `root` (returns `None` elsewhere). Locality-aware
+    /// two-level tree: fold within each pack first (local), then a binary
+    /// tree over pack leaders (remote edges ∝ packs − 1).
+    ///
+    /// `f(acc, other)` folds in place — the accumulator buffer is reused
+    /// across every fold step, so a reduce of `k` inputs of `n` bytes
+    /// allocates O(n), not O(k·n) (§Perf).
+    pub fn reduce(
+        &self,
+        root: usize,
+        data: Vec<u8>,
+        f: &(dyn Fn(&mut Vec<u8>, &[u8]) + Sync),
+    ) -> Result<Option<Vec<u8>>> {
+        let ctr = self.next_coll();
+        let t = &self.fabric.topology;
+        let my_pack = self.pack_id();
+        let root_pack = t.pack_of(root);
+        let leader = t.leader(my_pack);
+
+        // Intra-pack: members send to their leader (zero-copy), leader folds
+        // in ascending worker order for determinism.
+        if self.worker_id != leader {
+            self.send_op(Op::Reduce, leader, data, ctr)?;
+            // Non-leaders may still be the root (when root isn't its pack's
+            // leader): the root-pack leader forwards the final value.
+            if self.worker_id == root {
+                let v = self.recv_op(Op::Reduce, leader, ctr)?;
+                return Ok(Some(v.as_ref().clone()));
+            }
+            return Ok(None);
+        }
+
+        let mut acc = data;
+        for &w in t.members(my_pack) {
+            if w != leader {
+                let v = self.recv_op(Op::Reduce, w, ctr)?;
+                f(&mut acc, &v);
+            }
+        }
+
+        // Inter-pack binary tree rooted at the root's pack. Virtual pack
+        // index vp = (pack - root_pack) mod n_packs; children are 2vp+1 and
+        // 2vp+2; edges are leader→leader.
+        let n_packs = t.n_packs();
+        let vp = (my_pack + n_packs - root_pack) % n_packs;
+        let unvirt = |v: usize| (v + root_pack) % n_packs;
+        for c in [2 * vp + 1, 2 * vp + 2] {
+            if c < n_packs {
+                let child_leader = t.leader(unvirt(c));
+                let v = self.recv_op(Op::Reduce, child_leader, ctr)?;
+                f(&mut acc, &v);
+            }
+        }
+        if vp != 0 {
+            let parent_leader = t.leader(unvirt((vp - 1) / 2));
+            self.send_op(Op::Reduce, parent_leader, acc, ctr)?;
+            return Ok(None);
+        }
+
+        // Root pack's leader holds the final value.
+        if self.worker_id == root {
+            Ok(Some(acc))
+        } else {
+            self.send_op(Op::Reduce, root, acc, ctr)?;
+            Ok(None)
+        }
+    }
+
+    /// `allToAll([data])`: worker `w` supplies one payload per destination
+    /// and receives one payload per source (ordered by source id). Intra-
+    /// pack exchanges are zero-copy; inter-pack are chunked remote
+    /// transfers, so the remote fraction is `1 − 1/packs` of the volume
+    /// (paper §5.3).
+    pub fn all_to_all(&self, msgs: Vec<Vec<u8>>) -> Result<Vec<Bytes>> {
+        let n = self.burst_size();
+        if msgs.len() != n {
+            return Err(anyhow!("all_to_all: need {n} payloads, got {}", msgs.len()));
+        }
+        let ctr = self.next_coll();
+        let t = &self.fabric.topology;
+        // Send phase (self-message delivered through the local mailbox too,
+        // keeping receive logic uniform).
+        for (dst, m) in msgs.into_iter().enumerate() {
+            if t.same_pack(self.worker_id, dst) {
+                self.fabric.deliver_local(
+                    dst,
+                    Self::local_key(Op::AllToAll, self.worker_id, ctr),
+                    Arc::new(m),
+                );
+            } else {
+                self.fabric.remote_send(Op::AllToAll, self.worker_id, Some(dst), ctr, &m)?;
+            }
+        }
+        // Receive phase, ordered by source.
+        let mut out = Vec::with_capacity(n);
+        for src in 0..n {
+            if t.same_pack(self.worker_id, src) {
+                out.push(self.fabric.mailbox(self.worker_id).take(
+                    &Self::local_key(Op::AllToAll, src, ctr),
+                    self.fabric.config.timeout,
+                )?);
+            } else {
+                let payload = self.fabric.remote_recv(
+                    Op::AllToAll,
+                    src,
+                    Some(self.worker_id),
+                    ctr,
+                    self.pack_id(),
+                    true,
+                )?;
+                out.push(Arc::new(payload));
+            }
+        }
+        Ok(out)
+    }
+
+    /// `gather(data, root)`: root receives every worker's payload ordered
+    /// by worker id (extension collective; paper leaves it as future work).
+    pub fn gather(&self, root: usize, data: Vec<u8>) -> Result<Option<Vec<Bytes>>> {
+        let ctr = self.next_coll();
+        if self.worker_id != root {
+            self.send_op(Op::Gather, root, data, ctr)?;
+            return Ok(None);
+        }
+        let own = Arc::new(data);
+        let mut out = Vec::with_capacity(self.burst_size());
+        for src in 0..self.burst_size() {
+            if src == root {
+                out.push(own.clone());
+            } else {
+                out.push(self.recv_op(Op::Gather, src, ctr)?);
+            }
+        }
+        Ok(Some(out))
+    }
+
+    /// `scatter([data], root)`: root supplies one payload per worker; each
+    /// worker receives its slice (extension collective).
+    pub fn scatter(&self, root: usize, msgs: Option<Vec<Vec<u8>>>) -> Result<Bytes> {
+        let ctr = self.next_coll();
+        if self.worker_id == root {
+            let msgs =
+                msgs.ok_or_else(|| anyhow!("scatter: root must supply payloads"))?;
+            if msgs.len() != self.burst_size() {
+                return Err(anyhow!(
+                    "scatter: need {} payloads, got {}",
+                    self.burst_size(),
+                    msgs.len()
+                ));
+            }
+            let mut mine = None;
+            for (dst, m) in msgs.into_iter().enumerate() {
+                if dst == root {
+                    mine = Some(Arc::new(m));
+                } else {
+                    self.send_op(Op::Scatter, dst, m, ctr)?;
+                }
+            }
+            Ok(mine.unwrap())
+        } else {
+            self.recv_op(Op::Scatter, root, ctr)
+        }
+    }
+
+    /// Pack-local share: the pack leader supplies data that every co-located
+    /// worker receives zero-copy (one `Arc` per member, no remote traffic).
+    /// This is the collaborative data-loading primitive behind Fig. 7 /
+    /// Table 3: the leader downloads an input once per pack and shares it.
+    pub fn pack_share(&self, data: Option<Vec<u8>>) -> Result<Bytes> {
+        let ctr = self.next_coll();
+        let t = &self.fabric.topology;
+        let my_pack = self.pack_id();
+        let leader = t.leader(my_pack);
+        let key = Self::local_key(Op::Scatter, leader, ctr);
+        if self.worker_id == leader {
+            let data =
+                Arc::new(data.ok_or_else(|| anyhow!("pack_share: leader must supply data"))?);
+            for &w in t.members(my_pack) {
+                if w != leader {
+                    self.fabric.deliver_local(w, key.clone(), data.clone());
+                }
+            }
+            Ok(data)
+        } else {
+            self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout)
+        }
+    }
+
+    /// Synchronization barrier over the whole burst (reduce + broadcast of
+    /// empty payloads).
+    pub fn barrier(&self) -> Result<()> {
+        let done = self.reduce(0, vec![], &|_, _| {})?;
+        if self.worker_id == 0 {
+            debug_assert!(done.is_some());
+            self.broadcast(0, Some(vec![]))?;
+        } else {
+            self.broadcast(0, None)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,116 @@
+//! Blocking keyed mailbox — the local, zero-copy message plane.
+//!
+//! Workers in the same pack are threads in one address space (paper §4.5):
+//! messages between them are `Arc` pointers dropped into the destination
+//! worker's mailbox; no `shm_open`/`mmap`, no copies. Keys encode
+//! `(op, src, dst, counter)` so out-of-order arrivals and selective receive
+//! work naturally.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+pub type Bytes = Arc<Vec<u8>>;
+
+/// One worker's inbox: keyed slots with blocking take.
+#[derive(Debug, Default)]
+pub struct Mailbox {
+    slots: Mutex<HashMap<String, Bytes>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Arc<Mailbox> {
+        Arc::new(Mailbox::default())
+    }
+
+    /// Deliver a message (zero-copy: the Arc is moved/cloned, not the data).
+    /// Duplicate keys overwrite — at-least-once delivery upstream means the
+    /// payload for a key is always identical.
+    pub fn put(&self, key: String, data: Bytes) {
+        self.slots.lock().unwrap().insert(key, data);
+        self.cv.notify_all();
+    }
+
+    /// Blocking take: waits until `key` is present, then removes it.
+    pub fn take(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(v) = slots.remove(key) {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!("mailbox take timed out waiting for '{key}'"));
+            }
+            let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+            slots = guard;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_then_take() {
+        let m = Mailbox::new();
+        m.put("a/0".into(), Arc::new(vec![1, 2]));
+        let v = m.take("a/0", Duration::from_millis(10)).unwrap();
+        assert_eq!(v.as_ref(), &vec![1, 2]);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn take_blocks_until_put() {
+        let m = Mailbox::new();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.take("k", Duration::from_secs(2)).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        m.put("k".into(), Arc::new(vec![9]));
+        assert_eq!(h.join().unwrap().as_ref(), &vec![9]);
+    }
+
+    #[test]
+    fn take_times_out() {
+        let m = Mailbox::new();
+        assert!(m.take("never", Duration::from_millis(20)).is_err());
+    }
+
+    #[test]
+    fn selective_receive_out_of_order() {
+        let m = Mailbox::new();
+        m.put("src2/5".into(), Arc::new(vec![2]));
+        m.put("src1/0".into(), Arc::new(vec![1]));
+        // Taking src1 first even though src2 arrived first.
+        assert_eq!(
+            m.take("src1/0", Duration::from_millis(10)).unwrap().as_ref(),
+            &vec![1]
+        );
+        assert_eq!(
+            m.take("src2/5", Duration::from_millis(10)).unwrap().as_ref(),
+            &vec![2]
+        );
+    }
+
+    #[test]
+    fn zero_copy_is_pointer_equal() {
+        let m = Mailbox::new();
+        let payload: Bytes = Arc::new(vec![0u8; 1024]);
+        m.put("z".into(), payload.clone());
+        let got = m.take("z", Duration::from_millis(10)).unwrap();
+        assert!(Arc::ptr_eq(&payload, &got), "local delivery must not copy");
+    }
+}

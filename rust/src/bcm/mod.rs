@@ -1,0 +1,269 @@
+//! Burst Communication Middleware (BCM) — paper §4.5.
+//!
+//! Locality-aware worker-to-worker messaging: intra-pack messages are
+//! zero-copy `Arc` pointer passes between worker threads; inter-pack
+//! messages are chunked and moved through a pluggable remote backend
+//! (Redis / DragonflyDB / RabbitMQ / S3 simulations). Collectives
+//! (broadcast, reduce, all-to-all, gather, scatter) are structured so that
+//! remote volume scales with the number of *packs*, not workers.
+
+pub mod backend;
+pub mod backends;
+pub mod chunk;
+pub mod context;
+pub mod fabric;
+pub mod mailbox;
+pub mod topology;
+
+pub use backend::{BackendKind, RemoteBackend};
+pub use context::BurstContext;
+pub use fabric::{CommFabric, FabricConfig};
+pub use mailbox::Bytes;
+pub use topology::PackTopology;
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::*;
+    use crate::cluster::netmodel::NetParams;
+    use crate::util::proptest::forall;
+
+    /// Run `f(ctx)` on every worker of a (size, granularity) burst over the
+    /// given backend; returns per-worker results.
+    fn run_burst<T: Send + 'static>(
+        size: usize,
+        granularity: usize,
+        kind: BackendKind,
+        f: impl Fn(&BurstContext) -> T + Send + Sync + Copy,
+    ) -> (Vec<T>, Arc<CommFabric>) {
+        let params = NetParams::scaled(1e-6);
+        let backend = kind.build(&params);
+        let fabric = CommFabric::new(
+            "test",
+            PackTopology::contiguous(size, granularity),
+            backend,
+            &params,
+            FabricConfig { timeout: Duration::from_secs(20), ..FabricConfig::default() },
+        );
+        let mut out: Vec<Option<T>> = (0..size).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..size)
+                .map(|w| {
+                    let fabric = fabric.clone();
+                    s.spawn(move || f(&BurstContext::new(w, fabric)))
+                })
+                .collect();
+            for (w, h) in handles.into_iter().enumerate() {
+                out[w] = Some(h.join().expect("worker panicked"));
+            }
+        });
+        (out.into_iter().map(Option::unwrap).collect(), fabric)
+    }
+
+    #[test]
+    fn send_recv_all_pairs() {
+        // Every worker sends its id to its successor (ring).
+        let (got, _) = run_burst(6, 2, BackendKind::DragonflyList, |ctx| {
+            let n = ctx.burst_size();
+            let next = (ctx.worker_id + 1) % n;
+            let prev = (ctx.worker_id + n - 1) % n;
+            ctx.send(next, vec![ctx.worker_id as u8]).unwrap();
+            ctx.recv(prev).unwrap().as_ref().clone()
+        });
+        for (w, v) in got.iter().enumerate() {
+            assert_eq!(v, &vec![((w + 6 - 1) % 6) as u8]);
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_everywhere() {
+        for g in [1, 2, 3, 8] {
+            let (got, fabric) = run_burst(8, g, BackendKind::RedisList, move |ctx| {
+                let data = (ctx.worker_id == 3).then(|| vec![42u8; 100]);
+                ctx.broadcast(3, data).unwrap().as_ref().clone()
+            });
+            assert!(got.iter().all(|v| v == &vec![42u8; 100]), "g={g}");
+            // Remote volume ∝ packs: publish once + one read per remote pack.
+            let n_packs = 8usize.div_ceil(g);
+            let expected_remote = if n_packs > 1 { 100 * n_packs as u64 } else { 0 };
+            let remote = fabric.traffic.remote();
+            // Header overhead makes it slightly larger.
+            assert!(
+                remote >= expected_remote && remote <= expected_remote + 64 * n_packs as u64,
+                "g={g} remote={remote} expected≈{expected_remote}"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_fully_local_when_one_pack() {
+        let (_, fabric) = run_burst(4, 4, BackendKind::RedisList, |ctx| {
+            let data = (ctx.worker_id == 0).then(|| vec![1u8; 50]);
+            ctx.broadcast(0, data).unwrap();
+        });
+        assert_eq!(fabric.traffic.remote(), 0);
+        assert_eq!(fabric.traffic.local(), 3 * 50);
+    }
+
+    #[test]
+    fn reduce_sums_worker_ids() {
+        for g in [1, 2, 4, 5, 12] {
+            for root in [0, 5, 11] {
+                let (got, _) = run_burst(12, g, BackendKind::DragonflyList, move |ctx| {
+                    let mine = (ctx.worker_id as u64).to_le_bytes().to_vec();
+                    let f = |a: &mut Vec<u8>, b: &[u8]| {
+                        let x = u64::from_le_bytes(a.as_slice().try_into().unwrap());
+                        let y = u64::from_le_bytes(b.try_into().unwrap());
+                        *a = (x + y).to_le_bytes().to_vec();
+                    };
+                    ctx.reduce(root, mine, &f).unwrap()
+                });
+                let expected: u64 = (0..12).sum();
+                for (w, v) in got.iter().enumerate() {
+                    if w == root {
+                        assert_eq!(
+                            u64::from_le_bytes(v.as_deref().unwrap().try_into().unwrap()),
+                            expected,
+                            "g={g} root={root}"
+                        );
+                    } else {
+                        assert!(v.is_none(), "g={g} root={root} w={w}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_exchanges_correctly() {
+        for g in [1, 3, 9] {
+            let (got, _) = run_burst(9, g, BackendKind::DragonflyList, move |ctx| {
+                let me = ctx.worker_id;
+                let msgs: Vec<Vec<u8>> =
+                    (0..ctx.burst_size()).map(|dst| vec![me as u8, dst as u8]).collect();
+                ctx.all_to_all(msgs).unwrap()
+            });
+            for (w, inbox) in got.iter().enumerate() {
+                for (src, m) in inbox.iter().enumerate() {
+                    assert_eq!(m.as_ref(), &vec![src as u8, w as u8], "g={g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_remote_fraction_matches_packs() {
+        // size 8, payload 64B per pair; remote pairs = pairs crossing packs.
+        for g in [1, 2, 4, 8] {
+            let (_, fabric) = run_burst(8, g, BackendKind::DragonflyList, |ctx| {
+                let msgs: Vec<Vec<u8>> = (0..ctx.burst_size()).map(|_| vec![0u8; 64]).collect();
+                ctx.all_to_all(msgs).unwrap();
+            });
+            let n_packs = 8 / g;
+            let remote_pairs = 8 * 8 - n_packs * g * g;
+            // tx only (rx doubles it). Header = 32B per chunk, 1 chunk each.
+            let expected_tx = (remote_pairs * (64 + 32)) as u64;
+            assert_eq!(fabric.traffic.remote_tx(), expected_tx, "g={g}");
+        }
+    }
+
+    #[test]
+    fn gather_collects_in_order() {
+        let (got, _) = run_burst(6, 3, BackendKind::RedisList, |ctx| {
+            ctx.gather(2, vec![ctx.worker_id as u8; 3]).unwrap()
+        });
+        let at_root = got[2].as_ref().unwrap();
+        for (src, v) in at_root.iter().enumerate() {
+            assert_eq!(v.as_ref(), &vec![src as u8; 3]);
+        }
+        assert!(got[0].is_none() && got[5].is_none());
+    }
+
+    #[test]
+    fn scatter_distributes_slices() {
+        let (got, _) = run_burst(6, 2, BackendKind::DragonflyList, |ctx| {
+            let msgs = (ctx.worker_id == 1)
+                .then(|| (0..6).map(|d| vec![d as u8 * 10]).collect::<Vec<_>>());
+            ctx.scatter(1, msgs).unwrap().as_ref().clone()
+        });
+        for (w, v) in got.iter().enumerate() {
+            assert_eq!(v, &vec![w as u8 * 10]);
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let (got, _) = run_burst(8, 3, BackendKind::DragonflyList, |ctx| {
+            ctx.barrier().unwrap();
+            true
+        });
+        assert!(got.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn collectives_over_rabbitmq_and_s3() {
+        for kind in [BackendKind::RabbitMq, BackendKind::S3] {
+            let (got, _) = run_burst(6, 2, kind, move |ctx| {
+                let data = (ctx.worker_id == 0).then(|| vec![9u8; 200]);
+                let b = ctx.broadcast(0, data).unwrap();
+                let f = |a: &mut Vec<u8>, b: &[u8]| a[0] = a[0].wrapping_add(b[0]);
+                let r = ctx.reduce(0, vec![1u8], &f).unwrap();
+                (b.len(), r.map(|v| v[0]))
+            });
+            assert!(got.iter().all(|(l, _)| *l == 200), "{kind:?}");
+            assert_eq!(got[0].1, Some(6), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn multiple_sends_same_pair_ordered() {
+        let (got, _) = run_burst(2, 1, BackendKind::DragonflyList, |ctx| {
+            if ctx.worker_id == 0 {
+                for i in 0..5u8 {
+                    ctx.send(1, vec![i]).unwrap();
+                }
+                vec![]
+            } else {
+                (0..5).map(|_| ctx.recv(0).unwrap()[0]).collect()
+            }
+        });
+        assert_eq!(got[1], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn property_collectives_any_topology() {
+        forall("broadcast+reduce correct on random topologies", 12, |gen| {
+            let size = gen.usize(1, 17);
+            let g = gen.usize(1, size + 1).max(1);
+            let root = gen.usize(0, size);
+            let kind = *gen.choice(&[
+                BackendKind::RedisList,
+                BackendKind::DragonflyList,
+                BackendKind::S3,
+            ]);
+            let payload = gen.usize(0, 600);
+            let (got, _) = run_burst(size, g, kind, move |ctx| {
+                let data = (ctx.worker_id == root).then(|| vec![7u8; payload]);
+                let b = ctx.broadcast(root, data).unwrap();
+                let f = |a: &mut Vec<u8>, b: &[u8]| {
+                    let x = u64::from_le_bytes(a.as_slice().try_into().unwrap());
+                    let y = u64::from_le_bytes(b.try_into().unwrap());
+                    *a = (x + y).to_le_bytes().to_vec();
+                };
+                let r = ctx.reduce(root, 1u64.to_le_bytes().to_vec(), &f).unwrap();
+                (b.len(), r)
+            });
+            for (w, (blen, r)) in got.iter().enumerate() {
+                assert_eq!(*blen, payload);
+                if w == root {
+                    let sum = u64::from_le_bytes(r.as_deref().unwrap().try_into().unwrap());
+                    assert_eq!(sum, size as u64);
+                } else {
+                    assert!(r.is_none());
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Pack topology: which worker lives in which pack (and on which invoker).
+//! Every worker receives this as part of its burst context (paper §4.5:
+//! "the distribution of packs — which worker belongs to which pack").
+
+/// Immutable mapping worker → pack for one flare.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackTopology {
+    /// `pack_of[w]` = pack id of worker `w`.
+    pack_of: Vec<usize>,
+    /// `members[p]` = sorted worker ids in pack `p`.
+    members: Vec<Vec<usize>>,
+    /// `invoker_of_pack[p]` = invoker machine hosting pack `p`.
+    invoker_of_pack: Vec<usize>,
+}
+
+impl PackTopology {
+    /// Build from per-pack member lists (workers must form a partition of
+    /// `0..burst_size`).
+    pub fn new(members: Vec<Vec<usize>>, invoker_of_pack: Vec<usize>) -> PackTopology {
+        assert_eq!(members.len(), invoker_of_pack.len());
+        let burst_size: usize = members.iter().map(Vec::len).sum();
+        let mut pack_of = vec![usize::MAX; burst_size];
+        let mut sorted_members = members;
+        for (p, ms) in sorted_members.iter_mut().enumerate() {
+            ms.sort_unstable();
+            for &w in ms.iter() {
+                assert!(w < burst_size, "worker id {w} out of range");
+                assert_eq!(pack_of[w], usize::MAX, "worker {w} in two packs");
+                pack_of[w] = p;
+            }
+        }
+        assert!(!pack_of.contains(&usize::MAX), "worker missing from packs");
+        PackTopology { pack_of, members: sorted_members, invoker_of_pack }
+    }
+
+    /// Contiguous packing: workers `0..size` split into packs of
+    /// `granularity` (last pack may be smaller) — the homogeneous strategy's
+    /// shape, also used directly by tests and benches.
+    pub fn contiguous(size: usize, granularity: usize) -> PackTopology {
+        assert!(size > 0 && granularity > 0);
+        let members: Vec<Vec<usize>> = (0..size)
+            .collect::<Vec<_>>()
+            .chunks(granularity)
+            .map(|c| c.to_vec())
+            .collect();
+        let invokers = (0..members.len()).collect();
+        PackTopology::new(members, invokers)
+    }
+
+    pub fn burst_size(&self) -> usize {
+        self.pack_of.len()
+    }
+
+    pub fn n_packs(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn pack_of(&self, worker: usize) -> usize {
+        self.pack_of[worker]
+    }
+
+    pub fn members(&self, pack: usize) -> &[usize] {
+        &self.members[pack]
+    }
+
+    pub fn invoker_of_pack(&self, pack: usize) -> usize {
+        self.invoker_of_pack[pack]
+    }
+
+    /// The pack's designated reader/leader for remote collective traffic:
+    /// its lowest worker id.
+    pub fn leader(&self, pack: usize) -> usize {
+        self.members[pack][0]
+    }
+
+    pub fn same_pack(&self, a: usize, b: usize) -> bool {
+        self.pack_of[a] == self.pack_of[b]
+    }
+
+    /// Granularity as deployed (size of the largest pack).
+    pub fn granularity(&self) -> usize {
+        self.members.iter().map(Vec::len).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn contiguous_shape() {
+        let t = PackTopology::contiguous(10, 4);
+        assert_eq!(t.n_packs(), 3);
+        assert_eq!(t.members(0), &[0, 1, 2, 3]);
+        assert_eq!(t.members(2), &[8, 9]);
+        assert_eq!(t.pack_of(5), 1);
+        assert_eq!(t.leader(1), 4);
+        assert!(t.same_pack(8, 9));
+        assert!(!t.same_pack(3, 4));
+        assert_eq!(t.granularity(), 4);
+    }
+
+    #[test]
+    fn faas_mode_is_one_worker_per_pack() {
+        let t = PackTopology::contiguous(6, 1);
+        assert_eq!(t.n_packs(), 6);
+        for w in 0..6 {
+            assert_eq!(t.pack_of(w), w);
+            assert_eq!(t.leader(w), w);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "in two packs")]
+    fn rejects_duplicate_worker() {
+        PackTopology::new(vec![vec![0, 1], vec![1]], vec![0, 1]);
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        forall("topology partitions workers", 50, |g| {
+            let size = g.usize(1, 200);
+            let gran = g.usize(1, 64);
+            let t = PackTopology::contiguous(size, gran);
+            // Every worker in exactly one pack; members round-trip.
+            let mut seen = vec![false; size];
+            for p in 0..t.n_packs() {
+                for &w in t.members(p) {
+                    assert!(!seen[w]);
+                    seen[w] = true;
+                    assert_eq!(t.pack_of(w), p);
+                }
+                assert_eq!(t.leader(p), *t.members(p).iter().min().unwrap());
+            }
+            assert!(seen.iter().all(|&s| s));
+            assert!(t.granularity() <= gran);
+        });
+    }
+}

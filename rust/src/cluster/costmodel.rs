@@ -1,0 +1,218 @@
+//! Infrastructure latency models, calibrated to the paper's own
+//! measurements (DESIGN.md §6).
+//!
+//! Calibration sketch for container creation (the paper found it dominates
+//! invocation latency, §5.1): with per-invoker serialized creation and
+//! `create(c) = A + B·c` seconds for a `c`-vCPU container, the paper's
+//! "11.5× from granularity 1 to 48 at burst size 960 over 20 invokers"
+//! pins `A ≈ 13.8·B`: 48·(A+B) / (A+48B) = 11.5. We set B = 30 ms,
+//! A = 414 ms, which also lands the absolute numbers in the ranges the
+//! paper reports (FaaS-mode all-ready ≈ 20 s, matching the OpenWhisk
+//! deployment in footnote 2; burst g=48 all-ready ≈ 2 s).
+
+use crate::util::rng::Pcg;
+
+/// Cost model for the burst platform's infrastructure operations.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Fixed per-container creation cost (seconds).
+    pub container_base_s: f64,
+    /// Per-vCPU container creation cost (seconds).
+    pub container_per_vcpu_s: f64,
+    /// How many containers one invoker creates concurrently (docker
+    /// creation is effectively serialized on the hosts the paper used).
+    pub create_concurrency: usize,
+    /// Runtime boot + code/dependency load, paid once per pack (seconds).
+    pub code_load_s: f64,
+    /// Per-worker spawn cost inside a pack (thread start, seconds).
+    pub worker_spawn_s: f64,
+    /// Controller HTTP + scheduling overhead per service request (seconds).
+    pub request_overhead_s: f64,
+    /// Controller invocation processing rate for independent FaaS requests
+    /// (invocations/second) — drives the FaaS arrival skew.
+    pub faas_invoke_rate: f64,
+    /// Lognormal noise sigma applied to creation costs.
+    pub noise_sigma: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            container_base_s: 0.414,
+            container_per_vcpu_s: 0.030,
+            create_concurrency: 1,
+            code_load_s: 0.35,
+            worker_spawn_s: 0.002,
+            request_overhead_s: 0.020,
+            faas_invoke_rate: 250.0,
+            noise_sigma: 0.05,
+        }
+    }
+}
+
+impl CostModel {
+    /// Creation time of one container with `vcpus` cores (noisy).
+    pub fn container_create_s(&self, vcpus: usize, rng: &mut Pcg) -> f64 {
+        let base = self.container_base_s + self.container_per_vcpu_s * vcpus as f64;
+        base * rng.lognormal(1.0, self.noise_sigma)
+    }
+
+    /// Pack boot cost after the container exists: code load (once per pack)
+    /// plus serialized worker spawns.
+    pub fn pack_boot_s(&self, workers: usize, rng: &mut Pcg) -> f64 {
+        (self.code_load_s + self.worker_spawn_s * workers as f64)
+            * rng.lognormal(1.0, self.noise_sigma)
+    }
+
+    /// FaaS-mode per-invocation extra: each worker needs its own service
+    /// request and its own code load (no sharing).
+    pub fn faas_invocation_skew_s(&self, index: usize) -> f64 {
+        index as f64 / self.faas_invoke_rate
+    }
+}
+
+/// AWS Lambda cold-start sampler behind Figs. 1 and 6 (FaaS side).
+///
+/// Shape from the paper: 100 × 256 MiB functions all start in < 4 s; at
+/// 1000 the last function starts up to ~6 s after the first; 10 GiB
+/// functions start *faster* than 256 MiB ones (footnote 1: finer resources
+/// are harder to schedule).
+#[derive(Debug, Clone)]
+pub struct LambdaModel {
+    /// Median cold start for a 256 MiB function (seconds).
+    pub median_small_s: f64,
+    /// Median cold start for a 10 GiB function (seconds).
+    pub median_large_s: f64,
+    pub sigma: f64,
+    /// Fleet-size skew: extra seconds accumulated across a fleet, per
+    /// invocation index normalized by this rate (invocations/second the
+    /// scheduler absorbs before queueing shows).
+    pub fleet_skew_rate: f64,
+}
+
+impl Default for LambdaModel {
+    fn default() -> Self {
+        LambdaModel {
+            median_small_s: 2.4,
+            median_large_s: 1.7,
+            sigma: 0.16,
+            fleet_skew_rate: 280.0,
+        }
+    }
+}
+
+impl LambdaModel {
+    /// Cold-start latency of invocation `index` in a fleet of `fleet`
+    /// functions with `mem_mib` memory each.
+    pub fn cold_start_s(&self, mem_mib: usize, index: usize, rng: &mut Pcg) -> f64 {
+        // Interpolate the memory effect between the two calibrated points
+        // (larger functions start faster — paper footnote 1).
+        let frac =
+            ((mem_mib as f64).log2() - (256f64).log2()) / ((10240f64).log2() - (256f64).log2());
+        let median = self.median_small_s
+            + (self.median_large_s - self.median_small_s) * frac.clamp(0.0, 1.0);
+        rng.lognormal(median, self.sigma) + index as f64 / self.fleet_skew_rate
+    }
+}
+
+/// VM-cluster start-up models for Table 1 (fit to the table itself: these
+/// technologies are only compared, never executed, in the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterTech {
+    EmrSpark,
+    Dataproc,
+    Dask,
+    Ray,
+}
+
+impl ClusterTech {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterTech::EmrSpark => "EMR Spark",
+            ClusterTech::Dataproc => "Dataproc",
+            ClusterTech::Dask => "Dask",
+            ClusterTech::Ray => "Ray",
+        }
+    }
+
+    /// Start-up seconds for a cluster of `nodes` (linear fit per tech:
+    /// base provisioning + per-node joins).
+    pub fn startup_s(&self, nodes: usize, rng: &mut Pcg) -> f64 {
+        let (a, b) = match self {
+            ClusterTech::EmrSpark => (251.0, 7.5),
+            ClusterTech::Dataproc => (89.0, 1.0),
+            ClusterTech::Dask => (174.1, 1.232),
+            ClusterTech::Ray => (181.0, 0.75),
+        };
+        (a + b * nodes as f64) * rng.lognormal(1.0, 0.03)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creation_ratio_matches_paper() {
+        // Size-960 burst on 20 invokers: g=1 → 48 serialized 1-vCPU
+        // containers per invoker; g=48 → one 48-vCPU container. The model
+        // must reproduce the paper's ~11.5× ratio (within noise).
+        let m = CostModel { noise_sigma: 0.0, ..CostModel::default() };
+        let mut rng = Pcg::new(1);
+        let g1 = 48.0 * m.container_create_s(1, &mut rng);
+        let g48 = m.container_create_s(48, &mut rng);
+        let ratio = g1 / g48;
+        assert!((10.5..12.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn faas_mode_absolute_time_plausible() {
+        // g=1 all-ready should land near the ~20 s the paper reports for
+        // an on-prem OpenWhisk FaaS deployment (footnote 2).
+        let m = CostModel { noise_sigma: 0.0, ..CostModel::default() };
+        let mut rng = Pcg::new(1);
+        let t = 48.0 * m.container_create_s(1, &mut rng);
+        assert!((15.0..30.0).contains(&t), "t {t}");
+    }
+
+    #[test]
+    fn lambda_small_functions_slower() {
+        let m = LambdaModel::default();
+        let mut rng = Pcg::new(2);
+        let small: f64 =
+            (0..200).map(|_| m.cold_start_s(256, 0, &mut rng)).sum::<f64>() / 200.0;
+        let large: f64 =
+            (0..200).map(|_| m.cold_start_s(10240, 0, &mut rng)).sum::<f64>() / 200.0;
+        assert!(small > large, "small {small} large {large}");
+    }
+
+    #[test]
+    fn lambda_fleet_skew_grows() {
+        let m = LambdaModel::default();
+        let mut rng = Pcg::new(3);
+        let early = m.cold_start_s(256, 0, &mut rng);
+        let late = m.cold_start_s(256, 999, &mut rng);
+        assert!(late > early + 2.0, "early {early} late {late}");
+    }
+
+    #[test]
+    fn lambda_fleet_100_under_4s() {
+        // Fig 1: 100 × 256 MiB functions all ready in < ~4 s.
+        let m = LambdaModel::default();
+        let mut rng = Pcg::new(4);
+        let max = (0..100)
+            .map(|i| m.cold_start_s(256, i, &mut rng))
+            .fold(0.0f64, f64::max);
+        assert!(max < 4.5, "max {max}");
+    }
+
+    #[test]
+    fn table1_fit_points() {
+        let mut rng = Pcg::new(5);
+        // Check fits hit the published numbers within noise.
+        let emr6 = ClusterTech::EmrSpark.startup_s(6, &mut rng);
+        assert!((280.0..315.0).contains(&emr6), "{emr6}");
+        let dp24 = ClusterTech::Dataproc.startup_s(24, &mut rng);
+        assert!((104.0..124.0).contains(&dp24), "{dp24}");
+    }
+}

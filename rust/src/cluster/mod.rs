@@ -1,0 +1,67 @@
+//! Simulated cloud substrate: invoker machines, container-creation cost
+//! model, network/backend performance parameters, and the VM-cluster
+//! start-up models behind Table 1.
+//!
+//! The paper evaluated on AWS (EKS invokers, Lambda, S3, managed Redis/...
+//! servers). None of that exists here, so the *platform logic* runs for real
+//! (threads, real bytes) while the *infrastructure costs* (container
+//! creation, cold starts, network service times) come from the calibrated
+//! models in this module — see DESIGN.md §1 for the substitution table and
+//! §6 for the calibration constants.
+
+pub mod costmodel;
+pub mod netmodel;
+pub mod tokenbucket;
+
+/// One invoker machine (paper: c7i.12xlarge class nodes).
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub id: usize,
+    pub vcpus: usize,
+    pub ram_mib: usize,
+}
+
+/// The set of invoker machines backing the platform.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub machines: Vec<Machine>,
+}
+
+impl ClusterSpec {
+    /// `n` identical machines with `vcpus` each (paper: 20 × 48 vCPU).
+    pub fn uniform(n: usize, vcpus: usize) -> ClusterSpec {
+        ClusterSpec {
+            machines: (0..n)
+                .map(|id| Machine { id, vcpus, ram_mib: vcpus * 2048 })
+                .collect(),
+        }
+    }
+
+    pub fn total_vcpus(&self) -> usize {
+        self.machines.iter().map(|m| m.vcpus).sum()
+    }
+
+    /// The paper's main setup: up to 20 × c7i.12xlarge (48 vCPU / 96 GB).
+    pub fn paper_eks(invokers: usize) -> ClusterSpec {
+        ClusterSpec::uniform(invokers, 48)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cluster() {
+        let c = ClusterSpec::uniform(20, 48);
+        assert_eq!(c.machines.len(), 20);
+        assert_eq!(c.total_vcpus(), 960);
+        assert_eq!(c.machines[7].id, 7);
+    }
+
+    #[test]
+    fn paper_setup_capacity() {
+        // Must accommodate the paper's 960-worker bursts at 1 vCPU each.
+        assert!(ClusterSpec::paper_eks(20).total_vcpus() >= 960);
+    }
+}

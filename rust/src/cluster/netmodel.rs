@@ -1,0 +1,132 @@
+//! Network & backend performance parameters (DESIGN.md §6).
+//!
+//! All modeled service times are multiplied by `time_scale` before being
+//! enforced with `precise_sleep`, so tests can compress time uniformly
+//! (ratios — the reproduction target — are scale-invariant). Experiments
+//! report modeled seconds (measured / time_scale).
+
+use crate::util::bytes::{GIB, MIB};
+
+/// Shared performance parameters for the simulated network substrate.
+#[derive(Debug, Clone)]
+pub struct NetParams {
+    /// Uniform compression of modeled time (1.0 = real time).
+    pub time_scale: f64,
+
+    // --- object storage (S3-like) ---
+    /// Per-GET request latency (seconds).
+    pub s3_get_latency_s: f64,
+    /// Per-PUT request latency (seconds).
+    pub s3_put_latency_s: f64,
+    /// Bandwidth of a single storage connection (bytes/second).
+    pub s3_conn_bw: f64,
+    /// GET request-rate limit (requests/second per prefix).
+    pub s3_get_rate: f64,
+    /// PUT request-rate limit (requests/second per prefix).
+    pub s3_put_rate: f64,
+
+    // --- in-memory KV backends ---
+    /// Redis per-op latency (seconds) and single-executor bandwidth.
+    pub redis_op_latency_s: f64,
+    pub redis_core_bw: f64,
+    /// DragonflyDB per-op latency, per-shard bandwidth and shard count.
+    pub dragonfly_op_latency_s: f64,
+    pub dragonfly_shard_bw: f64,
+    pub dragonfly_shards: usize,
+    /// Stream-flavor overhead multiplier on op latency + bandwidth cost
+    /// (streams carry entry metadata and consumer-group bookkeeping).
+    pub stream_overhead: f64,
+
+    // --- message broker (RabbitMQ-like) ---
+    pub rabbit_op_latency_s: f64,
+    /// Global broker pipeline throughput cap (bytes/second).
+    pub rabbit_pipeline_bw: f64,
+    /// AMQP max payload (bytes): chunks above this are rejected.
+    pub rabbit_max_payload: usize,
+    /// Broker IO threads.
+    pub rabbit_io_threads: usize,
+
+    // --- worker/pack NIC ---
+    /// Per-vCPU share of the instance NIC (bytes/second).
+    pub nic_bw_per_vcpu: f64,
+    /// Server-side NIC cap for the backend host (bytes/second).
+    pub server_nic_bw: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams {
+            time_scale: 1.0,
+            s3_get_latency_s: 0.014,
+            s3_put_latency_s: 0.020,
+            s3_conn_bw: 95.0 * MIB as f64,
+            s3_get_rate: 5500.0,
+            s3_put_rate: 3500.0,
+            redis_op_latency_s: 80e-6,
+            redis_core_bw: 1.45 * GIB as f64,
+            dragonfly_op_latency_s: 90e-6,
+            dragonfly_shard_bw: 0.7 * GIB as f64,
+            dragonfly_shards: 8,
+            stream_overhead: 1.45,
+            rabbit_op_latency_s: 150e-6,
+            rabbit_pipeline_bw: 1.0 * GIB as f64,
+            rabbit_max_payload: 128 * MIB,
+            rabbit_io_threads: 4,
+            nic_bw_per_vcpu: 0.39 * GIB as f64,
+            server_nic_bw: 3.2 * GIB as f64,
+        }
+    }
+}
+
+impl NetParams {
+    /// A scaled copy for fast tests (modeled time compressed by `scale`).
+    pub fn scaled(scale: f64) -> NetParams {
+        NetParams { time_scale: scale, ..NetParams::default() }
+    }
+
+    /// Modeled seconds → enforced sleep seconds.
+    pub fn scale(&self, model_s: f64) -> f64 {
+        model_s * self.time_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_fig7_ratio() {
+        // Fig 7: 96 workers × 1 GiB from S3. FaaS: each 1-vCPU worker
+        // downloads the whole object on one connection. Burst g=48: a pack
+        // downloads once with 48 parallel range reads. Speed-up ≈ 32.6×.
+        let p = NetParams::default();
+        let obj = GIB as f64;
+        let faas = p.s3_get_latency_s + obj / p.s3_conn_bw;
+        let pack_conns = 48.0;
+        let burst = p.s3_get_latency_s + (obj / pack_conns) / p.s3_conn_bw;
+        let ratio = faas / burst;
+        assert!((20.0..48.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn dragonfly_aggregate_exceeds_2_5_gib() {
+        let p = NetParams::default();
+        let agg = p.dragonfly_shard_bw * p.dragonfly_shards as f64;
+        assert!(agg > 2.5 * GIB as f64);
+        // ... but the server NIC should be the binding cap, not the shards.
+        assert!(p.server_nic_bw > 2.5 * GIB as f64);
+    }
+
+    #[test]
+    fn rabbit_cap_is_1_gib() {
+        let p = NetParams::default();
+        assert!(p.rabbit_pipeline_bw <= 1.01 * GIB as f64);
+        assert_eq!(p.rabbit_max_payload, 128 * MIB);
+    }
+
+    #[test]
+    fn time_scaling() {
+        let p = NetParams::scaled(0.01);
+        assert!((p.scale(2.0) - 0.02).abs() < 1e-12);
+    }
+}

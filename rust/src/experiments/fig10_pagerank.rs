@@ -1,0 +1,196 @@
+//! Figure 10 + Table 4: PageRank per-phase times and network traffic vs
+//! granularity. Paper: burst size 256 over 4 × c7i.16xlarge, 10 iterations,
+//! 40 MiB rank vector; 98.5% traffic reduction and 13× speed-up at g=64.
+
+use crate::apps::{pagerank, phases};
+use crate::platform::FlareOptions;
+use crate::util::benchkit::{section, Table};
+use crate::util::bytes::{self, KIB, MIB};
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub granularity: usize,
+    pub fetch_s: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub total_s: f64,
+    pub traffic_bytes: u64,
+    pub traffic_reduction_pct: f64,
+    pub speedup_vs_g1: f64,
+}
+
+pub struct Config {
+    pub workers: usize,
+    pub iters: usize,
+    pub comm_pad: usize,
+    pub time_scale: f64,
+    pub grans: Vec<usize>,
+}
+
+impl Config {
+    pub fn new(quick: bool) -> Config {
+        if quick {
+            Config {
+                workers: 16,
+                iters: 2,
+                comm_pad: 256 * KIB,
+                time_scale: 0.5,
+                grans: vec![1, 4, 16],
+            }
+        } else {
+            // comm_pad scales the rank vector toward the paper's 40 MiB
+            // aggregation payloads (1 MiB here keeps the sweep tractable on
+            // one CPU while letting communication dominate, as in Fig. 10).
+            Config {
+                workers: 64,
+                iters: 10,
+                comm_pad: MIB,
+                time_scale: 1.0,
+                grans: vec![1, 2, 4, 8, 16, 32, 64],
+            }
+        }
+    }
+}
+
+pub fn compute(cfg: &Config) -> Vec<Row> {
+    // Paper setup: 4 × c7i.16xlarge (64 vCPU).
+    let (controller, env) = super::platform(4, 64, cfg.time_scale);
+    pagerank::generate(&env, "f10", cfg.workers, 99).unwrap();
+    controller.deploy("f10-pagerank", pagerank::WORK_NAME, Default::default()).unwrap();
+
+    let mk_params = || -> Vec<Json> {
+        (0..cfg.workers)
+            .map(|_| {
+                Json::obj(vec![
+                    ("job", "f10".into()),
+                    ("iters", cfg.iters.into()),
+                    ("comm_pad", cfg.comm_pad.into()),
+                ])
+            })
+            .collect()
+    };
+
+    let mut rows = Vec::new();
+    let mut base: Option<(u64, f64)> = None;
+    for &g in &cfg.grans {
+        let opts = FlareOptions {
+            granularity: Some(g),
+            strategy: Some("homogeneous".into()),
+            faas: g == 1,
+            ..Default::default()
+        };
+        let r = controller.flare("f10-pagerank", mk_params(), &opts).unwrap();
+        let avg = |key: &str| -> f64 {
+            stats::mean(
+                &r.outputs.iter().map(|o| o.num_or(key, 0.0)).collect::<Vec<_>>(),
+            ) / cfg.time_scale
+        };
+        let fetch_s = avg(phases::FETCH);
+        let compute_s = avg(phases::COMPUTE);
+        let comm_s = avg(phases::COMM);
+        let total_s = fetch_s + compute_s + comm_s;
+        let traffic = r.traffic.remote();
+        let (t0, s0) = *base.get_or_insert((traffic, total_s));
+        rows.push(Row {
+            granularity: g,
+            fetch_s,
+            compute_s,
+            comm_s,
+            total_s,
+            traffic_bytes: traffic,
+            traffic_reduction_pct: 100.0 * (1.0 - traffic as f64 / t0.max(1) as f64),
+            speedup_vs_g1: s0 / total_s,
+        });
+    }
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    let cfg = Config::new(quick);
+    section(&format!(
+        "Figure 10 / Table 4: PageRank, {} workers, {} iterations, {} vector pad",
+        cfg.workers,
+        cfg.iters,
+        bytes::human(cfg.comm_pad as u64)
+    ));
+    let rows = compute(&cfg);
+    let mut t = Table::new(&[
+        "Granularity",
+        "Fetch",
+        "Compute",
+        "Comm",
+        "Total",
+        "Traffic",
+        "Reduction",
+        "Speed-up",
+    ]);
+    for r in &rows {
+        let label =
+            if r.granularity == 1 { "1 (FaaS)".into() } else { r.granularity.to_string() };
+        t.row(vec![
+            label,
+            format!("{:.3}s", r.fetch_s),
+            format!("{:.3}s", r.compute_s),
+            format!("{:.3}s", r.comm_s),
+            format!("{:.3}s", r.total_s),
+            bytes::human(r.traffic_bytes),
+            if r.granularity == 1 {
+                "n/a".into()
+            } else {
+                format!("{:.1}%", r.traffic_reduction_pct)
+            },
+            format!("{:.1}x", r.speedup_vs_g1),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_reduction_matches_structure() {
+        let rows = compute(&Config::new(true));
+        // Traffic strictly decreases with granularity.
+        for w in rows.windows(2) {
+            assert!(
+                w[1].traffic_bytes < w[0].traffic_bytes,
+                "g{} {} !< g{} {}",
+                w[1].granularity,
+                w[1].traffic_bytes,
+                w[0].granularity,
+                w[0].traffic_bytes
+            );
+        }
+        // Table-4 shape: g=4 cuts ~≥70% of the g=1 traffic (paper: 75%).
+        let g4 = rows.iter().find(|r| r.granularity == 4).unwrap();
+        assert!(g4.traffic_reduction_pct > 60.0, "{}", g4.traffic_reduction_pct);
+    }
+
+    #[test]
+    fn communication_shrinks_with_granularity() {
+        // Quick mode mixes real (unscaled) compute with modeled (scaled)
+        // communication, so assert only the communication-phase claims here;
+        // the comm-dominates and total-speed-up claims are exercised at full
+        // scale by `cargo bench fig10_pagerank` (see EXPERIMENTS.md).
+        let _guard = crate::util::timing::timing_test_lock();
+        let rows = compute(&Config::new(true));
+        let g1 = &rows[0];
+        let best = rows.last().unwrap();
+        // Comm time shrinks once everything is one pack. The measured comm
+        // phase includes SPMD wait (workers blocked on the root's compute),
+        // so the quick-mode bound is loose; the exact signal is traffic
+        // (asserted in `traffic_reduction_matches_structure`).
+        assert!(
+            best.comm_s < g1.comm_s / 1.2,
+            "comm g1 {:.4}s vs g{} {:.4}s",
+            g1.comm_s,
+            best.granularity,
+            best.comm_s
+        );
+    }
+}

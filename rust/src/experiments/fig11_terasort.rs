@@ -1,0 +1,123 @@
+//! Figure 11: TeraSort timeline — serverless MapReduce (two FaaS rounds,
+//! shuffle through object storage, externally synchronized) vs burst
+//! computing (one flare, locality-aware all-to-all). Paper: 2× speed-up
+//! (mean 1.91× across runs) at 192 partitions over two 96-vCPU invokers.
+
+use crate::apps::{mapreduce, terasort};
+use crate::platform::FlareOptions;
+use crate::util::benchkit::{section, Table};
+use crate::util::json::Json;
+
+pub struct Result {
+    pub mapreduce_total_s: f64,
+    pub burst_total_s: f64,
+    pub speedup: f64,
+    pub mr_storage_shuffle_bytes: u64,
+    pub burst_remote_bytes: u64,
+    pub burst_ascii: String,
+}
+
+pub struct Config {
+    pub workers: usize,
+    pub keys_per_worker: usize,
+    pub time_scale: f64,
+}
+
+impl Config {
+    pub fn new(quick: bool) -> Config {
+        if quick {
+            Config { workers: 8, keys_per_worker: 20_000, time_scale: 0.2 }
+        } else {
+            Config { workers: 32, keys_per_worker: 150_000, time_scale: 1.0 }
+        }
+    }
+}
+
+pub fn compute(cfg: &Config) -> Result {
+    // Paper setup: two m7i.48xlarge invokers (96 vCPUs each).
+    let (controller, env) = super::platform(2, 96, cfg.time_scale);
+
+    // --- serverless MapReduce baseline ---
+    terasort::generate(&env, "f11", cfg.workers, cfg.keys_per_worker, 7);
+    mapreduce::deploy(&controller).unwrap();
+    let mr = mapreduce::run_terasort_mapreduce(&controller, "f11", cfg.workers).unwrap();
+    terasort::validate_outputs(&mr.reduce.outputs, cfg.workers * cfg.keys_per_worker).unwrap();
+    let mr_storage = mr.shuffle_storage_bytes(&env, "f11");
+    // Work wall time is measured: convert to modeled seconds.
+    let mr_total = mr.map.startup.all_ready_s
+        + mr.map.work_wall_s / cfg.time_scale
+        + mr.stage_gap_s
+        + mr.reduce.startup.all_ready_s
+        + mr.reduce.work_wall_s / cfg.time_scale;
+
+    // --- burst computing: one flare, g = workers/2 (one pack per invoker) ---
+    controller.deploy("f11-terasort", terasort::WORK_NAME, Default::default()).unwrap();
+    let params: Vec<Json> =
+        (0..cfg.workers).map(|_| Json::obj(vec![("job", "f11".into())])).collect();
+    let burst = controller
+        .flare(
+            "f11-terasort",
+            params,
+            &FlareOptions {
+                granularity: Some(cfg.workers / 2),
+                strategy: Some("homogeneous".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    terasort::validate_outputs(&burst.outputs, cfg.workers * cfg.keys_per_worker).unwrap();
+    let burst_total = burst.startup.all_ready_s + burst.work_wall_s / cfg.time_scale;
+
+    Result {
+        mapreduce_total_s: mr_total,
+        burst_total_s: burst_total,
+        speedup: mr_total / burst_total,
+        mr_storage_shuffle_bytes: mr_storage,
+        burst_remote_bytes: burst.traffic.remote(),
+        burst_ascii: burst.timeline.render_ascii(50),
+    }
+}
+
+pub fn run(quick: bool) -> Result {
+    let cfg = Config::new(quick);
+    section(&format!(
+        "Figure 11: TeraSort, {} workers x {} keys — MapReduce vs burst",
+        cfg.workers, cfg.keys_per_worker
+    ));
+    let r = compute(&cfg);
+    let mut t = Table::new(&["Model", "Total time", "Shuffle bytes (remote/storage)"]);
+    t.row(vec![
+        "serverless MapReduce".into(),
+        format!("{:.2}s", r.mapreduce_total_s),
+        crate::util::bytes::human(r.mr_storage_shuffle_bytes),
+    ]);
+    t.row(vec![
+        "burst computing".into(),
+        format!("{:.2}s", r.burst_total_s),
+        crate::util::bytes::human(r.burst_remote_bytes),
+    ]);
+    t.print();
+    println!("speed-up: {:.2}x (paper: ~2x, mean 1.91x)", r.speedup);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_beats_mapreduce() {
+        let r = compute(&Config::new(true));
+        assert!(
+            r.speedup > 1.3,
+            "burst {:.3}s vs MR {:.3}s (speed-up {:.2})",
+            r.burst_total_s,
+            r.mapreduce_total_s,
+            r.speedup
+        );
+        // The burst shuffle moves less through the remote plane than the
+        // MapReduce shuffle moves through storage (locality + no 2× PUT/GET).
+        assert!(r.burst_remote_bytes < r.mr_storage_shuffle_bytes);
+        assert!(!r.burst_ascii.is_empty());
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 1: CDF of FaaS function cold-start time (AWS Lambda model) for
+//! 100 and 1000 invocations at 256 MiB and 10 GiB.
+
+use crate::cluster::costmodel::LambdaModel;
+use crate::util::benchkit::{section, Table};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub mem_mib: usize,
+    pub fleet: usize,
+    pub samples: Vec<f64>,
+    /// (latency_s, cumulative fraction) CDF points.
+    pub cdf: Vec<(f64, f64)>,
+}
+
+pub fn compute(quick: bool) -> Vec<Series> {
+    let model = LambdaModel::default();
+    let mut rng = Pcg::new(0xf161);
+    let fleets: &[usize] = if quick { &[100, 300] } else { &[100, 1000] };
+    let mut out = Vec::new();
+    for &mem in &[256usize, 10_240] {
+        for &fleet in fleets {
+            let samples: Vec<f64> =
+                (0..fleet).map(|i| model.cold_start_s(mem, i, &mut rng)).collect();
+            let cdf = stats::cdf(&samples, 10);
+            out.push(Series { mem_mib: mem, fleet, samples, cdf });
+        }
+    }
+    out
+}
+
+pub fn run(quick: bool) -> Vec<Series> {
+    section("Figure 1: FaaS cold-start CDF (model)");
+    let series = compute(quick);
+    let mut t = Table::new(&["Memory", "Fleet", "p10", "p50", "p90", "p100"]);
+    for s in &series {
+        let q = |p: f64| format!("{:.2}s", stats::percentile(&s.samples, p));
+        t.row(vec![
+            format!("{} MiB", s.mem_mib),
+            s.fleet.to_string(),
+            q(10.0),
+            q(50.0),
+            q(90.0),
+            q(100.0),
+        ]);
+    }
+    t.print();
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let series = compute(true);
+        let get = |mem: usize, fleet: usize| {
+            series.iter().find(|s| s.mem_mib == mem && s.fleet == fleet).unwrap()
+        };
+        // 100 × 256 MiB all under ~4.5 s (paper: < 4 s).
+        let s = get(256, 100);
+        assert!(stats::percentile(&s.samples, 100.0) < 4.5);
+        // Larger fleets have longer tails.
+        assert!(
+            stats::percentile(&get(256, 300).samples, 100.0)
+                > stats::percentile(&s.samples, 100.0)
+        );
+        // Small functions slower than big ones (paper footnote 1).
+        assert!(
+            stats::percentile(&get(256, 100).samples, 50.0)
+                > stats::percentile(&get(10_240, 100).samples, 50.0)
+        );
+        // CDF is monotone and ends at 1.
+        for s in &series {
+            assert_eq!(s.cdf.last().unwrap().1, 1.0);
+            for w in s.cdf.windows(2) {
+                assert!(w[1].0 >= w[0].0);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Figure 5: burst start-up time vs packing granularity (worker latency
+//! distribution), burst sizes 48 and 960 on the paper's 20-invoker EKS
+//! cluster. Homogeneous packing; granularity 1 is the FaaS baseline.
+
+use crate::cluster::costmodel::CostModel;
+use crate::platform::{model_startup, plan, PackingStrategy};
+use crate::util::benchkit::{section, Table};
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub burst_size: usize,
+    pub granularity: usize,
+    pub ready: Summary,
+    /// All-ready latency ratio vs granularity 1 (the paper's 11.5×).
+    pub speedup_vs_g1: f64,
+}
+
+pub fn compute(quick: bool) -> Vec<Row> {
+    let cost = CostModel::default();
+    let mut rng = Pcg::new(0xf165);
+    let free = vec![48usize; 20]; // 20 × c7i.12xlarge
+    let sizes: &[usize] = if quick { &[48, 192] } else { &[48, 960] };
+    let grans = [1usize, 2, 4, 8, 16, 24, 48];
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let mut g1_latency = None;
+        for &g in &grans {
+            let packs =
+                plan(PackingStrategy::Homogeneous { granularity: g }, size, &free).unwrap();
+            let m = model_startup(&packs, &cost, g == 1, &mut rng);
+            let ready = Summary::of(&m.worker_ready_s);
+            let g1 = *g1_latency.get_or_insert(m.all_ready_s);
+            rows.push(Row {
+                burst_size: size,
+                granularity: g,
+                speedup_vs_g1: g1 / m.all_ready_s,
+                ready,
+            });
+        }
+    }
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    section("Figure 5: burst start-up vs granularity (homogeneous packing)");
+    let rows = compute(quick);
+    let mut t = Table::new(&[
+        "Size", "Granularity", "median", "p95", "all-ready", "vs g=1",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.burst_size.to_string(),
+            r.granularity.to_string(),
+            format!("{:.2}s", r.ready.median),
+            format!("{:.2}s", r.ready.p95),
+            format!("{:.2}s", r.ready.max),
+            format!("{:.1}x", r.speedup_vs_g1),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_decreases_with_granularity() {
+        let rows = compute(true);
+        for size in [48usize, 192] {
+            let series: Vec<&Row> =
+                rows.iter().filter(|r| r.burst_size == size).collect();
+            for w in series.windows(2) {
+                assert!(
+                    w[1].ready.max <= w[0].ready.max * 1.05,
+                    "size {size}: g{} {} > g{} {}",
+                    w[1].granularity,
+                    w[1].ready.max,
+                    w[0].granularity,
+                    w[0].ready.max
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_scale_speedup_band() {
+        // Full-scale Fig 5 claim: ~11.5× from g=1 to g=48 at size 960.
+        let rows = compute(false);
+        let r = rows
+            .iter()
+            .find(|r| r.burst_size == 960 && r.granularity == 48)
+            .unwrap();
+        assert!(
+            (7.0..18.0).contains(&r.speedup_vs_g1),
+            "speed-up {} outside the paper band",
+            r.speedup_vs_g1
+        );
+    }
+
+    #[test]
+    fn dispersity_shrinks_with_granularity() {
+        let rows = compute(true);
+        let g1 = rows.iter().find(|r| r.burst_size == 192 && r.granularity == 1).unwrap();
+        let g48 = rows.iter().find(|r| r.burst_size == 192 && r.granularity == 48).unwrap();
+        assert!(g1.ready.mad > 3.0 * g48.ready.mad.max(1e-3));
+    }
+}

@@ -1,0 +1,142 @@
+//! Figure 7: a burst of 96 workers loading the same object from S3 at
+//! different granularities. Burst packs download once per pack with
+//! pack-parallel byte-range reads and share zero-copy; FaaS (g = 1)
+//! downloads one full copy per worker. Paper: 32.6× faster at g = 48
+//! for a 1 GiB object.
+
+
+use crate::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+use crate::cluster::netmodel::NetParams;
+use crate::storage::ObjectStore;
+use crate::util::benchkit::{section, Table};
+use crate::util::bytes::{self, MIB};
+use crate::util::timing::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub granularity: usize,
+    /// Time until every worker holds the data (seconds, modeled).
+    pub load_s: f64,
+    pub speedup_vs_g1: f64,
+    pub storage_bytes_read: u64,
+}
+
+pub struct Config {
+    pub workers: usize,
+    pub object_bytes: usize,
+    pub time_scale: f64,
+    pub grans: Vec<usize>,
+}
+
+impl Config {
+    pub fn new(quick: bool) -> Config {
+        if quick {
+            Config {
+                workers: 24,
+                object_bytes: 8 * MIB,
+                time_scale: 0.5,
+                grans: vec![1, 4, 12, 24],
+            }
+        } else {
+            Config {
+                workers: 96,
+                object_bytes: 8 * MIB,
+                time_scale: 1.0,
+                grans: vec![1, 2, 4, 8, 16, 32, 48, 96],
+            }
+        }
+    }
+}
+
+pub fn compute(cfg: &Config) -> Vec<Row> {
+    let params = NetParams::scaled(cfg.time_scale);
+    let mut rows = Vec::new();
+    let mut g1 = None;
+    for &g in &cfg.grans {
+        // Fresh store per run so stats are per-granularity.
+        let store = ObjectStore::new(params.clone());
+        store.preload("fig7/obj", vec![0u8; cfg.object_bytes]);
+        let fabric = CommFabric::new(
+            "fig7",
+            PackTopology::contiguous(cfg.workers, g),
+            BackendKind::DragonflyList.build(&params),
+            &params,
+            FabricConfig::default(),
+        );
+        let sw = Stopwatch::start();
+        std::thread::scope(|s| {
+            for w in 0..cfg.workers {
+                let fabric = fabric.clone();
+                let store = store.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, fabric);
+                    let data = if ctx.is_leader() {
+                        let conns = ctx.pack_members().len();
+                        let d = store.get_parallel("fig7/obj", conns).unwrap();
+                        ctx.pack_share(Some(d)).unwrap()
+                    } else {
+                        ctx.pack_share(None).unwrap()
+                    };
+                    assert_eq!(data.len(), store.size("fig7/obj").unwrap());
+                });
+            }
+        });
+        let load_s = sw.secs() / cfg.time_scale; // report modeled seconds
+        let first = *g1.get_or_insert(load_s);
+        rows.push(Row {
+            granularity: g,
+            load_s,
+            speedup_vs_g1: first / load_s,
+            storage_bytes_read: store.stats.bytes_read.load(std::sync::atomic::Ordering::Relaxed),
+        });
+    }
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    let cfg = Config::new(quick);
+    section(&format!(
+        "Figure 7: {} workers loading a {} object from S3",
+        cfg.workers,
+        bytes::human(cfg.object_bytes as u64)
+    ));
+    let rows = compute(&cfg);
+    let mut t = Table::new(&["Granularity", "Load time", "Speed-up vs FaaS", "Bytes from S3"]);
+    for r in &rows {
+        t.row(vec![
+            r.granularity.to_string(),
+            format!("{:.3}s", r.load_s),
+            format!("{:.1}x", r.speedup_vs_g1),
+            bytes::human(r.storage_bytes_read),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_accelerates_loading_and_cuts_ingestion() {
+        let _guard = crate::util::timing::timing_test_lock();
+        let rows = compute(&Config::new(true));
+        // Monotone speed-up with granularity (generous tolerance: the test
+        // suite runs in parallel on one CPU).
+        for w in rows.windows(2) {
+            assert!(
+                w[1].load_s < w[0].load_s * 1.3,
+                "g{} {} vs g{} {}",
+                w[1].granularity,
+                w[1].load_s,
+                w[0].granularity,
+                w[0].load_s
+            );
+        }
+        let last = rows.last().unwrap();
+        assert!(last.speedup_vs_g1 > 3.0, "speed-up {}", last.speedup_vs_g1);
+        // Ingestion: FaaS reads workers× the object; one pack reads ~1×.
+        assert!(rows[0].storage_bytes_read > 20 * last.storage_bytes_read / 2);
+    }
+}

@@ -1,0 +1,244 @@
+//! Figure 8: BCM inter-pack communication backends.
+//!
+//! (a) Throughput between two remote workers sending one payload chunked at
+//!     different sizes (paper: 1 GiB payload; RabbitMQ capped at 128 MiB
+//!     chunks by AMQP; redis-likes peak near 1 MiB; S3 suffers under small
+//!     chunks from request-rate limits).
+//! (b) Aggregate throughput of pack A → pack B pairs as the burst size
+//!     grows (paper: Redis/RabbitMQ flat-line, DragonflyDB scales past
+//!     2.5 GiB/s, S3 scales but stays slower).
+
+use crate::bcm::chunk::Op;
+use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology};
+use crate::cluster::netmodel::NetParams;
+use crate::util::benchkit::{section, Table};
+use crate::util::bytes::{self, GIB, KIB, MIB};
+use crate::util::timing::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct ChunkRow {
+    pub backend: &'static str,
+    pub chunk_size: usize,
+    /// Modeled GiB/s (None = rejected, e.g. chunk over AMQP limit).
+    pub throughput: Option<f64>,
+}
+
+fn fabric_for(
+    kind: BackendKind,
+    topo: PackTopology,
+    params: &NetParams,
+    chunk: usize,
+) -> std::sync::Arc<CommFabric> {
+    CommFabric::new(
+        "fig8",
+        topo,
+        kind.build(params),
+        params,
+        FabricConfig { chunk_size: chunk, ..FabricConfig::default() },
+    )
+}
+
+/// One payload worker-0 → worker-1 (two packs), chunked at `chunk`.
+fn pair_transfer(kind: BackendKind, payload: usize, chunk: usize, params: &NetParams) -> Option<f64> {
+    let fabric = fabric_for(kind, PackTopology::contiguous(2, 1), params, chunk);
+    // RabbitMQ rejects oversized chunks at the protocol level; the fabric
+    // clamps config, so detect the clamp to report the paper's "n/a".
+    if kind == BackendKind::RabbitMq && chunk > fabric.config.chunk_size {
+        return None;
+    }
+    let data = vec![0u8; payload];
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        let f1 = fabric.clone();
+        s.spawn(move || f1.remote_send(Op::Direct, 0, Some(1), 0, &data).unwrap());
+        let f2 = fabric.clone();
+        s.spawn(move || {
+            let got = f2.remote_recv(Op::Direct, 0, Some(1), 0, 1, true).unwrap();
+            assert_eq!(got.len(), payload);
+        });
+    });
+    let modeled_s = sw.secs() / params.time_scale;
+    Some(payload as f64 / GIB as f64 / modeled_s)
+}
+
+pub fn compute_chunk_size(quick: bool) -> Vec<ChunkRow> {
+    let (payload, time_scale, chunks): (usize, f64, Vec<usize>) = if quick {
+        (8 * MIB, 1.0, vec![256 * KIB, MIB, 4 * MIB])
+    } else {
+        (64 * MIB, 0.5, vec![64 * KIB, 256 * KIB, MIB, 4 * MIB, 16 * MIB, 64 * MIB])
+    };
+    let params = NetParams::scaled(time_scale);
+    let kinds = [
+        BackendKind::RabbitMq,
+        BackendKind::RedisList,
+        BackendKind::RedisStream,
+        BackendKind::DragonflyList,
+        BackendKind::DragonflyStream,
+        BackendKind::S3,
+    ];
+    let mut rows = Vec::new();
+    for kind in kinds {
+        for &c in &chunks {
+            rows.push(ChunkRow {
+                backend: kind.name(),
+                chunk_size: c,
+                throughput: pair_transfer(kind, payload, c, &params),
+            });
+        }
+    }
+    rows
+}
+
+pub fn run_chunk_size(quick: bool) -> Vec<ChunkRow> {
+    section("Figure 8a: backend throughput vs chunk size (1 payload, 2 workers)");
+    let rows = compute_chunk_size(quick);
+    let mut t = Table::new(&["Backend", "Chunk", "Throughput"]);
+    for r in &rows {
+        t.row(vec![
+            r.backend.to_string(),
+            bytes::human(r.chunk_size as u64),
+            r.throughput
+                .map(|x| format!("{x:.2} GiB/s"))
+                .unwrap_or_else(|| "n/a (AMQP limit)".into()),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub backend: &'static str,
+    pub burst_size: usize,
+    pub aggregate_gib_s: f64,
+}
+
+/// Group A workers each send `payload` to their pair in group B. Workers
+/// run granularity-1 (one connection each, 1-vCPU NIC share) — the paper's
+/// setup measures raw backend scaling under parallel *connections*, not
+/// pack locality.
+fn pair_group_transfer(
+    kind: BackendKind,
+    size: usize,
+    payload: usize,
+    params: &NetParams,
+) -> f64 {
+    let half = size / 2;
+    let topo = PackTopology::contiguous(size, 1);
+    let fabric = fabric_for(kind, topo, params, MIB);
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for w in 0..half {
+            let f = fabric.clone();
+            let data = vec![0u8; payload];
+            s.spawn(move || f.remote_send(Op::Direct, w, Some(w + half), 0, &data).unwrap());
+            let f = fabric.clone();
+            s.spawn(move || {
+                let got =
+                    f.remote_recv(Op::Direct, w, Some(w + half), 0, w + half, true).unwrap();
+                assert_eq!(got.len(), payload);
+            });
+        }
+    });
+    let modeled_s = sw.secs() / params.time_scale;
+    (half * payload) as f64 / GIB as f64 / modeled_s
+}
+
+pub fn compute_scaling(quick: bool) -> Vec<ScaleRow> {
+    let (payload, time_scale, sizes): (usize, f64, Vec<usize>) = if quick {
+        (4 * MIB, 1.0, vec![8, 48])
+    } else {
+        (2 * MIB, 1.0, vec![8, 32, 96, 192, 384])
+    };
+    let params = NetParams::scaled(time_scale);
+    let kinds = [
+        BackendKind::RabbitMq,
+        BackendKind::RedisList,
+        BackendKind::DragonflyList,
+        BackendKind::S3,
+    ];
+    let mut rows = Vec::new();
+    for kind in kinds {
+        for &size in &sizes {
+            rows.push(ScaleRow {
+                backend: kind.name(),
+                burst_size: size,
+                aggregate_gib_s: pair_group_transfer(kind, size, payload, &params),
+            });
+        }
+    }
+    rows
+}
+
+pub fn run_scaling(quick: bool) -> Vec<ScaleRow> {
+    section("Figure 8b: aggregate throughput, pack A -> pack B pairs");
+    let rows = compute_scaling(quick);
+    let mut t = Table::new(&["Backend", "Burst size", "Aggregate throughput"]);
+    for r in &rows {
+        t.row(vec![
+            r.backend.to_string(),
+            r.burst_size.to_string(),
+            format!("{:.2} GiB/s", r.aggregate_gib_s),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_sweep_shapes() {
+        let _guard = crate::util::timing::timing_test_lock();
+        let rows = compute_chunk_size(true);
+        // Every backend yields data for every chunk (none over the AMQP cap
+        // in quick mode), finite throughput.
+        assert!(rows.iter().all(|r| r.throughput.unwrap_or(0.0) > 0.0));
+        // S3 small chunks slower than big chunks (per-request latency).
+        let s3_small = rows
+            .iter()
+            .find(|r| r.backend == "s3" && r.chunk_size == 256 * KIB)
+            .unwrap();
+        let s3_big = rows
+            .iter()
+            .find(|r| r.backend == "s3" && r.chunk_size == 4 * MIB)
+            .unwrap();
+        assert!(s3_big.throughput.unwrap() > 1.5 * s3_small.throughput.unwrap());
+        // S3 is the slowest of the backends at its best chunk.
+        let best = |name: &str| -> f64 {
+            rows.iter()
+                .filter(|r| r.backend == name)
+                .filter_map(|r| r.throughput)
+                .fold(0.0, f64::max)
+        };
+        assert!(best("dragonfly-list") > best("s3"));
+        // Lists beat streams.
+        assert!(best("redis-list") > best("redis-stream"));
+    }
+
+    #[test]
+    fn scaling_shapes() {
+        let _guard = crate::util::timing::timing_test_lock();
+        let rows = compute_scaling(true);
+        let get = |name: &str, size: usize| {
+            rows.iter()
+                .find(|r| r.backend == name && r.burst_size == size)
+                .unwrap()
+                .aggregate_gib_s
+        };
+        // DragonflyDB scales with parallelism; Redis gains much less.
+        // (Loose multiplier: wall-clock ratios are noisy on the shared CPU;
+        // the exact structural claim is pinned by
+        // kv::tests::redis_serializes_dragonfly_scales.)
+        let fly_scale = get("dragonfly-list", 48) / get("dragonfly-list", 8);
+        let redis_scale = get("redis-list", 48) / get("redis-list", 8);
+        assert!(
+            fly_scale > redis_scale * 1.1,
+            "fly {fly_scale} vs redis {redis_scale}"
+        );
+        // Dragonfly beats redis outright at the bigger size.
+        assert!(get("dragonfly-list", 48) > get("redis-list", 48));
+    }
+}

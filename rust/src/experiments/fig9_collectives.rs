@@ -1,0 +1,239 @@
+//! Figure 9: end-to-end latency of group collectives (broadcast and
+//! all-to-all) as packing granularity varies, for several burst sizes.
+//! Remote communication dominates; locality turns it local, so latency
+//! drops as granularity grows — broadcast by ~98% at g=48 (one pack),
+//! all-to-all by 1 − 1/packs of its volume.
+
+use std::sync::Arc;
+
+use crate::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+use crate::cluster::netmodel::NetParams;
+use crate::util::benchkit::{section, Table};
+use crate::util::bytes::{self, KIB, MIB};
+use crate::util::timing::Stopwatch;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    Broadcast,
+    /// The paper reports reduce "behaves similar to broadcast, because they
+    /// follow the same data movement patterns" — included to verify that.
+    Reduce,
+    AllToAll,
+}
+
+impl Collective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Broadcast => "broadcast",
+            Collective::Reduce => "reduce",
+            Collective::AllToAll => "all-to-all",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub collective: Collective,
+    pub burst_size: usize,
+    pub granularity: usize,
+    pub latency_s: f64,
+    pub reduction_vs_g1: f64,
+    pub remote_bytes: u64,
+}
+
+pub struct Config {
+    pub sizes: Vec<usize>,
+    pub grans: Vec<usize>,
+    pub payload: usize,
+    pub time_scale: f64,
+}
+
+impl Config {
+    pub fn new(quick: bool) -> Config {
+        if quick {
+            Config {
+                sizes: vec![12],
+                grans: vec![1, 3, 12],
+                payload: 256 * KIB,
+                time_scale: 0.5,
+            }
+        } else {
+            Config {
+                sizes: vec![48, 96, 192],
+                grans: vec![1, 2, 4, 8, 16, 48],
+                payload: 256 * KIB,
+                time_scale: 1.0,
+            }
+        }
+    }
+}
+
+fn run_collective(
+    coll: Collective,
+    size: usize,
+    g: usize,
+    payload: usize,
+    params: &NetParams,
+) -> (f64, u64) {
+    let fabric = CommFabric::new(
+        &format!("fig9-{}-{size}-{g}", coll.name()),
+        PackTopology::contiguous(size, g),
+        BackendKind::DragonflyList.build(params),
+        params,
+        FabricConfig { chunk_size: MIB, ..FabricConfig::default() },
+    );
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for w in 0..size {
+            let fabric: Arc<CommFabric> = fabric.clone();
+            s.spawn(move || {
+                let ctx = BurstContext::new(w, fabric);
+                match coll {
+                    Collective::Broadcast => {
+                        let data = (w == 0).then(|| vec![0u8; payload]);
+                        let got = ctx.broadcast(0, data).unwrap();
+                        assert_eq!(got.len(), payload);
+                    }
+                    Collective::Reduce => {
+                        let f = |acc: &mut Vec<u8>, b: &[u8]| {
+                            for (x, y) in acc.iter_mut().zip(b) {
+                                *x = x.wrapping_add(*y);
+                            }
+                        };
+                        let r = ctx.reduce(0, vec![1u8; payload], &f).unwrap();
+                        if w == 0 {
+                            let v = r.unwrap();
+                            assert_eq!(v[0] as usize, size % 256);
+                        }
+                    }
+                    Collective::AllToAll => {
+                        // Each worker has `payload` for every other worker.
+                        let msgs: Vec<Vec<u8>> =
+                            (0..size).map(|_| vec![0u8; payload]).collect();
+                        let got = ctx.all_to_all(msgs).unwrap();
+                        assert_eq!(got.len(), size);
+                    }
+                }
+            });
+        }
+    });
+    (sw.secs() / params.time_scale, fabric.traffic.remote())
+}
+
+pub fn compute(cfg: &Config) -> Vec<Row> {
+    let params = NetParams::scaled(cfg.time_scale);
+    let mut rows = Vec::new();
+    for coll in [Collective::Broadcast, Collective::Reduce, Collective::AllToAll] {
+        for &size in &cfg.sizes {
+            let mut g1 = None;
+            for &g in &cfg.grans {
+                if g > size {
+                    continue;
+                }
+                let (latency_s, remote) = run_collective(coll, size, g, cfg.payload, &params);
+                let base = *g1.get_or_insert(latency_s);
+                rows.push(Row {
+                    collective: coll,
+                    burst_size: size,
+                    granularity: g,
+                    latency_s,
+                    reduction_vs_g1: 100.0 * (1.0 - latency_s / base),
+                    remote_bytes: remote,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    let cfg = Config::new(quick);
+    section(&format!(
+        "Figure 9: collective latency vs granularity ({} per worker, dragonfly)",
+        bytes::human(cfg.payload as u64)
+    ));
+    let rows = compute(&cfg);
+    let mut t =
+        Table::new(&["Collective", "Size", "Granularity", "Latency", "Reduction", "Remote"]);
+    for r in &rows {
+        t.row(vec![
+            r.collective.name().into(),
+            r.burst_size.to_string(),
+            r.granularity.to_string(),
+            format!("{:.3}s", r.latency_s),
+            format!("{:.1}%", r.reduction_vs_g1),
+            bytes::human(r.remote_bytes),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_tracks_broadcast() {
+        // Paper §5.3: reduce follows the same data-movement pattern as
+        // broadcast — remote volumes agree within the header overhead.
+        let rows = compute(&Config::new(true));
+        let vol = |c: Collective, g: usize| {
+            rows.iter()
+                .find(|r| r.collective == c && r.granularity == g)
+                .unwrap()
+                .remote_bytes as f64
+        };
+        for g in [1usize, 3] {
+            let b = vol(Collective::Broadcast, g);
+            let r = vol(Collective::Reduce, g);
+            // Same order: reduce moves (packs-1) leader edges vs broadcast's
+            // 1 publish + (packs-1) reads.
+            assert!(r > 0.3 * b && r < 3.0 * b, "g={g} bcast {b} reduce {r}");
+        }
+        assert_eq!(vol(Collective::Reduce, 12), 0.0);
+    }
+
+    #[test]
+    fn latency_drops_with_granularity() {
+        let _guard = crate::util::timing::timing_test_lock();
+        let rows = compute(&Config::new(true));
+        for coll in [Collective::Broadcast, Collective::AllToAll] {
+            let series: Vec<&Row> = rows.iter().filter(|r| r.collective == coll).collect();
+            assert!(series.len() >= 3);
+            // g=1 slowest, single pack fastest.
+            assert!(
+                series.last().unwrap().latency_s < series[0].latency_s,
+                "{coll:?}: {series:?}"
+            );
+            // Single pack ⇒ zero remote bytes (the ~100% reduction point).
+            assert_eq!(series.last().unwrap().remote_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn broadcast_remote_volume_proportional_to_packs() {
+        let cfg = Config::new(true);
+        let rows = compute(&cfg);
+        let bc: Vec<&Row> =
+            rows.iter().filter(|r| r.collective == Collective::Broadcast).collect();
+        // g=1 ⇒ 12 packs: publish 1 + read 11 ≈ 12 payloads;
+        // g=3 ⇒ 4 packs: publish 1 + read 3 ≈ 4 payloads.
+        let v1 = bc[0].remote_bytes as f64;
+        let v3 = bc[1].remote_bytes as f64;
+        let ratio = v1 / v3;
+        assert!((2.0..4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn all_to_all_more_expensive_than_broadcast() {
+        let rows = compute(&Config::new(true));
+        let g1 = |c: Collective| {
+            rows.iter()
+                .find(|r| r.collective == c && r.granularity == 1)
+                .unwrap()
+                .remote_bytes
+        };
+        assert!(g1(Collective::AllToAll) > 3 * g1(Collective::Broadcast));
+    }
+}

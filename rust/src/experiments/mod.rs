@@ -1,0 +1,61 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (§5, DESIGN.md §5). Each driver runs the workload, prints the same
+//! rows/series the paper reports, and returns its data for tests and
+//! EXPERIMENTS.md.
+//!
+//! `quick: true` shrinks payloads/sizes for CI; the shapes (who wins, by
+//! what factor) must hold in both modes — tests assert them in quick mode.
+
+pub mod fig1_coldstart;
+pub mod fig5_startup;
+pub mod fig6_simultaneity;
+pub mod fig7_dataloading;
+pub mod fig8_backends;
+pub mod fig9_collectives;
+pub mod fig10_pagerank;
+pub mod fig11_terasort;
+pub mod table1_clusters;
+pub mod table3_gridsearch;
+
+use std::sync::Arc;
+
+use crate::apps::{self, AppEnv};
+use crate::cluster::costmodel::CostModel;
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::ClusterSpec;
+use crate::platform::Controller;
+use crate::runtime::engine::global_pool;
+use crate::storage::ObjectStore;
+
+/// Build a platform + app environment for an experiment: `invokers` ×
+/// `vcpus` cluster, network model compressed by `time_scale`, apps
+/// registered against a fresh object store.
+pub fn platform(invokers: usize, vcpus: usize, time_scale: f64) -> (Arc<Controller>, AppEnv) {
+    let net = NetParams::scaled(time_scale);
+    let controller = Controller::new(
+        ClusterSpec::uniform(invokers, vcpus),
+        CostModel::default(),
+        net.clone(),
+    );
+    let env = AppEnv {
+        store: ObjectStore::new(net),
+        pool: global_pool().expect("artifacts missing — run `make artifacts`"),
+    };
+    apps::register_all(&env);
+    (controller, env)
+}
+
+/// Run every experiment (CLI `burstctl experiment all`).
+pub fn run_all(quick: bool) {
+    table1_clusters::run(quick);
+    fig1_coldstart::run(quick);
+    fig5_startup::run(quick);
+    fig6_simultaneity::run(quick);
+    fig7_dataloading::run(quick);
+    fig8_backends::run_chunk_size(quick);
+    fig8_backends::run_scaling(quick);
+    fig9_collectives::run(quick);
+    table3_gridsearch::run(quick);
+    fig10_pagerank::run(quick);
+    fig11_terasort::run(quick);
+}

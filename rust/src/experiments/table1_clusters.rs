@@ -1,0 +1,95 @@
+//! Table 1: start-up time of cluster technologies vs a FaaS service.
+
+use crate::cluster::costmodel::{ClusterTech, LambdaModel};
+use crate::util::benchkit::{section, Table};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub technology: String,
+    pub total_vcpus: usize,
+    pub nodes: usize,
+    pub startup_s: f64,
+}
+
+pub fn compute(quick: bool) -> Vec<Row> {
+    let mut rng = Pcg::new(0x7ab1e1);
+    let mut rows = Vec::new();
+    let configs = [
+        (ClusterTech::EmrSpark, 96, 6),
+        (ClusterTech::EmrSpark, 96, 24),
+        (ClusterTech::Dataproc, 96, 6),
+        (ClusterTech::Dataproc, 96, 24),
+        (ClusterTech::Dask, 128, 8),
+        (ClusterTech::Dask, 128, 64),
+        (ClusterTech::Ray, 128, 8),
+        (ClusterTech::Ray, 128, 64),
+    ];
+    for (tech, vcpus, nodes) in configs {
+        rows.push(Row {
+            technology: tech.name().to_string(),
+            total_vcpus: vcpus,
+            nodes,
+            startup_s: tech.startup_s(nodes, &mut rng),
+        });
+    }
+    // AWS λ 10 GiB, 1000 functions: the fleet's last cold start.
+    let lambda = LambdaModel::default();
+    let fleet = if quick { 200 } else { 1000 };
+    let max = (0..fleet)
+        .map(|i| lambda.cold_start_s(10_240, i, &mut rng))
+        .fold(0.0f64, f64::max);
+    rows.push(Row {
+        technology: "AWS λ 10 GiB".into(),
+        total_vcpus: 6000,
+        nodes: fleet,
+        startup_s: max,
+    });
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    section("Table 1: cluster start-up vs FaaS");
+    let rows = compute(quick);
+    let mut t = Table::new(&["Technology", "Total vCPUs", "Nodes", "Start-up time"]);
+    for r in &rows {
+        t.row(vec![
+            r.technology.clone(),
+            r.total_vcpus.to_string(),
+            r.nodes.to_string(),
+            format!("{:.0} s", r.startup_s),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faas_is_order_of_magnitude_faster_than_clusters() {
+        let rows = compute(true);
+        let lambda = rows.last().unwrap();
+        assert!(lambda.startup_s < 10.0, "λ {}", lambda.startup_s);
+        for r in &rows[..rows.len() - 1] {
+            assert!(
+                r.startup_s > 10.0 * lambda.startup_s,
+                "{} ({} s) not ≫ λ ({} s)",
+                r.technology,
+                r.startup_s,
+                lambda.startup_s
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_startup_grows_with_nodes() {
+        let rows = compute(true);
+        // EMR 24 nodes slower than EMR 6 nodes, etc.
+        assert!(rows[1].startup_s > rows[0].startup_s);
+        assert!(rows[3].startup_s > rows[2].startup_s);
+        assert!(rows[5].startup_s > rows[4].startup_s);
+    }
+}

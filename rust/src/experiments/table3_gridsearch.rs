@@ -1,0 +1,126 @@
+//! Table 3: hyperparameter tuning — time to start 96 workers and have the
+//! input dataset loaded ("ready time") for different burst granularities.
+//! Paper: 17.51 s at FaaS (g=1) down to 2.57 s at g=96 with a 500 MiB
+//! dataset.
+
+use crate::apps::gridsearch;
+use crate::platform::FlareOptions;
+use crate::util::benchkit::{section, Table};
+use crate::util::bytes::{self, MIB};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub granularity: usize,
+    /// Invocation (modeled) + dataset fetch (measured, modeled seconds).
+    pub ready_s: f64,
+    pub invocation_s: f64,
+    pub fetch_s: f64,
+}
+
+pub struct Config {
+    pub workers: usize,
+    pub dataset_pad: usize,
+    pub time_scale: f64,
+    pub grans: Vec<usize>,
+}
+
+impl Config {
+    pub fn new(quick: bool) -> Config {
+        if quick {
+            Config { workers: 12, dataset_pad: MIB, time_scale: 0.2, grans: vec![1, 6, 12] }
+        } else {
+            Config {
+                workers: 96,
+                dataset_pad: 8 * MIB,
+                time_scale: 1.0,
+                grans: vec![1, 6, 12, 24, 48, 96],
+            }
+        }
+    }
+}
+
+pub fn compute(cfg: &Config) -> Vec<Row> {
+    // Paper setup: one c7i.24xlarge (96 vCPUs) for the burst platform.
+    let (controller, env) = super::platform(1, cfg.workers.max(96), cfg.time_scale);
+    gridsearch::generate(&env, "t3", 42, cfg.dataset_pad);
+    controller.deploy("t3-gridsearch", gridsearch::WORK_NAME, Default::default()).unwrap();
+
+    let mut rows = Vec::new();
+    for &g in &cfg.grans {
+        let params: Vec<Json> = gridsearch::param_grid(cfg.workers, "t3", 1);
+        let opts = if g == 1 {
+            FlareOptions { faas: true, ..Default::default() }
+        } else {
+            FlareOptions {
+                granularity: Some(g),
+                strategy: Some("homogeneous".into()),
+                ..Default::default()
+            }
+        };
+        let r = controller.flare("t3-gridsearch", params, &opts).unwrap();
+        // Fetch is measured wall time inside workers; convert to modeled.
+        let fetch_s = r
+            .outputs
+            .iter()
+            .map(|o| o.num_or(crate::apps::phases::FETCH, 0.0))
+            .fold(0.0, f64::max)
+            / cfg.time_scale;
+        rows.push(Row {
+            granularity: g,
+            invocation_s: r.startup.all_ready_s,
+            fetch_s,
+            ready_s: r.startup.all_ready_s + fetch_s,
+        });
+    }
+    rows
+}
+
+pub fn run(quick: bool) -> Vec<Row> {
+    let cfg = Config::new(quick);
+    section(&format!(
+        "Table 3: grid search ready time, {} workers, {} dataset",
+        cfg.workers,
+        bytes::human((cfg.dataset_pad + 4 * (1024 * 64 + 1024)) as u64)
+    ));
+    let rows = compute(&cfg);
+    let mut t = Table::new(&["Granularity", "Invocation", "Data fetch", "Ready time"]);
+    for r in &rows {
+        let label =
+            if r.granularity == 1 { "1 (FaaS)".to_string() } else { r.granularity.to_string() };
+        t.row(vec![
+            label,
+            format!("{:.2}s", r.invocation_s),
+            format!("{:.2}s", r.fetch_s),
+            format!("{:.2}s", r.ready_s),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_time_decreases_with_granularity() {
+        let rows = compute(&Config::new(true));
+        for w in rows.windows(2) {
+            assert!(
+                w[1].ready_s < w[0].ready_s,
+                "g{} {:.3} !< g{} {:.3}",
+                w[1].granularity,
+                w[1].ready_s,
+                w[0].granularity,
+                w[0].ready_s
+            );
+        }
+        // FaaS pays both slower invocation AND slower per-worker download.
+        let faas = &rows[0];
+        let best = rows.last().unwrap();
+        assert!(faas.invocation_s > best.invocation_s);
+        assert!(faas.fetch_s > best.fetch_s);
+        assert!(faas.ready_s / best.ready_s > 2.0, "{rows:?}");
+    }
+}

@@ -1,0 +1,17 @@
+//! burstc — Burst Computing: serverless handling of burst-parallel jobs.
+//!
+//! Reproduction of "FaaS Is Not Enough: Serverless Handling of Burst-Parallel
+//! Jobs" (Barcelona-Pons et al., 2024) as a three-layer Rust + JAX + Pallas
+//! stack: a Rust coordinator (this crate) implementing the burst platform and
+//! the Burst Communication Middleware (BCM), with worker compute kernels
+//! authored in JAX/Pallas and AOT-compiled to HLO executed through PJRT.
+
+pub mod apps;
+pub mod bcm;
+pub mod cluster;
+pub mod experiments;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod storage;
+pub mod util;

@@ -1,0 +1,195 @@
+//! `burstctl` — the burst computing platform CLI.
+//!
+//! Subcommands:
+//!   serve       start the controller's HTTP API (deploy/flare endpoints)
+//!   deploy      deploy a burst definition against a running server
+//!   flare       invoke a burst against a running server
+//!   apps        list registered work functions
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!
+//! Examples:
+//!   burstctl serve --port 8090 --invokers 4 --vcpus 48
+//!   burstctl deploy --addr 127.0.0.1:8090 --name pr --work pagerank --granularity 16
+//!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 16 --param-json '{"job":"demo"}'
+//!   burstctl experiment fig10 --quick
+
+use anyhow::{anyhow, Result};
+use burstc::apps::{self, AppEnv};
+use burstc::cluster::costmodel::CostModel;
+use burstc::cluster::netmodel::NetParams;
+use burstc::cluster::ClusterSpec;
+use burstc::experiments;
+use burstc::platform::http::{http_request, HttpServer};
+use burstc::platform::Controller;
+use burstc::runtime::engine::global_pool;
+use burstc::storage::ObjectStore;
+use burstc::util::cli::Args;
+use burstc::util::json::Json;
+
+const USAGE: &str = "usage: burstctl <serve|deploy|flare|apps|experiment> [options]
+  serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
+  deploy      --addr HOST:PORT --name NAME --work WORK
+              [--granularity N] [--strategy mixed] [--backend dragonfly]
+  flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
+              [--granularity N] [--faas]
+  apps        (lists registered work functions)
+  experiment  <table1|fig1|fig5|fig6|fig7|fig8a|fig8b|fig9|table3|fig10|table4|fig11|all>
+              [--quick]";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_env(time_scale: f64) -> Result<AppEnv> {
+    let env = AppEnv {
+        store: ObjectStore::new(NetParams::scaled(time_scale)),
+        pool: global_pool()?,
+    };
+    apps::register_all(&env);
+    Ok(env)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => serve(&args),
+        Some("deploy") => deploy(&args),
+        Some("flare") => flare(&args),
+        Some("apps") => {
+            build_env(1.0)?;
+            for name in burstc::platform::db::registered_work_names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        Some("experiment") => experiment(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let time_scale = args.f64("time-scale", 1.0);
+    let env = build_env(time_scale)?;
+    // Demo datasets so flares work out of the box.
+    burstc::apps::pagerank::generate(&env, "demo", 8, 1)?;
+    burstc::apps::terasort::generate(&env, "demo", 8, 20_000, 2);
+    burstc::apps::gridsearch::generate(&env, "demo", 3, 0);
+    burstc::apps::kmeans::generate(&env, "demo", 8, 4);
+
+    let controller = Controller::new(
+        ClusterSpec::uniform(args.usize("invokers", 4), args.usize("vcpus", 48)),
+        CostModel::default(),
+        NetParams::scaled(time_scale),
+    );
+    let srv = HttpServer::start(controller, args.usize("port", 8090) as u16)?;
+    println!("burst controller listening on {}", srv.addr);
+    println!("demo datasets loaded under job name 'demo'");
+    println!("Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn deploy(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let name = args.get("name").ok_or_else(|| anyhow!("--name required"))?;
+    let work = args.get("work").ok_or_else(|| anyhow!("--work required"))?;
+    let body = Json::obj(vec![
+        ("name", name.into()),
+        ("work", work.into()),
+        (
+            "conf",
+            Json::obj(vec![
+                ("granularity", args.usize("granularity", 48).into()),
+                ("strategy", args.get_or("strategy", "mixed").into()),
+                ("backend", args.get_or("backend", "dragonfly").into()),
+            ]),
+        ),
+    ]);
+    let r = http_request(addr, "POST", "/v1/deploy", Some(&body))?;
+    println!("{r}");
+    Ok(())
+}
+
+fn flare(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let def = args.get("def").ok_or_else(|| anyhow!("--def required"))?;
+    let size = args.usize("size", 4);
+    let param: Json = match args.get("param-json") {
+        Some(s) => Json::parse(s)?,
+        None => Json::obj(vec![("job", "demo".into())]),
+    };
+    let mut options = vec![];
+    if let Some(g) = args.get("granularity") {
+        options.push(("granularity", Json::Num(g.parse::<f64>()?)));
+    }
+    if args.flag("faas") {
+        options.push(("faas", Json::Bool(true)));
+    }
+    let body = Json::obj(vec![
+        ("def", def.into()),
+        ("params", Json::Arr(vec![param; size])),
+        ("options", Json::obj(options)),
+    ]);
+    let r = http_request(addr, "POST", "/v1/flare", Some(&body))?;
+    println!("{r}");
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("experiment id required\n{USAGE}"))?;
+    let quick = args.flag("quick");
+    match which.as_str() {
+        "table1" => {
+            experiments::table1_clusters::run(quick);
+        }
+        "fig1" => {
+            experiments::fig1_coldstart::run(quick);
+        }
+        "fig5" => {
+            experiments::fig5_startup::run(quick);
+        }
+        "fig6" => {
+            experiments::fig6_simultaneity::run(quick);
+        }
+        "fig7" => {
+            experiments::fig7_dataloading::run(quick);
+        }
+        "fig8a" => {
+            experiments::fig8_backends::run_chunk_size(quick);
+        }
+        "fig8b" => {
+            experiments::fig8_backends::run_scaling(quick);
+        }
+        "fig9" => {
+            experiments::fig9_collectives::run(quick);
+        }
+        "table3" => {
+            experiments::table3_gridsearch::run(quick);
+        }
+        "fig10" | "table4" => {
+            experiments::fig10_pagerank::run(quick);
+        }
+        "fig11" => {
+            experiments::fig11_terasort::run(quick);
+        }
+        "all" => experiments::run_all(quick),
+        // Ablations live as benches; point users there.
+        "ablations" => {
+            println!(
+                "run: cargo bench --bench ablation_packing\n     cargo bench --bench ablation_staged_pagerank"
+            );
+        }
+        other => return Err(anyhow!("unknown experiment '{other}'\n{USAGE}")),
+    }
+    Ok(())
+}

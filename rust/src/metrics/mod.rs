@@ -1,0 +1,8 @@
+//! Metrics: traffic accounting (local vs remote bytes — the paper's F3
+//! evidence, Table 4) and worker timelines (Figs. 6 and 11).
+
+pub mod timeline;
+pub mod traffic;
+
+pub use timeline::{Phase, Timeline, TimelineEvent};
+pub use traffic::TrafficStats;

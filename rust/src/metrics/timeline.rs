@@ -1,0 +1,176 @@
+//! Worker timelines: per-worker, per-phase `(start, end)` intervals in
+//! modeled seconds since flare submission. Figs. 6 and 11 are rendered from
+//! these, and the simultaneity metrics (range, MAD) are computed over the
+//! per-worker start times.
+
+use std::sync::Mutex;
+
+use crate::util::stats::{self, Summary};
+
+/// Execution phases a worker moves through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Container + runtime + code load until the worker can run.
+    Startup,
+    /// Input fetch from object storage.
+    Fetch,
+    /// Kernel compute (PJRT execution).
+    Compute,
+    /// BCM communication (collectives, shuffle).
+    Comm,
+    /// Whole work-function span.
+    Work,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Startup => "startup",
+            Phase::Fetch => "fetch",
+            Phase::Compute => "compute",
+            Phase::Comm => "comm",
+            Phase::Work => "work",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TimelineEvent {
+    pub worker_id: usize,
+    pub pack_id: usize,
+    pub invoker_id: usize,
+    pub phase: Phase,
+    /// Seconds since flare submission (modeled time).
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Thread-safe event sink.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    events: Mutex<Vec<TimelineEvent>>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    pub fn record(&self, ev: TimelineEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    pub fn events(&self) -> Vec<TimelineEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Per-worker start times for a given phase (e.g. `Work` start times =
+    /// worker readiness, the paper's simultaneity signal).
+    pub fn phase_starts(&self, phase: Phase) -> Vec<f64> {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.phase == phase)
+            .map(|e| e.start_s)
+            .collect()
+    }
+
+    pub fn phase_durations(&self, phase: Phase) -> Vec<f64> {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.phase == phase)
+            .map(|e| e.end_s - e.start_s)
+            .collect()
+    }
+
+    /// Simultaneity summary over worker readiness times.
+    pub fn simultaneity(&self) -> Option<Summary> {
+        let starts = self.phase_starts(Phase::Work);
+        if starts.is_empty() {
+            return None;
+        }
+        Some(stats::Summary::of(&starts))
+    }
+
+    /// Render an ASCII timeline (one bar per worker), like Figs. 6/11.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let evs = self.events();
+        let works: Vec<&TimelineEvent> =
+            evs.iter().filter(|e| e.phase == Phase::Work).collect();
+        if works.is_empty() {
+            return String::new();
+        }
+        let t_max = works.iter().map(|e| e.end_s).fold(0.0f64, f64::max).max(1e-9);
+        let mut out = String::new();
+        let mut sorted = works.clone();
+        sorted.sort_by_key(|e| e.worker_id);
+        for e in sorted {
+            let s = ((e.start_s / t_max) * width as f64) as usize;
+            let w = (((e.end_s - e.start_s) / t_max) * width as f64).max(1.0) as usize;
+            out.push_str(&format!(
+                "w{:4} |{}{}|\n",
+                e.worker_id,
+                " ".repeat(s.min(width)),
+                "#".repeat(w.min(width - s.min(width)).max(1))
+            ));
+        }
+        out.push_str(&format!("       0s{:>w$.2}s\n", t_max, w = width));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(worker: usize, phase: Phase, s: f64, e: f64) -> TimelineEvent {
+        TimelineEvent {
+            worker_id: worker,
+            pack_id: 0,
+            invoker_id: 0,
+            phase,
+            start_s: s,
+            end_s: e,
+        }
+    }
+
+    #[test]
+    fn phase_filters() {
+        let t = Timeline::new();
+        t.record(ev(0, Phase::Work, 1.0, 5.0));
+        t.record(ev(1, Phase::Work, 1.5, 5.0));
+        t.record(ev(0, Phase::Fetch, 1.0, 2.0));
+        assert_eq!(t.phase_starts(Phase::Work), vec![1.0, 1.5]);
+        assert_eq!(t.phase_durations(Phase::Fetch), vec![1.0]);
+    }
+
+    #[test]
+    fn simultaneity_range() {
+        let t = Timeline::new();
+        for i in 0..10 {
+            t.record(ev(i, Phase::Work, i as f64 * 0.1, 10.0));
+        }
+        let s = t.simultaneity().unwrap();
+        assert!((s.range - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_renders_all_workers() {
+        let t = Timeline::new();
+        t.record(ev(0, Phase::Work, 0.0, 1.0));
+        t.record(ev(1, Phase::Work, 0.5, 2.0));
+        let a = t.render_ascii(40);
+        assert_eq!(a.lines().count(), 3);
+        assert!(a.contains("w   0"));
+    }
+
+    #[test]
+    fn empty_timeline() {
+        let t = Timeline::new();
+        assert!(t.simultaneity().is_none());
+        assert_eq!(t.render_ascii(10), "");
+    }
+}

@@ -1,0 +1,133 @@
+//! Traffic accounting: every BCM transfer is attributed as *local*
+//! (zero-copy within a pack) or *remote* (through the backend server).
+//! Table 4's "% traffic reduction" and the Fig. 10 communication phases are
+//! computed from these counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe per-flare traffic counters.
+#[derive(Debug, Default)]
+pub struct TrafficStats {
+    /// Bytes moved by pointer within a pack (zero-copy; counted once per
+    /// logical receive so locality savings are visible).
+    pub local_bytes: AtomicU64,
+    /// Bytes written to a remote backend.
+    pub remote_tx_bytes: AtomicU64,
+    /// Bytes read from a remote backend.
+    pub remote_rx_bytes: AtomicU64,
+    pub local_msgs: AtomicU64,
+    pub remote_msgs: AtomicU64,
+    /// Backend requests issued (chunk puts + gets), for op-overhead studies.
+    pub backend_ops: AtomicU64,
+}
+
+impl TrafficStats {
+    pub fn new() -> TrafficStats {
+        TrafficStats::default()
+    }
+
+    pub fn record_local(&self, bytes: u64) {
+        self.local_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.local_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_remote_tx(&self, bytes: u64) {
+        self.remote_tx_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.remote_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_remote_rx(&self, bytes: u64) {
+        self.remote_rx_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_backend_op(&self) {
+        self.backend_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn local(&self) -> u64 {
+        self.local_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total remote volume (tx + rx), the paper's "network traffic" metric.
+    pub fn remote(&self) -> u64 {
+        self.remote_tx_bytes.load(Ordering::Relaxed)
+            + self.remote_rx_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn remote_tx(&self) -> u64 {
+        self.remote_tx_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn remote_rx(&self) -> u64 {
+        self.remote_rx_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.backend_ops.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of all moved bytes that stayed local.
+    pub fn locality_ratio(&self) -> f64 {
+        let l = self.local() as f64;
+        let r = self.remote() as f64;
+        if l + r == 0.0 {
+            return 0.0;
+        }
+        l / (l + r)
+    }
+
+    pub fn reset(&self) {
+        self.local_bytes.store(0, Ordering::Relaxed);
+        self.remote_tx_bytes.store(0, Ordering::Relaxed);
+        self.remote_rx_bytes.store(0, Ordering::Relaxed);
+        self.local_msgs.store(0, Ordering::Relaxed);
+        self.remote_msgs.store(0, Ordering::Relaxed);
+        self.backend_ops.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let t = TrafficStats::new();
+        t.record_local(100);
+        t.record_remote_tx(40);
+        t.record_remote_rx(60);
+        t.record_backend_op();
+        assert_eq!(t.local(), 100);
+        assert_eq!(t.remote(), 100);
+        assert_eq!(t.ops(), 1);
+        assert!((t.locality_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let t = TrafficStats::new();
+        t.record_local(5);
+        t.reset();
+        assert_eq!(t.local(), 0);
+        assert_eq!(t.locality_ratio(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let t = std::sync::Arc::new(TrafficStats::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        t.record_remote_tx(1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.remote_tx(), 8000);
+    }
+}

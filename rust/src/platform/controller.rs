@@ -1,0 +1,376 @@
+//! The burst controller (paper Fig. 4): handles deploy and flare requests,
+//! oversees invoker resources, performs worker packing, and stores results.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::db::{self, BurstConfig, BurstDb, BurstDefinition, FlareRecord};
+use super::invoker::{model_startup, InvokerPool, ModeledStartup};
+use super::pack::run_flare_packs;
+use super::packing::{plan, PackSpec, PackingStrategy};
+use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
+use crate::cluster::costmodel::CostModel;
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::ClusterSpec;
+use crate::metrics::{Timeline, TrafficStats};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Per-flare execution options (overrides of the deployed config).
+#[derive(Debug, Clone, Default)]
+pub struct FlareOptions {
+    /// Override granularity.
+    pub granularity: Option<usize>,
+    /// Override packing strategy.
+    pub strategy: Option<String>,
+    /// Override backend.
+    pub backend: Option<BackendKind>,
+    /// Run as a FaaS baseline: forces granularity 1 and independent
+    /// per-worker invocations (arrival skew + per-container code load).
+    pub faas: bool,
+}
+
+impl FlareOptions {
+    pub fn from_json(j: &Json) -> FlareOptions {
+        FlareOptions {
+            granularity: j.get("granularity").and_then(Json::as_usize),
+            strategy: j.get("strategy").and_then(Json::as_str).map(str::to_string),
+            backend: j.get("backend").and_then(Json::as_str).and_then(BackendKind::parse),
+            faas: j.get("faas").and_then(Json::as_bool).unwrap_or(false),
+        }
+    }
+}
+
+/// Result of one flare.
+pub struct FlareResult {
+    pub flare_id: String,
+    pub outputs: Vec<Json>,
+    pub packs: Vec<PackSpec>,
+    pub startup: ModeledStartup,
+    pub timeline: Arc<Timeline>,
+    pub traffic: Arc<TrafficStats>,
+    pub backend_name: String,
+    /// Measured work wall-time (max across workers), seconds.
+    pub work_wall_s: f64,
+}
+
+impl FlareResult {
+    /// End-to-end modeled job time: invocation latency + measured work.
+    pub fn total_s(&self) -> f64 {
+        self.startup.all_ready_s + self.work_wall_s
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("flare_id", self.flare_id.as_str().into()),
+            ("packs", self.packs.len().into()),
+            ("burst_size", self.startup.worker_ready_s.len().into()),
+            ("backend", self.backend_name.as_str().into()),
+            ("invocation_s", self.startup.all_ready_s.into()),
+            ("work_s", self.work_wall_s.into()),
+            ("total_s", self.total_s().into()),
+            ("remote_bytes", (self.traffic.remote() as usize).into()),
+            ("local_bytes", (self.traffic.local() as usize).into()),
+        ])
+    }
+}
+
+/// The burst platform controller.
+pub struct Controller {
+    pub db: BurstDb,
+    pub pool: InvokerPool,
+    pub cost: CostModel,
+    pub net: NetParams,
+    /// Backends are created per kind on first use and shared across flares
+    /// (they are the remote *servers*).
+    backends: Mutex<Vec<(BackendKind, Arc<dyn RemoteBackend>)>>,
+    rng: Mutex<Pcg>,
+    next_flare: AtomicU64,
+}
+
+impl Controller {
+    pub fn new(cluster: ClusterSpec, cost: CostModel, net: NetParams) -> Arc<Controller> {
+        Arc::new(Controller {
+            db: BurstDb::new(),
+            pool: InvokerPool::new(&cluster),
+            cost,
+            net,
+            backends: Mutex::new(Vec::new()),
+            rng: Mutex::new(Pcg::new(0xb5_2024)),
+            next_flare: AtomicU64::new(1),
+        })
+    }
+
+    /// Convenience: paper-like test platform with a compressed time scale.
+    pub fn test_platform(invokers: usize, vcpus: usize, time_scale: f64) -> Arc<Controller> {
+        Controller::new(
+            ClusterSpec::uniform(invokers, vcpus),
+            CostModel::default(),
+            NetParams::scaled(time_scale),
+        )
+    }
+
+    /// Deploy a burst definition (paper Table 2: `deploy`).
+    pub fn deploy(&self, name: &str, work_name: &str, conf: BurstConfig) -> Result<()> {
+        self.db.deploy(BurstDefinition {
+            name: name.to_string(),
+            work_name: work_name.to_string(),
+            conf,
+        })
+    }
+
+    pub fn backend(&self, kind: BackendKind) -> Arc<dyn RemoteBackend> {
+        let mut v = self.backends.lock().unwrap();
+        if let Some((_, b)) = v.iter().find(|(k, _)| *k == kind) {
+            return b.clone();
+        }
+        let b = kind.build(&self.net);
+        v.push((kind, b.clone()));
+        b
+    }
+
+    /// Data-driven burst sizing (the paper's footnote 5 "future work"):
+    /// given an input volume and a per-worker target, suggest a burst size
+    /// that fits current free capacity.
+    pub fn suggest_burst_size(&self, input_bytes: u64, bytes_per_worker: u64) -> usize {
+        let wanted = (input_bytes.div_ceil(bytes_per_worker.max(1))).max(1) as usize;
+        let capacity: usize = self.pool.free_vcpus().iter().sum();
+        wanted.min(capacity.max(1))
+    }
+
+    /// Invoke a burst (paper Table 2: `flare`). The burst size is the
+    /// length of `input_params` (§4.2); one worker runs per entry.
+    pub fn flare(
+        &self,
+        def_name: &str,
+        input_params: Vec<Json>,
+        opts: &FlareOptions,
+    ) -> Result<FlareResult> {
+        let def = self.db.get_def(def_name)?;
+        let work = db::lookup_work(&def.work_name)?;
+        let burst_size = input_params.len();
+        if burst_size == 0 {
+            return Err(anyhow!("flare needs at least one input param"));
+        }
+
+        // Resolve effective configuration.
+        let granularity = if opts.faas {
+            1
+        } else {
+            opts.granularity.unwrap_or(def.conf.granularity)
+        };
+        let strategy_name = opts.strategy.clone().unwrap_or_else(|| def.conf.strategy.clone());
+        let strategy = if opts.faas {
+            PackingStrategy::Homogeneous { granularity: 1 }
+        } else {
+            PackingStrategy::parse(&strategy_name, granularity)
+                .ok_or_else(|| anyhow!("unknown packing strategy '{strategy_name}'"))?
+        };
+        let backend_kind = opts.backend.unwrap_or(def.conf.backend);
+
+        // Packing decision against current invoker load (Fig. 4 step 4).
+        let packs = plan(strategy, burst_size, &self.pool.free_vcpus())?;
+        self.pool.reserve(&packs)?;
+
+        // Modeled start-up latencies (container creation dominates, §5.1).
+        let startup = {
+            let mut rng = self.rng.lock().unwrap();
+            model_startup(&packs, &self.cost, opts.faas, &mut rng)
+        };
+
+        let flare_id = format!(
+            "{}-{}",
+            def_name,
+            self.next_flare.fetch_add(1, Ordering::Relaxed)
+        );
+        let topo = PackTopology::new(
+            packs.iter().map(|p| p.workers.clone()).collect(),
+            packs.iter().map(|p| p.invoker_id).collect(),
+        );
+        let fabric = CommFabric::new(
+            &flare_id,
+            topo,
+            self.backend(backend_kind),
+            &self.net,
+            FabricConfig { chunk_size: def.conf.chunk_size, ..FabricConfig::default() },
+        );
+
+        let timeline = Arc::new(Timeline::new());
+        let sw = crate::util::timing::Stopwatch::start();
+        let result =
+            run_flare_packs(&packs, &fabric, &work, &input_params, &startup, &timeline);
+        let work_wall_s = sw.secs();
+        fabric.teardown();
+        self.pool.release(&packs);
+        let outputs = result?;
+
+        let res = FlareResult {
+            flare_id: flare_id.clone(),
+            outputs,
+            packs,
+            startup,
+            timeline,
+            traffic: fabric.traffic.clone(),
+            backend_name: fabric.backend_name(),
+            work_wall_s,
+        };
+        self.db.put_flare(FlareRecord {
+            flare_id,
+            def_name: def_name.to_string(),
+            status: "completed".into(),
+            outputs: res.outputs.clone(),
+            metadata: res.summary_json(),
+        });
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    fn register_echo() {
+        db::register_work(
+            "ctrl-echo",
+            StdArc::new(|p: &Json, ctx: &crate::bcm::BurstContext| {
+                Ok(Json::obj(vec![
+                    ("w", ctx.worker_id.into()),
+                    ("g", ctx.granularity().into()),
+                    ("p", p.clone()),
+                ]))
+            }),
+        );
+    }
+
+    fn register_allreduce() {
+        db::register_work(
+            "ctrl-allreduce",
+            StdArc::new(|_p: &Json, ctx: &crate::bcm::BurstContext| {
+                let f = |a: &mut Vec<u8>, b: &[u8]| {
+                    let x = u64::from_le_bytes(a.as_slice().try_into().unwrap());
+                    let y = u64::from_le_bytes(b.try_into().unwrap());
+                    *a = (x + y).to_le_bytes().to_vec();
+                };
+                let r = ctx.reduce(0, (ctx.worker_id as u64).to_le_bytes().to_vec(), &f)?;
+                let sum = if ctx.worker_id == 0 {
+                    ctx.broadcast(0, Some(r.unwrap()))?
+                } else {
+                    ctx.broadcast(0, None)?
+                };
+                Ok(Json::Num(u64::from_le_bytes(sum.as_slice().try_into().unwrap()) as f64))
+            }),
+        );
+    }
+
+    #[test]
+    fn deploy_and_flare_end_to_end() {
+        register_echo();
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy("echo", "ctrl-echo", BurstConfig { granularity: 4, ..Default::default() })
+            .unwrap();
+        let params: Vec<Json> = (0..10).map(|i| Json::Num(i as f64)).collect();
+        let r = c.flare("echo", params, &FlareOptions::default()).unwrap();
+        assert_eq!(r.outputs.len(), 10);
+        for (i, o) in r.outputs.iter().enumerate() {
+            assert_eq!(o.get("w").unwrap().as_usize(), Some(i));
+            assert_eq!(o.get("p").unwrap().as_f64(), Some(i as f64));
+        }
+        assert!(r.startup.all_ready_s > 0.0);
+        // Record stored in db.
+        let rec = c.db.get_flare(&r.flare_id).unwrap();
+        assert_eq!(rec.status, "completed");
+    }
+
+    #[test]
+    fn flare_with_collectives_across_packs() {
+        register_allreduce();
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy(
+            "ar",
+            "ctrl-allreduce",
+            BurstConfig {
+                granularity: 3,
+                strategy: "homogeneous".into(), // mixed would merge same-invoker packs
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = c
+            .flare("ar", vec![Json::Null; 9], &FlareOptions::default())
+            .unwrap();
+        let expected: f64 = (0..9).sum::<usize>() as f64;
+        assert!(r.outputs.iter().all(|o| o.as_f64() == Some(expected)));
+        assert_eq!(r.packs.len(), 3);
+        assert!(r.traffic.remote() > 0);
+    }
+
+    #[test]
+    fn faas_option_forces_granularity_one() {
+        register_echo();
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy("e2", "ctrl-echo", BurstConfig { granularity: 8, ..Default::default() })
+            .unwrap();
+        let opts = FlareOptions { faas: true, ..Default::default() };
+        let r = c.flare("e2", vec![Json::Null; 6], &opts).unwrap();
+        assert_eq!(r.packs.len(), 6);
+        // FaaS invocation latency must exceed a burst flare's.
+        let rb = c
+            .flare(
+                "e2",
+                vec![Json::Null; 6],
+                &FlareOptions { granularity: Some(6), ..Default::default() },
+            )
+            .unwrap();
+        assert!(r.startup.all_ready_s > rb.startup.all_ready_s);
+    }
+
+    #[test]
+    fn resources_released_after_flare() {
+        register_echo();
+        let c = Controller::test_platform(1, 16, 1e-6);
+        c.deploy("e3", "ctrl-echo", BurstConfig::default()).unwrap();
+        for _ in 0..3 {
+            // 16 workers fill the invoker completely; must succeed 3×.
+            let r = c
+                .flare(
+                    "e3",
+                    vec![Json::Null; 16],
+                    &FlareOptions { granularity: Some(16), ..Default::default() },
+                )
+                .unwrap();
+            assert_eq!(r.outputs.len(), 16);
+        }
+        assert_eq!(c.pool.free_vcpus(), vec![16]);
+    }
+
+    #[test]
+    fn oversized_flare_rejected() {
+        register_echo();
+        let c = Controller::test_platform(1, 4, 1e-6);
+        c.deploy("e4", "ctrl-echo", BurstConfig::default()).unwrap();
+        assert!(c
+            .flare("e4", vec![Json::Null; 10], &FlareOptions::default())
+            .is_err());
+        assert_eq!(c.pool.free_vcpus(), vec![4]);
+    }
+
+    #[test]
+    fn smart_burst_sizing_fits_capacity() {
+        let c = Controller::test_platform(2, 8, 1e-6);
+        // 100 MiB at 10 MiB/worker = 10 workers, fits 16 vCPUs.
+        assert_eq!(c.suggest_burst_size(100 << 20, 10 << 20), 10);
+        // Capacity-clamped.
+        assert_eq!(c.suggest_burst_size(1 << 40, 1 << 20), 16);
+        // Tiny inputs still get one worker.
+        assert_eq!(c.suggest_burst_size(1, 1 << 20), 1);
+    }
+
+    #[test]
+    fn unknown_definition_rejected() {
+        let c = Controller::test_platform(1, 4, 1e-6);
+        assert!(c.flare("ghost", vec![Json::Null], &FlareOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Burst database (paper Fig. 4): stores burst definitions + configuration,
+//! and flare results + execution metadata, addressable by id.
+//!
+//! Because burst `work` functions are compiled Rust (not uploaded archives),
+//! "deployment" registers a definition that names a work function from the
+//! process-wide work registry — the stand-in for OpenWhisk's package upload.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::bcm::{BackendKind, BurstContext};
+use crate::util::json::Json;
+
+/// The `work` function signature (paper Table 2): every worker runs it with
+/// its input parameters and the burst context.
+pub type WorkFn = Arc<dyn Fn(&Json, &BurstContext) -> Result<Json> + Send + Sync>;
+
+/// Burst configuration (deployment time).
+#[derive(Debug, Clone)]
+pub struct BurstConfig {
+    /// Preferred packing granularity.
+    pub granularity: usize,
+    /// Packing strategy name: heterogeneous | homogeneous | mixed.
+    pub strategy: String,
+    /// Remote communication backend.
+    pub backend: BackendKind,
+    /// BCM chunk size in bytes.
+    pub chunk_size: usize,
+    /// Worker memory (MiB); informational, capacity is vCPU-based (§4.4).
+    pub memory_mib: usize,
+}
+
+impl Default for BurstConfig {
+    fn default() -> Self {
+        BurstConfig {
+            granularity: 48,
+            strategy: "mixed".into(),
+            backend: BackendKind::DragonflyList,
+            chunk_size: crate::util::bytes::MIB,
+            memory_mib: 2048,
+        }
+    }
+}
+
+impl BurstConfig {
+    pub fn from_json(j: &Json) -> BurstConfig {
+        let d = BurstConfig::default();
+        BurstConfig {
+            granularity: j.num_or("granularity", d.granularity as f64) as usize,
+            strategy: j.str_or("strategy", &d.strategy).to_string(),
+            backend: j
+                .get("backend")
+                .and_then(Json::as_str)
+                .and_then(BackendKind::parse)
+                .unwrap_or(d.backend),
+            chunk_size: j.num_or("chunk_size", d.chunk_size as f64) as usize,
+            memory_mib: j.num_or("memory_mib", d.memory_mib as f64) as usize,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("granularity", self.granularity.into()),
+            ("strategy", self.strategy.as_str().into()),
+            ("backend", self.backend.name().into()),
+            ("chunk_size", self.chunk_size.into()),
+            ("memory_mib", self.memory_mib.into()),
+        ])
+    }
+}
+
+/// A deployed burst definition.
+#[derive(Clone)]
+pub struct BurstDefinition {
+    pub name: String,
+    pub work_name: String,
+    pub conf: BurstConfig,
+}
+
+/// Flare execution record.
+#[derive(Debug, Clone)]
+pub struct FlareRecord {
+    pub flare_id: String,
+    pub def_name: String,
+    pub status: String,
+    pub outputs: Vec<Json>,
+    pub metadata: Json,
+}
+
+/// Process-wide registry of compiled `work` functions.
+static WORK_REGISTRY: RwLock<Option<HashMap<String, WorkFn>>> = RwLock::new(None);
+
+/// Register a work function under a name (apps call this at setup).
+pub fn register_work(name: &str, f: WorkFn) {
+    let mut reg = WORK_REGISTRY.write().unwrap();
+    reg.get_or_insert_with(HashMap::new).insert(name.to_string(), f);
+}
+
+pub fn lookup_work(name: &str) -> Result<WorkFn> {
+    WORK_REGISTRY
+        .read()
+        .unwrap()
+        .as_ref()
+        .and_then(|m| m.get(name).cloned())
+        .ok_or_else(|| anyhow!("work function '{name}' not registered"))
+}
+
+pub fn registered_work_names() -> Vec<String> {
+    let mut v: Vec<String> = WORK_REGISTRY
+        .read()
+        .unwrap()
+        .as_ref()
+        .map(|m| m.keys().cloned().collect())
+        .unwrap_or_default();
+    v.sort();
+    v
+}
+
+/// The platform database.
+#[derive(Default)]
+pub struct BurstDb {
+    defs: Mutex<HashMap<String, BurstDefinition>>,
+    flares: Mutex<HashMap<String, FlareRecord>>,
+}
+
+impl BurstDb {
+    pub fn new() -> BurstDb {
+        BurstDb::default()
+    }
+
+    pub fn deploy(&self, def: BurstDefinition) -> Result<()> {
+        // Validate at deploy time that the work function exists.
+        lookup_work(&def.work_name)?;
+        self.defs.lock().unwrap().insert(def.name.clone(), def);
+        Ok(())
+    }
+
+    pub fn get_def(&self, name: &str) -> Result<BurstDefinition> {
+        self.defs
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("burst definition '{name}' not found"))
+    }
+
+    pub fn list_defs(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.defs.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn put_flare(&self, rec: FlareRecord) {
+        self.flares.lock().unwrap().insert(rec.flare_id.clone(), rec);
+    }
+
+    pub fn get_flare(&self, id: &str) -> Option<FlareRecord> {
+        self.flares.lock().unwrap().get(id).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noop() -> WorkFn {
+        Arc::new(|_p, _ctx| Ok(Json::Null))
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        register_work("db-test-noop", noop());
+        assert!(lookup_work("db-test-noop").is_ok());
+        assert!(lookup_work("db-test-missing").is_err());
+        assert!(registered_work_names().contains(&"db-test-noop".to_string()));
+    }
+
+    #[test]
+    fn deploy_requires_registered_work() {
+        let db = BurstDb::new();
+        let bad = BurstDefinition {
+            name: "x".into(),
+            work_name: "db-test-nonexistent".into(),
+            conf: BurstConfig::default(),
+        };
+        assert!(db.deploy(bad).is_err());
+
+        register_work("db-test-work", noop());
+        let ok = BurstDefinition {
+            name: "x".into(),
+            work_name: "db-test-work".into(),
+            conf: BurstConfig::default(),
+        };
+        db.deploy(ok).unwrap();
+        assert_eq!(db.get_def("x").unwrap().work_name, "db-test-work");
+        assert_eq!(db.list_defs(), vec!["x"]);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = BurstConfig {
+            granularity: 7,
+            strategy: "homogeneous".into(),
+            backend: BackendKind::S3,
+            chunk_size: 4096,
+            memory_mib: 512,
+        };
+        let c2 = BurstConfig::from_json(&c.to_json());
+        assert_eq!(c2.granularity, 7);
+        assert_eq!(c2.strategy, "homogeneous");
+        assert_eq!(c2.backend, BackendKind::S3);
+        assert_eq!(c2.chunk_size, 4096);
+    }
+
+    #[test]
+    fn flare_records() {
+        let db = BurstDb::new();
+        db.put_flare(FlareRecord {
+            flare_id: "f1".into(),
+            def_name: "d".into(),
+            status: "ok".into(),
+            outputs: vec![Json::Num(1.0)],
+            metadata: Json::Null,
+        });
+        assert_eq!(db.get_flare("f1").unwrap().status, "ok");
+        assert!(db.get_flare("f2").is_none());
+    }
+}

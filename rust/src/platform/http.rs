@@ -1,0 +1,272 @@
+//! HTTP interface to the controller (paper Fig. 4 steps 1–3): `deploy` and
+//! `flare` endpoints plus result retrieval. Minimal HTTP/1.1 over
+//! `std::net` (no async runtime is available offline — DESIGN.md §3); one
+//! thread per connection, which matches the controller's request-handling
+//! model.
+//!
+//! Routes:
+//!   POST /v1/deploy   {"name", "work", "conf": {...}}
+//!   POST /v1/flare    {"def", "params": [...], "options": {...}}
+//!   GET  /v1/flares/`<id>`
+//!   GET  /v1/defs
+//!   GET  /healthz
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::controller::{Controller, FlareOptions};
+use super::db::BurstConfig;
+use crate::util::json::Json;
+
+/// A running HTTP server bound to a local port.
+pub struct HttpServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Start serving the controller on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(controller: Arc<Controller>, port: u16) -> Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let c = controller.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &c);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, controller: &Controller) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // Headers (we only need Content-Length).
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body).to_string();
+
+    let (status, payload) = match route(&method, &path, &body, controller) {
+        Ok(j) => ("200 OK", j),
+        Err(e) => (
+            "400 Bad Request",
+            Json::obj(vec![("error", Json::Str(e.to_string()))]),
+        ),
+    };
+    let body = payload.to_string();
+    let mut stream = reader.into_inner();
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+fn route(method: &str, path: &str, body: &str, c: &Controller) -> Result<Json> {
+    match (method, path) {
+        ("GET", "/healthz") => Ok(Json::obj(vec![("status", "ok".into())])),
+        ("GET", "/metrics") => {
+            // Controller load view (CPU-based invoker monitoring, §4.4).
+            let free = c.pool.free_vcpus();
+            Ok(Json::obj(vec![
+                ("invokers", free.len().into()),
+                ("free_vcpus", Json::Arr(free.iter().map(|&f| f.into()).collect())),
+                ("total_free_vcpus", free.iter().sum::<usize>().into()),
+                ("deployed_defs", c.db.list_defs().len().into()),
+            ]))
+        }
+        ("GET", "/v1/defs") => Ok(Json::Arr(
+            c.db.list_defs().into_iter().map(Json::Str).collect(),
+        )),
+        ("POST", "/v1/deploy") => {
+            let j = Json::parse(body)?;
+            let name = j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing 'name'"))?;
+            let work = j
+                .get("work")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing 'work'"))?;
+            let conf = j.get("conf").map(BurstConfig::from_json).unwrap_or_default();
+            c.deploy(name, work, conf)?;
+            Ok(Json::obj(vec![("deployed", name.into())]))
+        }
+        ("POST", "/v1/flare") => {
+            let j = Json::parse(body)?;
+            let def = j
+                .get("def")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing 'def'"))?;
+            let params = j
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing 'params' array"))?
+                .to_vec();
+            let opts = j
+                .get("options")
+                .map(FlareOptions::from_json)
+                .unwrap_or_default();
+            let r = c.flare(def, params, &opts)?;
+            let mut summary = r.summary_json();
+            if let Json::Obj(m) = &mut summary {
+                m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
+            }
+            Ok(summary)
+        }
+        ("GET", p) if p.starts_with("/v1/flares/") => {
+            let id = &p["/v1/flares/".len()..];
+            let rec =
+                c.db.get_flare(id).ok_or_else(|| anyhow!("flare '{id}' not found"))?;
+            Ok(Json::obj(vec![
+                ("flare_id", rec.flare_id.as_str().into()),
+                ("def", rec.def_name.as_str().into()),
+                ("status", rec.status.as_str().into()),
+                ("metadata", rec.metadata),
+                ("outputs", Json::Arr(rec.outputs)),
+            ]))
+        }
+        _ => Err(anyhow!("no route for {method} {path}")),
+    }
+}
+
+/// Minimal HTTP client for the CLI and tests.
+pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body_s = body.map(|b| b.to_string()).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body_s}",
+        body_s.len()
+    )?;
+    let mut response = String::new();
+    BufReader::new(stream).read_to_string(&mut response)?;
+    let (head, payload) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response"))?;
+    let status: u32 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line"))?;
+    let json = Json::parse(payload)?;
+    if status != 200 {
+        return Err(anyhow!(
+            "HTTP {status}: {}",
+            json.str_or("error", "unknown error")
+        ));
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::db::{register_work, WorkFn};
+
+    fn setup() -> (HttpServer, String) {
+        let work: WorkFn = Arc::new(|p, ctx| {
+            Ok(Json::Num(ctx.worker_id as f64 + p.as_f64().unwrap_or(0.0)))
+        });
+        register_work("http-add", work);
+        let c = Controller::test_platform(2, 8, 1e-6);
+        let srv = HttpServer::start(c, 0).unwrap();
+        let addr = srv.addr.clone();
+        (srv, addr)
+    }
+
+    #[test]
+    fn health_and_deploy_and_flare() {
+        let (_srv, addr) = setup();
+        let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(h.str_or("status", ""), "ok");
+
+        let deploy = Json::parse(
+            r#"{"name":"add","work":"http-add","conf":{"granularity":2,"backend":"dragonfly"}}"#,
+        )
+        .unwrap();
+        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+        let defs = http_request(&addr, "GET", "/v1/defs", None).unwrap();
+        assert!(defs.as_arr().unwrap().iter().any(|d| d.as_str() == Some("add")));
+
+        let flare =
+            Json::parse(r#"{"def":"add","params":[100,100,100,100]}"#).unwrap();
+        let r = http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+        let outs = r.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(outs[3].as_f64(), Some(103.0));
+        assert_eq!(r.get("burst_size").unwrap().as_usize(), Some(4));
+
+        // Result retrievable by id afterwards (Fig. 4 step on results).
+        let id = r.get("flare_id").unwrap().as_str().unwrap();
+        let rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+        assert_eq!(rec.str_or("status", ""), "completed");
+    }
+
+    #[test]
+    fn bad_requests_are_400() {
+        let (_srv, addr) = setup();
+        let r = http_request(&addr, "POST", "/v1/flare", Some(&Json::obj(vec![])));
+        assert!(r.is_err());
+        let r = http_request(&addr, "GET", "/v1/flares/nope", None);
+        assert!(r.is_err());
+        let r = http_request(&addr, "GET", "/nothing", None);
+        assert!(r.is_err());
+    }
+}

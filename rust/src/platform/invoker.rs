@@ -1,0 +1,207 @@
+//! Invoker state + start-up scheduling model.
+//!
+//! Invokers monitor CPU-based load (paper §4.4: capacity is vCPUs, 1 per
+//! worker) and create pack containers. Container creation is the dominant
+//! cost of invocation (paper §5.1); each invoker creates containers with
+//! limited concurrency, so more packs ⇒ longer, more dispersed start-up —
+//! exactly the granularity effect of Fig. 5.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::packing::PackSpec;
+use crate::cluster::costmodel::CostModel;
+use crate::cluster::ClusterSpec;
+use crate::util::rng::Pcg;
+
+/// Tracked free capacity per invoker.
+pub struct InvokerPool {
+    free: Mutex<Vec<usize>>,
+    total: Vec<usize>,
+}
+
+impl InvokerPool {
+    pub fn new(cluster: &ClusterSpec) -> InvokerPool {
+        let caps: Vec<usize> = cluster.machines.iter().map(|m| m.vcpus).collect();
+        InvokerPool { free: Mutex::new(caps.clone()), total: caps }
+    }
+
+    /// Snapshot of free vCPUs (the controller's load view).
+    pub fn free_vcpus(&self) -> Vec<usize> {
+        self.free.lock().unwrap().clone()
+    }
+
+    /// Atomically reserve the capacity for a pack plan.
+    pub fn reserve(&self, packs: &[PackSpec]) -> Result<()> {
+        let mut free = self.free.lock().unwrap();
+        // Validate first, then commit.
+        let mut needed = vec![0usize; free.len()];
+        for p in packs {
+            needed[p.invoker_id] += p.vcpus();
+        }
+        for (i, n) in needed.iter().enumerate() {
+            if *n > free[i] {
+                return Err(anyhow!(
+                    "invoker {i}: need {n} vCPUs, only {} free",
+                    free[i]
+                ));
+            }
+        }
+        for (i, n) in needed.iter().enumerate() {
+            free[i] -= n;
+        }
+        Ok(())
+    }
+
+    pub fn release(&self, packs: &[PackSpec]) {
+        let mut free = self.free.lock().unwrap();
+        for p in packs {
+            free[p.invoker_id] += p.vcpus();
+            debug_assert!(free[p.invoker_id] <= self.total[p.invoker_id]);
+        }
+    }
+
+    pub fn n_invokers(&self) -> usize {
+        self.total.len()
+    }
+}
+
+/// Modeled start-up latencies for one flare.
+#[derive(Debug, Clone)]
+pub struct ModeledStartup {
+    /// Per-pack: container ready (created, runtime booted).
+    pub pack_ready_s: Vec<f64>,
+    /// Per-worker (indexed by worker id): ready to run `work`.
+    pub worker_ready_s: Vec<f64>,
+    /// Latest worker readiness = burst invocation latency (Fig. 5 metric).
+    pub all_ready_s: f64,
+}
+
+/// Compute the start-up model for a pack plan.
+///
+/// * burst mode: one flare request; invokers receive their pack-creation
+///   tasks immediately and create containers with `create_concurrency`.
+/// * FaaS mode (`faas = true`): every worker is an independent service
+///   request, so arrival is skewed by the controller's invocation rate and
+///   each single-worker container pays its own code load.
+pub fn model_startup(
+    packs: &[PackSpec],
+    cost: &CostModel,
+    faas: bool,
+    rng: &mut Pcg,
+) -> ModeledStartup {
+    let n_invokers = packs.iter().map(|p| p.invoker_id).max().map_or(1, |m| m + 1);
+    // Per-invoker creation slots (concurrency-limited serialization).
+    let mut slots: Vec<Vec<f64>> = vec![vec![0.0; cost.create_concurrency.max(1)]; n_invokers];
+    let burst_size: usize = packs.iter().map(|p| p.workers.len()).sum();
+    let mut pack_ready = Vec::with_capacity(packs.len());
+    let mut worker_ready = vec![0.0f64; burst_size];
+
+    for (pi, p) in packs.iter().enumerate() {
+        let arrival = if faas {
+            // Each pack (single invocation) arrives as its own request.
+            cost.request_overhead_s + cost.faas_invocation_skew_s(pi)
+        } else {
+            cost.request_overhead_s
+        };
+        let inv_slots = &mut slots[p.invoker_id];
+        // Earliest-free slot on this invoker.
+        let (slot_idx, _) = inv_slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = arrival.max(inv_slots[slot_idx]);
+        let done = start + cost.container_create_s(p.vcpus(), rng);
+        inv_slots[slot_idx] = done;
+        // Runtime boot: code load once per pack, then serialized worker
+        // spawns; the pack's lognormal boot noise scales both uniformly.
+        let nominal = cost.code_load_s + cost.worker_spawn_s * p.workers.len() as f64;
+        let boot_factor = cost.pack_boot_s(p.workers.len(), rng) / nominal;
+        pack_ready.push(done);
+        for (wi, &w) in p.workers.iter().enumerate() {
+            worker_ready[w] = done
+                + boot_factor * (cost.code_load_s + cost.worker_spawn_s * (wi + 1) as f64);
+        }
+    }
+    let all_ready_s = worker_ready.iter().copied().fold(0.0, f64::max);
+    ModeledStartup { pack_ready_s: pack_ready, worker_ready_s: worker_ready, all_ready_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::packing::{plan, PackingStrategy};
+    use crate::util::stats::Summary;
+
+    fn cost() -> CostModel {
+        CostModel { noise_sigma: 0.0, ..CostModel::default() }
+    }
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(2, 8));
+        let packs = plan(PackingStrategy::Heterogeneous, 12, &pool.free_vcpus()).unwrap();
+        pool.reserve(&packs).unwrap();
+        assert_eq!(pool.free_vcpus(), vec![0, 4]);
+        // Over-reserve fails atomically.
+        let too_much = plan(PackingStrategy::Heterogeneous, 5, &pool.free_vcpus());
+        assert!(too_much.is_err());
+        pool.release(&packs);
+        assert_eq!(pool.free_vcpus(), vec![8, 8]);
+    }
+
+    #[test]
+    fn higher_granularity_starts_faster() {
+        // The paper's central Fig 5 effect, at burst size 96 on 2 invokers.
+        let free = vec![48usize, 48];
+        let mut rng = Pcg::new(1);
+        let mut all_ready = Vec::new();
+        for g in [1usize, 8, 48] {
+            let packs =
+                plan(PackingStrategy::Homogeneous { granularity: g }, 96, &free).unwrap();
+            let m = model_startup(&packs, &cost(), g == 1, &mut rng);
+            all_ready.push(m.all_ready_s);
+        }
+        assert!(all_ready[0] > all_ready[1], "{all_ready:?}");
+        assert!(all_ready[1] > all_ready[2], "{all_ready:?}");
+        // g=1 vs g=48 ratio should be order-10× (paper: 11.5× at size 960).
+        let ratio = all_ready[0] / all_ready[2];
+        assert!((6.0..20.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn burst_simultaneity_much_tighter_than_faas() {
+        // Fig 6: dispersity of worker readiness, size 96 over 2 invokers.
+        let free = vec![48usize, 48];
+        let mut rng = Pcg::new(2);
+        let faas_packs =
+            plan(PackingStrategy::Homogeneous { granularity: 1 }, 96, &free).unwrap();
+        let faas = model_startup(&faas_packs, &CostModel::default(), true, &mut rng);
+        let burst_packs =
+            plan(PackingStrategy::Homogeneous { granularity: 48 }, 96, &free).unwrap();
+        let burst = model_startup(&burst_packs, &CostModel::default(), false, &mut rng);
+        let s_faas = Summary::of(&faas.worker_ready_s);
+        let s_burst = Summary::of(&burst.worker_ready_s);
+        assert!(
+            s_faas.range > 8.0 * s_burst.range,
+            "faas range {} burst range {}",
+            s_faas.range,
+            s_burst.range
+        );
+        assert!(s_faas.mad > 5.0 * s_burst.mad.max(1e-3));
+    }
+
+    #[test]
+    fn workers_within_pack_nearly_simultaneous() {
+        let free = vec![48usize];
+        let mut rng = Pcg::new(3);
+        let packs =
+            plan(PackingStrategy::Homogeneous { granularity: 48 }, 48, &free).unwrap();
+        let m = model_startup(&packs, &cost(), false, &mut rng);
+        let s = Summary::of(&m.worker_ready_s);
+        // 48 workers spawn at 2 ms each → range ≈ 94 ms.
+        assert!(s.range < 0.2, "range {}", s.range);
+    }
+}

@@ -1,0 +1,15 @@
+//! The burst computing platform (paper §4): controller with `deploy`/`flare`
+//! endpoints, worker-packing strategies, invoker capacity management, pack
+//! runtimes (one thread per worker), the burst database, and the HTTP API.
+
+pub mod controller;
+pub mod db;
+pub mod http;
+pub mod invoker;
+pub mod pack;
+pub mod packing;
+
+pub use controller::{Controller, FlareOptions, FlareResult};
+pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, WorkFn};
+pub use invoker::{model_startup, InvokerPool, ModeledStartup};
+pub use packing::{plan, PackSpec, PackingStrategy};

@@ -1,0 +1,182 @@
+//! Pack runtime: the container-side environment that spawns one thread per
+//! worker (paper §4.4, Rust runtime) and runs the burst `work` function
+//! with its `BurstContext`, recording per-worker timelines.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::db::WorkFn;
+use super::invoker::ModeledStartup;
+use super::packing::PackSpec;
+use crate::bcm::{BurstContext, CommFabric};
+use crate::metrics::{Phase, Timeline, TimelineEvent};
+use crate::util::json::Json;
+use crate::util::timing::Stopwatch;
+
+/// Execute a full flare's packs: one OS thread per worker, all packs in
+/// this process (the paper's invokers are machines; our packs are thread
+/// groups — locality semantics are identical because intra-pack traffic is
+/// in-process in both).
+///
+/// Timeline convention: worker `Work` spans start at their *modeled*
+/// readiness (`startup.worker_ready_s`) and last their *measured* work
+/// duration, so invocation skew (modeled) composes with real execution.
+pub fn run_flare_packs(
+    packs: &[PackSpec],
+    fabric: &Arc<CommFabric>,
+    work: &WorkFn,
+    params: &[Json],
+    startup: &ModeledStartup,
+    timeline: &Timeline,
+) -> Result<Vec<Json>> {
+    let burst_size: usize = packs.iter().map(|p| p.workers.len()).sum();
+    if params.len() != burst_size {
+        return Err(anyhow!("need {burst_size} param entries, got {}", params.len()));
+    }
+    let mut outputs: Vec<Option<Result<Json>>> = (0..burst_size).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (pack_id, pack) in packs.iter().enumerate() {
+            for &w in &pack.workers {
+                let fabric = fabric.clone();
+                let work = work.clone();
+                let param = &params[w];
+                let ready = startup.worker_ready_s[w];
+                let pack_ready = startup.pack_ready_s[pack_id];
+                let invoker_id = pack.invoker_id;
+                handles.push((
+                    w,
+                    s.spawn(move || {
+                        timeline.record(TimelineEvent {
+                            worker_id: w,
+                            pack_id,
+                            invoker_id,
+                            phase: Phase::Startup,
+                            start_s: 0.0,
+                            end_s: ready,
+                        });
+                        let _ = pack_ready;
+                        let ctx = BurstContext::new(w, fabric);
+                        let sw = Stopwatch::start();
+                        let out = work(param, &ctx);
+                        timeline.record(TimelineEvent {
+                            worker_id: w,
+                            pack_id,
+                            invoker_id,
+                            phase: Phase::Work,
+                            start_s: ready,
+                            end_s: ready + sw.secs(),
+                        });
+                        out
+                    }),
+                ));
+            }
+        }
+        for (w, h) in handles {
+            outputs[w] = Some(match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("worker {w} panicked")),
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .enumerate()
+        .map(|(w, o)| o.unwrap().map_err(|e| anyhow!("worker {w}: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bcm::{BackendKind, FabricConfig, PackTopology};
+    use crate::cluster::costmodel::CostModel;
+    use crate::cluster::netmodel::NetParams;
+    use crate::platform::invoker::model_startup;
+    use crate::platform::packing::{plan, PackingStrategy};
+    use crate::util::rng::Pcg;
+
+    fn setup(size: usize, g: usize) -> (Vec<PackSpec>, Arc<CommFabric>, ModeledStartup) {
+        let packs = plan(PackingStrategy::Homogeneous { granularity: g }, size, &[48, 48])
+            .unwrap();
+        let params = NetParams::scaled(1e-6);
+        let topo = PackTopology::new(
+            packs.iter().map(|p| p.workers.clone()).collect(),
+            packs.iter().map(|p| p.invoker_id).collect(),
+        );
+        let fabric = CommFabric::new(
+            "pt",
+            topo,
+            BackendKind::DragonflyList.build(&params),
+            &params,
+            FabricConfig::default(),
+        );
+        let mut rng = Pcg::new(4);
+        let startup = model_startup(&packs, &CostModel::default(), false, &mut rng);
+        (packs, fabric, startup)
+    }
+
+    #[test]
+    fn runs_work_on_every_worker() {
+        let (packs, fabric, startup) = setup(8, 3);
+        let work: WorkFn = Arc::new(|p, ctx| {
+            Ok(Json::obj(vec![
+                ("w", ctx.worker_id.into()),
+                ("pack", ctx.pack_id().into()),
+                ("in", p.clone()),
+            ]))
+        });
+        let params: Vec<Json> = (0..8).map(|i| Json::Num(i as f64)).collect();
+        let timeline = Timeline::new();
+        let out =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline).unwrap();
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.get("w").unwrap().as_usize(), Some(i));
+            assert_eq!(o.get("in").unwrap().as_f64(), Some(i as f64));
+        }
+        // Timeline has a Startup and a Work event per worker.
+        assert_eq!(timeline.phase_starts(Phase::Work).len(), 8);
+        assert_eq!(timeline.phase_starts(Phase::Startup).len(), 8);
+    }
+
+    #[test]
+    fn workers_communicate_during_work() {
+        let (packs, fabric, startup) = setup(6, 2);
+        let work: WorkFn = Arc::new(|_, ctx| {
+            let data = (ctx.worker_id == 0).then(|| vec![5u8; 64]);
+            let got = ctx.broadcast(0, data).unwrap();
+            Ok(Json::Num(got.len() as f64))
+        });
+        let params = vec![Json::Null; 6];
+        let timeline = Timeline::new();
+        let out =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline).unwrap();
+        assert!(out.iter().all(|o| o.as_f64() == Some(64.0)));
+    }
+
+    #[test]
+    fn worker_error_is_reported_with_id() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let work: WorkFn = Arc::new(|_, ctx| {
+            if ctx.worker_id == 2 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(Json::Null)
+            }
+        });
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        let err = run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline)
+            .unwrap_err();
+        assert!(err.to_string().contains("worker 2"), "{err}");
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
+        let timeline = Timeline::new();
+        assert!(run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Worker-packing strategies (paper §3): given a burst size and the
+//! invokers' free capacity, decide how many packs to create, how big, and
+//! where.
+//!
+//! * **Heterogeneous** — packs as big as the free space on each machine:
+//!   maximizes locality (one container per invoker per flare) but is prone
+//!   to fragmentation as a scheduling problem.
+//! * **Homogeneous** — fixed-size packs of `granularity` workers: easy to
+//!   manage, restricts locality.
+//! * **Mixed** — fixed-size allocation, but packs landing on the same
+//!   machine are merged into one container: management flexibility of
+//!   homogeneous with the locality of heterogeneous.
+
+use anyhow::{anyhow, Result};
+
+/// One pack to create: which invoker, which workers (global ids).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackSpec {
+    pub invoker_id: usize,
+    pub workers: Vec<usize>,
+}
+
+impl PackSpec {
+    pub fn vcpus(&self) -> usize {
+        // The platform assigns 1 vCPU per worker (paper §4.4).
+        self.workers.len()
+    }
+}
+
+/// Packing strategy (paper §3 names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackingStrategy {
+    Heterogeneous,
+    Homogeneous { granularity: usize },
+    Mixed { granularity: usize },
+}
+
+impl PackingStrategy {
+    pub fn parse(s: &str, granularity: usize) -> Option<PackingStrategy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "heterogeneous" | "hetero" => PackingStrategy::Heterogeneous,
+            "homogeneous" | "homo" => PackingStrategy::Homogeneous { granularity },
+            "mixed" => PackingStrategy::Mixed { granularity },
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackingStrategy::Heterogeneous => "heterogeneous",
+            PackingStrategy::Homogeneous { .. } => "homogeneous",
+            PackingStrategy::Mixed { .. } => "mixed",
+        }
+    }
+}
+
+/// Compute the pack plan for `burst_size` workers over invokers with the
+/// given free vCPU counts (`free[i]` = free vCPUs on invoker `i`). Worker
+/// ids are assigned contiguously in placement order.
+pub fn plan(
+    strategy: PackingStrategy,
+    burst_size: usize,
+    free: &[usize],
+) -> Result<Vec<PackSpec>> {
+    if burst_size == 0 {
+        return Err(anyhow!("burst size must be > 0"));
+    }
+    let capacity: usize = free.iter().sum();
+    if capacity < burst_size {
+        return Err(anyhow!(
+            "insufficient capacity: need {burst_size} vCPUs, {capacity} free"
+        ));
+    }
+    match strategy {
+        PackingStrategy::Heterogeneous => {
+            // One maximal pack per invoker until the burst is placed.
+            let mut packs = Vec::new();
+            let mut next_worker = 0;
+            for (inv, &f) in free.iter().enumerate() {
+                if next_worker == burst_size {
+                    break;
+                }
+                let take = f.min(burst_size - next_worker);
+                if take == 0 {
+                    continue;
+                }
+                packs.push(PackSpec {
+                    invoker_id: inv,
+                    workers: (next_worker..next_worker + take).collect(),
+                });
+                next_worker += take;
+            }
+            Ok(packs)
+        }
+        PackingStrategy::Homogeneous { granularity } => {
+            homogeneous(burst_size, granularity, free)
+        }
+        PackingStrategy::Mixed { granularity } => {
+            // Homogeneous placement, then merge same-invoker packs.
+            let packs = homogeneous(burst_size, granularity, free)?;
+            let mut merged: Vec<PackSpec> = Vec::new();
+            for p in packs {
+                match merged.iter_mut().find(|m| m.invoker_id == p.invoker_id) {
+                    Some(m) => m.workers.extend(p.workers),
+                    None => merged.push(p),
+                }
+            }
+            for m in &mut merged {
+                m.workers.sort_unstable();
+            }
+            Ok(merged)
+        }
+    }
+}
+
+fn homogeneous(burst_size: usize, granularity: usize, free: &[usize]) -> Result<Vec<PackSpec>> {
+    if granularity == 0 {
+        return Err(anyhow!("granularity must be > 0"));
+    }
+    let mut remaining: Vec<usize> = free.to_vec();
+    let mut packs = Vec::new();
+    let mut next_worker = 0;
+    while next_worker < burst_size {
+        let size = granularity.min(burst_size - next_worker);
+        // First-fit: first invoker with room for the whole pack.
+        let inv = remaining
+            .iter()
+            .position(|&f| f >= size)
+            .ok_or_else(|| anyhow!("fragmentation: no invoker fits a {size}-worker pack"))?;
+        remaining[inv] -= size;
+        packs.push(PackSpec {
+            invoker_id: inv,
+            workers: (next_worker..next_worker + size).collect(),
+        });
+        next_worker += size;
+    }
+    Ok(packs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn heterogeneous_one_pack_per_invoker() {
+        let packs = plan(PackingStrategy::Heterogeneous, 96, &[48, 48, 48]).unwrap();
+        assert_eq!(packs.len(), 2);
+        assert_eq!(packs[0].workers.len(), 48);
+        assert_eq!(packs[1].workers.len(), 48);
+        assert_eq!(packs[0].invoker_id, 0);
+        assert_eq!(packs[1].invoker_id, 1);
+    }
+
+    #[test]
+    fn homogeneous_fixed_size() {
+        let packs =
+            plan(PackingStrategy::Homogeneous { granularity: 6 }, 20, &[48, 48]).unwrap();
+        assert_eq!(packs.len(), 4);
+        assert_eq!(packs[0].workers.len(), 6);
+        assert_eq!(packs[3].workers.len(), 2); // remainder pack
+    }
+
+    #[test]
+    fn mixed_merges_same_invoker() {
+        // granularity 6, one invoker with room for everything: merge to 1.
+        let packs = plan(PackingStrategy::Mixed { granularity: 6 }, 18, &[48]).unwrap();
+        assert_eq!(packs.len(), 1);
+        assert_eq!(packs[0].workers.len(), 18);
+        // Two invokers with 12 free each: 2 merged packs.
+        let packs = plan(PackingStrategy::Mixed { granularity: 6 }, 24, &[12, 48]).unwrap();
+        assert_eq!(packs.len(), 2);
+        assert_eq!(packs[0].workers.len(), 12);
+        assert_eq!(packs[1].workers.len(), 12);
+    }
+
+    #[test]
+    fn faas_mode_is_granularity_one() {
+        let packs = plan(PackingStrategy::Homogeneous { granularity: 1 }, 5, &[48]).unwrap();
+        assert_eq!(packs.len(), 5);
+        assert!(packs.iter().all(|p| p.workers.len() == 1));
+    }
+
+    #[test]
+    fn rejects_insufficient_capacity() {
+        assert!(plan(PackingStrategy::Heterogeneous, 100, &[48]).is_err());
+    }
+
+    #[test]
+    fn homogeneous_fragmentation_error() {
+        // 4 invokers × 3 free cannot host any granularity-4 pack.
+        assert!(plan(PackingStrategy::Homogeneous { granularity: 4 }, 4, &[3, 3, 3, 3])
+            .is_err());
+    }
+
+    #[test]
+    fn property_plans_partition_workers_and_respect_capacity() {
+        forall("packing invariants", 80, |g| {
+            let n_invokers = g.usize(1, 12);
+            let free: Vec<usize> = (0..n_invokers).map(|_| g.usize(0, 64)).collect();
+            let cap: usize = free.iter().sum();
+            if cap == 0 {
+                return;
+            }
+            let burst = g.usize(1, cap + 1);
+            let gran = g.usize(1, 49);
+            let strat = *g.choice(&[
+                PackingStrategy::Heterogeneous,
+                PackingStrategy::Homogeneous { granularity: gran },
+                PackingStrategy::Mixed { granularity: gran },
+            ]);
+            let Ok(packs) = plan(strat, burst, &free) else {
+                return; // fragmentation errors are legal for homogeneous/mixed
+            };
+            // (1) workers form a partition of 0..burst
+            let mut all: Vec<usize> =
+                packs.iter().flat_map(|p| p.workers.iter().copied()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..burst).collect::<Vec<_>>(), "{strat:?}");
+            // (2) per-invoker capacity respected
+            let mut used = vec![0usize; n_invokers];
+            for p in &packs {
+                used[p.invoker_id] += p.vcpus();
+            }
+            for (i, u) in used.iter().enumerate() {
+                assert!(*u <= free[i], "{strat:?} invoker {i}: {u} > {}", free[i]);
+            }
+            // (3) strategy shape constraints
+            match strat {
+                PackingStrategy::Heterogeneous | PackingStrategy::Mixed { .. } => {
+                    // At most one pack per invoker.
+                    let mut invs: Vec<usize> = packs.iter().map(|p| p.invoker_id).collect();
+                    let n = invs.len();
+                    invs.sort_unstable();
+                    invs.dedup();
+                    assert_eq!(invs.len(), n, "{strat:?} duplicated invoker");
+                }
+                PackingStrategy::Homogeneous { granularity } => {
+                    assert!(packs.iter().all(|p| p.workers.len() <= granularity));
+                }
+            }
+        });
+    }
+}

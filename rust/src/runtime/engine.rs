@@ -1,0 +1,264 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts (see
+//! `python/compile/aot.py`), compiles them once on the PJRT CPU client, and
+//! serves execute requests from worker threads.
+//!
+//! The `xla` crate's client handles are `Rc`-based (not `Send`), so each
+//! engine is a dedicated OS thread owning its own client + executables;
+//! workers talk to it over channels. `EnginePool` shards requests across
+//! several engines.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Parsed artifact manifest (written by `make artifacts`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub units: HashMap<String, UnitSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct UnitSpec {
+    pub file: String,
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        if j.str_or("format", "") != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format"));
+        }
+        let mut units = HashMap::new();
+        let units_j = j.get("units").and_then(Json::as_obj).ok_or_else(|| anyhow!("no units"))?;
+        for (name, u) in units_j {
+            let spec = |key: &str| -> Result<Vec<(Vec<usize>, String)>> {
+                u.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("unit {name}: missing {key}"))?
+                    .iter()
+                    .map(|io| {
+                        let shape = io
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect();
+                        let dtype = io.str_or("dtype", "float32").to_string();
+                        Ok((shape, dtype))
+                    })
+                    .collect()
+            };
+            units.insert(
+                name.clone(),
+                UnitSpec {
+                    file: u.str_or("file", "").to_string(),
+                    inputs: spec("inputs")?,
+                    outputs: spec("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), units })
+    }
+
+    pub fn unit(&self, name: &str) -> Result<&UnitSpec> {
+        self.units
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown AOT unit '{name}' (have: {:?})", {
+                let mut k: Vec<&String> = self.units.keys().collect();
+                k.sort();
+                k
+            }))
+    }
+}
+
+enum Request {
+    Execute { unit: String, inputs: Vec<Tensor>, reply: mpsc::Sender<Result<Vec<Tensor>>> },
+    Shutdown,
+}
+
+/// One PJRT engine thread.
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    pub fn start(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let m2 = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(m2, rx, ready_tx))
+            .expect("spawn engine thread");
+        ready_rx.recv().map_err(|_| anyhow!("engine thread died during init"))??;
+        Ok(Engine { tx, handle: Some(handle), manifest })
+    }
+
+    /// Execute one AOT unit. Blocks until the engine thread replies.
+    pub fn execute(&self, unit: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { unit: unit.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_main(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    // Build client + compile all units; report init status.
+    let init = (|| -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (name, unit) in &manifest.units {
+            let path = manifest.dir.join(&unit.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+    let (_client, exes) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Execute { unit, inputs, reply } => {
+                let res = run_unit(&manifest, &exes, &unit, inputs);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn run_unit(
+    manifest: &Manifest,
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    unit: &str,
+    inputs: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    let spec = manifest.unit(unit)?;
+    let exe = exes.get(unit).ok_or_else(|| anyhow!("unit '{unit}' not compiled"))?;
+    if inputs.len() != spec.inputs.len() {
+        return Err(anyhow!(
+            "unit '{unit}': expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        ));
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (i, (t, (shape, dtype))) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape() != shape.as_slice() || t.dtype() != dtype {
+            return Err(anyhow!(
+                "unit '{unit}' input {i}: expected {dtype}{shape:?}, got {}{:?}",
+                t.dtype(),
+                t.shape()
+            ));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match t {
+            Tensor::F32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+            Tensor::I32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+        };
+        literals.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // AOT lowers with return_tuple=True: always a tuple.
+    let parts = result.to_tuple()?;
+    if parts.len() != spec.outputs.len() {
+        return Err(anyhow!(
+            "unit '{unit}': expected {} outputs, got {}",
+            spec.outputs.len(),
+            parts.len()
+        ));
+    }
+    parts
+        .into_iter()
+        .zip(&spec.outputs)
+        .map(|(lit, (shape, dtype))| {
+            let out = match dtype.as_str() {
+                "float32" => Tensor::F32(lit.to_vec::<f32>()?, shape.clone()),
+                "int32" => Tensor::I32(lit.to_vec::<i32>()?, shape.clone()),
+                other => return Err(anyhow!("unsupported output dtype {other}")),
+            };
+            Ok(out)
+        })
+        .collect()
+}
+
+/// Round-robin pool of engines (each its own thread + compiled copies).
+pub struct EnginePool {
+    engines: Vec<Engine>,
+    next: AtomicUsize,
+}
+
+impl EnginePool {
+    pub fn start(artifact_dir: &Path, n: usize) -> Result<EnginePool> {
+        let engines: Result<Vec<Engine>> =
+            (0..n.max(1)).map(|_| Engine::start(artifact_dir)).collect();
+        Ok(EnginePool { engines: engines?, next: AtomicUsize::new(0) })
+    }
+
+    pub fn execute(&self, unit: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+        self.engines[i].execute(unit, inputs)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.engines[0].manifest
+    }
+}
+
+static GLOBAL_POOL: Mutex<Option<std::sync::Arc<EnginePool>>> = Mutex::new(None);
+
+/// The process-wide engine pool, created on first use from
+/// `$BURSTC_ARTIFACTS` (default `./artifacts`), with `$BURSTC_ENGINES`
+/// engine threads (default 1 — this image has a single CPU).
+pub fn global_pool() -> Result<std::sync::Arc<EnginePool>> {
+    let mut g = GLOBAL_POOL.lock().unwrap();
+    if let Some(p) = g.as_ref() {
+        return Ok(p.clone());
+    }
+    let dir = std::env::var("BURSTC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n: usize =
+        std::env::var("BURSTC_ENGINES").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let pool = std::sync::Arc::new(EnginePool::start(Path::new(&dir), n)?);
+    *g = Some(pool.clone());
+    Ok(pool)
+}

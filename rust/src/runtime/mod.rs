@@ -1,0 +1,107 @@
+//! PJRT runtime (the bridge to layers 1–2): loads the HLO-text artifacts
+//! produced by `python/compile/aot.py` (JAX models calling Pallas kernels),
+//! compiles them once per engine on the PJRT CPU client, and executes them
+//! from Rust worker threads. Python is never on the request path.
+
+pub mod engine;
+pub mod tensor;
+
+pub use engine::{global_pool, Engine, EnginePool, Manifest};
+pub use tensor::Tensor;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts() -> &'static Path {
+        // Tests run from the crate root; `make artifacts` must have run.
+        Path::new("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_all_units() {
+        let m = Manifest::load(artifacts()).unwrap();
+        for unit in [
+            "pagerank_contrib",
+            "pagerank_finalize",
+            "sgd_epoch",
+            "histogram_partition",
+            "sort_keys",
+            "kmeans_step",
+            "kmeans_update",
+        ] {
+            assert!(m.units.contains_key(unit), "missing {unit}");
+        }
+        let pr = m.unit("pagerank_contrib").unwrap();
+        assert_eq!(pr.inputs[0].0, vec![1024, 128]);
+        assert_eq!(pr.outputs[0].0, vec![1024]);
+    }
+
+    #[test]
+    fn engine_executes_pagerank_contrib() {
+        let e = Engine::start(artifacts()).unwrap();
+        // block = all ones, x = 1/128 ⇒ out[i] = 1.0 for all i.
+        let block = Tensor::f32_2d(vec![1.0; 1024 * 128], 1024, 128);
+        let x = Tensor::f32_1d(vec![1.0 / 128.0; 128]);
+        let out = e.execute("pagerank_contrib", vec![block, x]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].as_f32().unwrap();
+        assert_eq!(v.len(), 1024);
+        for &y in v {
+            assert!((y - 1.0).abs() < 1e-4, "{y}");
+        }
+    }
+
+    #[test]
+    fn engine_executes_sort_keys() {
+        let e = Engine::start(artifacts()).unwrap();
+        let mut keys: Vec<i32> = (0..65536).rev().collect();
+        keys[0] = 7; // not perfectly reversed
+        let out = e.execute("sort_keys", vec![Tensor::i32_1d(keys.clone())]).unwrap();
+        let sorted = out[0].as_i32().unwrap();
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(sorted, &want[..]);
+    }
+
+    #[test]
+    fn engine_validates_shapes() {
+        let e = Engine::start(artifacts()).unwrap();
+        let bad = Tensor::f32_2d(vec![0.0; 4], 2, 2);
+        let err = e
+            .execute("pagerank_contrib", vec![bad, Tensor::f32_1d(vec![0.0; 128])])
+            .unwrap_err();
+        assert!(err.to_string().contains("expected float32"), "{err}");
+        assert!(e.execute("no_such_unit", vec![]).is_err());
+    }
+
+    #[test]
+    fn engine_shared_across_threads() {
+        let e = std::sync::Arc::new(Engine::start(artifacts()).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let e = e.clone();
+                s.spawn(move || {
+                    let block = Tensor::f32_2d(vec![t as f32; 1024 * 128], 1024, 128);
+                    let x = Tensor::f32_1d(vec![1.0; 128]);
+                    let out = e.execute("pagerank_contrib", vec![block, x]).unwrap();
+                    let v = out[0].as_f32().unwrap();
+                    assert!((v[0] - (t * 128) as f32).abs() < 1e-2);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pagerank_finalize_semantics() {
+        let e = Engine::start(artifacts()).unwrap();
+        let n = 1024;
+        let sum = Tensor::f32_1d(vec![1.0 / n as f32; n]);
+        let prev = Tensor::f32_1d(vec![1.0 / n as f32; n]);
+        let out = e.execute("pagerank_finalize", vec![sum, prev]).unwrap();
+        // (1-d)/n + d/n = 1/n ⇒ err ~ 0 (stationary point).
+        let err = out[1].scalar_f32().unwrap();
+        assert!(err < 1e-4, "err {err}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Host tensors: the plain-Rust data type workers use to feed and read the
+//! AOT executables. Conversion to/from `xla::Literal` happens inside the
+//! engine thread (the `xla` handles are not `Send`).
+
+use anyhow::{anyhow, Result};
+
+/// A host-side tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32_1d(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor::F32(data, vec![n])
+    }
+
+    pub fn f32_2d(data: Vec<f32>, rows: usize, cols: usize) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor::F32(data, vec![rows, cols])
+    }
+
+    pub fn f32_scalar(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    pub fn i32_1d(data: Vec<i32>) -> Tensor {
+        let n = data.len();
+        Tensor::I32(data, vec![n])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "float32",
+            Tensor::I32(..) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is {}, not float32", self.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is {}, not int32", self.dtype())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is {}, not float32", self.dtype())),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is {}, not int32", self.dtype())),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(anyhow!("expected scalar, got {} elements", d.len()));
+        }
+        Ok(d[0])
+    }
+
+    /// Serialize f32 payload to little-endian bytes (BCM wire helper).
+    pub fn f32_to_bytes(v: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn f32_from_bytes(b: &[u8]) -> Result<Vec<f32>> {
+        if b.len() % 4 != 0 {
+            return Err(anyhow!("byte length {} not a multiple of 4", b.len()));
+        }
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32_to_bytes(v: &[i32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn i32_from_bytes(b: &[u8]) -> Result<Vec<i32>> {
+        if b.len() % 4 != 0 {
+            return Err(anyhow!("byte length {} not a multiple of 4", b.len()));
+        }
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Tensor::f32_2d(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), "float32");
+        assert!(t.as_i32().is_err());
+        assert_eq!(Tensor::f32_scalar(5.0).scalar_f32().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn byte_roundtrips() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(Tensor::f32_from_bytes(&Tensor::f32_to_bytes(&v)).unwrap(), v);
+        let w = vec![i32::MIN, -1, 0, 7, i32::MAX];
+        assert_eq!(Tensor::i32_from_bytes(&Tensor::i32_to_bytes(&w)).unwrap(), w);
+        assert!(Tensor::f32_from_bytes(&[0u8; 3]).is_err());
+    }
+}

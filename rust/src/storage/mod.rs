@@ -1,0 +1,238 @@
+//! Simulated object storage (S3-like).
+//!
+//! A real in-process blob store with S3's *structural* behaviour: per-request
+//! latency, per-connection bandwidth, byte-range reads, and request-rate
+//! throttling — the properties Figs. 7/8 and the MapReduce baselines depend
+//! on. Bytes are really stored and really copied; only the service times are
+//! modeled (enforced with precise sleeps, scaled by `NetParams::time_scale`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::netmodel::NetParams;
+use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::timing::{precise_sleep, secs_f64};
+
+/// Simulated object store.
+pub struct ObjectStore {
+    params: NetParams,
+    objects: RwLock<HashMap<String, Arc<Vec<u8>>>>,
+    get_rate: TokenBucket,
+    put_rate: TokenBucket,
+    pub stats: StoreStats,
+}
+
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub gets: AtomicU64,
+    pub puts: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub throttled: AtomicU64,
+}
+
+impl ObjectStore {
+    pub fn new(params: NetParams) -> Arc<ObjectStore> {
+        // Rate limits are enforced in *modeled* time: compressing time by
+        // `s` multiplies the effective request rate by 1/s.
+        let scale = params.time_scale.max(1e-9);
+        Arc::new(ObjectStore {
+            get_rate: TokenBucket::new(params.s3_get_rate / scale, params.s3_get_rate),
+            put_rate: TokenBucket::new(params.s3_put_rate / scale, params.s3_put_rate),
+            params,
+            objects: RwLock::new(HashMap::new()),
+            stats: StoreStats::default(),
+        })
+    }
+
+    fn serve(&self, latency_s: f64, bytes: usize) {
+        let transfer = bytes as f64 / self.params.s3_conn_bw;
+        precise_sleep(secs_f64(self.params.scale(latency_s + transfer)));
+    }
+
+    /// PUT an object (whole-object write).
+    pub fn put(&self, key: &str, data: Vec<u8>) {
+        self.put_rate.take(1.0);
+        self.serve(self.params.s3_put_latency_s, data.len());
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data));
+    }
+
+    /// GET a whole object over one connection.
+    pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+        self.get_rate.take(1.0);
+        let obj = self
+            .objects
+            .read()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("no such key: {key}"))?;
+        self.serve(self.params.s3_get_latency_s, obj.len());
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(obj.len() as u64, Ordering::Relaxed);
+        Ok(obj)
+    }
+
+    /// GET a byte range (S3 `Range:` request); used for pack-parallel
+    /// downloads.
+    pub fn get_range(&self, key: &str, off: usize, len: usize) -> Result<Vec<u8>> {
+        self.get_rate.take(1.0);
+        let obj = self
+            .objects
+            .read()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("no such key: {key}"))?;
+        if off + len > obj.len() {
+            return Err(anyhow!(
+                "range {off}+{len} out of bounds for {key} ({} bytes)",
+                obj.len()
+            ));
+        }
+        self.serve(self.params.s3_get_latency_s, len);
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        Ok(obj[off..off + len].to_vec())
+    }
+
+    /// Download one object over `conns` parallel range-read connections —
+    /// the pack-collective data loading optimization (paper §5.1, Fig. 7).
+    pub fn get_parallel(self: &Arc<Self>, key: &str, conns: usize) -> Result<Vec<u8>> {
+        let total = self.size(key).ok_or_else(|| anyhow!("no such key: {key}"))?;
+        if conns <= 1 || total < conns {
+            return Ok(self.get(key)?.as_ref().clone());
+        }
+        let chunk = total.div_ceil(conns);
+        let out = Mutex::new(vec![0u8; total]);
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for c in 0..conns {
+                let off = c * chunk;
+                if off >= total {
+                    break;
+                }
+                let len = chunk.min(total - off);
+                let store = Arc::clone(self);
+                let key = key.to_string();
+                let out = &out;
+                handles.push(s.spawn(move || -> Result<()> {
+                    let part = store.get_range(&key, off, len)?;
+                    out.lock().unwrap()[off..off + len].copy_from_slice(&part);
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow!("range reader panicked"))??;
+            }
+            Ok(())
+        })?;
+        Ok(out.into_inner().unwrap())
+    }
+
+    pub fn size(&self, key: &str) -> Option<usize> {
+        self.objects.read().unwrap().get(key).map(|o| o.len())
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.objects.read().unwrap().contains_key(key)
+    }
+
+    pub fn delete(&self, key: &str) {
+        self.objects.write().unwrap().remove(key);
+    }
+
+    pub fn list_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .objects
+            .read()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    /// Insert without paying modeled costs (test/bench setup).
+    pub fn preload(&self, key: &str, data: Vec<u8>) {
+        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timing::Stopwatch;
+
+    fn store() -> Arc<ObjectStore> {
+        ObjectStore::new(NetParams::scaled(1e-6)) // effectively free
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = store();
+        s.put("a/b", vec![1, 2, 3]);
+        assert_eq!(s.get("a/b").unwrap().as_ref(), &vec![1, 2, 3]);
+        assert!(s.get("missing").is_err());
+    }
+
+    #[test]
+    fn range_reads() {
+        let s = store();
+        s.preload("k", (0..100u8).collect());
+        assert_eq!(s.get_range("k", 10, 5).unwrap(), vec![10, 11, 12, 13, 14]);
+        assert!(s.get_range("k", 98, 5).is_err());
+    }
+
+    #[test]
+    fn parallel_get_reassembles() {
+        let s = store();
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 251) as u8).collect();
+        s.preload("big", data.clone());
+        for conns in [1, 3, 7, 16] {
+            assert_eq!(s.get_parallel("big", conns).unwrap(), data, "conns={conns}");
+        }
+    }
+
+    #[test]
+    fn parallel_get_is_faster_with_real_costs() {
+        // With modeled costs on, 8 connections must beat 1 connection.
+        // (Thresholds are lenient: the test suite runs in parallel and
+        // wall-clock noise from sibling tests is significant.)
+        let _guard = crate::util::timing::timing_test_lock();
+        let s = ObjectStore::new(NetParams::scaled(0.3));
+        s.preload("obj", vec![0u8; 32 << 20]);
+        let t1 = Stopwatch::start();
+        s.get_parallel("obj", 1).unwrap();
+        let single = t1.secs();
+        let t8 = Stopwatch::start();
+        s.get_parallel("obj", 8).unwrap();
+        let eight = t8.secs();
+        assert!(eight < single * 0.6, "single {single} eight {eight}");
+    }
+
+    #[test]
+    fn list_prefix_sorted() {
+        let s = store();
+        s.preload("p/2", vec![]);
+        s.preload("p/1", vec![]);
+        s.preload("q/3", vec![]);
+        assert_eq!(s.list_prefix("p/"), vec!["p/1", "p/2"]);
+    }
+
+    #[test]
+    fn stats_track_io() {
+        let s = store();
+        s.put("k", vec![0; 100]);
+        s.get("k").unwrap();
+        assert_eq!(s.stats.bytes_written.load(Ordering::Relaxed), 100);
+        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 100);
+    }
+}

@@ -1,0 +1,70 @@
+//! Byte-size helpers: constants, human formatting, parsing.
+
+pub const KIB: usize = 1024;
+pub const MIB: usize = 1024 * KIB;
+pub const GIB: usize = 1024 * MIB;
+
+/// Format a byte count with a binary-prefix unit ("1.50 GiB").
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= GIB as f64 {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if b >= MIB as f64 {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if b >= KIB as f64 {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse "64KiB" / "1MiB" / "2GiB" / "512" into bytes.
+pub fn parse(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("GiB") {
+        (p, GIB)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, MIB)
+    } else if let Some(p) = s.strip_suffix("KiB") {
+        (p, KIB)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (s, 1)
+    };
+    num.trim().parse::<f64>().ok().map(|n| (n * mult as f64) as usize)
+}
+
+/// Throughput as "X.XX GiB/s".
+pub fn throughput(bytes: u64, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "inf".into();
+    }
+    format!("{}/s", human((bytes as f64 / secs) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_units() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(2048), "2.00 KiB");
+        assert_eq!(human((1.5 * GIB as f64) as u64), "1.50 GiB");
+    }
+
+    #[test]
+    fn parse_units() {
+        assert_eq!(parse("64KiB"), Some(64 * KIB));
+        assert_eq!(parse("1.5 MiB"), Some(MIB + MIB / 2));
+        assert_eq!(parse("2GiB"), Some(2 * GIB));
+        assert_eq!(parse("123"), Some(123));
+        assert_eq!(parse("abc"), None);
+    }
+
+    #[test]
+    fn roundtrip_mib() {
+        assert_eq!(parse(&human(256 * MIB as u64)).unwrap(), 256 * MIB);
+    }
+}

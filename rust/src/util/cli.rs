@@ -1,0 +1,120 @@
+//! Tiny command-line parser (clap is unavailable offline — DESIGN.md §3).
+//!
+//! Grammar: `prog <subcommand> [positional ...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--granularity 1,2,4`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("flare pagerank --size 64 --backend dragonfly");
+        assert_eq!(a.positional, vec!["flare", "pagerank"]);
+        assert_eq!(a.get("size"), Some("64"));
+        assert_eq!(a.usize("size", 0), 64);
+        assert_eq!(a.get("backend"), Some("dragonfly"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("run --size=8 --verbose");
+        assert_eq!(a.usize("size", 0), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --g 1,2,4,8");
+        assert_eq!(a.usize_list("g", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list("missing", &[3]), vec![3]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("t", 1.5), 1.5);
+        assert_eq!(a.get_or("s", "d"), "d");
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrate for crates unavailable in this offline image
+//! (see DESIGN.md §3): JSON, RNG, statistics, CLI parsing, precise timing,
+//! a bench harness, and a property-testing harness.
+
+pub mod benchkit;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timing;

@@ -1,0 +1,196 @@
+//! Deterministic PRNG (PCG-XSH-RR 64/32 pair → 64-bit output) plus the
+//! distribution helpers the simulators need (uniform, normal, lognormal,
+//! exponential, Zipf, shuffle). Implements `rand_core::RngCore` so it can be
+//! plugged into any generic code.
+
+use rand_core::RngCore;
+
+const MUL: u64 = 6364136223846793005;
+const INC: u64 = 1442695040888963407;
+
+/// PCG-XSH-RR generator. Cheap, seedable, good statistical quality.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        let mut p = Pcg { state: seed.wrapping_add(INC) };
+        p.next_u32();
+        p
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MUL).wrapping_add(INC);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)` (Lemire-style rejection-free is overkill
+    /// here; modulo bias is negligible for simulation ranges).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty range");
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with the given median and sigma (of the underlying normal).
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        (median.ln() + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// Zipf-like rank sample over `n` items with exponent `s` (used by the
+    /// power-law graph generator). Uses inverse-CDF on the harmonic weights.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Approximate inverse CDF: weight(i) ~ (i+1)^-s.
+        let u = self.f64();
+        // Invert the continuous approximation of the normalizing integral.
+        if (s - 1.0).abs() < 1e-9 {
+            let h = ((n + 1) as f64).ln();
+            return (((u * h).exp() - 1.0) as usize).min(n - 1);
+        }
+        let p = 1.0 - s;
+        let h = ((n + 1) as f64).powf(p) - 1.0;
+        (((u * h + 1.0).powf(1.0 / p) - 1.0) as usize).min(n - 1)
+    }
+
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.usize(0, i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Fill a byte buffer (workload payload generation).
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut out = vec![0u8; n];
+        self.fill_bytes(&mut out);
+        out
+    }
+}
+
+impl RngCore for Pcg {
+    fn next_u32(&mut self) -> u32 {
+        Pcg::next_u32(self)
+    }
+    fn next_u64(&mut self) -> u64 {
+        Pcg::next_u64(self)
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&Pcg::next_u64(self).to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = Pcg::next_u64(self).to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), rand_core::Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Pcg::new(1).next_u64(), Pcg::new(2).next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Pcg::new(5);
+        for _ in 0..1000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(9);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_low_ranks() {
+        let mut r = Pcg::new(13);
+        let mut lo = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            if r.zipf(1000, 1.5) < 10 {
+                lo += 1;
+            }
+        }
+        // With s=1.5 the first 10 ranks should dominate.
+        assert!(lo > n / 2, "low-rank fraction {lo}/{n}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Descriptive statistics used by the experiment drivers: mean, median,
+//! median absolute deviation (the paper's simultaneity metric), percentiles,
+//! and CDF sampling for the cold-start figures.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    /// Median absolute deviation — the paper's worker-simultaneity metric.
+    pub mad: f64,
+    /// max - min, the paper's "range" dispersity metric.
+    pub range: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let med = percentile_sorted(&s, 50.0);
+        let mut devs: Vec<f64> = s.iter().map(|x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p25: percentile_sorted(&s, 25.0),
+            median: med,
+            p75: percentile_sorted(&s, 75.0),
+            p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
+            max: s[n - 1],
+            mad: percentile_sorted(&devs, 50.0),
+            range: s[n - 1] - s[0],
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Median absolute deviation.
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    median(&xs.iter().map(|x| (x - m).abs()).collect::<Vec<_>>())
+}
+
+/// Sample the empirical CDF at `points` evenly spaced quantiles; returns
+/// `(value, cumulative_fraction)` pairs, e.g. for plotting Fig. 1.
+pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (1..=points)
+        .map(|i| {
+            let q = i as f64 / points as f64;
+            (percentile_sorted(&s, q * 100.0), q)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.range, 4.0);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile(&s, 50.0), 5.0);
+        assert_eq!(percentile(&s, 0.0), 0.0);
+        assert_eq!(percentile(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let s = Summary::of(&[42.0]);
+        assert_eq!(s.median, 42.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.range, 0.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        // MAD ignores a single wild outlier; std doesn't.
+        let s = Summary::of(&[1.0, 1.1, 0.9, 1.05, 0.95, 100.0]);
+        assert!(s.mad < 0.2, "mad {}", s.mad);
+        assert!(s.std > 10.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
+        let c = cdf(&xs, 20);
+        for w in c.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert_eq!(c.last().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Precise sleeping and stopwatch helpers.
+//!
+//! The simulated backends enforce modeled service times with plain
+//! `thread::sleep`: on Linux hrtimers this is accurate to tens of
+//! microseconds, and — crucially on the single-CPU boxes this runs on —
+//! sleeping never steals cycles from the threads doing real work (a
+//! spin-tail implementation serializes the whole simulation on 1 core).
+
+use std::time::{Duration, Instant};
+
+/// Sleep for `d` (no spinning; see module docs).
+pub fn precise_sleep(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    std::thread::sleep(d);
+}
+
+/// Duration from a float of seconds (panics on negative).
+pub fn secs_f64(s: f64) -> Duration {
+    Duration::from_secs_f64(s.max(0.0))
+}
+
+/// Serialization lock for wall-clock-sensitive tests: ratio assertions on a
+/// single-CPU box are only meaningful when contention tests don't overlap.
+pub fn timing_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precise_sleep_is_precise() {
+        for micros in [50u64, 500, 2000] {
+            let d = Duration::from_micros(micros);
+            let t = Instant::now();
+            precise_sleep(d);
+            let e = t.elapsed();
+            assert!(e >= d, "slept {e:?} < {d:?}");
+            // Allow generous upper slack on loaded single-CPU boxes.
+            assert!(e < d + Duration::from_millis(30), "slept {e:?} for {d:?}");
+        }
+    }
+
+    #[test]
+    fn zero_sleep_returns() {
+        precise_sleep(Duration::ZERO);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        precise_sleep(Duration::from_micros(300));
+        assert!(sw.secs() > 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Edge-case and failure-path tests across module boundaries.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use burstc::bcm::chunk::Op;
+use burstc::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+use burstc::cluster::netmodel::NetParams;
+use burstc::platform::{register_work, BurstConfig, Controller, FlareOptions};
+use burstc::runtime::engine::global_pool;
+use burstc::runtime::Tensor;
+use burstc::util::json::Json;
+
+fn fabric(size: usize, g: usize, timeout_ms: u64) -> Arc<CommFabric> {
+    let params = NetParams::scaled(1e-7);
+    CommFabric::new(
+        "edge",
+        PackTopology::contiguous(size, g),
+        BackendKind::DragonflyList.build(&params),
+        &params,
+        FabricConfig {
+            timeout: Duration::from_millis(timeout_ms),
+            ..FabricConfig::default()
+        },
+    )
+}
+
+#[test]
+fn recv_from_silent_peer_times_out_with_context() {
+    let f = fabric(2, 1, 100);
+    let ctx = BurstContext::new(1, f);
+    let err = ctx.recv(0).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+}
+
+#[test]
+fn out_of_range_peers_rejected() {
+    let f = fabric(2, 2, 100);
+    let ctx = BurstContext::new(0, f);
+    assert!(ctx.send(9, vec![1]).is_err());
+    assert!(ctx.recv(9).is_err());
+    assert!(ctx.all_to_all(vec![vec![]; 3]).is_err()); // wrong msg count
+}
+
+#[test]
+fn broadcast_root_without_data_is_an_error() {
+    let f = fabric(2, 2, 100);
+    let ctx = BurstContext::new(0, f);
+    assert!(ctx.broadcast(0, None).is_err());
+}
+
+#[test]
+fn header_mismatch_is_detected() {
+    // A chunk stored under the right key but with a wrong counter inside
+    // must be rejected, not silently accepted.
+    let f = fabric(2, 1, 200);
+    f.remote_send(Op::Direct, 0, Some(1), 7, &[1, 2, 3]).unwrap();
+    let err = f.remote_recv(Op::Direct, 0, Some(1), 8, 1, true);
+    assert!(err.is_err()); // counter 8 was never sent → timeout
+}
+
+#[test]
+fn empty_payload_collectives() {
+    let f = fabric(4, 2, 5_000);
+    std::thread::scope(|s| {
+        for w in 0..4 {
+            let f = f.clone();
+            s.spawn(move || {
+                let ctx = BurstContext::new(w, f);
+                let data = (w == 0).then(Vec::new);
+                let got = ctx.broadcast(0, data).unwrap();
+                assert!(got.is_empty());
+                let msgs = vec![vec![]; 4];
+                let recvd = ctx.all_to_all(msgs).unwrap();
+                assert!(recvd.iter().all(|m| m.is_empty()));
+            });
+        }
+    });
+}
+
+#[test]
+fn single_worker_burst_degenerates_gracefully() {
+    let f = fabric(1, 1, 1_000);
+    let ctx = BurstContext::new(0, f);
+    let b = ctx.broadcast(0, Some(vec![1, 2])).unwrap();
+    assert_eq!(b.as_ref(), &vec![1, 2]);
+    let r = ctx
+        .reduce(0, vec![5], &|_a: &mut Vec<u8>, _b: &[u8]| {})
+        .unwrap();
+    assert_eq!(r.unwrap(), vec![5]);
+    let a = ctx.all_to_all(vec![vec![9]]).unwrap();
+    assert_eq!(a[0].as_ref(), &vec![9]);
+    let g = ctx.gather(0, vec![3]).unwrap().unwrap();
+    assert_eq!(g[0].as_ref(), &vec![3]);
+    ctx.barrier().unwrap();
+}
+
+#[test]
+fn engine_pool_round_robins_and_validates() {
+    let pool = global_pool().expect("artifacts");
+    // Burst of concurrent executions through the pool.
+    std::thread::scope(|s| {
+        for i in 0..6 {
+            let pool = pool.clone();
+            s.spawn(move || {
+                let block = Tensor::f32_2d(vec![i as f32; 1024 * 128], 1024, 128);
+                let x = Tensor::f32_1d(vec![1.0; 128]);
+                let out = pool.execute("pagerank_contrib", vec![block, x]).unwrap();
+                assert!((out[0].as_f32().unwrap()[0] - (i * 128) as f32).abs() < 1e-2);
+            });
+        }
+    });
+    // Wrong dtype rejected with a useful message.
+    let bad = Tensor::i32_1d(vec![0; 128]);
+    let block = Tensor::f32_2d(vec![0.0; 1024 * 128], 1024, 128);
+    let err = pool.execute("pagerank_contrib", vec![block, bad]).unwrap_err();
+    assert!(err.to_string().contains("expected float32"), "{err}");
+}
+
+#[test]
+fn flare_backend_override_is_respected() {
+    register_work(
+        "edge-echo",
+        Arc::new(|_p: &Json, ctx: &BurstContext| {
+            // Force remote traffic so the backend is actually exercised.
+            let data = (ctx.worker_id == 0).then(|| vec![1u8; 256]);
+            ctx.broadcast(0, data)?;
+            Ok(Json::Null)
+        }),
+    );
+    let c = Controller::test_platform(2, 8, 1e-6);
+    c.deploy(
+        "edge",
+        "edge-echo",
+        BurstConfig {
+            granularity: 2,
+            strategy: "homogeneous".into(),
+            backend: BackendKind::RedisList,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let r = c
+        .flare(
+            "edge",
+            vec![Json::Null; 4],
+            &FlareOptions { backend: Some(BackendKind::S3), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(r.backend_name, "s3");
+    let r2 = c.flare("edge", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert_eq!(r2.backend_name, "redis-list");
+}
+
+#[test]
+fn pack_share_in_faas_mode_is_identity() {
+    // Granularity 1: the leader is the only member; pack_share returns the
+    // worker's own data without touching the backend.
+    let f = fabric(3, 1, 1_000);
+    std::thread::scope(|s| {
+        for w in 0..3 {
+            let f = f.clone();
+            s.spawn(move || {
+                let ctx = BurstContext::new(w, f);
+                let got = ctx.pack_share(Some(vec![w as u8])).unwrap();
+                assert_eq!(got.as_ref(), &vec![w as u8]);
+            });
+        }
+    });
+    assert_eq!(f.traffic.remote(), 0);
+}

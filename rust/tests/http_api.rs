@@ -1,0 +1,115 @@
+//! End-to-end tests of the controller's HTTP API with real apps behind it —
+//! the full paper Fig. 4 life cycle over the wire.
+
+use burstc::apps::{self, AppEnv};
+use burstc::cluster::netmodel::NetParams;
+use burstc::platform::http::{http_request, HttpServer};
+use burstc::platform::Controller;
+use burstc::runtime::engine::global_pool;
+use burstc::storage::ObjectStore;
+use burstc::util::json::Json;
+
+fn server() -> (HttpServer, String, AppEnv) {
+    let env = AppEnv {
+        store: ObjectStore::new(NetParams::scaled(1e-6)),
+        pool: global_pool().expect("run `make artifacts` first"),
+    };
+    apps::register_all(&env);
+    let c = Controller::test_platform(2, 48, 1e-6);
+    let srv = HttpServer::start(c, 0).unwrap();
+    let addr = srv.addr.clone();
+    (srv, addr, env)
+}
+
+#[test]
+fn full_lifecycle_deploy_flare_fetch_result() {
+    let (_srv, addr, env) = server();
+    apps::kmeans::generate(&env, "http", 4, 11);
+
+    // 1. deploy
+    let deploy = Json::parse(
+        r#"{"name":"km","work":"kmeans","conf":{"granularity":2,"strategy":"homogeneous"}}"#,
+    )
+    .unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+    // 2. flare (burst size = params length, paper §4.2)
+    let flare = Json::obj(vec![
+        ("def", "km".into()),
+        (
+            "params",
+            Json::Arr(vec![
+                Json::obj(vec![("job", "http".into()), ("iters", 3.into())]);
+                4
+            ]),
+        ),
+    ]);
+    let r = http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+    assert_eq!(r.get("burst_size").unwrap().as_usize(), Some(4));
+    assert_eq!(r.get("packs").unwrap().as_usize(), Some(2));
+    let outputs = r.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outputs.len(), 4);
+    assert!(outputs[0].get("cost").unwrap().as_f64().unwrap().is_finite());
+
+    // 3. retrieve the stored record later (Fig. 4: results in the DB).
+    let id = r.get("flare_id").unwrap().as_str().unwrap();
+    let rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+    assert_eq!(rec.str_or("status", ""), "completed");
+    assert_eq!(
+        rec.get("metadata").unwrap().get("burst_size").unwrap().as_usize(),
+        Some(4)
+    );
+}
+
+#[test]
+fn flare_options_over_http() {
+    let (_srv, addr, env) = server();
+    apps::terasort::generate(&env, "opt", 4, 4_000, 3);
+    let deploy =
+        Json::parse(r#"{"name":"ts","work":"terasort","conf":{"granularity":4}}"#).unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+    let flare = Json::obj(vec![
+        ("def", "ts".into()),
+        ("params", Json::Arr(vec![Json::obj(vec![("job", "opt".into())]); 4])),
+        ("options", Json::obj(vec![("faas", true.into())])),
+    ]);
+    let r = http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+    // FaaS option ⇒ one pack per worker.
+    assert_eq!(r.get("packs").unwrap().as_usize(), Some(4));
+    assert!(r.get("remote_bytes").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn concurrent_http_clients() {
+    let (_srv, addr, env) = server();
+    apps::gridsearch::generate(&env, "chc", 5, 0);
+    let deploy = Json::parse(
+        r#"{"name":"gs","work":"gridsearch","conf":{"granularity":2,"strategy":"homogeneous"}}"#,
+    )
+    .unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let flare = Json::obj(vec![
+                    ("def", "gs".into()),
+                    (
+                        "params",
+                        Json::Arr(vec![
+                            Json::obj(vec![
+                                ("job", "chc".into()),
+                                ("lr", Json::Num(0.05 * (t + 1) as f64)),
+                                ("epochs", 1.into()),
+                            ]);
+                            2
+                        ]),
+                    ),
+                ]);
+                let r = http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+                assert_eq!(r.get("outputs").unwrap().as_arr().unwrap().len(), 2);
+            });
+        }
+    });
+}

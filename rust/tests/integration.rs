@@ -1,0 +1,158 @@
+//! Cross-module integration tests: the whole stack from deploy to flare
+//! through the platform, BCM, PJRT runtime, and apps.
+
+use std::sync::Arc;
+
+use burstc::apps::{self, AppEnv};
+use burstc::bcm::BackendKind;
+use burstc::cluster::netmodel::NetParams;
+use burstc::platform::{BurstConfig, Controller, FlareOptions};
+use burstc::runtime::engine::global_pool;
+use burstc::storage::ObjectStore;
+use burstc::util::json::Json;
+
+fn env() -> AppEnv {
+    let env = AppEnv {
+        store: ObjectStore::new(NetParams::scaled(1e-6)),
+        pool: global_pool().expect("run `make artifacts` first"),
+    };
+    apps::register_all(&env);
+    env
+}
+
+#[test]
+fn all_apps_run_through_the_platform() {
+    let env = env();
+    apps::pagerank::generate(&env, "it", 4, 1).unwrap();
+    apps::terasort::generate(&env, "it", 4, 8_000, 2);
+    apps::gridsearch::generate(&env, "it", 3, 0);
+    apps::kmeans::generate(&env, "it", 4, 4);
+
+    let c = Controller::test_platform(2, 48, 1e-6);
+    let conf = BurstConfig {
+        granularity: 2,
+        strategy: "homogeneous".into(),
+        ..Default::default()
+    };
+    for (def, work) in [
+        ("it-pr", apps::pagerank::WORK_NAME),
+        ("it-ts", apps::terasort::WORK_NAME),
+        ("it-gs", apps::gridsearch::WORK_NAME),
+        ("it-km", apps::kmeans::WORK_NAME),
+    ] {
+        c.deploy(def, work, conf.clone()).unwrap();
+        let params: Vec<Json> = (0..4)
+            .map(|_| Json::obj(vec![("job", "it".into()), ("iters", 2.into())]))
+            .collect();
+        let r = c.flare(def, params, &FlareOptions::default()).unwrap();
+        assert_eq!(r.outputs.len(), 4, "{def}");
+        assert_eq!(r.packs.len(), 2, "{def}");
+    }
+}
+
+#[test]
+fn every_backend_supports_every_collective_under_load() {
+    let env = env();
+    apps::pagerank::generate(&env, "bk", 6, 3).unwrap();
+    let c = Controller::test_platform(2, 48, 1e-6);
+    for kind in BackendKind::all() {
+        let def = format!("bk-{}", kind.name());
+        c.deploy(
+            &def,
+            apps::pagerank::WORK_NAME,
+            BurstConfig {
+                granularity: 2,
+                strategy: "homogeneous".into(),
+                backend: *kind,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let params: Vec<Json> = (0..6)
+            .map(|_| Json::obj(vec![("job", "bk".into()), ("iters", 2.into())]))
+            .collect();
+        let r = c.flare(&def, params, &FlareOptions::default()).unwrap();
+        let mass = r.outputs[0].get("rank_mass").unwrap().as_f64().unwrap();
+        assert!((mass - 1.0).abs() < 0.05, "{kind:?}: mass {mass}");
+    }
+}
+
+#[test]
+fn faas_vs_burst_same_results_different_costs() {
+    let env = env();
+    apps::terasort::generate(&env, "fb", 6, 10_000, 5);
+    let c = Controller::test_platform(2, 48, 1e-6);
+    c.deploy("fb-ts", apps::terasort::WORK_NAME, BurstConfig::default()).unwrap();
+    let params: Vec<Json> =
+        (0..6).map(|_| Json::obj(vec![("job", "fb".into())])).collect();
+
+    let faas = c
+        .flare("fb-ts", params.clone(), &FlareOptions { faas: true, ..Default::default() })
+        .unwrap();
+    let burst = c
+        .flare(
+            "fb-ts",
+            params,
+            &FlareOptions { granularity: Some(3), strategy: Some("homogeneous".into()), ..Default::default() },
+        )
+        .unwrap();
+
+    // Identical sort output (counts + checksums match across modes).
+    apps::terasort::validate_outputs(&faas.outputs, 60_000).unwrap();
+    apps::terasort::validate_outputs(&burst.outputs, 60_000).unwrap();
+    let sum = |r: &burstc::platform::FlareResult| -> f64 {
+        r.outputs.iter().map(|o| o.num_or("checksum", 0.0)).sum()
+    };
+    assert_eq!(sum(&faas), sum(&burst));
+
+    // FaaS pays more remote traffic and slower invocation.
+    assert!(faas.traffic.remote() > burst.traffic.remote());
+    assert!(faas.startup.all_ready_s > burst.startup.all_ready_s);
+}
+
+#[test]
+fn concurrent_flares_share_the_cluster() {
+    let env = env();
+    apps::kmeans::generate(&env, "cc", 4, 9);
+    let c = Controller::test_platform(2, 48, 1e-6);
+    c.deploy(
+        "cc-km",
+        apps::kmeans::WORK_NAME,
+        BurstConfig { granularity: 2, strategy: "homogeneous".into(), ..Default::default() },
+    )
+    .unwrap();
+    let c = Arc::new(c);
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let c = c.clone();
+            s.spawn(move || {
+                let params: Vec<Json> = (0..4)
+                    .map(|_| Json::obj(vec![("job", "cc".into()), ("iters", 2.into())]))
+                    .collect();
+                let r = c.flare("cc-km", params, &FlareOptions::default()).unwrap();
+                assert_eq!(r.outputs.len(), 4);
+            });
+        }
+    });
+    assert_eq!(c.pool.free_vcpus(), vec![48, 48]);
+}
+
+#[test]
+fn flare_ids_unique_and_recorded() {
+    let env = env();
+    apps::gridsearch::generate(&env, "ids", 1, 0);
+    let c = Controller::test_platform(1, 8, 1e-6);
+    c.deploy("ids-gs", apps::gridsearch::WORK_NAME, BurstConfig::default()).unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..5 {
+        let r = c
+            .flare(
+                "ids-gs",
+                apps::gridsearch::param_grid(2, "ids", 1),
+                &FlareOptions::default(),
+            )
+            .unwrap();
+        assert!(seen.insert(r.flare_id.clone()), "duplicate id {}", r.flare_id);
+        assert!(c.db.get_flare(&r.flare_id).is_some());
+    }
+}

@@ -1,0 +1,174 @@
+//! Property-based tests over coordinator invariants (packing, chunking,
+//! BCM collectives, storage) using the in-tree harness
+//! (`burstc::util::proptest` — see DESIGN.md §3).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use burstc::bcm::chunk::{self, Op};
+use burstc::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
+use burstc::cluster::netmodel::NetParams;
+use burstc::platform::{model_startup, plan, PackingStrategy};
+use burstc::storage::ObjectStore;
+use burstc::util::proptest::forall;
+use burstc::util::rng::Pcg;
+
+#[test]
+fn chunk_roundtrip_any_payload_any_order() {
+    forall("chunk roundtrip", 120, |g| {
+        let payload = g.vec_u8(4096);
+        let chunk_size = g.usize(1, 700);
+        let chunks = chunk::split(Op::Direct, 1, 2, 3, &payload, chunk_size);
+        let mut order: Vec<usize> = (0..chunks.len()).collect();
+        // Random arrival permutation with possible duplicates injected.
+        let mut rng = Pcg::new(g.seed);
+        rng.shuffle(&mut order);
+        let dup = order[rng.usize(0, order.len())];
+        let (mut r, _) = chunk::Reassembly::from_first(&chunks[order[0]]).unwrap();
+        for &i in &order[1..] {
+            r.accept(&chunks[i]).unwrap();
+        }
+        // At-least-once: duplicates are ignored, not corrupting.
+        let _ = r.accept(&chunks[dup]);
+        assert_eq!(r.into_payload().unwrap(), payload);
+    });
+}
+
+#[test]
+fn packing_never_overcommits_and_startup_is_positive() {
+    forall("packing + startup model", 60, |g| {
+        let n_inv = g.usize(1, 20);
+        let free: Vec<usize> = (0..n_inv).map(|_| g.usize(1, 49)).collect();
+        let cap: usize = free.iter().sum();
+        let burst = g.usize(1, cap + 1);
+        let gran = g.usize(1, 49);
+        let strat = *g.choice(&[
+            PackingStrategy::Heterogeneous,
+            PackingStrategy::Homogeneous { granularity: gran },
+            PackingStrategy::Mixed { granularity: gran },
+        ]);
+        let Ok(packs) = plan(strat, burst, &free) else { return };
+        let mut rng = Pcg::new(g.seed);
+        let m = model_startup(&packs, &Default::default(), false, &mut rng);
+        assert_eq!(m.worker_ready_s.len(), burst);
+        assert!(m.worker_ready_s.iter().all(|&t| t > 0.0));
+        assert!(m.all_ready_s >= m.worker_ready_s.iter().cloned().fold(0.0, f64::max));
+        assert_eq!(m.pack_ready_s.len(), packs.len());
+    });
+}
+
+#[test]
+fn reduce_equals_sequential_fold_any_shape() {
+    // The BCM tree reduce must equal a plain left fold for a commutative-
+    // associative op, for any (size, granularity, root) and any backend.
+    forall("tree reduce == fold", 10, |g| {
+        let size = g.usize(1, 13);
+        let gran = g.usize(1, size + 1).max(1);
+        let root = g.usize(0, size);
+        let kind = *g.choice(&[BackendKind::DragonflyList, BackendKind::RedisList]);
+        let params = NetParams::scaled(1e-7);
+        let fabric = CommFabric::new(
+            &format!("prop-{}", g.seed),
+            PackTopology::contiguous(size, gran),
+            kind.build(&params),
+            &params,
+            FabricConfig { timeout: Duration::from_secs(20), ..Default::default() },
+        );
+        let expected: u64 = (0..size as u64).map(|w| w * w + 1).sum();
+        std::thread::scope(|s| {
+            for w in 0..size {
+                let fabric = fabric.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, fabric);
+                    let mine = ((w as u64) * (w as u64) + 1).to_le_bytes().to_vec();
+                    let f = |a: &mut Vec<u8>, b: &[u8]| {
+                        let x = u64::from_le_bytes(a.as_slice().try_into().unwrap());
+                        let y = u64::from_le_bytes(b.try_into().unwrap());
+                        *a = (x + y).to_le_bytes().to_vec();
+                    };
+                    let r = ctx.reduce(root, mine, &f).unwrap();
+                    if w == root {
+                        let got = u64::from_le_bytes(r.unwrap().try_into().unwrap());
+                        assert_eq!(got, expected);
+                    } else {
+                        assert!(r.is_none());
+                    }
+                });
+            }
+        });
+    });
+}
+
+#[test]
+fn all_to_all_is_a_transpose() {
+    forall("all_to_all transpose", 8, |g| {
+        let size = g.usize(1, 10);
+        let gran = g.usize(1, size + 1).max(1);
+        let params = NetParams::scaled(1e-7);
+        let fabric = CommFabric::new(
+            &format!("a2a-{}", g.seed),
+            PackTopology::contiguous(size, gran),
+            BackendKind::DragonflyList.build(&params),
+            &params,
+            FabricConfig { timeout: Duration::from_secs(20), ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            for w in 0..size {
+                let fabric = fabric.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, fabric);
+                    let msgs: Vec<Vec<u8>> = (0..size)
+                        .map(|d| format!("{w}->{d}").into_bytes())
+                        .collect();
+                    let got = ctx.all_to_all(msgs).unwrap();
+                    for (src, m) in got.iter().enumerate() {
+                        assert_eq!(m.as_slice(), format!("{src}->{w}").as_bytes());
+                    }
+                });
+            }
+        });
+    });
+}
+
+#[test]
+fn object_store_range_reads_consistent() {
+    forall("storage ranges", 40, |g| {
+        let params = NetParams::scaled(1e-9);
+        let store = ObjectStore::new(params);
+        let data = g.vec_u8(8192);
+        store.preload("k", data.clone());
+        if data.is_empty() {
+            return;
+        }
+        let off = g.usize(0, data.len());
+        let len = g.usize(0, data.len() - off + 1);
+        let part = store.get_range("k", off, len).unwrap();
+        assert_eq!(part, &data[off..off + len]);
+        // Parallel reassembly equals the object for any connection count.
+        let conns = g.usize(1, 9);
+        assert_eq!(store.get_parallel("k", conns).unwrap(), data);
+    });
+}
+
+#[test]
+fn local_messaging_preserves_fifo_per_pair() {
+    forall("fifo per pair", 15, |g| {
+        let n_msgs = g.usize(1, 30);
+        let params = NetParams::scaled(1e-9);
+        let fabric = CommFabric::new(
+            &format!("fifo-{}", g.seed),
+            PackTopology::contiguous(2, 2),
+            BackendKind::DragonflyList.build(&params),
+            &params,
+            FabricConfig { timeout: Duration::from_secs(10), ..Default::default() },
+        );
+        let a = BurstContext::new(0, fabric.clone());
+        let b = Arc::new(BurstContext::new(1, fabric));
+        for i in 0..n_msgs {
+            a.send(1, vec![i as u8]).unwrap();
+        }
+        for i in 0..n_msgs {
+            assert_eq!(b.recv(0).unwrap()[0], i as u8);
+        }
+    });
+}
