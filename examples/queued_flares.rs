@@ -1,0 +1,71 @@
+//! Queued flares: the asynchronous job-scheduling pipeline in action.
+//!
+//! Submits more flare demand than the cluster has capacity for and watches
+//! the pipeline — submit → admit → queue → place → execute → complete — do
+//! its job: every flare gets an id immediately, oversubscribed flares wait
+//! in `queued` status, the scheduler backfills and places them as capacity
+//! frees, and queue-wait time shows up in each result.
+//!
+//! Run: `cargo run --release --example queued_flares`
+
+use std::sync::Arc;
+
+use burstc::platform::{register_work, BurstConfig, Controller, FlareOptions};
+use burstc::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // Work: burn a few milliseconds so flares overlap in time.
+    register_work(
+        "spin",
+        Arc::new(|p: &Json, _ctx| {
+            let ms = p.num_or("ms", 20.0);
+            std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+            Ok(Json::Num(ms))
+        }),
+    );
+
+    // A deliberately small platform: 2 invokers × 4 vCPUs = 8 total.
+    let controller = Controller::test_platform(2, 4, 1.0);
+    controller.deploy(
+        "spin",
+        "spin",
+        BurstConfig { strategy: "heterogeneous".into(), ..Default::default() },
+    )?;
+
+    // Oversubscribe: 6 flares × 4 workers = 24 vCPU-demand against 8.
+    let params = |ms: f64| vec![Json::obj(vec![("ms", ms.into())]); 4];
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let h = controller
+                .submit_flare("spin", params(20.0 + i as f64), &FlareOptions::default())
+                .expect("admitted: each flare fits total capacity");
+            println!(
+                "submitted {:<8} status={:?}",
+                h.flare_id,
+                controller.flare_status(&h.flare_id).unwrap()
+            );
+            h
+        })
+        .collect();
+
+    // A flare bigger than the whole cluster is rejected at submit, with an
+    // error naming required vs available vCPUs — it never queues.
+    let err = controller
+        .submit_flare("spin", params(1.0).repeat(3), &FlareOptions::default())
+        .unwrap_err();
+    println!("oversized flare rejected: {err}");
+
+    // Wait for everything; queue-wait shows who had to line up.
+    for h in handles {
+        let id = h.flare_id.clone();
+        let r = h.wait()?;
+        println!(
+            "{id:<8} completed: queue_wait={:>7.1}ms work={:>6.1}ms",
+            r.queue_wait_s * 1e3,
+            r.work_wall_s * 1e3
+        );
+    }
+    assert_eq!(controller.pool.free_vcpus(), vec![4, 4]);
+    println!("all flares done, capacity fully released");
+    Ok(())
+}

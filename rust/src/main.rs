@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   serve       start the controller's HTTP API (deploy/flare endpoints)
 //!   deploy      deploy a burst definition against a running server
-//!   flare       invoke a burst against a running server
+//!   flare       invoke a burst against a running server (--nowait to queue
+//!               asynchronously and get the flare id back immediately)
+//!   status      live status of a submitted flare
+//!   flares      list recent flares and their statuses
 //!   apps        list registered work functions
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!
@@ -11,6 +14,8 @@
 //!   burstctl serve --port 8090 --invokers 4 --vcpus 48
 //!   burstctl deploy --addr 127.0.0.1:8090 --name pr --work pagerank --granularity 16
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 16 --param-json '{"job":"demo"}'
+//!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 960 --nowait
+//!   burstctl status --addr 127.0.0.1:8090 --id pr-3
 //!   burstctl experiment fig10 --quick
 
 use anyhow::{anyhow, Result};
@@ -26,12 +31,15 @@ use burstc::storage::ObjectStore;
 use burstc::util::cli::Args;
 use burstc::util::json::Json;
 
-const USAGE: &str = "usage: burstctl <serve|deploy|flare|apps|experiment> [options]
+const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|flares|apps|experiment> [options]
   serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
+              [--http-workers 8]
   deploy      --addr HOST:PORT --name NAME --work WORK
               [--granularity N] [--strategy mixed] [--backend dragonfly]
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
-              [--granularity N] [--faas]
+              [--granularity N] [--faas] [--nowait]
+  status      --addr HOST:PORT --id FLARE_ID
+  flares      --addr HOST:PORT
   apps        (lists registered work functions)
   experiment  <table1|fig1|fig5|fig6|fig7|fig8a|fig8b|fig9|table3|fig10|table4|fig11|all>
               [--quick]";
@@ -58,6 +66,8 @@ fn run() -> Result<()> {
         Some("serve") => serve(&args),
         Some("deploy") => deploy(&args),
         Some("flare") => flare(&args),
+        Some("status") => status(&args),
+        Some("flares") => flares(&args),
         Some("apps") => {
             build_env(1.0)?;
             for name in burstc::platform::db::registered_work_names() {
@@ -87,7 +97,11 @@ fn serve(args: &Args) -> Result<()> {
         CostModel::default(),
         NetParams::scaled(time_scale),
     );
-    let srv = HttpServer::start(controller, args.usize("port", 8090) as u16)?;
+    let srv = HttpServer::start_with_workers(
+        controller,
+        args.usize("port", 8090) as u16,
+        args.usize("http-workers", burstc::platform::http::DEFAULT_HTTP_WORKERS),
+    )?;
     println!("burst controller listening on {}", srv.addr);
     println!("demo datasets loaded under job name 'demo'");
     println!("Ctrl-C to stop");
@@ -137,7 +151,24 @@ fn flare(args: &Args) -> Result<()> {
         ("params", Json::Arr(vec![param; size])),
         ("options", Json::obj(options)),
     ]);
-    let r = http_request(addr, "POST", "/v1/flare", Some(&body))?;
+    // --nowait queues the flare and returns its id; poll with `status`.
+    let path = if args.flag("nowait") { "/v1/flares" } else { "/v1/flare" };
+    let r = http_request(addr, "POST", path, Some(&body))?;
+    println!("{r}");
+    Ok(())
+}
+
+fn status(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?;
+    let r = http_request(addr, "GET", &format!("/v1/flares/{id}"), None)?;
+    println!("{r}");
+    Ok(())
+}
+
+fn flares(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let r = http_request(addr, "GET", "/v1/flares", None)?;
     println!("{r}");
     Ok(())
 }

@@ -10,6 +10,8 @@ use crate::util::stats::{self, Summary};
 /// Execution phases a worker moves through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
+    /// Time the flare spent in the controller's queue before placement.
+    Queue,
     /// Container + runtime + code load until the worker can run.
     Startup,
     /// Input fetch from object storage.
@@ -25,6 +27,7 @@ pub enum Phase {
 impl Phase {
     pub fn name(&self) -> &'static str {
         match self {
+            Phase::Queue => "queue",
             Phase::Startup => "startup",
             Phase::Fetch => "fetch",
             Phase::Compute => "compute",

@@ -1,15 +1,24 @@
 //! The burst controller (paper Fig. 4): handles deploy and flare requests,
 //! oversees invoker resources, performs worker packing, and stores results.
+//!
+//! Flares flow through the scheduling pipeline in [`super::queue`]:
+//! `submit_flare` admits (validates against *total* cluster capacity) and
+//! queues without blocking; the scheduler thread places and runs each flare
+//! on its own execution thread; `flare` is a thin submit-and-wait wrapper.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::db::{self, BurstConfig, BurstDb, BurstDefinition, FlareRecord};
+use super::db::{self, BurstConfig, BurstDb, BurstDefinition, FlareRecord, FlareStatus};
 use super::invoker::{model_startup, InvokerPool, ModeledStartup};
 use super::pack::run_flare_packs;
 use super::packing::{plan, PackSpec, PackingStrategy};
+use super::queue::{
+    scheduler_loop, FlareHandle, QueuedFlare, ResultSlot, SchedState, MAX_BACKFILL_PASSES,
+};
 use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::netmodel::NetParams;
@@ -54,6 +63,9 @@ pub struct FlareResult {
     pub backend_name: String,
     /// Measured work wall-time (max across workers), seconds.
     pub work_wall_s: f64,
+    /// Measured wall-time between submission and placement, seconds
+    /// (near-zero on an idle cluster; the queueing delay under load).
+    pub queue_wait_s: f64,
 }
 
 impl FlareResult {
@@ -73,6 +85,7 @@ impl FlareResult {
             ("total_s", self.total_s().into()),
             ("remote_bytes", (self.traffic.remote() as usize).into()),
             ("local_bytes", (self.traffic.local() as usize).into()),
+            ("queue_wait_s", self.queue_wait_s.into()),
         ])
     }
 }
@@ -88,18 +101,34 @@ pub struct Controller {
     backends: Mutex<Vec<(BackendKind, Arc<dyn RemoteBackend>)>>,
     rng: Mutex<Pcg>,
     next_flare: AtomicU64,
+    /// Shared with the scheduler thread and flare execution threads.
+    sched: Arc<SchedState>,
+    sched_thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Controller {
     pub fn new(cluster: ClusterSpec, cost: CostModel, net: NetParams) -> Arc<Controller> {
-        Arc::new(Controller {
-            db: BurstDb::new(),
-            pool: InvokerPool::new(&cluster),
-            cost,
-            net,
-            backends: Mutex::new(Vec::new()),
-            rng: Mutex::new(Pcg::new(0xb5_2024)),
-            next_flare: AtomicU64::new(1),
+        Arc::new_cyclic(|weak| {
+            let sched = SchedState::new(MAX_BACKFILL_PASSES);
+            let handle = {
+                let sched = sched.clone();
+                let weak = weak.clone();
+                std::thread::Builder::new()
+                    .name("flare-scheduler".into())
+                    .spawn(move || scheduler_loop(sched, weak))
+                    .expect("spawn flare scheduler")
+            };
+            Controller {
+                db: BurstDb::new(),
+                pool: InvokerPool::new(&cluster),
+                cost,
+                net,
+                backends: Mutex::new(Vec::new()),
+                rng: Mutex::new(Pcg::new(0xb5_2024)),
+                next_flare: AtomicU64::new(1),
+                sched,
+                sched_thread: Mutex::new(Some(handle)),
+            }
         })
     }
 
@@ -140,14 +169,18 @@ impl Controller {
         wanted.min(capacity.max(1))
     }
 
-    /// Invoke a burst (paper Table 2: `flare`). The burst size is the
-    /// length of `input_params` (§4.2); one worker runs per entry.
-    pub fn flare(
+    /// Submit a flare without blocking (pipeline stages submit → admit →
+    /// queue). Validation that can never be cured by waiting — unknown
+    /// definition, empty params, a burst larger than *total* cluster
+    /// capacity, a granularity no idle invoker could host — fails here,
+    /// fast. Anything that merely doesn't fit the *current* load is
+    /// admitted and queued; the scheduler places it when capacity frees.
+    pub fn submit_flare(
         &self,
         def_name: &str,
         input_params: Vec<Json>,
         opts: &FlareOptions,
-    ) -> Result<FlareResult> {
+    ) -> Result<FlareHandle> {
         let def = self.db.get_def(def_name)?;
         let work = db::lookup_work(&def.work_name)?;
         let burst_size = input_params.len();
@@ -170,60 +203,224 @@ impl Controller {
         };
         let backend_kind = opts.backend.unwrap_or(def.conf.backend);
 
-        // Packing decision against current invoker load (Fig. 4 step 4).
-        let packs = plan(strategy, burst_size, &self.pool.free_vcpus())?;
-        self.pool.reserve(&packs)?;
-
-        // Modeled start-up latencies (container creation dominates, §5.1).
-        let startup = {
-            let mut rng = self.rng.lock().unwrap();
-            model_startup(&packs, &self.cost, opts.faas, &mut rng)
-        };
+        // Admission: a flare that cannot be placed on an *idle* cluster can
+        // never run, so reject it now — distinct from "busy, queued".
+        let capacity = self.pool.capacity();
+        if burst_size > capacity {
+            return Err(anyhow!(
+                "flare of {burst_size} workers exceeds total cluster capacity: \
+                 needs {burst_size} vCPUs, cluster has {capacity}"
+            ));
+        }
+        plan(strategy, burst_size, self.pool.total_vcpus()).map_err(|e| {
+            anyhow!("flare can never be placed, even on an idle cluster: {e}")
+        })?;
 
         let flare_id = format!(
             "{}-{}",
             def_name,
             self.next_flare.fetch_add(1, Ordering::Relaxed)
         );
+        self.db.put_flare(FlareRecord::queued(&flare_id, def_name));
+        let slot = Arc::new(ResultSlot::new());
+        self.sched.queue.lock().unwrap().push(QueuedFlare {
+            flare_id: flare_id.clone(),
+            def_name: def_name.to_string(),
+            work,
+            params: input_params,
+            burst_size,
+            strategy,
+            backend: backend_kind,
+            chunk_size: def.conf.chunk_size,
+            faas: opts.faas,
+            slot: slot.clone(),
+            submitted: crate::util::timing::Stopwatch::start(),
+            passed_over: 0,
+        });
+        self.sched.wake();
+        Ok(FlareHandle { flare_id, slot })
+    }
+
+    /// Invoke a burst (paper Table 2: `flare`). The burst size is the
+    /// length of `input_params` (§4.2); one worker runs per entry.
+    /// Submit-and-wait wrapper over [`Controller::submit_flare`].
+    pub fn flare(
+        &self,
+        def_name: &str,
+        input_params: Vec<Json>,
+        opts: &FlareOptions,
+    ) -> Result<FlareResult> {
+        self.submit_flare(def_name, input_params, opts)?.wait()
+    }
+
+    /// Live lifecycle status of a submitted flare.
+    pub fn flare_status(&self, flare_id: &str) -> Option<FlareStatus> {
+        self.db.get_flare(flare_id).map(|r| r.status)
+    }
+
+    /// Number of admitted flares currently waiting for capacity.
+    pub fn queued_flares(&self) -> usize {
+        self.sched.queue.lock().unwrap().len()
+    }
+
+    /// Run a placed flare on its own thread (pipeline stage execute). The
+    /// pack reservation is already held; it is released when work ends,
+    /// then the scheduler is woken to place queued flares into the freed
+    /// capacity, and only then is the result delivered to the submitter.
+    pub(crate) fn spawn_execution(
+        this: &Arc<Controller>,
+        job: QueuedFlare,
+        packs: Vec<PackSpec>,
+        sched: &Arc<SchedState>,
+    ) {
+        let c = this.clone();
+        let sched = sched.clone();
+        // The payload round-trips through an Arc so a failed thread spawn
+        // (fd/thread exhaustion under heavy burst load) can recover the
+        // job, fail it cleanly, and release the reservation — panicking
+        // here would kill the scheduler loop and hang every waiter.
+        let name = format!("flare-{}", job.flare_id);
+        let payload = Arc::new(Mutex::new(Some((job, packs))));
+        let payload2 = payload.clone();
+        let spawned = std::thread::Builder::new().name(name).spawn(move || {
+            let (job, packs) = payload2.lock().unwrap().take().expect("payload set");
+            let queue_wait_s = job.submitted.secs();
+            c.db.set_flare_status(&job.flare_id, FlareStatus::Running);
+            // A panic must neither strand the waiter in `wait()` nor
+            // leak the reservation (released by guard inside).
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || c.execute_placed(&job, packs, queue_wait_s),
+            ))
+            .unwrap_or_else(|_| {
+                let e = anyhow!("flare '{}' execution panicked", job.flare_id);
+                c.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Failed;
+                    r.error = Some(e.to_string());
+                });
+                Err(e)
+            });
+            sched.wake();
+            job.slot.deliver(result);
+        });
+        if spawned.is_err() {
+            if let Some((job, packs)) = payload.lock().unwrap().take() {
+                this.pool.release(&packs);
+                let e = anyhow!(
+                    "could not spawn execution thread for flare '{}'",
+                    job.flare_id
+                );
+                this.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Failed;
+                    r.error = Some(e.to_string());
+                });
+                job.slot.deliver(Err(e));
+            }
+        }
+    }
+
+    /// Pipeline stages execute → complete, with the reservation held.
+    fn execute_placed(
+        &self,
+        job: &QueuedFlare,
+        packs: Vec<PackSpec>,
+        queue_wait_s: f64,
+    ) -> Result<FlareResult> {
+        // Release the reservation exactly once, even if something on this
+        // thread panics mid-flare.
+        struct ReleaseOnDrop<'a> {
+            pool: &'a InvokerPool,
+            packs: Option<Vec<PackSpec>>,
+        }
+        impl<'a> ReleaseOnDrop<'a> {
+            fn release_now(&mut self) -> Vec<PackSpec> {
+                let packs = self.packs.take().expect("released once");
+                self.pool.release(&packs);
+                packs
+            }
+        }
+        impl Drop for ReleaseOnDrop<'_> {
+            fn drop(&mut self) {
+                if let Some(p) = self.packs.take() {
+                    self.pool.release(&p);
+                }
+            }
+        }
+        let mut reservation = ReleaseOnDrop { pool: &self.pool, packs: Some(packs) };
+        let packs = reservation.packs.as_ref().expect("held");
+
+        // Modeled start-up latencies (container creation dominates, §5.1).
+        let startup = {
+            let mut rng = self.rng.lock().unwrap();
+            model_startup(packs, &self.cost, job.faas, &mut rng)
+        };
         let topo = PackTopology::new(
             packs.iter().map(|p| p.workers.clone()).collect(),
             packs.iter().map(|p| p.invoker_id).collect(),
         );
         let fabric = CommFabric::new(
-            &flare_id,
+            &job.flare_id,
             topo,
-            self.backend(backend_kind),
+            self.backend(job.backend),
             &self.net,
-            FabricConfig { chunk_size: def.conf.chunk_size, ..FabricConfig::default() },
+            FabricConfig { chunk_size: job.chunk_size, ..FabricConfig::default() },
         );
 
         let timeline = Arc::new(Timeline::new());
         let sw = crate::util::timing::Stopwatch::start();
-        let result =
-            run_flare_packs(&packs, &fabric, &work, &input_params, &startup, &timeline);
+        let result = run_flare_packs(
+            packs,
+            &fabric,
+            &job.work,
+            &job.params,
+            &startup,
+            &timeline,
+            queue_wait_s,
+        );
         let work_wall_s = sw.secs();
         fabric.teardown();
-        self.pool.release(&packs);
-        let outputs = result?;
+        let packs = reservation.release_now();
+        match result {
+            Ok(outputs) => {
+                let res = FlareResult {
+                    flare_id: job.flare_id.clone(),
+                    outputs,
+                    packs,
+                    startup,
+                    timeline,
+                    traffic: fabric.traffic.clone(),
+                    backend_name: fabric.backend_name(),
+                    work_wall_s,
+                    queue_wait_s,
+                };
+                self.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Completed;
+                    r.outputs = res.outputs.clone();
+                    r.metadata = res.summary_json();
+                });
+                Ok(res)
+            }
+            Err(e) => {
+                self.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Failed;
+                    r.error = Some(e.to_string());
+                });
+                Err(e)
+            }
+        }
+    }
+}
 
-        let res = FlareResult {
-            flare_id: flare_id.clone(),
-            outputs,
-            packs,
-            startup,
-            timeline,
-            traffic: fabric.traffic.clone(),
-            backend_name: fabric.backend_name(),
-            work_wall_s,
-        };
-        self.db.put_flare(FlareRecord {
-            flare_id,
-            def_name: def_name.to_string(),
-            status: "completed".into(),
-            outputs: res.outputs.clone(),
-            metadata: res.summary_json(),
-        });
-        Ok(res)
+impl Drop for Controller {
+    fn drop(&mut self) {
+        self.sched.shutdown();
+        if let Some(h) = self.sched_thread.lock().unwrap().take() {
+            // The scheduler's own `Weak::upgrade` can make it the thread
+            // that drops the last `Arc<Controller>`; never self-join — the
+            // shutdown flag alone ends the loop.
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -279,9 +476,26 @@ mod tests {
             assert_eq!(o.get("p").unwrap().as_f64(), Some(i as f64));
         }
         assert!(r.startup.all_ready_s > 0.0);
-        // Record stored in db.
+        // Record stored in db, in terminal state, with queue wait measured.
         let rec = c.db.get_flare(&r.flare_id).unwrap();
-        assert_eq!(rec.status, "completed");
+        assert_eq!(rec.status, FlareStatus::Completed);
+        assert!(rec.metadata.get("queue_wait_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn submit_flare_is_nonblocking_and_trackable() {
+        register_echo();
+        let c = Controller::test_platform(2, 48, 1e-6);
+        c.deploy("sub", "ctrl-echo", BurstConfig { granularity: 4, ..Default::default() })
+            .unwrap();
+        let h = c
+            .submit_flare("sub", vec![Json::Null; 8], &FlareOptions::default())
+            .unwrap();
+        // Submission recorded immediately, in a live (or terminal) state.
+        assert!(c.flare_status(&h.flare_id).is_some());
+        let r = h.wait().unwrap();
+        assert_eq!(r.outputs.len(), 8);
+        assert_eq!(c.flare_status(&r.flare_id), Some(FlareStatus::Completed));
     }
 
     #[test]
@@ -351,10 +565,39 @@ mod tests {
         register_echo();
         let c = Controller::test_platform(1, 4, 1e-6);
         c.deploy("e4", "ctrl-echo", BurstConfig::default()).unwrap();
-        assert!(c
+        // Larger than *total* cluster capacity: fails fast at submit, with
+        // an error naming required vs available vCPUs — not "busy, queued".
+        let err = c
             .flare("e4", vec![Json::Null; 10], &FlareOptions::default())
-            .is_err());
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("10 vCPUs"), "{err}");
+        assert!(err.contains("cluster has 4"), "{err}");
         assert_eq!(c.pool.free_vcpus(), vec![4]);
+    }
+
+    #[test]
+    fn impossible_granularity_rejected_at_submit() {
+        register_echo();
+        // Homogeneous granularity-8 packs can never fit 4-vCPU invokers,
+        // even idle — reject at submit instead of queueing forever.
+        let c = Controller::test_platform(2, 4, 1e-6);
+        c.deploy(
+            "e5",
+            "ctrl-echo",
+            BurstConfig {
+                granularity: 8,
+                strategy: "homogeneous".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = c
+            .flare("e5", vec![Json::Null; 8], &FlareOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("never be placed"), "{err}");
+        assert_eq!(c.pool.free_vcpus(), vec![4, 4]);
     }
 
     #[test]

@@ -79,14 +79,74 @@ pub struct BurstDefinition {
     pub conf: BurstConfig,
 }
 
+/// Flare lifecycle status (pipeline: submit → admit → queue → place →
+/// execute → complete).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlareStatus {
+    /// Admitted, waiting in the controller's queue for capacity.
+    Queued,
+    /// Placed on invokers; packs are executing.
+    Running,
+    /// All workers finished; outputs stored.
+    Completed,
+    /// A worker (or the placement) failed; see `error`.
+    Failed,
+}
+
+impl FlareStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlareStatus::Queued => "queued",
+            FlareStatus::Running => "running",
+            FlareStatus::Completed => "completed",
+            FlareStatus::Failed => "failed",
+        }
+    }
+
+    /// Terminal states never change again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, FlareStatus::Completed | FlareStatus::Failed)
+    }
+}
+
 /// Flare execution record.
 #[derive(Debug, Clone)]
 pub struct FlareRecord {
     pub flare_id: String,
     pub def_name: String,
-    pub status: String,
+    pub status: FlareStatus,
     pub outputs: Vec<Json>,
     pub metadata: Json,
+    /// Failure description when `status` is `Failed`.
+    pub error: Option<String>,
+}
+
+impl FlareRecord {
+    /// A fresh record for a just-admitted flare.
+    pub fn queued(flare_id: &str, def_name: &str) -> FlareRecord {
+        FlareRecord {
+            flare_id: flare_id.to_string(),
+            def_name: def_name.to_string(),
+            status: FlareStatus::Queued,
+            outputs: Vec::new(),
+            metadata: Json::Null,
+            error: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("flare_id", Json::Str(self.flare_id.clone())),
+            ("def", Json::Str(self.def_name.clone())),
+            ("status", self.status.name().into()),
+            ("metadata", self.metadata.clone()),
+            ("outputs", Json::Arr(self.outputs.clone())),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(fields)
+    }
 }
 
 /// Process-wide registry of compiled `work` functions.
@@ -122,7 +182,8 @@ pub fn registered_work_names() -> Vec<String> {
 #[derive(Default)]
 pub struct BurstDb {
     defs: Mutex<HashMap<String, BurstDefinition>>,
-    flares: Mutex<HashMap<String, FlareRecord>>,
+    /// Records plus submission order (for `list_flares`, newest first).
+    flares: Mutex<(HashMap<String, FlareRecord>, Vec<String>)>,
 }
 
 impl BurstDb {
@@ -153,11 +214,49 @@ impl BurstDb {
     }
 
     pub fn put_flare(&self, rec: FlareRecord) {
-        self.flares.lock().unwrap().insert(rec.flare_id.clone(), rec);
+        let mut flares = self.flares.lock().unwrap();
+        if flares.0.insert(rec.flare_id.clone(), rec.clone()).is_none() {
+            flares.1.push(rec.flare_id);
+        }
     }
 
     pub fn get_flare(&self, id: &str) -> Option<FlareRecord> {
-        self.flares.lock().unwrap().get(id).cloned()
+        self.flares.lock().unwrap().0.get(id).cloned()
+    }
+
+    /// Apply a mutation to an existing flare record (status transitions,
+    /// attaching outputs). No-op if the id is unknown.
+    pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) {
+        if let Some(rec) = self.flares.lock().unwrap().0.get_mut(id) {
+            f(rec);
+        }
+    }
+
+    pub fn set_flare_status(&self, id: &str, status: FlareStatus) {
+        self.update_flare(id, |r| r.status = status);
+    }
+
+    /// Most recent `limit` flares, newest first, as `(flare_id, def_name,
+    /// status)` — O(limit) under the lock regardless of output sizes.
+    /// (Deliberately not a full-record listing: cloning whole output
+    /// arrays under the db lock would stall the scheduler on every poll.)
+    pub fn list_flare_summaries(
+        &self,
+        limit: usize,
+    ) -> Vec<(String, String, FlareStatus)> {
+        let flares = self.flares.lock().unwrap();
+        flares
+            .1
+            .iter()
+            .rev()
+            .take(limit)
+            .filter_map(|id| {
+                flares
+                    .0
+                    .get(id)
+                    .map(|r| (r.flare_id.clone(), r.def_name.clone(), r.status))
+            })
+            .collect()
     }
 }
 
@@ -218,13 +317,47 @@ mod tests {
     fn flare_records() {
         let db = BurstDb::new();
         db.put_flare(FlareRecord {
-            flare_id: "f1".into(),
-            def_name: "d".into(),
-            status: "ok".into(),
             outputs: vec![Json::Num(1.0)],
-            metadata: Json::Null,
+            ..FlareRecord::queued("f1", "d")
         });
-        assert_eq!(db.get_flare("f1").unwrap().status, "ok");
+        assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Queued);
         assert!(db.get_flare("f2").is_none());
+    }
+
+    #[test]
+    fn flare_status_lifecycle() {
+        let db = BurstDb::new();
+        db.put_flare(FlareRecord::queued("f1", "d"));
+        db.set_flare_status("f1", FlareStatus::Running);
+        assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Running);
+        db.update_flare("f1", |r| {
+            r.status = FlareStatus::Failed;
+            r.error = Some("worker 3: boom".into());
+        });
+        let rec = db.get_flare("f1").unwrap();
+        assert!(rec.status.is_terminal());
+        assert_eq!(rec.error.as_deref(), Some("worker 3: boom"));
+        // Unknown ids are a no-op, not a panic.
+        db.set_flare_status("ghost", FlareStatus::Completed);
+    }
+
+    #[test]
+    fn list_flares_newest_first() {
+        let db = BurstDb::new();
+        for i in 0..5 {
+            db.put_flare(FlareRecord::queued(&format!("f{i}"), "d"));
+        }
+        // Re-putting an existing id must not duplicate it in the order.
+        db.put_flare(FlareRecord::queued("f2", "d"));
+        let ids: Vec<String> = db
+            .list_flare_summaries(3)
+            .into_iter()
+            .map(|(id, _, _)| id)
+            .collect();
+        assert_eq!(ids, vec!["f4", "f3", "f2"]);
+        assert_eq!(db.list_flare_summaries(100).len(), 5);
+        let summaries = db.list_flare_summaries(2);
+        assert_eq!(summaries[0].1, "d");
+        assert_eq!(summaries[0].2, FlareStatus::Queued);
     }
 }

@@ -1,20 +1,29 @@
 //! HTTP interface to the controller (paper Fig. 4 steps 1–3): `deploy` and
 //! `flare` endpoints plus result retrieval. Minimal HTTP/1.1 over
-//! `std::net` (no async runtime is available offline — DESIGN.md §3); one
-//! thread per connection, which matches the controller's request-handling
-//! model.
+//! `std::net` (no async runtime is available offline — DESIGN.md §3).
+//! Connections are served by a small fixed worker pool fed from a bounded
+//! queue, so a burst of clients cannot spawn unbounded threads. Flare
+//! *execution* runs on the controller's scheduler; note that the blocking
+//! `POST /v1/flare` still occupies its HTTP worker while it waits, so
+//! heavy clients should prefer the async `POST /v1/flares` + status
+//! polling, which returns in microseconds.
 //!
 //! Routes:
-//!   POST /v1/deploy   {"name", "work", "conf": {...}}
-//!   POST /v1/flare    {"def", "params": [...], "options": {...}}
-//!   GET  /v1/flares/`<id>`
+//!   POST /v1/deploy       {"name", "work", "conf": {...}}
+//!   POST /v1/flare        {"def", "params": [...], "options": {...}}   blocking
+//!   POST /v1/flares       same body; 202 + flare id immediately (async)
+//!   GET  /v1/flares       recent flares with live status
+//!   GET  /v1/flares/`<id>`  live status + outputs of one flare
 //!   GET  /v1/defs
 //!   GET  /healthz
+//!   GET  /metrics
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -22,43 +31,111 @@ use super::controller::{Controller, FlareOptions};
 use super::db::BurstConfig;
 use crate::util::json::Json;
 
+/// Default size of the connection-handling worker pool.
+pub const DEFAULT_HTTP_WORKERS: usize = 8;
+/// Accepted connections waiting for a free worker; once full, the accept
+/// loop itself blocks — an implicit connection cap.
+const CONN_BACKLOG: usize = 64;
+/// Bound on how long a worker can sit in a dead connection's read.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// A running HTTP server bound to a local port.
 pub struct HttpServer {
     pub addr: String,
     stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl HttpServer {
-    /// Start serving the controller on `127.0.0.1:port` (0 = ephemeral).
+    /// Start serving the controller on `127.0.0.1:port` (0 = ephemeral)
+    /// with the default worker pool.
     pub fn start(controller: Arc<Controller>, port: u16) -> Result<HttpServer> {
+        HttpServer::start_with_workers(controller, port, DEFAULT_HTTP_WORKERS)
+    }
+
+    /// Start with an explicit connection-worker count.
+    pub fn start_with_workers(
+        controller: Arc<Controller>,
+        port: u16,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
+            std::sync::mpsc::sync_channel(CONN_BACKLOG);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let c = controller.clone();
+                std::thread::Builder::new()
+                    .name(format!("http-worker-{i}"))
+                    .spawn(move || loop {
+                        // Lock only to pop; serving runs unlocked.
+                        let stream = match rx.lock().unwrap().recv() {
+                            Ok(s) => s,
+                            Err(_) => return, // acceptor gone: shutdown
+                        };
+                        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                        let _ = handle_conn(stream, &c);
+                    })
+                    .expect("spawn http worker")
+            })
+            .collect();
+
         let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let c = controller.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &c);
-                        });
+        let accept = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                'accept: while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // Non-blocking hand-off so a full backlog can't
+                            // trap this thread past a shutdown request.
+                            let mut stream = stream;
+                            loop {
+                                match tx.try_send(stream) {
+                                    Ok(()) => break,
+                                    Err(TrySendError::Full(back)) => {
+                                        if stop2.load(Ordering::Relaxed) {
+                                            break 'accept;
+                                        }
+                                        stream = back;
+                                        std::thread::sleep(Duration::from_millis(5));
+                                    }
+                                    Err(TrySendError::Disconnected(_)) => {
+                                        break 'accept; // all workers exited
+                                    }
+                                }
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
                 }
-            }
-        });
-        Ok(HttpServer { addr, stop, handle: Some(handle) })
+                // Dropping `tx` here unblocks every worker's `recv`.
+            })
+            .expect("spawn http acceptor");
+
+        Ok(HttpServer { addr, stop, accept: Some(accept), workers })
     }
 
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -66,10 +143,7 @@ impl HttpServer {
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -100,38 +174,78 @@ fn handle_conn(stream: TcpStream, controller: &Controller) -> Result<()> {
     reader.read_exact(&mut body)?;
     let body = String::from_utf8_lossy(&body).to_string();
 
-    let (status, payload) = match route(&method, &path, &body, controller) {
-        Ok(j) => ("200 OK", j),
-        Err(e) => (
-            "400 Bad Request",
-            Json::obj(vec![("error", Json::Str(e.to_string()))]),
-        ),
-    };
+    let (status, payload) = route(&method, &path, &body, controller);
     let body = payload.to_string();
     let mut stream = reader.into_inner();
     write!(
         stream,
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        status_text(status),
         body.len()
     )?;
     Ok(())
 }
 
-fn route(method: &str, path: &str, body: &str, c: &Controller) -> Result<Json> {
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "200 OK",
+        202 => "202 Accepted",
+        400 => "400 Bad Request",
+        404 => "404 Not Found",
+        _ => "500 Internal Server Error",
+    }
+}
+
+fn err_json(msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+fn route(method: &str, path: &str, body: &str, c: &Controller) -> (u16, Json) {
+    match dispatch(method, path, body, c) {
+        Ok(r) => r,
+        Err(e) => (400, err_json(e)),
+    }
+}
+
+/// Parse the shared flare-request body: `{"def", "params", "options"?}`.
+fn parse_flare_body(body: &str) -> Result<(String, Vec<Json>, FlareOptions)> {
+    let j = Json::parse(body)?;
+    let def = j
+        .get("def")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'def'"))?
+        .to_string();
+    let params = j
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'params' array"))?
+        .to_vec();
+    let opts = j.get("options").map(FlareOptions::from_json).unwrap_or_default();
+    Ok((def, params, opts))
+}
+
+fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16, Json)> {
     match (method, path) {
-        ("GET", "/healthz") => Ok(Json::obj(vec![("status", "ok".into())])),
+        ("GET", "/healthz") => Ok((200, Json::obj(vec![("status", "ok".into())]))),
         ("GET", "/metrics") => {
-            // Controller load view (CPU-based invoker monitoring, §4.4).
+            // Controller load view (CPU-based invoker monitoring, §4.4)
+            // plus the scheduler's queue depth.
             let free = c.pool.free_vcpus();
-            Ok(Json::obj(vec![
-                ("invokers", free.len().into()),
-                ("free_vcpus", Json::Arr(free.iter().map(|&f| f.into()).collect())),
-                ("total_free_vcpus", free.iter().sum::<usize>().into()),
-                ("deployed_defs", c.db.list_defs().len().into()),
-            ]))
+            Ok((
+                200,
+                Json::obj(vec![
+                    ("invokers", free.len().into()),
+                    ("free_vcpus", Json::Arr(free.iter().map(|&f| f.into()).collect())),
+                    ("total_free_vcpus", free.iter().sum::<usize>().into()),
+                    ("total_vcpus", c.pool.capacity().into()),
+                    ("queued_flares", c.queued_flares().into()),
+                    ("deployed_defs", c.db.list_defs().len().into()),
+                ]),
+            ))
         }
-        ("GET", "/v1/defs") => Ok(Json::Arr(
-            c.db.list_defs().into_iter().map(Json::Str).collect(),
+        ("GET", "/v1/defs") => Ok((
+            200,
+            Json::Arr(c.db.list_defs().into_iter().map(Json::Str).collect()),
         )),
         ("POST", "/v1/deploy") => {
             let j = Json::parse(body)?;
@@ -145,47 +259,62 @@ fn route(method: &str, path: &str, body: &str, c: &Controller) -> Result<Json> {
                 .ok_or_else(|| anyhow!("missing 'work'"))?;
             let conf = j.get("conf").map(BurstConfig::from_json).unwrap_or_default();
             c.deploy(name, work, conf)?;
-            Ok(Json::obj(vec![("deployed", name.into())]))
+            Ok((200, Json::obj(vec![("deployed", name.into())])))
         }
         ("POST", "/v1/flare") => {
-            let j = Json::parse(body)?;
-            let def = j
-                .get("def")
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("missing 'def'"))?;
-            let params = j
-                .get("params")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("missing 'params' array"))?
-                .to_vec();
-            let opts = j
-                .get("options")
-                .map(FlareOptions::from_json)
-                .unwrap_or_default();
-            let r = c.flare(def, params, &opts)?;
+            // Blocking invoke: submit, wait, return the full result.
+            let (def, params, opts) = parse_flare_body(body)?;
+            let r = c.flare(&def, params, &opts)?;
             let mut summary = r.summary_json();
             if let Json::Obj(m) = &mut summary {
                 m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
             }
-            Ok(summary)
+            Ok((200, summary))
+        }
+        ("POST", "/v1/flares") => {
+            // Async invoke: 202 + flare id immediately; poll for status.
+            let (def, params, opts) = parse_flare_body(body)?;
+            let h = c.submit_flare(&def, params, &opts)?;
+            let status = c
+                .flare_status(&h.flare_id)
+                .map(|s| s.name())
+                .unwrap_or("queued");
+            Ok((
+                202,
+                Json::obj(vec![
+                    ("flare_id", h.flare_id.as_str().into()),
+                    ("status", status.into()),
+                ]),
+            ))
+        }
+        ("GET", "/v1/flares") => {
+            // Recent flares, newest first, compact view.
+            let list = c
+                .db
+                .list_flare_summaries(50)
+                .into_iter()
+                .map(|(id, def, status)| {
+                    Json::obj(vec![
+                        ("flare_id", id.as_str().into()),
+                        ("def", def.as_str().into()),
+                        ("status", status.name().into()),
+                    ])
+                })
+                .collect();
+            Ok((200, Json::Arr(list)))
         }
         ("GET", p) if p.starts_with("/v1/flares/") => {
             let id = &p["/v1/flares/".len()..];
-            let rec =
-                c.db.get_flare(id).ok_or_else(|| anyhow!("flare '{id}' not found"))?;
-            Ok(Json::obj(vec![
-                ("flare_id", rec.flare_id.as_str().into()),
-                ("def", rec.def_name.as_str().into()),
-                ("status", rec.status.as_str().into()),
-                ("metadata", rec.metadata),
-                ("outputs", Json::Arr(rec.outputs)),
-            ]))
+            match c.db.get_flare(id) {
+                Some(rec) => Ok((200, rec.to_json())),
+                None => Ok((404, err_json(format!("flare '{id}' not found")))),
+            }
         }
-        _ => Err(anyhow!("no route for {method} {path}")),
+        _ => Ok((404, err_json(format!("no route for {method} {path}")))),
     }
 }
 
-/// Minimal HTTP client for the CLI and tests.
+/// Minimal HTTP client for the CLI and tests. Any 2xx is a success.
 pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
     let body_s = body.map(|b| b.to_string()).unwrap_or_default();
@@ -205,7 +334,7 @@ pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&Json>) -
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| anyhow!("malformed status line"))?;
     let json = Json::parse(payload)?;
-    if status != 200 {
+    if !(200..300).contains(&status) {
         return Err(anyhow!(
             "HTTP {status}: {}",
             json.str_or("error", "unknown error")
@@ -230,18 +359,21 @@ mod tests {
         (srv, addr)
     }
 
+    fn deploy_add(addr: &str) {
+        let deploy = Json::parse(
+            r#"{"name":"add","work":"http-add","conf":{"granularity":2,"backend":"dragonfly"}}"#,
+        )
+        .unwrap();
+        http_request(addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+    }
+
     #[test]
     fn health_and_deploy_and_flare() {
         let (_srv, addr) = setup();
         let h = http_request(&addr, "GET", "/healthz", None).unwrap();
         assert_eq!(h.str_or("status", ""), "ok");
 
-        let deploy = Json::parse(
-            r#"{"name":"add","work":"http-add","conf":{"granularity":2,"backend":"dragonfly"}}"#,
-        )
-        .unwrap();
-        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
-
+        deploy_add(&addr);
         let defs = http_request(&addr, "GET", "/v1/defs", None).unwrap();
         assert!(defs.as_arr().unwrap().iter().any(|d| d.as_str() == Some("add")));
 
@@ -260,9 +392,64 @@ mod tests {
     }
 
     #[test]
+    fn async_flare_returns_202_and_becomes_observable() {
+        let (_srv, addr) = setup();
+        deploy_add(&addr);
+
+        let flare = Json::parse(r#"{"def":"add","params":[7,7,7]}"#).unwrap();
+        let r = http_request(&addr, "POST", "/v1/flares", Some(&flare)).unwrap();
+        let id = r.get("flare_id").unwrap().as_str().unwrap().to_string();
+        assert!(
+            matches!(r.str_or("status", ""), "queued" | "running" | "completed"),
+            "{r}"
+        );
+
+        // Poll until the flare reaches a terminal state.
+        let mut rec = Json::Null;
+        for _ in 0..2_000 {
+            rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+            if rec.str_or("status", "") == "completed" {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(rec.str_or("status", ""), "completed", "{rec}");
+        assert_eq!(rec.get("outputs").unwrap().as_arr().unwrap().len(), 3);
+
+        // Listed among recent flares.
+        let list = http_request(&addr, "GET", "/v1/flares", None).unwrap();
+        assert!(list
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|f| f.str_or("flare_id", "") == id));
+    }
+
+    #[test]
+    fn burst_of_clients_is_served_by_bounded_pool() {
+        let work: WorkFn = Arc::new(|_p, _ctx| Ok(Json::Null));
+        register_work("http-noop", work);
+        let c = Controller::test_platform(1, 8, 1e-6);
+        // 2 workers, far fewer than the client burst.
+        let srv = HttpServer::start_with_workers(c, 0, 2).unwrap();
+        let addr = srv.addr.clone();
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+                    assert_eq!(h.str_or("status", ""), "ok");
+                });
+            }
+        });
+    }
+
+    #[test]
     fn bad_requests_are_400() {
         let (_srv, addr) = setup();
         let r = http_request(&addr, "POST", "/v1/flare", Some(&Json::obj(vec![])));
+        assert!(r.is_err());
+        let r = http_request(&addr, "POST", "/v1/flares", Some(&Json::obj(vec![])));
         assert!(r.is_err());
         let r = http_request(&addr, "GET", "/v1/flares/nope", None);
         assert!(r.is_err());

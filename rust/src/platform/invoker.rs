@@ -32,6 +32,18 @@ impl InvokerPool {
         self.free.lock().unwrap().clone()
     }
 
+    /// Per-invoker total capacity (the idle-cluster view, used by submit-time
+    /// validation: a flare that cannot be placed on an idle cluster can never
+    /// run, no matter how long it queues).
+    pub fn total_vcpus(&self) -> &[usize] {
+        &self.total
+    }
+
+    /// Total cluster capacity in vCPUs.
+    pub fn capacity(&self) -> usize {
+        self.total.iter().sum()
+    }
+
     /// Atomically reserve the capacity for a pack plan.
     pub fn reserve(&self, packs: &[PackSpec]) -> Result<()> {
         let mut free = self.free.lock().unwrap();

@@ -1,6 +1,34 @@
 //! The burst computing platform (paper §4): controller with `deploy`/`flare`
 //! endpoints, worker-packing strategies, invoker capacity management, pack
 //! runtimes (one thread per worker), the burst database, and the HTTP API.
+//!
+//! Flares run through an asynchronous job-scheduling pipeline
+//! ([`queue`]): **submit → admit → queue → place → execute → complete**.
+//!
+//! * **submit** — `Controller::submit_flare` resolves the configuration and
+//!   returns a [`FlareHandle`] without blocking (`Controller::flare` is a
+//!   submit-and-wait wrapper).
+//! * **admit** — requests that can never run (unknown definition, burst
+//!   larger than total cluster capacity, granularity no idle invoker can
+//!   host) are rejected fast with an error naming required vs available
+//!   vCPUs; everything else is admitted even when the cluster is busy.
+//! * **queue** — admitted flares wait in a capacity-aware FIFO
+//!   ([`queue::FlareQueue`]) with bounded backfill: a small flare may jump
+//!   a blocked head-of-line flare it cannot unblock, until an
+//!   anti-starvation pass budget stops the queue scheduling past it.
+//! * **place** — the scheduler thread packs against the live load view and
+//!   reserves capacity, retrying lost reservation races against a fresh
+//!   snapshot up to a spillback budget ([`queue::SPILLBACK_RETRIES`]).
+//! * **execute** — each placed flare runs on its own thread, so many flares
+//!   proceed concurrently against one [`InvokerPool`].
+//! * **complete** — results and the status lifecycle
+//!   (`queued` → `running` → `completed` / `failed`, [`db::FlareStatus`])
+//!   are persisted in [`BurstDb`]; queue-wait time is recorded as a
+//!   `Queue` phase in the flare's timeline.
+//!
+//! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id),
+//! `GET /v1/flares/<id>` reports live status, `GET /v1/flares` lists
+//! recent flares; the blocking `POST /v1/flare` remains for simple clients.
 
 pub mod controller;
 pub mod db;
@@ -8,8 +36,10 @@ pub mod http;
 pub mod invoker;
 pub mod pack;
 pub mod packing;
+pub mod queue;
 
 pub use controller::{Controller, FlareOptions, FlareResult};
-pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, WorkFn};
+pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, FlareStatus, WorkFn};
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
 pub use packing::{plan, PackSpec, PackingStrategy};
+pub use queue::{place_with_spillback, FlareHandle, FlareQueue};

@@ -22,6 +22,9 @@ use crate::util::timing::Stopwatch;
 /// Timeline convention: worker `Work` spans start at their *modeled*
 /// readiness (`startup.worker_ready_s`) and last their *measured* work
 /// duration, so invocation skew (modeled) composes with real execution.
+/// `queue_wait_s` (measured time the flare waited for capacity) shifts the
+/// whole flare and is recorded as a `Queue` phase per worker, making
+/// queueing delay visible in experiment timelines.
 pub fn run_flare_packs(
     packs: &[PackSpec],
     fabric: &Arc<CommFabric>,
@@ -29,6 +32,7 @@ pub fn run_flare_packs(
     params: &[Json],
     startup: &ModeledStartup,
     timeline: &Timeline,
+    queue_wait_s: f64,
 ) -> Result<Vec<Json>> {
     let burst_size: usize = packs.iter().map(|p| p.workers.len()).sum();
     if params.len() != burst_size {
@@ -48,13 +52,23 @@ pub fn run_flare_packs(
                 handles.push((
                     w,
                     s.spawn(move || {
+                        if queue_wait_s > 0.0 {
+                            timeline.record(TimelineEvent {
+                                worker_id: w,
+                                pack_id,
+                                invoker_id,
+                                phase: Phase::Queue,
+                                start_s: 0.0,
+                                end_s: queue_wait_s,
+                            });
+                        }
                         timeline.record(TimelineEvent {
                             worker_id: w,
                             pack_id,
                             invoker_id,
                             phase: Phase::Startup,
-                            start_s: 0.0,
-                            end_s: ready,
+                            start_s: queue_wait_s,
+                            end_s: queue_wait_s + ready,
                         });
                         let _ = pack_ready;
                         let ctx = BurstContext::new(w, fabric);
@@ -65,8 +79,8 @@ pub fn run_flare_packs(
                             pack_id,
                             invoker_id,
                             phase: Phase::Work,
-                            start_s: ready,
-                            end_s: ready + sw.secs(),
+                            start_s: queue_wait_s + ready,
+                            end_s: queue_wait_s + ready + sw.secs(),
                         });
                         out
                     }),
@@ -130,14 +144,39 @@ mod tests {
         let params: Vec<Json> = (0..8).map(|i| Json::Num(i as f64)).collect();
         let timeline = Timeline::new();
         let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline).unwrap();
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
+                .unwrap();
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.get("w").unwrap().as_usize(), Some(i));
             assert_eq!(o.get("in").unwrap().as_f64(), Some(i as f64));
         }
-        // Timeline has a Startup and a Work event per worker.
+        // Timeline has a Startup and a Work event per worker; no Queue
+        // events for a flare that never waited.
         assert_eq!(timeline.phase_starts(Phase::Work).len(), 8);
         assert_eq!(timeline.phase_starts(Phase::Startup).len(), 8);
+        assert!(timeline.phase_starts(Phase::Queue).is_empty());
+    }
+
+    #[test]
+    fn queue_wait_shifts_timeline_and_records_queue_phase() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 1.5)
+            .unwrap();
+        let queue = timeline.phase_durations(Phase::Queue);
+        assert_eq!(queue.len(), 4);
+        assert!(queue.iter().all(|&d| (d - 1.5).abs() < 1e-9));
+        // Startup begins where queueing ends; Work begins at shifted ready.
+        assert!(timeline
+            .phase_starts(Phase::Startup)
+            .iter()
+            .all(|&s| (s - 1.5).abs() < 1e-9));
+        for (w, &s) in timeline.phase_starts(Phase::Work).iter().enumerate() {
+            let _ = w; // starts are unordered; only the shift floor matters
+            assert!(s >= 1.5);
+        }
     }
 
     #[test]
@@ -151,7 +190,8 @@ mod tests {
         let params = vec![Json::Null; 6];
         let timeline = Timeline::new();
         let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline).unwrap();
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
+                .unwrap();
         assert!(out.iter().all(|o| o.as_f64() == Some(64.0)));
     }
 
@@ -167,7 +207,7 @@ mod tests {
         });
         let params = vec![Json::Null; 4];
         let timeline = Timeline::new();
-        let err = run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline)
+        let err = run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
             .unwrap_err();
         assert!(err.to_string().contains("worker 2"), "{err}");
     }
@@ -177,6 +217,8 @@ mod tests {
         let (packs, fabric, startup) = setup(4, 2);
         let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
         let timeline = Timeline::new();
-        assert!(run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline).is_err());
+        assert!(
+            run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline, 0.0).is_err()
+        );
     }
 }

@@ -81,6 +81,50 @@ fn flare_options_over_http() {
 }
 
 #[test]
+fn async_flare_lifecycle_over_http() {
+    let (_srv, addr, env) = server();
+    apps::kmeans::generate(&env, "async", 4, 7);
+    let deploy = Json::parse(
+        r#"{"name":"akm","work":"kmeans","conf":{"granularity":2,"strategy":"homogeneous"}}"#,
+    )
+    .unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+    // Submit asynchronously: 202 semantics → id + live status back at once.
+    let flare = Json::obj(vec![
+        ("def", "akm".into()),
+        (
+            "params",
+            Json::Arr(vec![
+                Json::obj(vec![("job", "async".into()), ("iters", 2.into())]);
+                4
+            ]),
+        ),
+    ]);
+    let r = http_request(&addr, "POST", "/v1/flares", Some(&flare)).unwrap();
+    let id = r.get("flare_id").unwrap().as_str().unwrap().to_string();
+
+    // Poll the status route until the flare completes.
+    let mut rec = Json::Null;
+    for _ in 0..2_000 {
+        rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+        if rec.str_or("status", "") == "completed" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(rec.str_or("status", ""), "completed", "{rec}");
+    assert_eq!(rec.get("outputs").unwrap().as_arr().unwrap().len(), 4);
+    assert!(
+        rec.get("metadata").unwrap().get("queue_wait_s").unwrap().as_f64().unwrap() >= 0.0
+    );
+
+    // And it shows up in the recent-flares listing.
+    let list = http_request(&addr, "GET", "/v1/flares", None).unwrap();
+    assert!(list.as_arr().unwrap().iter().any(|f| f.str_or("flare_id", "") == id));
+}
+
+#[test]
 fn concurrent_http_clients() {
     let (_srv, addr, env) = server();
     apps::gridsearch::generate(&env, "chc", 5, 0);

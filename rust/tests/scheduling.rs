@@ -1,0 +1,205 @@
+//! Integration tests for the flare scheduling pipeline: queueing under a
+//! saturated pool, concurrent flares against one `InvokerPool`, backfill
+//! semantics, and capacity hygiene on worker failure. These use plain
+//! registered work functions (no app datasets), gated by condvars so the
+//! tests control exactly when capacity frees.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+use burstc::platform::{
+    register_work, BurstConfig, Controller, FlareOptions, FlareStatus, WorkFn,
+};
+use burstc::util::json::Json;
+
+/// A gate every worker of a flare blocks on until the test opens it.
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn work(gate: &Arc<Gate>) -> WorkFn {
+        let gate = gate.clone();
+        Arc::new(move |_p, _ctx| {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            let mut open = gate.open.lock().unwrap();
+            while !*open {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("gate never opened (test hang guard)"));
+                }
+                let (guard, _) = gate
+                    .cv
+                    .wait_timeout(open, Duration::from_millis(100))
+                    .unwrap();
+                open = guard;
+            }
+            Ok(Json::Null)
+        })
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+fn noop() -> WorkFn {
+    Arc::new(|_p, _ctx| Ok(Json::Null))
+}
+
+fn hetero() -> BurstConfig {
+    BurstConfig { strategy: "heterogeneous".into(), ..Default::default() }
+}
+
+/// Poll the db-backed status until it matches (or the timeout lapses).
+fn wait_status(c: &Controller, id: &str, want: FlareStatus) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if c.flare_status(id) == Some(want) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+/// Acceptance: a flare submitted while the pool is saturated returns an id
+/// immediately, is observable as `queued`, and completes once capacity
+/// frees.
+#[test]
+fn saturated_pool_queues_then_runs_second_flare() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gated", Gate::work(&gate));
+    let c = Controller::test_platform(1, 8, 1e-6);
+    c.deploy("sat", "sched-gated", hetero()).unwrap();
+
+    // Flare A fills the single invoker and parks on the gate.
+    let ha = c.submit_flare("sat", vec![Json::Null; 8], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    assert_eq!(c.pool.free_vcpus(), vec![0]);
+
+    // Flare B: submit returns immediately with an id; it must sit queued.
+    let hb = c.submit_flare("sat", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+    assert!(!hb.is_finished());
+
+    // Capacity frees → B is placed and completes.
+    gate.open();
+    let ra = ha.wait().unwrap();
+    let rb = hb.wait().unwrap();
+    assert_eq!(ra.outputs.len(), 8);
+    assert_eq!(rb.outputs.len(), 4);
+    // B measurably waited in the queue, and the wait is on its timeline.
+    assert!(rb.queue_wait_s >= 0.1, "queue wait {}", rb.queue_wait_s);
+    let queue_spans = rb.timeline.phase_durations(burstc::metrics::Phase::Queue);
+    assert_eq!(queue_spans.len(), 4);
+    assert!(queue_spans.iter().all(|&d| d >= 0.1));
+    assert_eq!(c.flare_status(&ra.flare_id), Some(FlareStatus::Completed));
+    assert_eq!(c.flare_status(&rb.flare_id), Some(FlareStatus::Completed));
+    assert_eq!(c.pool.free_vcpus(), vec![8]);
+}
+
+/// Satellite: N threads submitting flares against a small pool — all
+/// complete, and capacity is fully released at the end.
+#[test]
+fn concurrent_flares_all_complete_and_release_capacity() {
+    register_work("sched-noop", noop());
+    let c = Controller::test_platform(2, 8, 1e-6);
+    c.deploy("cc", "sched-noop", hetero()).unwrap();
+    // 8 threads × 4 workers = 32 vCPU-demand against 16 vCPUs: queueing is
+    // forced, every flare must still complete exactly once.
+    let ids = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                let r = c
+                    .flare("cc", vec![Json::Null; 4], &FlareOptions::default())
+                    .unwrap();
+                assert_eq!(r.outputs.len(), 4);
+                ids.lock().unwrap().push(r.flare_id);
+            });
+        }
+    });
+    let mut ids = ids.into_inner().unwrap();
+    assert_eq!(ids.len(), 8);
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 8, "flare ids must be unique");
+    assert_eq!(c.pool.free_vcpus(), vec![8, 8]);
+}
+
+/// Satellite: a worker failure fails the flare but leaks no reservation.
+#[test]
+fn worker_failure_releases_capacity_and_marks_failed() {
+    let failing: WorkFn = Arc::new(|_p, ctx| {
+        if ctx.worker_id == 1 {
+            Err(anyhow!("injected worker fault"))
+        } else {
+            Ok(Json::Null)
+        }
+    });
+    register_work("sched-faulty", failing);
+    register_work("sched-healthy", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("bad", "sched-faulty", hetero()).unwrap();
+    c.deploy("good", "sched-healthy", hetero()).unwrap();
+
+    let h = c.submit_flare("bad", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    let id = h.flare_id.clone();
+    let err = h.wait().unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "{err}");
+    let rec = c.db.get_flare(&id).unwrap();
+    assert_eq!(rec.status, FlareStatus::Failed);
+    assert!(rec.error.unwrap().contains("worker 1"));
+
+    // Nothing leaked: the full pool is immediately usable again.
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+    let r = c.flare("good", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert_eq!(r.outputs.len(), 4);
+}
+
+/// Satellite: backfill lets a fitting flare pass a blocked larger one, and
+/// the blocked one still runs once capacity frees (no starvation).
+#[test]
+fn backfill_passes_blocked_flare_without_starving_it() {
+    let gate_a = Arc::new(Gate::default());
+    let gate_c = Arc::new(Gate::default());
+    register_work("sched-gate-a", Gate::work(&gate_a));
+    register_work("sched-gate-c", Gate::work(&gate_c));
+    register_work("sched-open", noop());
+    let c = Controller::test_platform(1, 8, 1e-6);
+    c.deploy("a", "sched-gate-a", hetero()).unwrap();
+    c.deploy("b", "sched-open", hetero()).unwrap();
+    c.deploy("cf", "sched-gate-c", hetero()).unwrap();
+
+    // A occupies 6 of 8 vCPUs and parks.
+    let ha = c.submit_flare("a", vec![Json::Null; 6], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+
+    // B needs the whole machine: admitted (≤ total capacity) but queued.
+    let hb = c.submit_flare("b", vec![Json::Null; 8], &FlareOptions::default()).unwrap();
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+
+    // C fits in the 2 free vCPUs: backfill runs it past blocked B.
+    let hc = c.submit_flare("cf", vec![Json::Null; 2], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &hc.flare_id, FlareStatus::Running));
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+
+    // C finishes; B still blocked on A's 6 vCPUs.
+    gate_c.open();
+    hc.wait().unwrap();
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+
+    // A finishes → the blocked flare finally runs to completion.
+    gate_a.open();
+    ha.wait().unwrap();
+    let rb = hb.wait().unwrap();
+    assert_eq!(rb.outputs.len(), 8);
+    assert!(rb.queue_wait_s > 0.0);
+    assert_eq!(c.pool.free_vcpus(), vec![8]);
+}
