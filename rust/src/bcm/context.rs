@@ -20,11 +20,14 @@ use anyhow::{anyhow, Result};
 use super::chunk::Op;
 use super::fabric::CommFabric;
 use super::mailbox::Bytes;
+use crate::util::cancel::CancelToken;
 
 /// Per-worker burst context.
 pub struct BurstContext {
     pub worker_id: usize,
     fabric: Arc<CommFabric>,
+    /// The flare's shared kill switch (cooperative cancellation points).
+    cancel: CancelToken,
     /// Per-destination send counters (at-least-once bookkeeping, §4.5).
     send_ctrs: Mutex<HashMap<(Op, usize), u64>>,
     /// Per-source receive counters.
@@ -36,12 +39,41 @@ pub struct BurstContext {
 
 impl BurstContext {
     pub fn new(worker_id: usize, fabric: Arc<CommFabric>) -> BurstContext {
+        BurstContext::with_cancel(worker_id, fabric, CancelToken::new())
+    }
+
+    /// A context wired to a flare's shared cancellation token.
+    pub fn with_cancel(
+        worker_id: usize,
+        fabric: Arc<CommFabric>,
+        cancel: CancelToken,
+    ) -> BurstContext {
         BurstContext {
             worker_id,
             fabric,
+            cancel,
             send_ctrs: Mutex::new(HashMap::new()),
             recv_ctrs: Mutex::new(HashMap::new()),
             coll_ctr: AtomicU64::new(0),
+        }
+    }
+
+    // --- cooperative cancellation ---
+
+    /// Has this worker's flare been cancelled? Long-running `work`
+    /// functions should poll this (or [`BurstContext::check_cancel`]) so a
+    /// kill request releases the flare's reservation promptly.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Cooperative cancellation point: error out of the `work` function if
+    /// the flare was cancelled.
+    pub fn check_cancel(&self) -> Result<()> {
+        if self.cancel.is_cancelled() {
+            Err(anyhow!("flare cancelled"))
+        } else {
+            Ok(())
         }
     }
 

@@ -4,8 +4,10 @@
 //!   serve       start the controller's HTTP API (deploy/flare endpoints)
 //!   deploy      deploy a burst definition against a running server
 //!   flare       invoke a burst against a running server (--nowait to queue
-//!               asynchronously and get the flare id back immediately)
+//!               asynchronously and get the flare id back immediately;
+//!               --tenant/--priority route it through fair-share scheduling)
 //!   status      live status of a submitted flare
+//!   cancel      cancel a queued or running flare
 //!   flares      list recent flares and their statuses
 //!   apps        list registered work functions
 //!   experiment  regenerate a paper table/figure (or `all`)
@@ -14,8 +16,9 @@
 //!   burstctl serve --port 8090 --invokers 4 --vcpus 48
 //!   burstctl deploy --addr 127.0.0.1:8090 --name pr --work pagerank --granularity 16
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 16 --param-json '{"job":"demo"}'
-//!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 960 --nowait
+//!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 960 --nowait --tenant acme --priority high
 //!   burstctl status --addr 127.0.0.1:8090 --id pr-3
+//!   burstctl cancel --addr 127.0.0.1:8090 --id pr-3
 //!   burstctl experiment fig10 --quick
 
 use anyhow::{anyhow, Result};
@@ -31,14 +34,16 @@ use burstc::storage::ObjectStore;
 use burstc::util::cli::Args;
 use burstc::util::json::Json;
 
-const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|flares|apps|experiment> [options]
+const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|apps|experiment> [options]
   serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
               [--http-workers 8]
   deploy      --addr HOST:PORT --name NAME --work WORK
               [--granularity N] [--strategy mixed] [--backend dragonfly]
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
               [--granularity N] [--faas] [--nowait]
+              [--tenant NAME] [--priority low|normal|high]
   status      --addr HOST:PORT --id FLARE_ID
+  cancel      --addr HOST:PORT --id FLARE_ID
   flares      --addr HOST:PORT
   apps        (lists registered work functions)
   experiment  <table1|fig1|fig5|fig6|fig7|fig8a|fig8b|fig9|table3|fig10|table4|fig11|all>
@@ -67,6 +72,7 @@ fn run() -> Result<()> {
         Some("deploy") => deploy(&args),
         Some("flare") => flare(&args),
         Some("status") => status(&args),
+        Some("cancel") => cancel(&args),
         Some("flares") => flares(&args),
         Some("apps") => {
             build_env(1.0)?;
@@ -146,6 +152,12 @@ fn flare(args: &Args) -> Result<()> {
     if args.flag("faas") {
         options.push(("faas", Json::Bool(true)));
     }
+    if let Some(t) = args.get("tenant") {
+        options.push(("tenant", t.into()));
+    }
+    if let Some(p) = args.get("priority") {
+        options.push(("priority", p.into()));
+    }
     let body = Json::obj(vec![
         ("def", def.into()),
         ("params", Json::Arr(vec![param; size])),
@@ -162,6 +174,14 @@ fn status(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
     let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?;
     let r = http_request(addr, "GET", &format!("/v1/flares/{id}"), None)?;
+    println!("{r}");
+    Ok(())
+}
+
+fn cancel(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?;
+    let r = http_request(addr, "DELETE", &format!("/v1/flares/{id}"), None)?;
     println!("{r}");
     Ok(())
 }

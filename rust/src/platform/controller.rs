@@ -5,7 +5,15 @@
 //! `submit_flare` admits (validates against *total* cluster capacity) and
 //! queues without blocking; the scheduler thread places and runs each flare
 //! on its own execution thread; `flare` is a thin submit-and-wait wrapper.
+//!
+//! Every flare belongs to a *tenant* lane with a *priority* class
+//! ([`FlareOptions::tenant`] / [`FlareOptions::priority`]) and can be
+//! killed through [`Controller::cancel_flare`]: queued flares are pulled
+//! out before placement and their waiters fail fast; running flares have
+//! their [`CancelToken`] tripped, which the execution path observes at
+//! phase boundaries so the reservation is released promptly.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -17,13 +25,15 @@ use super::invoker::{model_startup, InvokerPool, ModeledStartup};
 use super::pack::run_flare_packs;
 use super::packing::{plan, PackSpec, PackingStrategy};
 use super::queue::{
-    scheduler_loop, FlareHandle, QueuedFlare, ResultSlot, SchedState, MAX_BACKFILL_PASSES,
+    scheduler_loop, FlareHandle, Priority, QueuedFlare, ResultSlot, SchedState,
+    DEFAULT_TENANT, MAX_BACKFILL_PASSES,
 };
 use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::ClusterSpec;
 use crate::metrics::{Timeline, TrafficStats};
+use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
@@ -39,6 +49,11 @@ pub struct FlareOptions {
     /// Run as a FaaS baseline: forces granularity 1 and independent
     /// per-worker invocations (arrival skew + per-container code load).
     pub faas: bool,
+    /// Fair-share tenant lane (defaults to [`DEFAULT_TENANT`]).
+    pub tenant: Option<String>,
+    /// Priority class name within the tenant: `low` | `normal` | `high`
+    /// (validated at submit; defaults to `normal`).
+    pub priority: Option<String>,
 }
 
 impl FlareOptions {
@@ -48,9 +63,53 @@ impl FlareOptions {
             strategy: j.get("strategy").and_then(Json::as_str).map(str::to_string),
             backend: j.get("backend").and_then(Json::as_str).and_then(BackendKind::parse),
             faas: j.get("faas").and_then(Json::as_bool).unwrap_or(false),
+            tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
+            priority: j.get("priority").and_then(Json::as_str).map(str::to_string),
         }
     }
 }
+
+/// What `Controller::cancel_flare` did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The flare was still queued: removed before placement, waiter failed
+    /// fast, terminal `Cancelled` status recorded.
+    CancelledQueued,
+    /// The flare was running: its token is tripped and the workers stop at
+    /// the next cancellation point, releasing the reservation.
+    CancellingRunning,
+}
+
+impl CancelOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CancelOutcome::CancelledQueued => "cancelled",
+            CancelOutcome::CancellingRunning => "cancelling",
+        }
+    }
+}
+
+/// Why a cancel request was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelError {
+    /// No flare with this id exists (never submitted, or evicted).
+    NotFound,
+    /// The flare already reached a terminal state — nothing left to kill.
+    AlreadyTerminal(FlareStatus),
+}
+
+impl std::fmt::Display for CancelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CancelError::NotFound => write!(f, "flare not found"),
+            CancelError::AlreadyTerminal(s) => {
+                write!(f, "flare already {} — nothing to cancel", s.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for CancelError {}
 
 /// Result of one flare.
 pub struct FlareResult {
@@ -104,6 +163,8 @@ pub struct Controller {
     /// Shared with the scheduler thread and flare execution threads.
     sched: Arc<SchedState>,
     sched_thread: Mutex<Option<JoinHandle<()>>>,
+    /// Cancel tokens of every non-terminal flare, by id (the kill path).
+    cancels: Mutex<HashMap<String, CancelToken>>,
 }
 
 impl Controller {
@@ -128,6 +189,7 @@ impl Controller {
                 next_flare: AtomicU64::new(1),
                 sched,
                 sched_thread: Mutex::new(Some(handle)),
+                cancels: Mutex::new(HashMap::new()),
             }
         })
     }
@@ -202,6 +264,13 @@ impl Controller {
                 .ok_or_else(|| anyhow!("unknown packing strategy '{strategy_name}'"))?
         };
         let backend_kind = opts.backend.unwrap_or(def.conf.backend);
+        let tenant = opts.tenant.clone().unwrap_or_else(|| DEFAULT_TENANT.to_string());
+        let priority = match &opts.priority {
+            Some(p) => Priority::parse(p).ok_or_else(|| {
+                anyhow!("unknown priority '{p}' (expected low | normal | high)")
+            })?,
+            None => Priority::Normal,
+        };
 
         // Admission: a flare that cannot be placed on an *idle* cluster can
         // never run, so reject it now — distinct from "busy, queued".
@@ -221,8 +290,11 @@ impl Controller {
             def_name,
             self.next_flare.fetch_add(1, Ordering::Relaxed)
         );
-        self.db.put_flare(FlareRecord::queued(&flare_id, def_name));
+        self.db
+            .put_flare(FlareRecord::queued(&flare_id, def_name, &tenant, priority));
         let slot = Arc::new(ResultSlot::new());
+        let cancel = CancelToken::new();
+        self.cancels.lock().unwrap().insert(flare_id.clone(), cancel.clone());
         self.sched.queue.lock().unwrap().push(QueuedFlare {
             flare_id: flare_id.clone(),
             def_name: def_name.to_string(),
@@ -233,6 +305,9 @@ impl Controller {
             backend: backend_kind,
             chunk_size: def.conf.chunk_size,
             faas: opts.faas,
+            tenant,
+            priority,
+            cancel,
             slot: slot.clone(),
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
@@ -263,6 +338,59 @@ impl Controller {
         self.sched.queue.lock().unwrap().len()
     }
 
+    /// Queue depth per tenant (lanes with pending flares only, by name).
+    pub fn queued_by_tenant(&self) -> Vec<(String, usize)> {
+        self.sched.queue.lock().unwrap().depth_by_tenant()
+    }
+
+    /// Set a tenant's fair-share weight (a weight-2 lane is entitled to
+    /// twice the placed vCPUs of a weight-1 lane).
+    pub fn set_tenant_weight(&self, tenant: &str, weight: f64) {
+        self.sched.queue.lock().unwrap().set_tenant_weight(tenant, weight);
+    }
+
+    /// Drop a terminal flare's cancel token from the kill-path registry.
+    fn clear_cancel(&self, flare_id: &str) {
+        self.cancels.lock().unwrap().remove(flare_id);
+    }
+
+    /// The kill path (`DELETE /v1/flares/<id>`). A queued flare is removed
+    /// before it can be placed and its waiter fails fast; a running flare
+    /// has its [`CancelToken`] tripped, which `run_flare_packs` and
+    /// `BurstContext` observe cooperatively at phase boundaries so the
+    /// reservation is released promptly. Cancelling a terminal flare is a
+    /// conflict, an unknown id is not found.
+    pub fn cancel_flare(&self, flare_id: &str) -> Result<CancelOutcome, CancelError> {
+        // Fast path: still queued → pull it out before it is ever placed.
+        let queued = self.sched.queue.lock().unwrap().remove(flare_id);
+        if let Some(job) = queued {
+            job.cancel.cancel();
+            self.db.update_flare(flare_id, |r| {
+                r.status = FlareStatus::Cancelled;
+                r.error = Some("cancelled while queued".into());
+            });
+            self.clear_cancel(flare_id);
+            // A cancelled flare frees its (virtual) spot: re-scan the queue.
+            self.sched.wake();
+            job.slot
+                .deliver(Err(anyhow!("flare '{flare_id}' cancelled while queued")));
+            return Ok(CancelOutcome::CancelledQueued);
+        }
+        // Placed (or being placed): trip the token; the execution thread
+        // observes it at the next phase boundary / cancellation point.
+        let token = self.cancels.lock().unwrap().get(flare_id).cloned();
+        match token {
+            Some(t) => {
+                t.cancel();
+                Ok(CancelOutcome::CancellingRunning)
+            }
+            None => match self.db.get_flare(flare_id) {
+                Some(rec) => Err(CancelError::AlreadyTerminal(rec.status)),
+                None => Err(CancelError::NotFound),
+            },
+        }
+    }
+
     /// Run a placed flare on its own thread (pipeline stage execute). The
     /// pack reservation is already held; it is released when work ends,
     /// then the scheduler is woken to place queued flares into the freed
@@ -284,6 +412,20 @@ impl Controller {
         let payload2 = payload.clone();
         let spawned = std::thread::Builder::new().name(name).spawn(move || {
             let (job, packs) = payload2.lock().unwrap().take().expect("payload set");
+            // Cancel raced the pop→spawn window: release untouched capacity
+            // and finish as `Cancelled` without ever starting the packs.
+            if job.cancel.is_cancelled() {
+                c.pool.release(&packs);
+                let e = anyhow!("flare '{}' cancelled before placement", job.flare_id);
+                c.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Cancelled;
+                    r.error = Some(e.to_string());
+                });
+                c.clear_cancel(&job.flare_id);
+                sched.wake();
+                job.slot.deliver(Err(e));
+                return;
+            }
             let queue_wait_s = job.submitted.secs();
             c.db.set_flare_status(&job.flare_id, FlareStatus::Running);
             // A panic must neither strand the waiter in `wait()` nor
@@ -299,6 +441,7 @@ impl Controller {
                 });
                 Err(e)
             });
+            c.clear_cancel(&job.flare_id);
             sched.wake();
             job.slot.deliver(result);
         });
@@ -313,6 +456,10 @@ impl Controller {
                     r.status = FlareStatus::Failed;
                     r.error = Some(e.to_string());
                 });
+                this.clear_cancel(&job.flare_id);
+                // The freed capacity must reach queued flares now, not at
+                // the scheduler's next poll timeout.
+                this.sched.wake();
                 job.slot.deliver(Err(e));
             }
         }
@@ -331,7 +478,7 @@ impl Controller {
             pool: &'a InvokerPool,
             packs: Option<Vec<PackSpec>>,
         }
-        impl<'a> ReleaseOnDrop<'a> {
+        impl ReleaseOnDrop<'_> {
             fn release_now(&mut self) -> Vec<PackSpec> {
                 let packs = self.packs.take().expect("released once");
                 self.pool.release(&packs);
@@ -375,6 +522,7 @@ impl Controller {
             &startup,
             &timeline,
             queue_wait_s,
+            &job.cancel,
         );
         let work_wall_s = sw.secs();
         fabric.teardown();
@@ -400,8 +548,15 @@ impl Controller {
                 Ok(res)
             }
             Err(e) => {
+                // A failure caused by the kill path is `Cancelled`, not
+                // `Failed` — the distinction is terminal and observable.
+                let status = if job.cancel.is_cancelled() {
+                    FlareStatus::Cancelled
+                } else {
+                    FlareStatus::Failed
+                };
                 self.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Failed;
+                    r.status = status;
                     r.error = Some(e.to_string());
                 });
                 Err(e)
@@ -615,5 +770,45 @@ mod tests {
     fn unknown_definition_rejected() {
         let c = Controller::test_platform(1, 4, 1e-6);
         assert!(c.flare("ghost", vec![Json::Null], &FlareOptions::default()).is_err());
+    }
+
+    #[test]
+    fn tenant_and_priority_recorded_and_validated() {
+        register_echo();
+        let c = Controller::test_platform(1, 8, 1e-6);
+        c.deploy("tp", "ctrl-echo", BurstConfig::default()).unwrap();
+        let opts = FlareOptions {
+            tenant: Some("acme".into()),
+            priority: Some("high".into()),
+            ..Default::default()
+        };
+        let r = c.flare("tp", vec![Json::Null; 2], &opts).unwrap();
+        let rec = c.db.get_flare(&r.flare_id).unwrap();
+        assert_eq!(rec.tenant, "acme");
+        assert_eq!(rec.priority, crate::platform::queue::Priority::High);
+        // A bogus priority is an admission error, named in the message.
+        let bad = FlareOptions { priority: Some("urgent".into()), ..Default::default() };
+        let err = c.flare("tp", vec![Json::Null; 2], &bad).unwrap_err().to_string();
+        assert!(err.contains("unknown priority 'urgent'"), "{err}");
+    }
+
+    #[test]
+    fn cancel_unknown_flare_is_not_found() {
+        let c = Controller::test_platform(1, 4, 1e-6);
+        assert_eq!(c.cancel_flare("ghost-1"), Err(CancelError::NotFound));
+    }
+
+    #[test]
+    fn cancel_after_terminal_is_a_conflict() {
+        register_echo();
+        let c = Controller::test_platform(1, 8, 1e-6);
+        c.deploy("done", "ctrl-echo", BurstConfig::default()).unwrap();
+        let r = c.flare("done", vec![Json::Null; 2], &FlareOptions::default()).unwrap();
+        assert_eq!(
+            c.cancel_flare(&r.flare_id),
+            Err(CancelError::AlreadyTerminal(FlareStatus::Completed))
+        );
+        // The record still says completed — cancel did not clobber it.
+        assert_eq!(c.flare_status(&r.flare_id), Some(FlareStatus::Completed));
     }
 }

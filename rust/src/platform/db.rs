@@ -4,14 +4,23 @@
 //! Because burst `work` functions are compiled Rust (not uploaded archives),
 //! "deployment" registers a definition that names a work function from the
 //! process-wide work registry — the stand-in for OpenWhisk's package upload.
+//!
+//! Flare records (with their full outputs) are kept subject to a retention
+//! cap: once more than [`DEFAULT_FLARE_RETENTION`] *terminal* records exist
+//! the oldest terminal ones are evicted, so a long-lived server does not
+//! leak memory. Queued and running records are never evicted.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
+use super::queue::Priority;
 use crate::bcm::{BackendKind, BurstContext};
 use crate::util::json::Json;
+
+/// Default cap on retained *terminal* flare records (oldest evicted first).
+pub const DEFAULT_FLARE_RETENTION: usize = 4096;
 
 /// The `work` function signature (paper Table 2): every worker runs it with
 /// its input parameters and the burst context.
@@ -91,6 +100,8 @@ pub enum FlareStatus {
     Completed,
     /// A worker (or the placement) failed; see `error`.
     Failed,
+    /// Killed through `Controller::cancel_flare` before completing.
+    Cancelled,
 }
 
 impl FlareStatus {
@@ -100,12 +111,16 @@ impl FlareStatus {
             FlareStatus::Running => "running",
             FlareStatus::Completed => "completed",
             FlareStatus::Failed => "failed",
+            FlareStatus::Cancelled => "cancelled",
         }
     }
 
     /// Terminal states never change again.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, FlareStatus::Completed | FlareStatus::Failed)
+        matches!(
+            self,
+            FlareStatus::Completed | FlareStatus::Failed | FlareStatus::Cancelled
+        )
     }
 }
 
@@ -114,19 +129,30 @@ impl FlareStatus {
 pub struct FlareRecord {
     pub flare_id: String,
     pub def_name: String,
+    /// Fair-share tenant lane the flare was accounted to.
+    pub tenant: String,
+    /// Scheduling priority class within the tenant.
+    pub priority: Priority,
     pub status: FlareStatus,
     pub outputs: Vec<Json>,
     pub metadata: Json,
-    /// Failure description when `status` is `Failed`.
+    /// Failure description when `status` is `Failed` or `Cancelled`.
     pub error: Option<String>,
 }
 
 impl FlareRecord {
     /// A fresh record for a just-admitted flare.
-    pub fn queued(flare_id: &str, def_name: &str) -> FlareRecord {
+    pub fn queued(
+        flare_id: &str,
+        def_name: &str,
+        tenant: &str,
+        priority: Priority,
+    ) -> FlareRecord {
         FlareRecord {
             flare_id: flare_id.to_string(),
             def_name: def_name.to_string(),
+            tenant: tenant.to_string(),
+            priority,
             status: FlareStatus::Queued,
             outputs: Vec::new(),
             metadata: Json::Null,
@@ -138,6 +164,8 @@ impl FlareRecord {
         let mut fields = vec![
             ("flare_id", Json::Str(self.flare_id.clone())),
             ("def", Json::Str(self.def_name.clone())),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("priority", self.priority.name().into()),
             ("status", self.status.name().into()),
             ("metadata", self.metadata.clone()),
             ("outputs", Json::Arr(self.outputs.clone())),
@@ -179,16 +207,60 @@ pub fn registered_work_names() -> Vec<String> {
 }
 
 /// The platform database.
-#[derive(Default)]
 pub struct BurstDb {
     defs: Mutex<HashMap<String, BurstDefinition>>,
     /// Records plus submission order (for `list_flares`, newest first).
     flares: Mutex<(HashMap<String, FlareRecord>, Vec<String>)>,
+    /// Retention cap on terminal records (oldest evicted first); live
+    /// (queued/running) records never count against it.
+    retain_terminal: usize,
+}
+
+impl Default for BurstDb {
+    fn default() -> BurstDb {
+        BurstDb::with_retention(DEFAULT_FLARE_RETENTION)
+    }
 }
 
 impl BurstDb {
     pub fn new() -> BurstDb {
         BurstDb::default()
+    }
+
+    /// A database keeping at most `retain_terminal` terminal flare records.
+    pub fn with_retention(retain_terminal: usize) -> BurstDb {
+        BurstDb {
+            defs: Mutex::new(HashMap::new()),
+            flares: Mutex::new((HashMap::new(), Vec::new())),
+            retain_terminal,
+        }
+    }
+
+    /// Evict the oldest terminal records beyond the retention cap. Called
+    /// with the flare lock held, whenever a record is added or becomes
+    /// terminal.
+    fn evict_excess_terminal(
+        map: &mut HashMap<String, FlareRecord>,
+        order: &mut Vec<String>,
+        cap: usize,
+    ) {
+        let terminal = order
+            .iter()
+            .filter(|id| map.get(*id).is_some_and(|r| r.status.is_terminal()))
+            .count();
+        let mut excess = terminal.saturating_sub(cap);
+        if excess == 0 {
+            return;
+        }
+        order.retain(|id| {
+            if excess > 0 && map.get(id).is_some_and(|r| r.status.is_terminal()) {
+                map.remove(id);
+                excess -= 1;
+                false
+            } else {
+                true
+            }
+        });
     }
 
     pub fn deploy(&self, def: BurstDefinition) -> Result<()> {
@@ -215,8 +287,14 @@ impl BurstDb {
 
     pub fn put_flare(&self, rec: FlareRecord) {
         let mut flares = self.flares.lock().unwrap();
-        if flares.0.insert(rec.flare_id.clone(), rec.clone()).is_none() {
-            flares.1.push(rec.flare_id);
+        let (map, order) = &mut *flares;
+        let terminal = rec.status.is_terminal();
+        let id = rec.flare_id.clone();
+        if map.insert(id.clone(), rec).is_none() {
+            order.push(id);
+        }
+        if terminal {
+            Self::evict_excess_terminal(map, order, self.retain_terminal);
         }
     }
 
@@ -227,8 +305,15 @@ impl BurstDb {
     /// Apply a mutation to an existing flare record (status transitions,
     /// attaching outputs). No-op if the id is unknown.
     pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) {
-        if let Some(rec) = self.flares.lock().unwrap().0.get_mut(id) {
+        let mut flares = self.flares.lock().unwrap();
+        let (map, order) = &mut *flares;
+        let mut became_terminal = false;
+        if let Some(rec) = map.get_mut(id) {
             f(rec);
+            became_terminal = rec.status.is_terminal();
+        }
+        if became_terminal {
+            Self::evict_excess_terminal(map, order, self.retain_terminal);
         }
     }
 
@@ -313,21 +398,25 @@ mod tests {
         assert_eq!(c2.chunk_size, 4096);
     }
 
+    fn queued(id: &str) -> FlareRecord {
+        FlareRecord::queued(id, "d", "default", Priority::Normal)
+    }
+
     #[test]
     fn flare_records() {
         let db = BurstDb::new();
-        db.put_flare(FlareRecord {
-            outputs: vec![Json::Num(1.0)],
-            ..FlareRecord::queued("f1", "d")
-        });
-        assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Queued);
+        db.put_flare(FlareRecord { outputs: vec![Json::Num(1.0)], ..queued("f1") });
+        let rec = db.get_flare("f1").unwrap();
+        assert_eq!(rec.status, FlareStatus::Queued);
+        assert_eq!(rec.tenant, "default");
+        assert_eq!(rec.priority, Priority::Normal);
         assert!(db.get_flare("f2").is_none());
     }
 
     #[test]
     fn flare_status_lifecycle() {
         let db = BurstDb::new();
-        db.put_flare(FlareRecord::queued("f1", "d"));
+        db.put_flare(queued("f1"));
         db.set_flare_status("f1", FlareStatus::Running);
         assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Running);
         db.update_flare("f1", |r| {
@@ -337,6 +426,9 @@ mod tests {
         let rec = db.get_flare("f1").unwrap();
         assert!(rec.status.is_terminal());
         assert_eq!(rec.error.as_deref(), Some("worker 3: boom"));
+        // Cancelled is terminal too, and serializes as such.
+        assert!(FlareStatus::Cancelled.is_terminal());
+        assert_eq!(FlareStatus::Cancelled.name(), "cancelled");
         // Unknown ids are a no-op, not a panic.
         db.set_flare_status("ghost", FlareStatus::Completed);
     }
@@ -345,10 +437,10 @@ mod tests {
     fn list_flares_newest_first() {
         let db = BurstDb::new();
         for i in 0..5 {
-            db.put_flare(FlareRecord::queued(&format!("f{i}"), "d"));
+            db.put_flare(queued(&format!("f{i}")));
         }
         // Re-putting an existing id must not duplicate it in the order.
-        db.put_flare(FlareRecord::queued("f2", "d"));
+        db.put_flare(queued("f2"));
         let ids: Vec<String> = db
             .list_flare_summaries(3)
             .into_iter()
@@ -359,5 +451,34 @@ mod tests {
         let summaries = db.list_flare_summaries(2);
         assert_eq!(summaries[0].1, "d");
         assert_eq!(summaries[0].2, FlareStatus::Queued);
+    }
+
+    #[test]
+    fn retention_evicts_oldest_terminal_records_only() {
+        let db = BurstDb::with_retention(2);
+        for i in 0..6 {
+            db.put_flare(queued(&format!("f{i}")));
+        }
+        // f0 stays queued, f1 runs forever; f2..f5 reach terminal states.
+        db.set_flare_status("f1", FlareStatus::Running);
+        db.set_flare_status("f2", FlareStatus::Completed);
+        db.set_flare_status("f3", FlareStatus::Failed);
+        db.set_flare_status("f4", FlareStatus::Cancelled);
+        db.set_flare_status("f5", FlareStatus::Completed);
+        // Cap 2: the two oldest terminal records (f2, f3) were evicted the
+        // moment f4/f5 went terminal; live records are untouched.
+        assert!(db.get_flare("f2").is_none());
+        assert!(db.get_flare("f3").is_none());
+        assert!(db.get_flare("f4").is_some());
+        assert!(db.get_flare("f5").is_some());
+        assert_eq!(db.get_flare("f0").unwrap().status, FlareStatus::Queued);
+        assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Running);
+        // The listing order holds no dangling ids.
+        let ids: Vec<String> = db
+            .list_flare_summaries(100)
+            .into_iter()
+            .map(|(id, _, _)| id)
+            .collect();
+        assert_eq!(ids, vec!["f5", "f4", "f1", "f0"]);
     }
 }

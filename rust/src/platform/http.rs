@@ -1,43 +1,91 @@
 //! HTTP interface to the controller (paper Fig. 4 steps 1–3): `deploy` and
-//! `flare` endpoints plus result retrieval. Minimal HTTP/1.1 over
-//! `std::net` (no async runtime is available offline — DESIGN.md §3).
-//! Connections are served by a small fixed worker pool fed from a bounded
-//! queue, so a burst of clients cannot spawn unbounded threads. Flare
-//! *execution* runs on the controller's scheduler; note that the blocking
-//! `POST /v1/flare` still occupies its HTTP worker while it waits, so
-//! heavy clients should prefer the async `POST /v1/flares` + status
-//! polling, which returns in microseconds.
+//! `flare` endpoints plus result retrieval and cancellation. Minimal
+//! HTTP/1.1 over `std::net` (no async runtime is available offline —
+//! DESIGN.md §3). Connections are served by a small fixed worker pool fed
+//! from a bounded queue, so a burst of clients cannot spawn unbounded
+//! threads. Flare *execution* runs on the controller's scheduler; the
+//! blocking `POST /v1/flare` still occupies its HTTP worker while it
+//! waits, so concurrent blocking handlers are capped *below* the pool size
+//! (excess get `429` + a hint) and control-plane GETs always find a free
+//! worker. Heavy clients should prefer the async `POST /v1/flares` +
+//! status polling, which returns in microseconds.
+//!
+//! Hardening: request bodies are capped at [`MAX_BODY_BYTES`] (oversized
+//! requests get `413` before any allocation); malformed or inadmissible
+//! requests are `400`, while failures *after* a flare was admitted are
+//! `500`.
 //!
 //! Routes:
-//!   POST /v1/deploy       {"name", "work", "conf": {...}}
-//!   POST /v1/flare        {"def", "params": [...], "options": {...}}   blocking
-//!   POST /v1/flares       same body; 202 + flare id immediately (async)
-//!   GET  /v1/flares       recent flares with live status
-//!   GET  /v1/flares/`<id>`  live status + outputs of one flare
-//!   GET  /v1/defs
-//!   GET  /healthz
-//!   GET  /metrics
+//!   POST   /v1/deploy       {"name", "work", "conf": {...}}
+//!   POST   /v1/flare        {"def", "params": [...], "options": {...}}   blocking
+//!   POST   /v1/flares       same body; 202 + flare id immediately (async)
+//!   GET    /v1/flares       recent flares with live status
+//!   GET    /v1/flares/`<id>`  live status + outputs of one flare
+//!   DELETE /v1/flares/`<id>`  cancel: 200 (queued: removed, running: token
+//!                           tripped), 404 unknown id, 409 already terminal
+//!   GET    /v1/defs
+//!   GET    /healthz
+//!   GET    /metrics         load view + total and per-tenant queue depth
+//!
+//! Flare options (`options` object in both flare routes): `granularity`,
+//! `strategy`, `backend`, `faas`, plus the multi-tenant scheduling fields
+//! `tenant` (fair-share lane, default "default") and `priority`
+//! (`low` | `normal` | `high`, default `normal`).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::controller::{Controller, FlareOptions};
+use super::controller::{CancelError, Controller, FlareOptions};
 use super::db::BurstConfig;
 use crate::util::json::Json;
 
 /// Default size of the connection-handling worker pool.
 pub const DEFAULT_HTTP_WORKERS: usize = 8;
+/// Hard cap on a request body. `handle_conn` trusts `Content-Length` only
+/// up to this bound; anything larger is rejected with `413` before a
+/// single byte of it is buffered, so a hostile or buggy client cannot
+/// trigger an unbounded allocation.
+pub const MAX_BODY_BYTES: usize = 8 << 20;
 /// Accepted connections waiting for a free worker; once full, the accept
 /// loop itself blocks — an implicit connection cap.
 const CONN_BACKLOG: usize = 64;
 /// Bound on how long a worker can sit in a dead connection's read.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Counting gate capping concurrent blocking `POST /v1/flare` handlers
+/// below the worker-pool size, so status/metrics routes always find a free
+/// worker even when every blocking client is parked on a slow flare.
+struct BlockingGate {
+    slots: AtomicUsize,
+}
+
+impl BlockingGate {
+    fn new(slots: usize) -> BlockingGate {
+        BlockingGate { slots: AtomicUsize::new(slots) }
+    }
+
+    /// Take a slot if one is free; the permit returns it on drop.
+    fn try_acquire(&self) -> Option<BlockingPermit<'_>> {
+        self.slots
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+            .ok()
+            .map(|_| BlockingPermit(self))
+    }
+}
+
+struct BlockingPermit<'a>(&'a BlockingGate);
+
+impl Drop for BlockingPermit<'_> {
+    fn drop(&mut self) {
+        self.0.slots.fetch_add(1, Ordering::AcqRel);
+    }
+}
 
 /// A running HTTP server bound to a local port.
 pub struct HttpServer {
@@ -68,10 +116,16 @@ impl HttpServer {
         let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
             std::sync::mpsc::sync_channel(CONN_BACKLOG);
         let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n_workers.max(1))
+        let pool_size = n_workers.max(1);
+        // Blocking flare handlers may take all but one worker (with a
+        // single worker the cap degenerates to 1 — blocking still works,
+        // but such a deployment has no spare worker to protect).
+        let gate = Arc::new(BlockingGate::new(pool_size.saturating_sub(1).max(1)));
+        let workers = (0..pool_size)
             .map(|i| {
                 let rx = rx.clone();
                 let c = controller.clone();
+                let gate = gate.clone();
                 std::thread::Builder::new()
                     .name(format!("http-worker-{i}"))
                     .spawn(move || loop {
@@ -81,7 +135,7 @@ impl HttpServer {
                             Err(_) => return, // acceptor gone: shutdown
                         };
                         let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-                        let _ = handle_conn(stream, &c);
+                        let _ = handle_conn(stream, &c, &gate);
                     })
                     .expect("spawn http worker")
             })
@@ -147,7 +201,7 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_conn(stream: TcpStream, controller: &Controller) -> Result<()> {
+fn handle_conn(stream: TcpStream, controller: &Controller, gate: &BlockingGate) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
@@ -170,11 +224,21 @@ fn handle_conn(stream: TcpStream, controller: &Controller) -> Result<()> {
             }
         }
     }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    let body = String::from_utf8_lossy(&body).to_string();
-
-    let (status, payload) = route(&method, &path, &body, controller);
+    // The declared length is untrusted input: reject oversized bodies
+    // before allocating or reading anything.
+    let (status, payload) = if content_length > MAX_BODY_BYTES {
+        (
+            413,
+            err_json(format!(
+                "request body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+            )),
+        )
+    } else {
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        let body = String::from_utf8_lossy(&body).to_string();
+        route(&method, &path, &body, controller, gate)
+    };
     let body = payload.to_string();
     let mut stream = reader.into_inner();
     write!(
@@ -192,6 +256,9 @@ fn status_text(code: u16) -> &'static str {
         202 => "202 Accepted",
         400 => "400 Bad Request",
         404 => "404 Not Found",
+        409 => "409 Conflict",
+        413 => "413 Payload Too Large",
+        429 => "429 Too Many Requests",
         _ => "500 Internal Server Error",
     }
 }
@@ -200,8 +267,17 @@ fn err_json(msg: impl std::fmt::Display) -> Json {
     Json::obj(vec![("error", Json::Str(msg.to_string()))])
 }
 
-fn route(method: &str, path: &str, body: &str, c: &Controller) -> (u16, Json) {
-    match dispatch(method, path, body, c) {
+/// `dispatch` with its error contract applied: an `Err` means the request
+/// itself was malformed or inadmissible (`400`). Failures *after* a flare
+/// was admitted are returned by `dispatch` as explicit `5xx` pairs.
+fn route(
+    method: &str,
+    path: &str,
+    body: &str,
+    c: &Controller,
+    gate: &BlockingGate,
+) -> (u16, Json) {
+    match dispatch(method, path, body, c, gate) {
         Ok(r) => r,
         Err(e) => (400, err_json(e)),
     }
@@ -224,13 +300,23 @@ fn parse_flare_body(body: &str) -> Result<(String, Vec<Json>, FlareOptions)> {
     Ok((def, params, opts))
 }
 
-fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16, Json)> {
+fn dispatch(
+    method: &str,
+    path: &str,
+    body: &str,
+    c: &Controller,
+    gate: &BlockingGate,
+) -> Result<(u16, Json)> {
     match (method, path) {
         ("GET", "/healthz") => Ok((200, Json::obj(vec![("status", "ok".into())]))),
         ("GET", "/metrics") => {
             // Controller load view (CPU-based invoker monitoring, §4.4)
-            // plus the scheduler's queue depth.
+            // plus the scheduler's total and per-tenant queue depth.
             let free = c.pool.free_vcpus();
+            let mut by_tenant = std::collections::BTreeMap::new();
+            for (tenant, depth) in c.queued_by_tenant() {
+                by_tenant.insert(tenant, Json::from(depth));
+            }
             Ok((
                 200,
                 Json::obj(vec![
@@ -239,6 +325,7 @@ fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16
                     ("total_free_vcpus", free.iter().sum::<usize>().into()),
                     ("total_vcpus", c.pool.capacity().into()),
                     ("queued_flares", c.queued_flares().into()),
+                    ("queued_by_tenant", Json::Obj(by_tenant)),
                     ("deployed_defs", c.db.list_defs().len().into()),
                 ]),
             ))
@@ -262,14 +349,35 @@ fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16
             Ok((200, Json::obj(vec![("deployed", name.into())])))
         }
         ("POST", "/v1/flare") => {
-            // Blocking invoke: submit, wait, return the full result.
+            // Blocking invoke: submit, wait, return the full result. Held
+            // to the gate so blocking clients can never occupy every HTTP
+            // worker (the permit frees on return).
+            let _permit = match gate.try_acquire() {
+                Some(p) => p,
+                None => {
+                    return Ok((
+                        429,
+                        err_json(
+                            "too many concurrent blocking flares; use async \
+                             POST /v1/flares + GET /v1/flares/<id> polling",
+                        ),
+                    ))
+                }
+            };
             let (def, params, opts) = parse_flare_body(body)?;
-            let r = c.flare(&def, params, &opts)?;
-            let mut summary = r.summary_json();
-            if let Json::Obj(m) = &mut summary {
-                m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
+            // Submit errors are the client's fault (400, via `?`); once
+            // admitted, an execution failure is the platform's (500).
+            let handle = c.submit_flare(&def, params, &opts)?;
+            match handle.wait() {
+                Ok(r) => {
+                    let mut summary = r.summary_json();
+                    if let Json::Obj(m) = &mut summary {
+                        m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
+                    }
+                    Ok((200, summary))
+                }
+                Err(e) => Ok((500, err_json(e))),
             }
-            Ok((200, summary))
         }
         ("POST", "/v1/flares") => {
             // Async invoke: 202 + flare id immediately; poll for status.
@@ -308,6 +416,22 @@ fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16
             match c.db.get_flare(id) {
                 Some(rec) => Ok((200, rec.to_json())),
                 None => Ok((404, err_json(format!("flare '{id}' not found")))),
+            }
+        }
+        ("DELETE", p) if p.starts_with("/v1/flares/") => {
+            let id = &p["/v1/flares/".len()..];
+            match c.cancel_flare(id) {
+                Ok(outcome) => Ok((
+                    200,
+                    Json::obj(vec![
+                        ("flare_id", id.into()),
+                        ("cancel", outcome.name().into()),
+                    ]),
+                )),
+                Err(CancelError::NotFound) => {
+                    Ok((404, err_json(format!("flare '{id}' not found"))))
+                }
+                Err(e @ CancelError::AlreadyTerminal(_)) => Ok((409, err_json(e))),
             }
         }
         _ => Ok((404, err_json(format!("no route for {method} {path}")))),
@@ -455,5 +579,209 @@ mod tests {
         assert!(r.is_err());
         let r = http_request(&addr, "GET", "/nothing", None);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn oversized_body_rejected_with_413_before_reading() {
+        let (_srv, addr) = setup();
+        // Claim an absurd Content-Length without sending a single body
+        // byte: the server must answer 413 instead of allocating it.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /v1/flare HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 9999999999\r\n\r\n"
+        )
+        .unwrap();
+        let mut resp = String::new();
+        BufReader::new(s).read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        assert!(resp.contains("exceeds"), "{resp}");
+        // The worker survives to serve the next request.
+        let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(h.str_or("status", ""), "ok");
+    }
+
+    #[test]
+    fn post_admission_failure_is_500_not_400() {
+        let failing: WorkFn = Arc::new(|_p, ctx| {
+            if ctx.worker_id == 0 {
+                Err(anyhow!("intentional worker fault"))
+            } else {
+                Ok(Json::Null)
+            }
+        });
+        register_work("http-fail", failing);
+        let c = Controller::test_platform(1, 8, 1e-6);
+        let srv = HttpServer::start(c, 0).unwrap();
+        let addr = srv.addr.clone();
+        let deploy =
+            Json::parse(r#"{"name":"f","work":"http-fail","conf":{"granularity":2}}"#)
+                .unwrap();
+        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+        // Admitted, then failed during execution: the platform's fault.
+        let flare = Json::parse(r#"{"def":"f","params":[1,1]}"#).unwrap();
+        let err = http_request(&addr, "POST", "/v1/flare", Some(&flare))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 500"), "{err}");
+        // Malformed and inadmissible requests stay the client's fault.
+        let err = http_request(&addr, "POST", "/v1/flare", Some(&Json::obj(vec![])))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 400"), "{err}");
+        let oversized = Json::parse(r#"{"def":"f","params":[1,1,1,1,1,1,1,1,1,1]}"#).unwrap();
+        let err = http_request(&addr, "POST", "/v1/flare", Some(&oversized))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 400"), "{err}");
+    }
+
+    /// A work function that parks until the returned handle is opened.
+    fn gated_work(name: &str) -> Arc<(Mutex<bool>, std::sync::Condvar)> {
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let g = gate.clone();
+        let work: WorkFn = Arc::new(move |_p, _ctx| {
+            let deadline = std::time::Instant::now() + Duration::from_secs(20);
+            let mut open = g.0.lock().unwrap();
+            while !*open {
+                if std::time::Instant::now() >= deadline {
+                    return Err(anyhow!("gate never opened (test hang guard)"));
+                }
+                let (guard, _) =
+                    g.1.wait_timeout(open, Duration::from_millis(50)).unwrap();
+                open = guard;
+            }
+            Ok(Json::Null)
+        });
+        register_work(name, work);
+        gate
+    }
+
+    fn open_gate(gate: &(Mutex<bool>, std::sync::Condvar)) {
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+    }
+
+    /// Poll one flare's status over HTTP until it matches.
+    fn wait_http_status(addr: &str, id: &str, want: &str) -> bool {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while std::time::Instant::now() < deadline {
+            let rec =
+                http_request(addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+            if rec.str_or("status", "") == want {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        false
+    }
+
+    #[test]
+    fn blocking_flares_capped_below_pool_size_with_429() {
+        let gate = gated_work("http-gated-cap");
+        let c = Controller::test_platform(1, 8, 1e-6);
+        // 2 workers ⇒ exactly 1 blocking permit.
+        let srv = HttpServer::start_with_workers(c, 0, 2).unwrap();
+        let addr = srv.addr.clone();
+        let deploy = Json::parse(
+            r#"{"name":"g","work":"http-gated-cap","conf":{"granularity":2,"strategy":"heterogeneous"}}"#,
+        )
+        .unwrap();
+        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+        let flare = Json::parse(r#"{"def":"g","params":[1,1]}"#).unwrap();
+        let blocker = {
+            let addr = addr.clone();
+            let flare = flare.clone();
+            std::thread::spawn(move || http_request(&addr, "POST", "/v1/flare", Some(&flare)))
+        };
+        // Wait until the blocking handler holds the permit (flare running).
+        let list_deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let list = http_request(&addr, "GET", "/v1/flares", None).unwrap();
+            let running = list
+                .as_arr()
+                .unwrap()
+                .iter()
+                .any(|f| f.str_or("status", "") == "running");
+            if running {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < list_deadline,
+                "gated flare never started running"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // The only permit is taken: a second blocking call bounces with a
+        // hint, instead of occupying the last worker...
+        let err = http_request(&addr, "POST", "/v1/flare", Some(&flare))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 429"), "{err}");
+        assert!(err.contains("/v1/flares"), "{err}");
+        // ...so the control plane stays responsive.
+        let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(h.str_or("status", ""), "ok");
+
+        open_gate(&gate);
+        let r = blocker.join().unwrap().unwrap();
+        assert_eq!(r.get("outputs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn delete_route_cancels_and_metrics_report_tenant_depth() {
+        let gate = gated_work("http-gated-del");
+        let c = Controller::test_platform(1, 4, 1e-6);
+        let srv = HttpServer::start(c, 0).unwrap();
+        let addr = srv.addr.clone();
+        let deploy = Json::parse(
+            r#"{"name":"gd","work":"http-gated-del","conf":{"granularity":2,"strategy":"heterogeneous"}}"#,
+        )
+        .unwrap();
+        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+        // Tenant "heavy" fills the cluster; tenant "light" queues behind it.
+        let heavy = Json::parse(
+            r#"{"def":"gd","params":[1,1,1,1],"options":{"tenant":"heavy"}}"#,
+        )
+        .unwrap();
+        let light = Json::parse(
+            r#"{"def":"gd","params":[1,1,1,1],"options":{"tenant":"light","priority":"high"}}"#,
+        )
+        .unwrap();
+        let r1 = http_request(&addr, "POST", "/v1/flares", Some(&heavy)).unwrap();
+        let id1 = r1.get("flare_id").unwrap().as_str().unwrap().to_string();
+        assert!(wait_http_status(&addr, &id1, "running"));
+        let r2 = http_request(&addr, "POST", "/v1/flares", Some(&light)).unwrap();
+        let id2 = r2.get("flare_id").unwrap().as_str().unwrap().to_string();
+        assert!(wait_http_status(&addr, &id2, "queued"));
+
+        // Per-tenant queue depth is on /metrics.
+        let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+        let by_tenant = m.get("queued_by_tenant").unwrap();
+        assert_eq!(by_tenant.get("light").unwrap().as_usize(), Some(1), "{m}");
+
+        // DELETE the queued flare: clean cancel, observable status, and
+        // the record keeps tenant + priority.
+        let d = http_request(&addr, "DELETE", &format!("/v1/flares/{id2}"), None).unwrap();
+        assert_eq!(d.str_or("cancel", ""), "cancelled");
+        let rec = http_request(&addr, "GET", &format!("/v1/flares/{id2}"), None).unwrap();
+        assert_eq!(rec.str_or("status", ""), "cancelled");
+        assert_eq!(rec.str_or("tenant", ""), "light");
+        assert_eq!(rec.str_or("priority", ""), "high");
+
+        // Cancelling it again is a conflict; an unknown id is not found.
+        let err = http_request(&addr, "DELETE", &format!("/v1/flares/{id2}"), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 409"), "{err}");
+        let err = http_request(&addr, "DELETE", "/v1/flares/ghost-9", None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 404"), "{err}");
+
+        open_gate(&gate);
+        assert!(wait_http_status(&addr, &id1, "completed"));
     }
 }

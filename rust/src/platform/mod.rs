@@ -12,23 +12,35 @@
 //!   larger than total cluster capacity, granularity no idle invoker can
 //!   host) are rejected fast with an error naming required vs available
 //!   vCPUs; everything else is admitted even when the cluster is busy.
-//! * **queue** — admitted flares wait in a capacity-aware FIFO
-//!   ([`queue::FlareQueue`]) with bounded backfill: a small flare may jump
-//!   a blocked head-of-line flare it cannot unblock, until an
+//! * **queue** — admitted flares wait in a multi-tenant queue
+//!   ([`queue::FlareQueue`]): weighted deficit round-robin across tenant
+//!   lanes (a heavy tenant cannot starve a light one), priority classes
+//!   then FIFO within a lane, and bounded backfill — a small flare may
+//!   jump a blocked head-of-line flare it cannot unblock, until an
 //!   anti-starvation pass budget stops the queue scheduling past it.
 //! * **place** — the scheduler thread packs against the live load view and
 //!   reserves capacity, retrying lost reservation races against a fresh
 //!   snapshot up to a spillback budget ([`queue::SPILLBACK_RETRIES`]).
 //! * **execute** — each placed flare runs on its own thread, so many flares
 //!   proceed concurrently against one [`InvokerPool`].
-//! * **complete** — results and the status lifecycle
-//!   (`queued` → `running` → `completed` / `failed`, [`db::FlareStatus`])
-//!   are persisted in [`BurstDb`]; queue-wait time is recorded as a
-//!   `Queue` phase in the flare's timeline.
+//! * **complete** — results and the status lifecycle (`queued` → `running`
+//!   → `completed` / `failed` / `cancelled`, [`db::FlareStatus`]) are
+//!   persisted in [`BurstDb`] (terminal records subject to a retention
+//!   cap); queue-wait time is recorded as a `Queue` phase in the flare's
+//!   timeline.
 //!
-//! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id),
-//! `GET /v1/flares/<id>` reports live status, `GET /v1/flares` lists
-//! recent flares; the blocking `POST /v1/flare` remains for simple clients.
+//! Flares can be killed at any point before a terminal state through
+//! [`Controller::cancel_flare`]: queued flares are removed and their
+//! waiters fail fast; running flares have their shared
+//! [`crate::util::cancel::CancelToken`] tripped, observed cooperatively at
+//! phase boundaries (and at `BurstContext::check_cancel` points inside
+//! `work` functions), releasing the reservation promptly.
+//!
+//! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id,
+//! with `options.tenant` / `options.priority`), `GET /v1/flares/<id>`
+//! reports live status, `DELETE /v1/flares/<id>` cancels,
+//! `GET /v1/flares` lists recent flares; the blocking `POST /v1/flare`
+//! remains for simple clients, capped below the HTTP worker-pool size.
 
 pub mod controller;
 pub mod db;
@@ -38,8 +50,10 @@ pub mod pack;
 pub mod packing;
 pub mod queue;
 
-pub use controller::{Controller, FlareOptions, FlareResult};
+pub use controller::{
+    CancelError, CancelOutcome, Controller, FlareOptions, FlareResult,
+};
 pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, FlareStatus, WorkFn};
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
 pub use packing::{plan, PackSpec, PackingStrategy};
-pub use queue::{place_with_spillback, FlareHandle, FlareQueue};
+pub use queue::{place_with_spillback, FlareHandle, FlareQueue, Priority, DEFAULT_TENANT};

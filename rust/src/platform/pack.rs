@@ -11,6 +11,7 @@ use super::invoker::ModeledStartup;
 use super::packing::PackSpec;
 use crate::bcm::{BurstContext, CommFabric};
 use crate::metrics::{Phase, Timeline, TimelineEvent};
+use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 use crate::util::timing::Stopwatch;
 
@@ -25,6 +26,12 @@ use crate::util::timing::Stopwatch;
 /// `queue_wait_s` (measured time the flare waited for capacity) shifts the
 /// whole flare and is recorded as a `Queue` phase per worker, making
 /// queueing delay visible in experiment timelines.
+///
+/// `cancel` is the flare's shared kill switch: it is checked at the phase
+/// boundaries this function controls (before the packs spin up, and on
+/// each worker before its `Work` phase starts), and it is handed to every
+/// worker's `BurstContext` so `work` functions can add their own
+/// cancellation points.
 pub fn run_flare_packs(
     packs: &[PackSpec],
     fabric: &Arc<CommFabric>,
@@ -33,10 +40,14 @@ pub fn run_flare_packs(
     startup: &ModeledStartup,
     timeline: &Timeline,
     queue_wait_s: f64,
+    cancel: &CancelToken,
 ) -> Result<Vec<Json>> {
     let burst_size: usize = packs.iter().map(|p| p.workers.len()).sum();
     if params.len() != burst_size {
         return Err(anyhow!("need {burst_size} param entries, got {}", params.len()));
+    }
+    if cancel.is_cancelled() {
+        return Err(anyhow!("flare cancelled before packs started"));
     }
     let mut outputs: Vec<Option<Result<Json>>> = (0..burst_size).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -71,7 +82,12 @@ pub fn run_flare_packs(
                             end_s: queue_wait_s + ready,
                         });
                         let _ = pack_ready;
-                        let ctx = BurstContext::new(w, fabric);
+                        // Phase boundary (startup → work): a flare killed
+                        // while queued or starting never runs its work.
+                        if cancel.is_cancelled() {
+                            return Err(anyhow!("cancelled before work started"));
+                        }
+                        let ctx = BurstContext::with_cancel(w, fabric, cancel.clone());
                         let sw = Stopwatch::start();
                         let out = work(param, &ctx);
                         timeline.record(TimelineEvent {
@@ -131,6 +147,11 @@ mod tests {
         (packs, fabric, startup)
     }
 
+    /// A token nobody cancels.
+    fn none() -> CancelToken {
+        CancelToken::new()
+    }
+
     #[test]
     fn runs_work_on_every_worker() {
         let (packs, fabric, startup) = setup(8, 3);
@@ -144,7 +165,7 @@ mod tests {
         let params: Vec<Json> = (0..8).map(|i| Json::Num(i as f64)).collect();
         let timeline = Timeline::new();
         let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
                 .unwrap();
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.get("w").unwrap().as_usize(), Some(i));
@@ -163,7 +184,7 @@ mod tests {
         let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
         let params = vec![Json::Null; 4];
         let timeline = Timeline::new();
-        run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 1.5)
+        run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 1.5, &none())
             .unwrap();
         let queue = timeline.phase_durations(Phase::Queue);
         assert_eq!(queue.len(), 4);
@@ -190,7 +211,7 @@ mod tests {
         let params = vec![Json::Null; 6];
         let timeline = Timeline::new();
         let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
                 .unwrap();
         assert!(out.iter().all(|o| o.as_f64() == Some(64.0)));
     }
@@ -207,9 +228,62 @@ mod tests {
         });
         let params = vec![Json::Null; 4];
         let timeline = Timeline::new();
-        let err = run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0)
-            .unwrap_err();
+        let err =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
+                .unwrap_err();
         assert!(err.to_string().contains("worker 2"), "{err}");
+    }
+
+    #[test]
+    fn pre_tripped_cancel_token_skips_all_work() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let ran = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        let work: WorkFn = Arc::new(move |_, _| {
+            ran2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(Json::Null)
+        });
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let err =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
+                .unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn work_observes_cancellation_mid_flight() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let cancel = CancelToken::new();
+        let work: WorkFn = Arc::new(|_, ctx| {
+            // Cooperative loop: spin until the kill path trips the token.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while !ctx.cancelled() {
+                if std::time::Instant::now() >= deadline {
+                    return Ok(Json::Str("never cancelled".into()));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            ctx.check_cancel()?;
+            unreachable!("check_cancel errors once the token is tripped")
+        });
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        let killer = {
+            let cancel = cancel.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                cancel.cancel();
+            })
+        };
+        let err =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
+                .unwrap_err();
+        killer.join().unwrap();
+        assert!(err.to_string().contains("cancelled"), "{err}");
     }
 
     #[test]
@@ -218,7 +292,8 @@ mod tests {
         let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
         let timeline = Timeline::new();
         assert!(
-            run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline, 0.0).is_err()
+            run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline, 0.0, &none())
+                .is_err()
         );
     }
 }

@@ -1,18 +1,32 @@
 //! Flare scheduling pipeline (paper Fig. 4 as a job-level scheduler):
 //! **submit → admit → queue → place → execute → complete**.
 //!
-//! The controller admits flares into a capacity-aware FIFO (`FlareQueue`)
-//! instead of packing inline. A dedicated scheduler thread drains the queue:
-//! it places the earliest flare that fits the current free capacity —
-//! *backfill* lets a small flare jump a head-of-line flare it cannot unblock,
-//! bounded by an anti-starvation pass budget — and runs each placed flare on
-//! its own execution thread, so many flares from many clients proceed
-//! concurrently against one `InvokerPool`.
+//! The controller admits flares into a *multi-tenant* queue (`FlareQueue`)
+//! instead of packing inline. A dedicated scheduler thread drains the queue
+//! with a two-level pick:
+//!
+//! 1. **Across tenants** — weighted deficit round-robin: each tenant lane
+//!    accumulates the vCPUs placed on its behalf, and the lane with the
+//!    lowest weighted share goes first, so a heavy tenant flooding the
+//!    queue cannot starve a light one (the paper's group-invocation
+//!    primitive only pays off if one burst cannot monopolize the cluster).
+//! 2. **Within a tenant** — priority classes (`high`/`normal`/`low`), FIFO
+//!    within a class.
+//!
+//! *Backfill* lets a small flare jump a head-of-line flare it cannot
+//! unblock, bounded by an anti-starvation pass budget that halts the whole
+//! scan once any flare has been passed too often — running flares drain,
+//! capacity frees, and the blocked flare goes first.
 //!
 //! Placement races (a reservation lost between the load snapshot and
 //! `InvokerPool::reserve`, cf. SPEAR's two-level scheduling spillback) are
 //! retried against a fresh load view up to [`SPILLBACK_RETRIES`] times
 //! before the flare simply stays queued.
+//!
+//! Every queued flare carries a shared [`CancelToken`]; the controller's
+//! kill path (`Controller::cancel_flare`) removes queued flares directly
+//! and trips the token of running ones, which the execution path observes
+//! cooperatively at phase boundaries.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -26,6 +40,7 @@ use super::db::WorkFn;
 use super::invoker::InvokerPool;
 use super::packing::{plan, PackSpec, PackingStrategy};
 use crate::bcm::BackendKind;
+use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 use crate::util::timing::Stopwatch;
 
@@ -35,6 +50,38 @@ pub const MAX_BACKFILL_PASSES: u32 = 16;
 
 /// Re-plan budget when `InvokerPool::reserve` loses a placement race.
 pub const SPILLBACK_RETRIES: usize = 3;
+
+/// Tenant lane used when a flare names none.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Scheduling priority class within a tenant lane. Higher classes are
+/// placed first; FIFO within a class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
 
 /// A flare admitted to the queue: the fully resolved execution spec.
 pub struct QueuedFlare {
@@ -48,6 +95,13 @@ pub struct QueuedFlare {
     pub backend: BackendKind,
     pub chunk_size: usize,
     pub faas: bool,
+    /// Fair-share lane this flare is accounted to.
+    pub tenant: String,
+    /// Placement order within the tenant lane.
+    pub priority: Priority,
+    /// Shared kill switch: tripped by `Controller::cancel_flare`, observed
+    /// cooperatively by the execution path.
+    pub cancel: CancelToken,
     pub(crate) slot: Arc<ResultSlot>,
     /// Started at submit; read at placement to measure queue wait.
     pub submitted: Stopwatch,
@@ -150,61 +204,196 @@ fn place_with_spillback_observed(
     None
 }
 
-/// Capacity-aware FIFO with bounded backfill.
-pub struct FlareQueue {
+/// One tenant's lane: its pending flares (priority-then-FIFO order is the
+/// insertion order) plus its deficit accounting.
+struct TenantLane {
+    name: String,
     jobs: VecDeque<QueuedFlare>,
+    /// vCPUs placed on behalf of this tenant so far (the queued vCPU·time
+    /// proxy the deficit round-robin ranks lanes by).
+    consumed: f64,
+    /// Fair-share weight; a lane with weight 2 is entitled to twice the
+    /// placed vCPUs of a weight-1 lane.
+    weight: f64,
+}
+
+impl TenantLane {
+    fn new(name: &str) -> TenantLane {
+        TenantLane {
+            name: name.to_string(),
+            jobs: VecDeque::new(),
+            consumed: 0.0,
+            weight: 1.0,
+        }
+    }
+
+    /// Weighted share: lanes with the lowest share are scheduled first.
+    fn share(&self) -> f64 {
+        self.consumed / self.weight
+    }
+}
+
+/// Multi-tenant capacity-aware queue: weighted deficit round-robin across
+/// tenant lanes, priority-then-FIFO within a lane, bounded backfill with a
+/// global anti-starvation guard.
+pub struct FlareQueue {
+    tenants: Vec<TenantLane>,
     max_backfill_passes: u32,
 }
 
 impl FlareQueue {
     pub fn new(max_backfill_passes: u32) -> FlareQueue {
-        FlareQueue { jobs: VecDeque::new(), max_backfill_passes }
+        FlareQueue { tenants: Vec::new(), max_backfill_passes }
+    }
+
+    /// Set a tenant's fair-share weight (creating its lane if needed).
+    pub fn set_tenant_weight(&mut self, tenant: &str, weight: f64) {
+        let li = self.lane_index(tenant);
+        self.tenants[li].weight = weight.max(f64::MIN_POSITIVE);
+    }
+
+    /// Lowest weighted share among lanes that currently hold jobs.
+    fn min_active_share(&self) -> f64 {
+        self.tenants
+            .iter()
+            .filter(|t| !t.jobs.is_empty())
+            .map(TenantLane::share)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn lane_index(&mut self, tenant: &str) -> usize {
+        match self.tenants.iter().position(|t| t.name == tenant) {
+            Some(i) => i,
+            None => {
+                self.tenants.push(TenantLane::new(tenant));
+                self.tenants.len() - 1
+            }
+        }
     }
 
     pub fn push(&mut self, job: QueuedFlare) {
-        self.jobs.push_back(job);
+        // A lane (re)entering service snaps its consumption forward to the
+        // current fair frontier: idle time is not banked, so neither a
+        // brand-new tenant nor one returning from a quiet spell gets an
+        // unbounded run of placements before everyone else is served again.
+        let frontier = self.min_active_share();
+        if frontier.is_infinite() {
+            // The queue fully drained: start a fresh fairness epoch. Without
+            // this, a veteran lane's historical consumption would let any
+            // newcomer starve it for an unbounded catch-up run (the inverse
+            // of the banked-idle-time problem the snap below solves).
+            for t in &mut self.tenants {
+                t.consumed = 0.0;
+            }
+        }
+        let li = self.lane_index(&job.tenant);
+        let lane = &mut self.tenants[li];
+        if lane.jobs.is_empty() && frontier.is_finite() {
+            lane.consumed = lane.consumed.max(frontier * lane.weight);
+        }
+        // Priority-then-FIFO: insert before the first strictly lower
+        // priority, after every equal-or-higher one.
+        let at = lane
+            .jobs
+            .iter()
+            .position(|q| q.priority < job.priority)
+            .unwrap_or(lane.jobs.len());
+        lane.jobs.insert(at, job);
     }
 
     pub fn len(&self) -> usize {
-        self.jobs.len()
+        self.tenants.iter().map(|t| t.jobs.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.jobs.is_empty()
+        self.tenants.iter().all(|t| t.jobs.is_empty())
+    }
+
+    /// Queue depth per tenant, lanes with pending flares only, sorted by
+    /// tenant name (the `/metrics` view).
+    pub fn depth_by_tenant(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self
+            .tenants
+            .iter()
+            .filter(|t| !t.jobs.is_empty())
+            .map(|t| (t.name.clone(), t.jobs.len()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Remove a queued flare by id (the cancel-while-queued kill path).
+    pub fn remove(&mut self, flare_id: &str) -> Option<QueuedFlare> {
+        for lane in &mut self.tenants {
+            if let Some(i) = lane.jobs.iter().position(|j| j.flare_id == flare_id) {
+                return lane.jobs.remove(i);
+            }
+        }
+        None
     }
 
     pub(crate) fn drain(&mut self) -> Vec<QueuedFlare> {
-        self.jobs.drain(..).collect()
+        self.tenants.iter_mut().flat_map(|t| t.jobs.drain(..)).collect()
     }
 
     /// Remove and return the first flare that can be placed right now,
     /// together with its reserved pack plan.
     ///
-    /// Scan order is FIFO; a flare that does not fit is skipped (backfill)
-    /// unless it has already been passed `max_backfill_passes` times, in
-    /// which case the scan stops and nothing behind it may start — running
-    /// flares drain, capacity frees, and the blocked flare goes first.
+    /// Two-level pick: tenant lanes are scanned in ascending weighted-share
+    /// order (deficit round-robin — ties broken by name for determinism);
+    /// within a lane, jobs are scanned priority-then-FIFO. A flare that
+    /// does not fit is skipped (backfill) unless it has already been passed
+    /// `max_backfill_passes` times, in which case the whole scan stops and
+    /// nothing may start — running flares drain, capacity frees, and the
+    /// blocked flare goes first. A successful placement charges the lane's
+    /// deficit with the flare's vCPU demand.
     pub fn pop_placeable(
         &mut self,
         pool: &InvokerPool,
     ) -> Option<(QueuedFlare, Vec<PackSpec>)> {
-        let mut chosen = None;
-        for (i, job) in self.jobs.iter().enumerate() {
-            if let Some(packs) =
-                place_with_spillback(pool, job.strategy, job.burst_size, SPILLBACK_RETRIES)
-            {
-                chosen = Some((i, packs));
-                break;
-            }
-            if job.passed_over >= self.max_backfill_passes {
-                break; // starvation guard: stop backfilling past this flare
+        let mut lane_order: Vec<usize> = (0..self.tenants.len())
+            .filter(|&l| !self.tenants[l].jobs.is_empty())
+            .collect();
+        lane_order.sort_by(|&a, &b| {
+            self.tenants[a]
+                .share()
+                .total_cmp(&self.tenants[b].share())
+                .then_with(|| self.tenants[a].name.cmp(&self.tenants[b].name))
+        });
+
+        // Cheap necessary condition checked before running the packing
+        // planner per job: a burst larger than the total free capacity can
+        // never be placed, and on a saturated cluster that is every job —
+        // this keeps the periodic rescan O(queue) comparisons, not
+        // O(queue) plan() calls, under the queue lock. (Skipping a job this
+        // way is exactly a failed placement: pass accounting is identical.)
+        let total_free: usize = pool.free_vcpus().iter().sum();
+
+        let mut chosen: Option<(usize, usize, Vec<PackSpec>)> = None;
+        let mut skipped: Vec<(usize, usize)> = Vec::new();
+        'scan: for &l in &lane_order {
+            for (j, job) in self.tenants[l].jobs.iter().enumerate() {
+                let placed = if job.burst_size <= total_free {
+                    place_with_spillback(pool, job.strategy, job.burst_size, SPILLBACK_RETRIES)
+                } else {
+                    None
+                };
+                if let Some(packs) = placed {
+                    chosen = Some((l, j, packs));
+                    break 'scan;
+                }
+                if job.passed_over >= self.max_backfill_passes {
+                    break 'scan; // starvation guard: stop the whole scan
+                }
+                skipped.push((l, j));
             }
         }
-        let (i, packs) = chosen?;
-        for blocked in self.jobs.iter_mut().take(i) {
-            blocked.passed_over += 1;
+        let (l, j, packs) = chosen?;
+        for &(sl, sj) in &skipped {
+            self.tenants[sl].jobs[sj].passed_over += 1;
         }
-        let job = self.jobs.remove(i).expect("index in range");
+        let job = self.tenants[l].jobs.remove(j).expect("index in range");
+        self.tenants[l].consumed += job.burst_size as f64;
         Some((job, packs))
     }
 }
@@ -302,6 +491,10 @@ mod tests {
     use crate::cluster::ClusterSpec;
 
     fn job(id: &str, size: usize) -> QueuedFlare {
+        job_for(id, size, DEFAULT_TENANT, Priority::Normal)
+    }
+
+    fn job_for(id: &str, size: usize, tenant: &str, priority: Priority) -> QueuedFlare {
         QueuedFlare {
             flare_id: id.to_string(),
             def_name: "d".into(),
@@ -312,10 +505,21 @@ mod tests {
             backend: BackendKind::DragonflyList,
             chunk_size: 1024,
             faas: false,
+            tenant: tenant.to_string(),
+            priority,
+            cancel: CancelToken::new(),
             slot: Arc::new(ResultSlot::new()),
             submitted: Stopwatch::start(),
             passed_over: 0,
         }
+    }
+
+    /// Pop, assert the id, and release the reservation (serial-capacity
+    /// helper for the fairness tests).
+    fn pop_release(q: &mut FlareQueue, pool: &InvokerPool) -> String {
+        let (job, packs) = q.pop_placeable(pool).expect("placeable");
+        pool.release(&packs);
+        job.flare_id
     }
 
     #[test]
@@ -345,7 +549,6 @@ mod tests {
         assert_eq!(picked.flare_id, "small");
         // The blocked head stays, with its pass recorded.
         assert_eq!(q.len(), 1);
-        assert_eq!(q.jobs[0].passed_over, 1);
         assert!(q.pop_placeable(&pool).is_none());
     }
 
@@ -365,13 +568,126 @@ mod tests {
         pool.release(&[PackSpec { invoker_id: 0, workers: vec![0, 1] }]);
         // ...then the guard trips: s3 would fit, but "big" has priority now.
         assert!(q.pop_placeable(&pool).is_none());
-        assert_eq!(q.jobs[0].passed_over, 2);
         // Once the rest of the machine frees, the big flare goes first.
         pool.release(&[PackSpec { invoker_id: 0, workers: (0..6).collect() }]);
         let (big, big_packs) = q.pop_placeable(&pool).unwrap();
         assert_eq!(big.flare_id, "big");
         pool.release(&big_packs);
         assert_eq!(q.pop_placeable(&pool).unwrap().0.flare_id, "s3");
+    }
+
+    #[test]
+    fn tenants_alternate_under_equal_demand() {
+        // Serial capacity (every flare needs the whole machine): a flooding
+        // tenant and a light tenant must interleave, not FIFO.
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("h1", 4, "heavy", Priority::Normal));
+        q.push(job_for("h2", 4, "heavy", Priority::Normal));
+        q.push(job_for("h3", 4, "heavy", Priority::Normal));
+        q.push(job_for("l1", 4, "light", Priority::Normal));
+        q.push(job_for("l2", 4, "light", Priority::Normal));
+        // Shares start equal; ties break by name ("heavy" < "light"), then
+        // the deficit alternates the lanes.
+        assert_eq!(pop_release(&mut q, &pool), "h1");
+        assert_eq!(pop_release(&mut q, &pool), "l1");
+        assert_eq!(pop_release(&mut q, &pool), "h2");
+        assert_eq!(pop_release(&mut q, &pool), "l2");
+        assert_eq!(pop_release(&mut q, &pool), "h3");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tenant_weights_skew_the_share() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.set_tenant_weight("big", 2.0);
+        for i in 0..6 {
+            q.push(job_for(&format!("b{i}"), 4, "big", Priority::Normal));
+            q.push(job_for(&format!("s{i}"), 4, "sml", Priority::Normal));
+        }
+        let mut big = 0;
+        for _ in 0..6 {
+            if pop_release(&mut q, &pool).starts_with('b') {
+                big += 1;
+            }
+        }
+        // Weight 2 vs 1: roughly two "big" placements per "sml" one.
+        assert_eq!(big, 4, "expected a 2:1 split in the first 6 placements");
+    }
+
+    #[test]
+    fn reactivated_tenant_does_not_bank_idle_time() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        // "busy" consumes 12 vCPUs of share while "late" is idle.
+        for i in 0..3 {
+            q.push(job_for(&format!("busy{i}"), 4, "busy", Priority::Normal));
+        }
+        for _ in 0..3 {
+            pop_release(&mut q, &pool);
+        }
+        // Now both tenants queue two flares each. If "late" had banked its
+        // idle time it would place all of its flares first; the activation
+        // snap gives it parity instead: late, busy, late, busy.
+        q.push(job_for("busy3", 4, "busy", Priority::Normal));
+        q.push(job_for("busy4", 4, "busy", Priority::Normal));
+        q.push(job_for("late0", 4, "late", Priority::Normal));
+        q.push(job_for("late1", 4, "late", Priority::Normal));
+        let order: Vec<String> = (0..4).map(|_| pop_release(&mut q, &pool)).collect();
+        assert_eq!(order, vec!["busy3", "late0", "busy4", "late1"]);
+    }
+
+    #[test]
+    fn idle_queue_starts_a_fresh_fairness_epoch() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        // A veteran tenant runs up a large consumption history...
+        for i in 0..3 {
+            q.push(job_for(&format!("a{i}"), 4, "vet", Priority::Normal));
+        }
+        for _ in 0..3 {
+            pop_release(&mut q, &pool);
+        }
+        assert!(q.is_empty());
+        // ...then the queue drains fully. A newcomer submitting into the
+        // idle queue must not bank that history as an advantage: both
+        // lanes restart at parity and alternate.
+        q.push(job_for("n0", 4, "new", Priority::Normal));
+        q.push(job_for("n1", 4, "new", Priority::Normal));
+        q.push(job_for("v3", 4, "vet", Priority::Normal));
+        q.push(job_for("v4", 4, "vet", Priority::Normal));
+        let order: Vec<String> = (0..4).map(|_| pop_release(&mut q, &pool)).collect();
+        assert_eq!(order, vec!["n0", "v3", "n1", "v4"]);
+    }
+
+    #[test]
+    fn priority_then_fifo_within_a_tenant() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("n1", 4, "t", Priority::Normal));
+        q.push(job_for("lo", 4, "t", Priority::Low));
+        q.push(job_for("n2", 4, "t", Priority::Normal));
+        q.push(job_for("hi", 4, "t", Priority::High));
+        assert_eq!(pop_release(&mut q, &pool), "hi");
+        assert_eq!(pop_release(&mut q, &pool), "n1");
+        assert_eq!(pop_release(&mut q, &pool), "n2");
+        assert_eq!(pop_release(&mut q, &pool), "lo");
+    }
+
+    #[test]
+    fn remove_pulls_a_queued_flare_out_of_its_lane() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("a1", 4, "a", Priority::Normal));
+        q.push(job_for("a2", 4, "a", Priority::Normal));
+        assert!(q.remove("ghost").is_none());
+        let gone = q.remove("a1").unwrap();
+        assert_eq!(gone.flare_id, "a1");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.depth_by_tenant(), vec![("a".to_string(), 1)]);
+        assert_eq!(pop_release(&mut q, &pool), "a2");
+        assert!(q.depth_by_tenant().is_empty());
     }
 
     #[test]

@@ -1,0 +1,48 @@
+//! Cooperative cancellation token.
+//!
+//! A `CancelToken` is shared between a flare's submitter, the controller's
+//! kill path (`DELETE /v1/flares/<id>`), and the worker threads executing
+//! the flare. Cancellation is cooperative: tripping the token never
+//! interrupts a thread, it is *observed* at phase boundaries
+//! (`run_flare_packs`) and at explicit checkpoints inside `work` functions
+//! (`BurstContext::check_cancel`), after which the flare's reservation is
+//! released promptly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag (cheap to clone; all clones observe the trip).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the token. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_trip() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        assert!(!t2.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t2.is_cancelled());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod benchkit;
 pub mod bytes;
+pub mod cancel;
 pub mod cli;
 pub mod json;
 pub mod proptest;

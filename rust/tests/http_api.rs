@@ -125,6 +125,51 @@ fn async_flare_lifecycle_over_http() {
 }
 
 #[test]
+fn cancel_lifecycle_over_http() {
+    let (_srv, addr, env) = server();
+    apps::kmeans::generate(&env, "del", 4, 5);
+    let deploy = Json::parse(
+        r#"{"name":"dkm","work":"kmeans","conf":{"granularity":2,"strategy":"homogeneous"}}"#,
+    )
+    .unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+    // Run a flare to completion, with tenant/priority routed through.
+    let flare = Json::obj(vec![
+        ("def", "dkm".into()),
+        (
+            "params",
+            Json::Arr(vec![
+                Json::obj(vec![("job", "del".into()), ("iters", 2.into())]);
+                4
+            ]),
+        ),
+        (
+            "options",
+            Json::obj(vec![("tenant", "acme".into()), ("priority", "high".into())]),
+        ),
+    ]);
+    let r = http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+    let id = r.get("flare_id").unwrap().as_str().unwrap().to_string();
+    let rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+    assert_eq!(rec.str_or("tenant", ""), "acme");
+    assert_eq!(rec.str_or("priority", ""), "high");
+
+    // DELETE on a completed flare is a clean conflict, and on an unknown
+    // id a clean not-found — neither disturbs stored state.
+    let err = http_request(&addr, "DELETE", &format!("/v1/flares/{id}"), None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("HTTP 409"), "{err}");
+    let err = http_request(&addr, "DELETE", "/v1/flares/never-was", None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("HTTP 404"), "{err}");
+    let rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
+    assert_eq!(rec.str_or("status", ""), "completed");
+}
+
+#[test]
 fn concurrent_http_clients() {
     let (_srv, addr, env) = server();
     apps::gridsearch::generate(&env, "chc", 5, 0);

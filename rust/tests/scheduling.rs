@@ -1,15 +1,17 @@
 //! Integration tests for the flare scheduling pipeline: queueing under a
 //! saturated pool, concurrent flares against one `InvokerPool`, backfill
-//! semantics, and capacity hygiene on worker failure. These use plain
-//! registered work functions (no app datasets), gated by condvars so the
-//! tests control exactly when capacity frees.
+//! semantics, capacity hygiene on worker failure, multi-tenant fairness
+//! under saturation, priority placement, and the cancellation kill path.
+//! These use plain registered work functions (no app datasets), gated by
+//! condvars so the tests control exactly when capacity frees.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 use burstc::platform::{
-    register_work, BurstConfig, Controller, FlareOptions, FlareStatus, WorkFn,
+    register_work, BurstConfig, CancelError, CancelOutcome, Controller, FlareOptions,
+    FlareStatus, WorkFn,
 };
 use burstc::util::json::Json;
 
@@ -202,4 +204,208 @@ fn backfill_passes_blocked_flare_without_starving_it() {
     assert_eq!(rb.outputs.len(), 8);
     assert!(rb.queue_wait_s > 0.0);
     assert_eq!(c.pool.free_vcpus(), vec![8]);
+}
+
+fn opts_for(tenant: &str, priority: &str) -> FlareOptions {
+    FlareOptions {
+        tenant: Some(tenant.to_string()),
+        priority: Some(priority.to_string()),
+        ..Default::default()
+    }
+}
+
+/// Tentpole acceptance: a heavy tenant flooding a saturated cluster cannot
+/// starve a light one — the weighted-fair pick interleaves their
+/// placements, so the light tenant finishes long before the heavy backlog
+/// drains.
+#[test]
+fn heavy_tenant_cannot_starve_light_tenant_under_saturation() {
+    register_work(
+        "sched-sleep",
+        Arc::new(|_p, _ctx| {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(Json::Null)
+        }),
+    );
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("fair", "sched-sleep", hetero()).unwrap();
+
+    // Every flare needs the whole machine: placements are strictly serial,
+    // so completion order is placement order.
+    let heavy: Vec<_> = (0..10)
+        .map(|_| {
+            c.submit_flare("fair", vec![Json::Null; 4], &opts_for("heavy", "normal"))
+                .unwrap()
+        })
+        .collect();
+    let light: Vec<_> = (0..3)
+        .map(|_| {
+            c.submit_flare("fair", vec![Json::Null; 4], &opts_for("light", "normal"))
+                .unwrap()
+        })
+        .collect();
+
+    let order = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for h in heavy {
+            let order = &order;
+            s.spawn(move || {
+                let id = h.flare_id.clone();
+                h.wait().unwrap();
+                order.lock().unwrap().push((id, "heavy"));
+            });
+        }
+        for h in light {
+            let order = &order;
+            s.spawn(move || {
+                let id = h.flare_id.clone();
+                h.wait().unwrap();
+                order.lock().unwrap().push((id, "light"));
+            });
+        }
+    });
+    let order = order.into_inner().unwrap();
+    assert_eq!(order.len(), 13);
+    let last_light = order
+        .iter()
+        .rposition(|(_, t)| *t == "light")
+        .expect("light flares completed");
+    let heavy_before = order[..last_light].iter().filter(|(_, t)| *t == "heavy").count();
+    // Fair interleave places the 3rd light flare by round ~6 (3 heavy
+    // ahead of it); FIFO starvation would put all 10 heavy first. The
+    // margin tolerates completion-delivery jitter.
+    assert!(
+        heavy_before <= 6,
+        "light tenant starved: {heavy_before} heavy flares finished first ({order:?})"
+    );
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Priorities order placements within a tenant: a high-priority flare
+/// submitted last is placed first once capacity frees (no inversion by
+/// earlier low-priority arrivals).
+#[test]
+fn high_priority_flare_placed_before_earlier_low_priority_ones() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-prio", Gate::work(&gate));
+    register_work(
+        "sched-sleep-prio",
+        Arc::new(|_p, _ctx| {
+            std::thread::sleep(Duration::from_millis(15));
+            Ok(Json::Null)
+        }),
+    );
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("hold", "sched-gate-prio", hetero()).unwrap();
+    c.deploy("prio", "sched-sleep-prio", hetero()).unwrap();
+
+    // Saturate, then queue low → normal → high in arrival order.
+    let ha = c.submit_flare("hold", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    let hb = c.submit_flare("prio", vec![Json::Null; 4], &opts_for("t", "low")).unwrap();
+    let hc = c.submit_flare("prio", vec![Json::Null; 4], &opts_for("t", "normal")).unwrap();
+    let hd = c.submit_flare("prio", vec![Json::Null; 4], &opts_for("t", "high")).unwrap();
+
+    gate.open();
+    ha.wait().unwrap();
+    let rb = hb.wait().unwrap();
+    let rc = hc.wait().unwrap();
+    let rd = hd.wait().unwrap();
+    // Serial placements 15 ms apart: queue waits order the placements as
+    // high < normal < low despite the reverse arrival order.
+    assert!(
+        rd.queue_wait_s < rc.queue_wait_s && rc.queue_wait_s < rb.queue_wait_s,
+        "expected high < normal < low, got high={} normal={} low={}",
+        rd.queue_wait_s,
+        rc.queue_wait_s,
+        rb.queue_wait_s
+    );
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Cancel-while-queued race: the flare is pulled out before placement, its
+/// waiter fails fast, and no capacity is ever consumed for it.
+#[test]
+fn cancel_while_queued_fails_fast_and_consumes_nothing() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-cq", Gate::work(&gate));
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("cq", "sched-gate-cq", hetero()).unwrap();
+
+    let ha = c.submit_flare("cq", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    let hb = c.submit_flare("cq", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+
+    let id_b = hb.flare_id.clone();
+    assert_eq!(c.cancel_flare(&id_b), Ok(CancelOutcome::CancelledQueued));
+    // The waiter fails fast — long before the gate opens.
+    let err = hb.wait().unwrap_err().to_string();
+    assert!(err.contains("cancelled"), "{err}");
+    assert_eq!(c.flare_status(&id_b), Some(FlareStatus::Cancelled));
+    assert_eq!(c.queued_flares(), 0);
+
+    gate.open();
+    ha.wait().unwrap();
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Cancel-while-running: the token trips, workers observe it at their next
+/// cancellation point, the reservation is released *without waiting for
+/// the work to finish*, and a queued flare immediately consumes the freed
+/// capacity.
+#[test]
+fn cancel_while_running_releases_capacity_to_queued_flares() {
+    // Work that never finishes on its own: it parks until cancelled.
+    register_work(
+        "sched-cancellable",
+        Arc::new(|_p, ctx: &burstc::bcm::BurstContext| {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            while !ctx.cancelled() {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("never cancelled (test hang guard)"));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            ctx.check_cancel()?;
+            Ok(Json::Null)
+        }),
+    );
+    register_work("sched-after", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("victim", "sched-cancellable", hetero()).unwrap();
+    c.deploy("next", "sched-after", hetero()).unwrap();
+
+    let ha = c.submit_flare("victim", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    let hb = c.submit_flare("next", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert_eq!(c.flare_status(&hb.flare_id), Some(FlareStatus::Queued));
+
+    let id_a = ha.flare_id.clone();
+    assert_eq!(c.cancel_flare(&id_a), Ok(CancelOutcome::CancellingRunning));
+    let err = ha.wait().unwrap_err().to_string();
+    assert!(err.contains("cancelled"), "{err}");
+    assert_eq!(c.flare_status(&id_a), Some(FlareStatus::Cancelled));
+
+    // The freed reservation goes straight to the queued flare.
+    let rb = hb.wait().unwrap();
+    assert_eq!(rb.outputs.len(), 4);
+    assert_eq!(c.flare_status(&rb.flare_id), Some(FlareStatus::Completed));
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Cancel-after-terminal race: cancelling a flare that already finished is
+/// a clean conflict and does not disturb the stored record.
+#[test]
+fn cancel_after_terminal_is_clean_conflict() {
+    register_work("sched-done", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("done", "sched-done", hetero()).unwrap();
+    let r = c.flare("done", vec![Json::Null; 2], &FlareOptions::default()).unwrap();
+    assert_eq!(
+        c.cancel_flare(&r.flare_id),
+        Err(CancelError::AlreadyTerminal(FlareStatus::Completed))
+    );
+    assert_eq!(c.cancel_flare("no-such-flare"), Err(CancelError::NotFound));
+    assert_eq!(c.flare_status(&r.flare_id), Some(FlareStatus::Completed));
 }
