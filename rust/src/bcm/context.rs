@@ -20,7 +20,7 @@ use anyhow::{anyhow, Result};
 use super::chunk::Op;
 use super::fabric::CommFabric;
 use super::mailbox::Bytes;
-use crate::util::cancel::CancelToken;
+use crate::util::cancel::{CancelReason, CancelToken};
 
 /// Per-worker burst context.
 pub struct BurstContext {
@@ -67,13 +67,21 @@ impl BurstContext {
         self.cancel.is_cancelled()
     }
 
+    /// Why this worker's flare was tripped, `None` while it is live. Lets
+    /// long `work` functions distinguish a scheduler *preempt* (the flare
+    /// unwinds, releases its reservation, and is requeued to run again)
+    /// from a terminal user *cancel* — e.g. to checkpoint partial state
+    /// before unwinding from a preempt.
+    pub fn cancel_reason(&self) -> Option<CancelReason> {
+        self.cancel.reason()
+    }
+
     /// Cooperative cancellation point: error out of the `work` function if
-    /// the flare was cancelled.
+    /// the flare was cancelled or preempted (the error names which).
     pub fn check_cancel(&self) -> Result<()> {
-        if self.cancel.is_cancelled() {
-            Err(anyhow!("flare cancelled"))
-        } else {
-            Ok(())
+        match self.cancel.reason() {
+            None => Ok(()),
+            Some(r) => Err(anyhow!("flare {}", r.name())),
         }
     }
 

@@ -5,7 +5,9 @@
 //!   deploy      deploy a burst definition against a running server
 //!   flare       invoke a burst against a running server (--nowait to queue
 //!               asynchronously and get the flare id back immediately;
-//!               --tenant/--priority route it through fair-share scheduling)
+//!               --tenant/--priority route it through fair-share scheduling;
+//!               --deadline-ms sets a queueing deadline, --no-preempt opts
+//!               out of scheduler-initiated preemption)
 //!   status      live status of a submitted flare
 //!   cancel      cancel a queued or running flare
 //!   flares      list recent flares and their statuses
@@ -42,6 +44,7 @@ const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|ap
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
               [--granularity N] [--faas] [--nowait]
               [--tenant NAME] [--priority low|normal|high]
+              [--deadline-ms N] [--no-preempt]
   status      --addr HOST:PORT --id FLARE_ID
   cancel      --addr HOST:PORT --id FLARE_ID
   flares      --addr HOST:PORT
@@ -157,6 +160,14 @@ fn flare(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.get("priority") {
         options.push(("priority", p.into()));
+    }
+    // Queueing deadline (EDF tie-break; expires with status `expired`).
+    if let Some(d) = args.get("deadline-ms") {
+        options.push(("deadline_ms", Json::Num(d.parse::<f64>()?)));
+    }
+    // Opt out of scheduler-initiated preemption.
+    if args.flag("no-preempt") {
+        options.push(("preemptible", Json::Bool(false)));
     }
     let body = Json::obj(vec![
         ("def", def.into()),

@@ -12,11 +12,23 @@
 //! out before placement and their waiters fail fast; running flares have
 //! their [`CancelToken`] tripped, which the execution path observes at
 //! phase boundaries so the reservation is released promptly.
+//!
+//! Priorities also *reclaim*: when a `high` flare is starved, the
+//! scheduler preempts running lower-priority flares
+//! ([`Controller::preempt_for_starved_high_flare`]) — their tokens trip
+//! with the `Preempted` reason, the workers unwind, and each victim is
+//! requeued at the head of its lane with `preempt_count + 1` (capped by
+//! the policy's livelock guard; opt out per flare with
+//! [`FlareOptions::preemptible`]). Flares may carry a queueing deadline
+//! ([`FlareOptions::deadline_ms`]): earliest-deadline-first breaks ties
+//! within a priority class, and a flare still queued past its deadline
+//! fails fast with [`FlareStatus::Expired`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -25,17 +37,21 @@ use super::invoker::{model_startup, InvokerPool, ModeledStartup};
 use super::pack::run_flare_packs;
 use super::packing::{plan, PackSpec, PackingStrategy};
 use super::queue::{
-    scheduler_loop, FlareHandle, Priority, QueuedFlare, ResultSlot, SchedState,
-    DEFAULT_TENANT, MAX_BACKFILL_PASSES,
+    scheduler_loop, select_victims, FlareHandle, PreemptCandidate, Priority,
+    QueuedFlare, ResultSlot, SchedState, DEFAULT_TENANT, MAX_BACKFILL_PASSES,
 };
 use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::ClusterSpec;
 use crate::metrics::{Timeline, TrafficStats};
-use crate::util::cancel::CancelToken;
+use crate::util::cancel::{CancelReason, CancelToken};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
+
+/// Default cap on how many times one flare may be preempted and requeued
+/// (the livelock guard: at the cap it stops being selectable as a victim).
+pub const DEFAULT_MAX_PREEMPTS: u32 = 3;
 
 /// Per-flare execution options (overrides of the deployed config).
 #[derive(Debug, Clone, Default)]
@@ -54,6 +70,13 @@ pub struct FlareOptions {
     /// Priority class name within the tenant: `low` | `normal` | `high`
     /// (validated at submit; defaults to `normal`).
     pub priority: Option<String>,
+    /// May the scheduler preempt this flare to reclaim capacity for a
+    /// `high` one? Defaults to `true`; set `false` to opt out.
+    pub preemptible: Option<bool>,
+    /// Queueing deadline in milliseconds from submission: EDF tie-break
+    /// within a priority class, and a flare still queued past it fails
+    /// fast with `FlareStatus::Expired`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl FlareOptions {
@@ -65,6 +88,8 @@ impl FlareOptions {
             faas: j.get("faas").and_then(Json::as_bool).unwrap_or(false),
             tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
             priority: j.get("priority").and_then(Json::as_str).map(str::to_string),
+            preemptible: j.get("preemptible").and_then(Json::as_bool),
+            deadline_ms: j.get("deadline_ms").and_then(Json::as_usize).map(|d| d as u64),
         }
     }
 }
@@ -149,6 +174,21 @@ impl FlareResult {
     }
 }
 
+/// A placed flare the preemption policy can see (and select from).
+struct RunningFlare {
+    priority: Priority,
+    /// vCPUs its reservation holds (= burst size).
+    vcpus: usize,
+    /// Placement sequence; higher = started more recently.
+    seq: u64,
+    preemptible: bool,
+    preempt_count: u32,
+    cancel: CancelToken,
+    /// Already tripped for preemption: its vCPUs count as in-flight
+    /// reclaim, so successive scheduler passes don't over-preempt.
+    preempting: bool,
+}
+
 /// The burst platform controller.
 pub struct Controller {
     pub db: BurstDb,
@@ -165,6 +205,16 @@ pub struct Controller {
     sched_thread: Mutex<Option<JoinHandle<()>>>,
     /// Cancel tokens of every non-terminal flare, by id (the kill path).
     cancels: Mutex<HashMap<String, CancelToken>>,
+    /// Currently placed flares, by id: the preemption policy's view.
+    running: Mutex<HashMap<String, RunningFlare>>,
+    /// Placement sequence counter (recency order for victim selection).
+    next_seq: AtomicU64,
+    /// Preemption policy knobs (see [`Controller::set_preemption_policy`]).
+    preempt_enabled: AtomicBool,
+    max_preempts: AtomicU32,
+    /// Lifetime counters surfaced in `/metrics`.
+    preempted_total: AtomicU64,
+    expired_total: AtomicU64,
 }
 
 impl Controller {
@@ -190,6 +240,12 @@ impl Controller {
                 sched,
                 sched_thread: Mutex::new(Some(handle)),
                 cancels: Mutex::new(HashMap::new()),
+                running: Mutex::new(HashMap::new()),
+                next_seq: AtomicU64::new(0),
+                preempt_enabled: AtomicBool::new(true),
+                max_preempts: AtomicU32::new(DEFAULT_MAX_PREEMPTS),
+                preempted_total: AtomicU64::new(0),
+                expired_total: AtomicU64::new(0),
             }
         })
     }
@@ -271,6 +327,10 @@ impl Controller {
             })?,
             None => Priority::Normal,
         };
+        let preemptible = opts.preemptible.unwrap_or(true);
+        // Queueing deadline: anchored at submission, so a requeued victim
+        // keeps its original deadline along with its original submit time.
+        let deadline = opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
 
         // Admission: a flare that cannot be placed on an *idle* cluster can
         // never run, so reject it now — distinct from "busy, queued".
@@ -290,8 +350,10 @@ impl Controller {
             def_name,
             self.next_flare.fetch_add(1, Ordering::Relaxed)
         );
-        self.db
-            .put_flare(FlareRecord::queued(&flare_id, def_name, &tenant, priority));
+        self.db.put_flare(FlareRecord {
+            deadline_ms: opts.deadline_ms,
+            ..FlareRecord::queued(&flare_id, def_name, &tenant, priority)
+        });
         let slot = Arc::new(ResultSlot::new());
         let cancel = CancelToken::new();
         self.cancels.lock().unwrap().insert(flare_id.clone(), cancel.clone());
@@ -308,6 +370,10 @@ impl Controller {
             tenant,
             priority,
             cancel,
+            preemptible,
+            deadline,
+            preempt_count: 0,
+            charged: 0.0,
             slot: slot.clone(),
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
@@ -378,16 +444,111 @@ impl Controller {
         }
         // Placed (or being placed): trip the token; the execution thread
         // observes it at the next phase boundary / cancellation point.
-        let token = self.cancels.lock().unwrap().get(flare_id).cloned();
-        match token {
-            Some(t) => {
+        // The trip happens *under* the registry lock: the preempt-requeue
+        // path swaps in a fresh token under the same lock, so the user
+        // kill either lands on the old token before the swap decision
+        // (requeue aborts, terminal `Cancelled`) or on the fresh token
+        // after it (caught at the next placement's pre-check) — it can
+        // never fall between and be lost.
+        {
+            let cancels = self.cancels.lock().unwrap();
+            if let Some(t) = cancels.get(flare_id) {
                 t.cancel();
-                Ok(CancelOutcome::CancellingRunning)
+                return Ok(CancelOutcome::CancellingRunning);
             }
-            None => match self.db.get_flare(flare_id) {
-                Some(rec) => Err(CancelError::AlreadyTerminal(rec.status)),
-                None => Err(CancelError::NotFound),
-            },
+        }
+        match self.db.get_flare(flare_id) {
+            Some(rec) => Err(CancelError::AlreadyTerminal(rec.status)),
+            None => Err(CancelError::NotFound),
+        }
+    }
+
+    /// Preemption policy knobs: enable or disable scheduler-initiated
+    /// preemption, and cap how many times one flare may be preempted and
+    /// requeued (the livelock guard — at the cap a flare stops being
+    /// selectable as a victim and runs to completion).
+    pub fn set_preemption_policy(&self, enabled: bool, max_preempts: u32) {
+        self.preempt_enabled.store(enabled, Ordering::Relaxed);
+        self.max_preempts.store(max_preempts, Ordering::Relaxed);
+    }
+
+    /// Lifetime count of scheduler-initiated preemptions.
+    pub fn preemptions(&self) -> u64 {
+        self.preempted_total.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of flares that expired while queued.
+    pub fn expirations(&self) -> u64 {
+        self.expired_total.load(Ordering::Relaxed)
+    }
+
+    /// Fail fast every queued flare whose deadline lapsed (scheduler pass):
+    /// terminal [`FlareStatus::Expired`], waiter unblocked with an error.
+    pub(crate) fn expire_overdue_queued(&self) {
+        let expired = self.sched.queue.lock().unwrap().take_expired(Instant::now());
+        for job in expired {
+            self.expired_total.fetch_add(1, Ordering::Relaxed);
+            let e = anyhow!(
+                "flare '{}' expired: deadline passed after {:.3}s queued",
+                job.flare_id,
+                job.submitted.secs()
+            );
+            self.db.update_flare(&job.flare_id, |r| {
+                r.status = FlareStatus::Expired;
+                r.error = Some(e.to_string());
+            });
+            self.clear_cancel(&job.flare_id);
+            job.slot.deliver(Err(e));
+        }
+    }
+
+    /// Scheduler-initiated preemption: if a `high` flare is starved (it
+    /// cannot be placed and no placement is pending that would free
+    /// enough), select victims among running lower-priority preemptible
+    /// flares and trip their tokens with the `Preempted` reason. The
+    /// workers unwind at their next cancellation point, the reservation is
+    /// released, and the victim is requeued at the head of its lane.
+    pub(crate) fn preempt_for_starved_high_flare(&self) {
+        if !self.preempt_enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let starved = self.sched.queue.lock().unwrap().oldest_of_class(Priority::High);
+        let Some(burst_size) = starved else { return };
+        let free: usize = self.pool.free_vcpus().iter().sum();
+        let max = self.max_preempts.load(Ordering::Relaxed);
+        let mut running = self.running.lock().unwrap();
+        // vCPUs already being reclaimed by in-flight preemptions count as
+        // covered: successive scheduler passes must not pile on victims.
+        let mut inflight = 0usize;
+        for r in running.values().filter(|r| r.preempting) {
+            inflight += r.vcpus;
+        }
+        let covered = free + inflight;
+        if burst_size <= covered {
+            return;
+        }
+        let needed = burst_size - covered;
+        let cands: Vec<PreemptCandidate> = running
+            .iter()
+            .filter(|(_, r)| {
+                !r.preempting
+                    && r.preemptible
+                    && r.preempt_count < max
+                    && r.priority < Priority::High
+            })
+            .map(|(id, r)| PreemptCandidate {
+                flare_id: id.clone(),
+                priority: r.priority,
+                vcpus: r.vcpus,
+                seq: r.seq,
+            })
+            .collect();
+        for id in select_victims(&cands, needed) {
+            if let Some(r) = running.get_mut(&id) {
+                r.preempting = true;
+                r.cancel.preempt();
+                self.preempted_total.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -416,6 +577,9 @@ impl Controller {
             // and finish as `Cancelled` without ever starting the packs.
             if job.cancel.is_cancelled() {
                 c.pool.release(&packs);
+                // The lane was provisionally charged at placement; the
+                // flare never ran, so the measured usage settles to zero.
+                c.sched.queue.lock().unwrap().settle(&job.tenant, job.charged, 0.0);
                 let e = anyhow!("flare '{}' cancelled before placement", job.flare_id);
                 c.db.update_flare(&job.flare_id, |r| {
                     r.status = FlareStatus::Cancelled;
@@ -426,6 +590,20 @@ impl Controller {
                 job.slot.deliver(Err(e));
                 return;
             }
+            // Register with the preemption policy's view of the cluster.
+            let seq = c.next_seq.fetch_add(1, Ordering::Relaxed);
+            c.running.lock().unwrap().insert(
+                job.flare_id.clone(),
+                RunningFlare {
+                    priority: job.priority,
+                    vcpus: job.burst_size,
+                    seq,
+                    preemptible: job.preemptible,
+                    preempt_count: job.preempt_count,
+                    cancel: job.cancel.clone(),
+                    preempting: false,
+                },
+            );
             let queue_wait_s = job.submitted.secs();
             c.db.set_flare_status(&job.flare_id, FlareStatus::Running);
             // A panic must neither strand the waiter in `wait()` nor
@@ -441,6 +619,13 @@ impl Controller {
                 });
                 Err(e)
             });
+            c.running.lock().unwrap().remove(&job.flare_id);
+            // A preempted flare (and only a preempted one — a user kill
+            // wins when both raced) is requeued instead of completing.
+            if result.is_err() && job.cancel.reason() == Some(CancelReason::Preempted) {
+                Controller::requeue_preempted(&c, job);
+                return;
+            }
             c.clear_cancel(&job.flare_id);
             sched.wake();
             job.slot.deliver(result);
@@ -448,6 +633,7 @@ impl Controller {
         if spawned.is_err() {
             if let Some((job, packs)) = payload.lock().unwrap().take() {
                 this.pool.release(&packs);
+                this.sched.queue.lock().unwrap().settle(&job.tenant, job.charged, 0.0);
                 let e = anyhow!(
                     "could not spawn execution thread for flare '{}'",
                     job.flare_id
@@ -462,6 +648,66 @@ impl Controller {
                 this.sched.wake();
                 job.slot.deliver(Err(e));
             }
+        }
+    }
+
+    /// A preempted flare has unwound and released its reservation: put it
+    /// back at the head of its lane with a fresh token, its original
+    /// submit time, and `preempt_count + 1` — unless a user cancel raced
+    /// the requeue, in which case terminal `Cancelled` wins and the flare
+    /// is never resurrected.
+    fn requeue_preempted(this: &Arc<Controller>, mut job: QueuedFlare) {
+        let fresh = CancelToken::new();
+        {
+            // `cancel_flare` trips the registered token while holding this
+            // lock, so exactly one of two things is true when we decide:
+            // the user bit is already on the old token (abort the requeue
+            // below), or any later cancel lands on the fresh token and is
+            // caught at the next placement's pre-check.
+            let mut cancels = this.cancels.lock().unwrap();
+            if job.cancel.user_cancelled() {
+                cancels.remove(&job.flare_id);
+                drop(cancels);
+                let e = anyhow!("flare '{}' cancelled", job.flare_id);
+                this.db.update_flare(&job.flare_id, |r| {
+                    r.status = FlareStatus::Cancelled;
+                    r.error = Some(e.to_string());
+                });
+                this.sched.wake();
+                job.slot.deliver(Err(e));
+                return;
+            }
+            cancels.insert(job.flare_id.clone(), fresh.clone());
+        }
+        let flare_id = job.flare_id.clone();
+        let slot = job.slot.clone();
+        job.cancel = fresh.clone();
+        job.preempt_count += 1;
+        let preempt_count = job.preempt_count;
+        this.db.update_flare(&flare_id, |r| {
+            r.status = FlareStatus::Queued;
+            r.preempt_count = preempt_count;
+            r.error = None;
+        });
+        this.sched.queue.lock().unwrap().requeue_preempted(job);
+        this.sched.wake();
+        // A user cancel can land in the swap→push window above: it finds
+        // neither a queued job to remove nor an execution to unwind, only
+        // the fresh token. Re-check after the push so that kill finishes
+        // now — not at the next successful placement's pre-check, which a
+        // saturated cluster could postpone indefinitely. (A cancel landing
+        // after the push is handled by `cancel_flare` itself: exactly one
+        // side wins the queue removal.)
+        if fresh.user_cancelled()
+            && this.sched.queue.lock().unwrap().remove(&flare_id).is_some()
+        {
+            let e = anyhow!("flare '{flare_id}' cancelled");
+            this.db.update_flare(&flare_id, |r| {
+                r.status = FlareStatus::Cancelled;
+                r.error = Some(e.to_string());
+            });
+            this.clear_cancel(&flare_id);
+            slot.deliver(Err(e));
         }
     }
 
@@ -527,6 +773,15 @@ impl Controller {
         let work_wall_s = sw.secs();
         fabric.teardown();
         let packs = reservation.release_now();
+        // Settle the lane's provisional placement charge to the measured
+        // vCPU·seconds the reservation was actually held (bugfix: a flare
+        // that failed, was cancelled, or was preempted early must not be
+        // billed as if it ran to completion).
+        self.sched.queue.lock().unwrap().settle(
+            &job.tenant,
+            job.charged,
+            job.burst_size as f64 * work_wall_s,
+        );
         match result {
             Ok(outputs) => {
                 let res = FlareResult {
@@ -550,15 +805,19 @@ impl Controller {
             Err(e) => {
                 // A failure caused by the kill path is `Cancelled`, not
                 // `Failed` — the distinction is terminal and observable.
-                let status = if job.cancel.is_cancelled() {
-                    FlareStatus::Cancelled
-                } else {
-                    FlareStatus::Failed
+                // A *preempt* unwind is not terminal at all: the spawn
+                // thread requeues the flare, so leave the record alone.
+                let status = match job.cancel.reason() {
+                    Some(CancelReason::Preempted) => None,
+                    Some(CancelReason::User) => Some(FlareStatus::Cancelled),
+                    None => Some(FlareStatus::Failed),
                 };
-                self.db.update_flare(&job.flare_id, |r| {
-                    r.status = status;
-                    r.error = Some(e.to_string());
-                });
+                if let Some(status) = status {
+                    self.db.update_flare(&job.flare_id, |r| {
+                        r.status = status;
+                        r.error = Some(e.to_string());
+                    });
+                }
                 Err(e)
             }
         }
@@ -790,6 +1049,25 @@ mod tests {
         let bad = FlareOptions { priority: Some("urgent".into()), ..Default::default() };
         let err = c.flare("tp", vec![Json::Null; 2], &bad).unwrap_err().to_string();
         assert!(err.contains("unknown priority 'urgent'"), "{err}");
+    }
+
+    #[test]
+    fn preemption_and_deadline_options_parse_and_record() {
+        register_echo();
+        let c = Controller::test_platform(1, 8, 1e-6);
+        c.deploy("pd", "ctrl-echo", BurstConfig::default()).unwrap();
+        let opts = FlareOptions::from_json(
+            &Json::parse(r#"{"preemptible":false,"deadline_ms":60000}"#).unwrap(),
+        );
+        assert_eq!(opts.preemptible, Some(false));
+        assert_eq!(opts.deadline_ms, Some(60_000));
+        let r = c.flare("pd", vec![Json::Null; 2], &opts).unwrap();
+        let rec = c.db.get_flare(&r.flare_id).unwrap();
+        assert_eq!(rec.deadline_ms, Some(60_000));
+        assert_eq!(rec.preempt_count, 0);
+        // Never preempted, never expired on this idle cluster.
+        assert_eq!(c.preemptions(), 0);
+        assert_eq!(c.expirations(), 0);
     }
 
     #[test]

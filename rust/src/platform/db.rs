@@ -102,6 +102,9 @@ pub enum FlareStatus {
     Failed,
     /// Killed through `Controller::cancel_flare` before completing.
     Cancelled,
+    /// Its `deadline_ms` passed while it was still queued: failed fast
+    /// without ever being placed.
+    Expired,
 }
 
 impl FlareStatus {
@@ -112,14 +115,19 @@ impl FlareStatus {
             FlareStatus::Completed => "completed",
             FlareStatus::Failed => "failed",
             FlareStatus::Cancelled => "cancelled",
+            FlareStatus::Expired => "expired",
         }
     }
 
-    /// Terminal states never change again.
+    /// Terminal states never change again. (A *preempted* flare is not
+    /// terminal: it transitions `running` → `queued` and runs again.)
     pub fn is_terminal(&self) -> bool {
         matches!(
             self,
-            FlareStatus::Completed | FlareStatus::Failed | FlareStatus::Cancelled
+            FlareStatus::Completed
+                | FlareStatus::Failed
+                | FlareStatus::Cancelled
+                | FlareStatus::Expired
         )
     }
 }
@@ -134,9 +142,15 @@ pub struct FlareRecord {
     /// Scheduling priority class within the tenant.
     pub priority: Priority,
     pub status: FlareStatus,
+    /// Times the scheduler preempted (and requeued) this flare to reclaim
+    /// capacity for a higher-priority one.
+    pub preempt_count: u32,
+    /// Queueing deadline in milliseconds from submission, when one was set.
+    pub deadline_ms: Option<u64>,
     pub outputs: Vec<Json>,
     pub metadata: Json,
-    /// Failure description when `status` is `Failed` or `Cancelled`.
+    /// Failure description when `status` is `Failed`, `Cancelled`, or
+    /// `Expired`.
     pub error: Option<String>,
 }
 
@@ -154,6 +168,8 @@ impl FlareRecord {
             tenant: tenant.to_string(),
             priority,
             status: FlareStatus::Queued,
+            preempt_count: 0,
+            deadline_ms: None,
             outputs: Vec::new(),
             metadata: Json::Null,
             error: None,
@@ -167,9 +183,13 @@ impl FlareRecord {
             ("tenant", Json::Str(self.tenant.clone())),
             ("priority", self.priority.name().into()),
             ("status", self.status.name().into()),
+            ("preempt_count", (self.preempt_count as usize).into()),
             ("metadata", self.metadata.clone()),
             ("outputs", Json::Arr(self.outputs.clone())),
         ];
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", d.into()));
+        }
         if let Some(e) = &self.error {
             fields.push(("error", Json::Str(e.clone())));
         }
@@ -431,6 +451,30 @@ mod tests {
         assert_eq!(FlareStatus::Cancelled.name(), "cancelled");
         // Unknown ids are a no-op, not a panic.
         db.set_flare_status("ghost", FlareStatus::Completed);
+    }
+
+    #[test]
+    fn expired_is_terminal_and_preemption_fields_serialize() {
+        assert!(FlareStatus::Expired.is_terminal());
+        assert_eq!(FlareStatus::Expired.name(), "expired");
+        let db = BurstDb::new();
+        db.put_flare(FlareRecord { deadline_ms: Some(250), ..queued("f1") });
+        // A preempt cycle moves the record back to queued, never terminal.
+        db.update_flare("f1", |r| {
+            r.status = FlareStatus::Running;
+        });
+        db.update_flare("f1", |r| {
+            r.status = FlareStatus::Queued;
+            r.preempt_count += 1;
+        });
+        let rec = db.get_flare("f1").unwrap();
+        assert!(!rec.status.is_terminal());
+        assert_eq!(rec.preempt_count, 1);
+        let j = rec.to_json();
+        assert_eq!(j.get("preempt_count").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("deadline_ms").unwrap().as_usize(), Some(250));
+        db.set_flare_status("f1", FlareStatus::Expired);
+        assert_eq!(db.get_flare("f1").unwrap().status.name(), "expired");
     }
 
     #[test]

@@ -25,12 +25,22 @@
 //!                           tripped), 404 unknown id, 409 already terminal
 //!   GET    /v1/defs
 //!   GET    /healthz
-//!   GET    /metrics         load view + total and per-tenant queue depth
+//!   GET    /metrics         load view, total + per-tenant queue depth,
+//!                           preemption / expiry counters
 //!
 //! Flare options (`options` object in both flare routes): `granularity`,
 //! `strategy`, `backend`, `faas`, plus the multi-tenant scheduling fields
-//! `tenant` (fair-share lane, default "default") and `priority`
-//! (`low` | `normal` | `high`, default `normal`).
+//! `tenant` (fair-share lane, default "default"), `priority`
+//! (`low` | `normal` | `high`, default `normal`), `preemptible` (default
+//! `true`; set `false` to opt out of scheduler-initiated preemption) and
+//! `deadline_ms` (queueing deadline: EDF tie-break in class, expired
+//! flares fail fast with status `expired`).
+//!
+//! The blocking `POST /v1/flare` waits *interruptibly*: the handler loops
+//! a bounded `FlareHandle::wait_timeout` against the server's stop flag,
+//! so `HttpServer::shutdown` completes within one wait quantum instead of
+//! stalling for the flare's full duration (the flare itself keeps running;
+//! the parked client gets `503` + the id to poll).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -44,6 +54,10 @@ use anyhow::{anyhow, Result};
 use super::controller::{CancelError, Controller, FlareOptions};
 use super::db::BurstConfig;
 use crate::util::json::Json;
+
+/// Quantum of the blocking route's interruptible wait: the bound on how
+/// long a parked `POST /v1/flare` handler can delay shutdown.
+const BLOCKING_WAIT_QUANTUM: Duration = Duration::from_millis(100);
 
 /// Default size of the connection-handling worker pool.
 pub const DEFAULT_HTTP_WORKERS: usize = 8;
@@ -126,6 +140,7 @@ impl HttpServer {
                 let rx = rx.clone();
                 let c = controller.clone();
                 let gate = gate.clone();
+                let stop = stop.clone();
                 std::thread::Builder::new()
                     .name(format!("http-worker-{i}"))
                     .spawn(move || loop {
@@ -135,7 +150,7 @@ impl HttpServer {
                             Err(_) => return, // acceptor gone: shutdown
                         };
                         let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-                        let _ = handle_conn(stream, &c, &gate);
+                        let _ = handle_conn(stream, &c, &gate, &stop);
                     })
                     .expect("spawn http worker")
             })
@@ -201,7 +216,12 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_conn(stream: TcpStream, controller: &Controller, gate: &BlockingGate) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    controller: &Controller,
+    gate: &BlockingGate,
+    stop: &AtomicBool,
+) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
@@ -237,7 +257,7 @@ fn handle_conn(stream: TcpStream, controller: &Controller, gate: &BlockingGate) 
         let mut body = vec![0u8; content_length];
         reader.read_exact(&mut body)?;
         let body = String::from_utf8_lossy(&body).to_string();
-        route(&method, &path, &body, controller, gate)
+        route(&method, &path, &body, controller, gate, stop)
     };
     let body = payload.to_string();
     let mut stream = reader.into_inner();
@@ -259,6 +279,7 @@ fn status_text(code: u16) -> &'static str {
         409 => "409 Conflict",
         413 => "413 Payload Too Large",
         429 => "429 Too Many Requests",
+        503 => "503 Service Unavailable",
         _ => "500 Internal Server Error",
     }
 }
@@ -276,8 +297,9 @@ fn route(
     body: &str,
     c: &Controller,
     gate: &BlockingGate,
+    stop: &AtomicBool,
 ) -> (u16, Json) {
-    match dispatch(method, path, body, c, gate) {
+    match dispatch(method, path, body, c, gate, stop) {
         Ok(r) => r,
         Err(e) => (400, err_json(e)),
     }
@@ -306,6 +328,7 @@ fn dispatch(
     body: &str,
     c: &Controller,
     gate: &BlockingGate,
+    stop: &AtomicBool,
 ) -> Result<(u16, Json)> {
     match (method, path) {
         ("GET", "/healthz") => Ok((200, Json::obj(vec![("status", "ok".into())]))),
@@ -326,6 +349,8 @@ fn dispatch(
                     ("total_vcpus", c.pool.capacity().into()),
                     ("queued_flares", c.queued_flares().into()),
                     ("queued_by_tenant", Json::Obj(by_tenant)),
+                    ("preempted_total", c.preemptions().into()),
+                    ("expired_total", c.expirations().into()),
                     ("deployed_defs", c.db.list_defs().len().into()),
                 ]),
             ))
@@ -368,15 +393,33 @@ fn dispatch(
             // Submit errors are the client's fault (400, via `?`); once
             // admitted, an execution failure is the platform's (500).
             let handle = c.submit_flare(&def, params, &opts)?;
-            match handle.wait() {
-                Ok(r) => {
-                    let mut summary = r.summary_json();
-                    if let Json::Obj(m) = &mut summary {
-                        m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
-                    }
-                    Ok((200, summary))
+            // Interruptible wait (ROADMAP-known bug): a shutdown request
+            // must not park this worker for the flare's full duration.
+            // The flare keeps running; the parked client gets the id to
+            // poll instead.
+            loop {
+                if let Some(result) = handle.wait_timeout(BLOCKING_WAIT_QUANTUM) {
+                    return Ok(match result {
+                        Ok(r) => {
+                            let mut summary = r.summary_json();
+                            if let Json::Obj(m) = &mut summary {
+                                m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
+                            }
+                            (200, summary)
+                        }
+                        Err(e) => (500, err_json(e)),
+                    });
                 }
-                Err(e) => Ok((500, err_json(e))),
+                if stop.load(Ordering::Relaxed) {
+                    return Ok((
+                        503,
+                        err_json(format!(
+                            "server shutting down before flare '{}' completed; \
+                             it is still running — poll GET /v1/flares/{}",
+                            handle.flare_id, handle.flare_id
+                        )),
+                    ));
+                }
             }
         }
         ("POST", "/v1/flares") => {
@@ -727,6 +770,77 @@ mod tests {
         open_gate(&gate);
         let r = blocker.join().unwrap().unwrap();
         assert_eq!(r.get("outputs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Regression (ROADMAP-known bug): `HttpServer::shutdown` used to join
+    /// a worker parked in the blocking route's uninterruptible `wait()`,
+    /// stalling shutdown for the flare's full duration. The interruptible
+    /// wait loop bounds it to one wait quantum.
+    #[test]
+    fn shutdown_is_bounded_with_blocking_flare_in_flight() {
+        let gate = gated_work("http-gated-shutdown");
+        let c = Controller::test_platform(1, 4, 1e-6);
+        let srv = HttpServer::start(c.clone(), 0).unwrap();
+        let addr = srv.addr.clone();
+        let deploy = Json::parse(
+            r#"{"name":"gs","work":"http-gated-shutdown","conf":{"granularity":2,"strategy":"heterogeneous"}}"#,
+        )
+        .unwrap();
+        http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+        // A blocking client parks on a flare that never finishes on its own.
+        let flare = Json::parse(r#"{"def":"gs","params":[1,1]}"#).unwrap();
+        let blocker = {
+            let addr = addr.clone();
+            std::thread::spawn(move || http_request(&addr, "POST", "/v1/flare", Some(&flare)))
+        };
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let list = http_request(&addr, "GET", "/v1/flares", None).unwrap();
+            if list
+                .as_arr()
+                .unwrap()
+                .iter()
+                .any(|f| f.str_or("status", "") == "running")
+            {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "flare never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        // Shutdown completes within the wait-timeout bound, not after the
+        // (gated, i.e. unbounded) flare duration.
+        let sw = std::time::Instant::now();
+        srv.shutdown();
+        assert!(
+            sw.elapsed() < Duration::from_secs(5),
+            "shutdown stalled {:?} behind a blocking flare",
+            sw.elapsed()
+        );
+        // The parked client was answered, not dropped: 503 + a poll hint.
+        let err = blocker.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("HTTP 503"), "{err}");
+        assert!(err.contains("/v1/flares/"), "{err}");
+
+        // The flare itself kept running on the controller; open the gate
+        // and it completes cleanly.
+        let id = c
+            .db
+            .list_flare_summaries(1)
+            .first()
+            .map(|(id, _, _)| id.clone())
+            .expect("flare recorded");
+        open_gate(&gate);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while c.flare_status(&id) != Some(crate::platform::FlareStatus::Completed) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "flare never completed after shutdown"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(c.pool.free_vcpus(), vec![4]);
     }
 
     #[test]

@@ -36,11 +36,45 @@
 //! phase boundaries (and at `BurstContext::check_cancel` points inside
 //! `work` functions), releasing the reservation promptly.
 //!
+//! # Flare lifecycle
+//!
+//! The full state machine, including the preemption loop (PR 3): a
+//! starved `high` flare makes the scheduler preempt running
+//! lower-priority preemptible flares — their workers unwind at the next
+//! cancellation point and the flare goes *back to queued* (head of its
+//! lane, original submit time, `preempt_count + 1`), while a flare whose
+//! `deadline_ms` lapses in the queue fails fast as `expired`:
+//!
+//! ```text
+//!            submit_flare
+//!                 │
+//!                 ▼                    deadline passed
+//!            ┌─ queued ──────────────────────────────────▶ expired
+//!            │    │  ▲
+//!  cancel_flare   │  │ preempted by scheduler
+//!            │  placed │ (reservation released,
+//!            │    │    │  preempt_count + 1)
+//!            │    ▼    │
+//!            │  running ──────────┬──────────▶ completed
+//!            │    │               └──────────▶ failed
+//!            │    │ cancel_flare
+//!            ▼    ▼
+//!           cancelled
+//! ```
+//!
+//! `completed`, `failed`, `cancelled`, and `expired` are terminal; the
+//! `running → queued` preempt edge is the only backward transition, taken
+//! at most `max_preempts` times per flare (the livelock guard), never for
+//! flares submitted with `preemptible = false`, and always lost to a
+//! concurrent `cancel_flare` (terminal `Cancelled` beats the requeue).
+//!
 //! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id,
-//! with `options.tenant` / `options.priority`), `GET /v1/flares/<id>`
-//! reports live status, `DELETE /v1/flares/<id>` cancels,
-//! `GET /v1/flares` lists recent flares; the blocking `POST /v1/flare`
-//! remains for simple clients, capped below the HTTP worker-pool size.
+//! with `options.tenant` / `options.priority` / `options.preemptible` /
+//! `options.deadline_ms`), `GET /v1/flares/<id>` reports live status and
+//! `preempt_count`, `DELETE /v1/flares/<id>` cancels, `GET /v1/flares`
+//! lists recent flares; the blocking `POST /v1/flare` remains for simple
+//! clients, capped below the HTTP worker-pool size and waiting
+//! interruptibly so server shutdown stays bounded.
 
 pub mod controller;
 pub mod db;
@@ -52,8 +86,12 @@ pub mod queue;
 
 pub use controller::{
     CancelError, CancelOutcome, Controller, FlareOptions, FlareResult,
+    DEFAULT_MAX_PREEMPTS,
 };
 pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, FlareStatus, WorkFn};
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
 pub use packing::{plan, PackSpec, PackingStrategy};
-pub use queue::{place_with_spillback, FlareHandle, FlareQueue, Priority, DEFAULT_TENANT};
+pub use queue::{
+    place_with_spillback, select_victims, FlareHandle, FlareQueue, PreemptCandidate,
+    Priority, DEFAULT_TENANT,
+};

@@ -15,6 +15,13 @@ use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 use crate::util::timing::Stopwatch;
 
+/// Name the trip that unwinds this flare: "cancelled" (user kill,
+/// terminal) vs "preempted" (scheduler reclaim, followed by a requeue).
+fn unwind_err(cancel: &CancelToken, when: &str) -> anyhow::Error {
+    let what = cancel.reason().map_or("cancelled", |r| r.name());
+    anyhow!("flare {what} {when}")
+}
+
 /// Execute a full flare's packs: one OS thread per worker, all packs in
 /// this process (the paper's invokers are machines; our packs are thread
 /// groups — locality semantics are identical because intra-pack traffic is
@@ -31,7 +38,11 @@ use crate::util::timing::Stopwatch;
 /// boundaries this function controls (before the packs spin up, and on
 /// each worker before its `Work` phase starts), and it is handed to every
 /// worker's `BurstContext` so `work` functions can add their own
-/// cancellation points.
+/// cancellation points. The unwind is identical for a user cancel and a
+/// scheduler preempt — workers stop at the next boundary and the
+/// reservation is released — but the error names the reason, because the
+/// controller's disposition differs: a cancel is terminal, a preempt is
+/// followed by a requeue.
 pub fn run_flare_packs(
     packs: &[PackSpec],
     fabric: &Arc<CommFabric>,
@@ -47,7 +58,7 @@ pub fn run_flare_packs(
         return Err(anyhow!("need {burst_size} param entries, got {}", params.len()));
     }
     if cancel.is_cancelled() {
-        return Err(anyhow!("flare cancelled before packs started"));
+        return Err(unwind_err(cancel, "before packs started"));
     }
     let mut outputs: Vec<Option<Result<Json>>> = (0..burst_size).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -83,9 +94,9 @@ pub fn run_flare_packs(
                         });
                         let _ = pack_ready;
                         // Phase boundary (startup → work): a flare killed
-                        // while queued or starting never runs its work.
+                        // (or preempted) while starting never runs its work.
                         if cancel.is_cancelled() {
-                            return Err(anyhow!("cancelled before work started"));
+                            return Err(unwind_err(cancel, "before work started"));
                         }
                         let ctx = BurstContext::with_cancel(w, fabric, cancel.clone());
                         let sw = Stopwatch::start();
@@ -251,6 +262,27 @@ mod tests {
             run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
                 .unwrap_err();
         assert!(err.to_string().contains("cancelled"), "{err}");
+        assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn preempt_unwinds_like_cancel_but_names_the_reason() {
+        let (packs, fabric, startup) = setup(4, 2);
+        let ran = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        let work: WorkFn = Arc::new(move |_, _| {
+            ran2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(Json::Null)
+        });
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        let cancel = CancelToken::new();
+        cancel.preempt();
+        let err =
+            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
+                .unwrap_err();
+        assert!(err.to_string().contains("preempted"), "{err}");
+        assert!(!err.to_string().contains("cancelled"), "{err}");
         assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 

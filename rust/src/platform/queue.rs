@@ -27,11 +27,35 @@
 //! kill path (`Controller::cancel_flare`) removes queued flares directly
 //! and trips the token of running ones, which the execution path observes
 //! cooperatively at phase boundaries.
+//!
+//! **Preemption.** Priorities are not just an ordering hint: when a `high`
+//! flare cannot be placed, the scheduler reclaims capacity from running
+//! lower-priority flares ([`select_victims`]: lowest priority first,
+//! most-recently-started first, minimizing vCPUs reclaimed), trips their
+//! tokens with the `Preempted` reason, and — once the workers unwind and
+//! release the reservation — re-admits each victim at the head of its lane
+//! ([`FlareQueue::requeue_preempted`]) with its original submit time.
+//! Within the queue, priority is *strictly dominant across lanes*: every
+//! `high` flare is considered before any `normal` one regardless of tenant
+//! shares, so reclaimed capacity cannot be re-captured by a lower class in
+//! a better-deficit lane (which would livelock the preemption loop).
+//!
+//! **Deadlines.** A flare may carry an absolute deadline: within a priority
+//! class, earliest-deadline-first breaks the FIFO tie, and a flare still
+//! queued when its deadline passes is failed fast
+//! ([`FlareQueue::take_expired`]) with the terminal `Expired` status
+//! instead of occupying the queue it can no longer benefit from.
+//!
+//! **Accounting.** Placement charges a lane a *provisional* deficit (the
+//! vCPU demand); when the reservation is released the charge is settled to
+//! the measured vCPU·seconds ([`FlareQueue::settle`]), so a flare that
+//! fails, is cancelled, or is preempted early is not billed as if it ran
+//! to completion.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -99,11 +123,25 @@ pub struct QueuedFlare {
     pub tenant: String,
     /// Placement order within the tenant lane.
     pub priority: Priority,
-    /// Shared kill switch: tripped by `Controller::cancel_flare`, observed
-    /// cooperatively by the execution path.
+    /// Shared kill switch: tripped by `Controller::cancel_flare` (user) or
+    /// the scheduler's preemption path, observed cooperatively by the
+    /// execution path.
     pub cancel: CancelToken,
+    /// May the scheduler preempt this flare once it runs? (Opt-out via
+    /// `FlareOptions::preemptible = false`.)
+    pub preemptible: bool,
+    /// Absolute deadline: EDF tie-break within a priority class while
+    /// queued, and the expiry cutoff for `FlareQueue::take_expired`.
+    pub deadline: Option<Instant>,
+    /// Times this flare has been preempted and requeued (the livelock
+    /// guard: at the policy cap it stops being selectable as a victim).
+    pub preempt_count: u32,
+    /// Provisional deficit charged to the lane at placement; settled to
+    /// measured vCPU·seconds when the reservation is released.
+    pub charged: f64,
     pub(crate) slot: Arc<ResultSlot>,
-    /// Started at submit; read at placement to measure queue wait.
+    /// Started at submit; read at placement to measure queue wait. A
+    /// requeued victim keeps its original submit time.
     pub submitted: Stopwatch,
     /// Times a later flare was backfilled past this one while it was blocked.
     pub passed_over: u32,
@@ -135,6 +173,24 @@ impl ResultSlot {
         }
     }
 
+    /// Bounded `wait_take`: `None` on timeout, leaving the result (if it
+    /// arrives later) for a subsequent wait.
+    fn wait_take_timeout(&self, timeout: Duration) -> Option<Result<FlareResult>> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.result.lock().unwrap();
+        loop {
+            if let Some(r) = guard.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+
     fn is_done(&self) -> bool {
         self.result.lock().unwrap().is_some()
     }
@@ -152,6 +208,15 @@ impl FlareHandle {
     /// Block until the flare completes (or fails) and take its result.
     pub fn wait(self) -> Result<FlareResult> {
         self.slot.wait_take()
+    }
+
+    /// Bounded wait: block until the flare completes or `timeout` elapses,
+    /// returning `None` on timeout with the result left for a later
+    /// `wait`/`wait_timeout`. This is the interruptible building block the
+    /// HTTP server loops against its stop flag, so shutdown never parks on
+    /// a flare's full duration.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<FlareResult>> {
+        self.slot.wait_take_timeout(timeout)
     }
 
     /// Non-blocking: has the flare reached a terminal state?
@@ -202,6 +267,69 @@ fn place_with_spillback_observed(
         // against the fresh load view.
     }
     None
+}
+
+/// A running flare the preemption policy may select as a victim.
+#[derive(Debug, Clone)]
+pub struct PreemptCandidate {
+    pub flare_id: String,
+    pub priority: Priority,
+    /// vCPUs its reservation holds (= burst size).
+    pub vcpus: usize,
+    /// Placement sequence number; higher = started more recently.
+    pub seq: u64,
+}
+
+/// Pick which running flares to preempt so `needed` vCPUs can be
+/// reclaimed: lowest priority first, most-recently-started first within a
+/// priority class (old flares keep their progress), then a trim pass drops
+/// every victim whose reclaim turned out redundant — largest first — so
+/// the set of reclaimed vCPUs is minimal. Returns an empty vector when the
+/// candidates cannot cover `needed`: a partial preemption would destroy
+/// work without unblocking anything.
+pub fn select_victims(cands: &[PreemptCandidate], needed: usize) -> Vec<String> {
+    if needed == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<&PreemptCandidate> = cands.iter().collect();
+    order.sort_by(|a, b| a.priority.cmp(&b.priority).then(b.seq.cmp(&a.seq)));
+    let mut picked: Vec<&PreemptCandidate> = Vec::new();
+    let mut sum = 0usize;
+    for c in order {
+        if sum >= needed {
+            break;
+        }
+        sum += c.vcpus;
+        picked.push(c);
+    }
+    if sum < needed {
+        return Vec::new();
+    }
+    let mut by_size: Vec<usize> = (0..picked.len()).collect();
+    by_size.sort_by(|&a, &b| picked[b].vcpus.cmp(&picked[a].vcpus));
+    let mut keep = vec![true; picked.len()];
+    for i in by_size {
+        if sum - picked[i].vcpus >= needed {
+            sum -= picked[i].vcpus;
+            keep[i] = false;
+        }
+    }
+    picked
+        .iter()
+        .zip(keep)
+        .filter(|(_, k)| *k)
+        .map(|(c, _)| c.flare_id.clone())
+        .collect()
+}
+
+/// EDF comparison: does deadline `a` come strictly before `b`? A missing
+/// deadline sorts after every real one (and FIFO among themselves).
+fn deadline_before(a: Option<Instant>, b: Option<Instant>) -> bool {
+    match (a, b) {
+        (Some(a), Some(b)) => a < b,
+        (Some(_), None) => true,
+        _ => false,
+    }
 }
 
 /// One tenant's lane: its pending flares (priority-then-FIFO order is the
@@ -271,7 +399,9 @@ impl FlareQueue {
         }
     }
 
-    pub fn push(&mut self, job: QueuedFlare) {
+    /// Shared lane bookkeeping for `push`/`requeue_preempted`: the
+    /// activation snap and fresh-epoch reset, returning the lane index.
+    fn prep_lane(&mut self, tenant: &str) -> usize {
         // A lane (re)entering service snaps its consumption forward to the
         // current fair frontier: idle time is not banked, so neither a
         // brand-new tenant nor one returning from a quiet spell gets an
@@ -286,19 +416,88 @@ impl FlareQueue {
                 t.consumed = 0.0;
             }
         }
-        let li = self.lane_index(&job.tenant);
+        let li = self.lane_index(tenant);
         let lane = &mut self.tenants[li];
         if lane.jobs.is_empty() && frontier.is_finite() {
             lane.consumed = lane.consumed.max(frontier * lane.weight);
         }
-        // Priority-then-FIFO: insert before the first strictly lower
-        // priority, after every equal-or-higher one.
+        li
+    }
+
+    pub fn push(&mut self, job: QueuedFlare) {
+        let li = self.prep_lane(&job.tenant);
+        let lane = &mut self.tenants[li];
+        // Priority, then EDF within a class, then FIFO: insert before the
+        // first strictly lower priority or the first same-class job with a
+        // strictly later deadline (deadline-less jobs sort last in class).
         let at = lane
             .jobs
             .iter()
-            .position(|q| q.priority < job.priority)
+            .position(|q| {
+                q.priority < job.priority
+                    || (q.priority == job.priority
+                        && deadline_before(job.deadline, q.deadline))
+            })
             .unwrap_or(lane.jobs.len());
         lane.jobs.insert(at, job);
+    }
+
+    /// Re-admit a preempted flare at the head of its priority class within
+    /// its lane: it keeps its original submit time, so being preempted
+    /// must not also cost it queue position behind later arrivals.
+    pub fn requeue_preempted(&mut self, mut job: QueuedFlare) {
+        job.passed_over = 0;
+        let li = self.prep_lane(&job.tenant);
+        let lane = &mut self.tenants[li];
+        let at = lane
+            .jobs
+            .iter()
+            .position(|q| q.priority <= job.priority)
+            .unwrap_or(lane.jobs.len());
+        lane.jobs.insert(at, job);
+    }
+
+    /// Remove and return every queued flare whose deadline has passed: the
+    /// scheduler fails these fast with `FlareStatus::Expired` instead of
+    /// letting them occupy the queue they can no longer benefit from.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<QueuedFlare> {
+        let mut out = Vec::new();
+        for lane in &mut self.tenants {
+            let mut i = 0;
+            while i < lane.jobs.len() {
+                if lane.jobs[i].deadline.is_some_and(|d| now >= d) {
+                    out.push(lane.jobs.remove(i).expect("index in range"));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Burst size of the queued flare of `class` that has waited longest
+    /// (`None` if the class is empty): the flare the preemption policy
+    /// reclaims capacity for.
+    pub fn oldest_of_class(&self, class: Priority) -> Option<usize> {
+        self.tenants
+            .iter()
+            .flat_map(|t| t.jobs.iter())
+            .filter(|j| j.priority == class)
+            .max_by(|a, b| a.submitted.elapsed().cmp(&b.submitted.elapsed()))
+            .map(|j| j.burst_size)
+    }
+
+    /// Replace a lane's provisional placement charge with the measured
+    /// vCPU·seconds the flare actually held its reservation (bugfix: a
+    /// flare that fails, is cancelled, or is preempted early must not be
+    /// billed as if it ran to completion). Clamped at zero: a fresh
+    /// fairness epoch can zero a lane while one of its flares is still
+    /// running, and that flare's settle must not push the lane into
+    /// negative consumption (an unearned advantage in the new epoch).
+    pub fn settle(&mut self, tenant: &str, provisional: f64, measured: f64) {
+        let li = self.lane_index(tenant);
+        let lane = &mut self.tenants[li];
+        lane.consumed = (lane.consumed + measured - provisional).max(0.0);
     }
 
     pub fn len(&self) -> usize {
@@ -339,14 +538,19 @@ impl FlareQueue {
     /// Remove and return the first flare that can be placed right now,
     /// together with its reserved pack plan.
     ///
-    /// Two-level pick: tenant lanes are scanned in ascending weighted-share
-    /// order (deficit round-robin — ties broken by name for determinism);
-    /// within a lane, jobs are scanned priority-then-FIFO. A flare that
-    /// does not fit is skipped (backfill) unless it has already been passed
+    /// Three-level pick: priority classes are scanned high-to-low across
+    /// the *whole* queue — priority is strictly dominant over tenant
+    /// shares, so capacity reclaimed by preemption cannot be re-captured
+    /// by a lower class in a better-deficit lane. Within a class, tenant
+    /// lanes go in ascending weighted-share order (deficit round-robin —
+    /// ties broken by name for determinism), and within a lane jobs keep
+    /// their EDF-then-FIFO insertion order. A flare that does not fit is
+    /// skipped (backfill) unless it has already been passed
     /// `max_backfill_passes` times, in which case the whole scan stops and
     /// nothing may start — running flares drain, capacity frees, and the
     /// blocked flare goes first. A successful placement charges the lane's
-    /// deficit with the flare's vCPU demand.
+    /// deficit with the flare's vCPU demand (provisional; settled to
+    /// measured vCPU·seconds on release).
     pub fn pop_placeable(
         &mut self,
         pool: &InvokerPool,
@@ -371,29 +575,35 @@ impl FlareQueue {
 
         let mut chosen: Option<(usize, usize, Vec<PackSpec>)> = None;
         let mut skipped: Vec<(usize, usize)> = Vec::new();
-        'scan: for &l in &lane_order {
-            for (j, job) in self.tenants[l].jobs.iter().enumerate() {
-                let placed = if job.burst_size <= total_free {
-                    place_with_spillback(pool, job.strategy, job.burst_size, SPILLBACK_RETRIES)
-                } else {
-                    None
-                };
-                if let Some(packs) = placed {
-                    chosen = Some((l, j, packs));
-                    break 'scan;
+        'scan: for class in [Priority::High, Priority::Normal, Priority::Low] {
+            for &l in &lane_order {
+                for (j, job) in self.tenants[l].jobs.iter().enumerate() {
+                    if job.priority != class {
+                        continue;
+                    }
+                    let placed = if job.burst_size <= total_free {
+                        place_with_spillback(pool, job.strategy, job.burst_size, SPILLBACK_RETRIES)
+                    } else {
+                        None
+                    };
+                    if let Some(packs) = placed {
+                        chosen = Some((l, j, packs));
+                        break 'scan;
+                    }
+                    if job.passed_over >= self.max_backfill_passes {
+                        break 'scan; // starvation guard: stop the whole scan
+                    }
+                    skipped.push((l, j));
                 }
-                if job.passed_over >= self.max_backfill_passes {
-                    break 'scan; // starvation guard: stop the whole scan
-                }
-                skipped.push((l, j));
             }
         }
         let (l, j, packs) = chosen?;
         for &(sl, sj) in &skipped {
             self.tenants[sl].jobs[sj].passed_over += 1;
         }
-        let job = self.tenants[l].jobs.remove(j).expect("index in range");
-        self.tenants[l].consumed += job.burst_size as f64;
+        let mut job = self.tenants[l].jobs.remove(j).expect("index in range");
+        job.charged = job.burst_size as f64;
+        self.tenants[l].consumed += job.charged;
         Some((job, packs))
     }
 }
@@ -461,6 +671,9 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
 
     while !state.shutdown.load(Ordering::Acquire) {
         if let Some(c) = controller.upgrade() {
+            // Deadline pass first: a flare whose deadline lapsed while
+            // queued must fail fast, never be placed.
+            c.expire_overdue_queued();
             loop {
                 let placed = state.queue.lock().unwrap().pop_placeable(&c.pool);
                 match placed {
@@ -470,6 +683,9 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
                     None => break,
                 }
             }
+            // Nothing placeable left: reclaim capacity for a starved
+            // high-priority flare by preempting lower-priority runners.
+            c.preempt_for_starved_high_flare();
         }
         let guard = state.queue.lock().unwrap();
         if state.shutdown.load(Ordering::Acquire) {
@@ -508,10 +724,20 @@ mod tests {
             tenant: tenant.to_string(),
             priority,
             cancel: CancelToken::new(),
+            preemptible: true,
+            deadline: None,
+            preempt_count: 0,
+            charged: 0.0,
             slot: Arc::new(ResultSlot::new()),
             submitted: Stopwatch::start(),
             passed_over: 0,
         }
+    }
+
+    fn job_with_deadline(id: &str, size: usize, deadline_ms: Option<u64>) -> QueuedFlare {
+        let mut j = job_for(id, size, "t", Priority::Normal);
+        j.deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        j
     }
 
     /// Pop, assert the id, and release the reservation (serial-capacity
@@ -688,6 +914,146 @@ mod tests {
         assert_eq!(q.depth_by_tenant(), vec![("a".to_string(), 1)]);
         assert_eq!(pop_release(&mut q, &pool), "a2");
         assert!(q.depth_by_tenant().is_empty());
+    }
+
+    #[test]
+    fn edf_breaks_fifo_ties_within_a_priority_class() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_with_deadline("none", 4, None));
+        q.push(job_with_deadline("late", 4, Some(60_000)));
+        q.push(job_with_deadline("soon", 4, Some(10_000)));
+        // EDF within the class: soon < late < no-deadline. But priority
+        // still dominates the deadline tie-break.
+        q.push(job_for("hi", 4, "t", Priority::High));
+        assert_eq!(pop_release(&mut q, &pool), "hi");
+        assert_eq!(pop_release(&mut q, &pool), "soon");
+        assert_eq!(pop_release(&mut q, &pool), "late");
+        assert_eq!(pop_release(&mut q, &pool), "none");
+    }
+
+    #[test]
+    fn high_priority_dominates_lane_shares_across_tenants() {
+        // Shares tie, and the lane-order tie-break favors tenant "a" — but
+        // tenant "b" holds the only high flare. The class-major scan
+        // places it first; the old lane-major scan would have placed
+        // "a-n" out of the better-ordered lane.
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("a-n", 4, "a", Priority::Normal));
+        q.push(job_for("b-hi", 4, "b", Priority::High));
+        assert_eq!(pop_release(&mut q, &pool), "b-hi");
+        assert_eq!(pop_release(&mut q, &pool), "a-n");
+    }
+
+    #[test]
+    fn requeue_preempted_goes_to_the_head_of_its_class() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("hi", 4, "t", Priority::High));
+        q.push(job_for("n1", 4, "t", Priority::Normal));
+        q.push(job_for("n2", 4, "t", Priority::Normal));
+        // A preempted normal-priority victim outranks queued normals (it
+        // was already running) but never the high class above it.
+        let mut victim = job_for("victim", 4, "t", Priority::Normal);
+        victim.preempt_count = 1;
+        victim.passed_over = 7;
+        q.requeue_preempted(victim);
+        assert_eq!(pop_release(&mut q, &pool), "hi");
+        let (v, packs) = q.pop_placeable(&pool).unwrap();
+        assert_eq!(v.flare_id, "victim");
+        assert_eq!(v.passed_over, 0, "requeue resets the backfill pass count");
+        pool.release(&packs);
+        assert_eq!(pop_release(&mut q, &pool), "n1");
+        assert_eq!(pop_release(&mut q, &pool), "n2");
+    }
+
+    #[test]
+    fn take_expired_pulls_only_overdue_flares() {
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_with_deadline("overdue", 4, Some(0)));
+        q.push(job_with_deadline("fine", 4, Some(60_000)));
+        q.push(job_with_deadline("forever", 4, None));
+        let expired = q.take_expired(Instant::now() + Duration::from_millis(1));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].flare_id, "overdue");
+        assert_eq!(q.len(), 2);
+        assert!(q.take_expired(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn settle_replaces_provisional_charge_with_measured_usage() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.push(job_for("z1", 4, "z", Priority::Normal));
+        q.push(job_for("z2", 4, "z", Priority::Normal));
+        q.push(job_for("b1", 4, "b", Priority::Normal));
+        q.push(job_for("b2", 4, "b", Priority::Normal));
+        assert_eq!(pop_release(&mut q, &pool), "b1"); // 0:0 tie → name
+        let (z1, packs) = q.pop_placeable(&pool).unwrap();
+        assert_eq!(z1.flare_id, "z1");
+        assert_eq!(z1.charged, 4.0);
+        pool.release(&packs);
+        // z1 was cancelled almost immediately: settle the provisional
+        // 4-vCPU charge down to the measured 0.1 vCPU·s. Lane z now holds
+        // the better share, so z2 goes before b2 — with placement-time
+        // billing the lanes would tie at 4 and the name tie-break would
+        // put b2 first, billing z for capacity it never used.
+        q.settle(&z1.tenant, z1.charged, 0.1);
+        assert_eq!(pop_release(&mut q, &pool), "z2");
+        assert_eq!(pop_release(&mut q, &pool), "b2");
+    }
+
+    #[test]
+    fn select_victims_prefers_lowest_priority_then_recency() {
+        let cand = |id: &str, priority, vcpus, seq| PreemptCandidate {
+            flare_id: id.to_string(),
+            priority,
+            vcpus,
+            seq,
+        };
+        let cands = vec![
+            cand("norm-new", Priority::Normal, 4, 9),
+            cand("low-old", Priority::Low, 4, 1),
+            cand("low-new", Priority::Low, 4, 5),
+        ];
+        // 4 vCPUs needed: the newest low-priority flare alone covers it.
+        assert_eq!(select_victims(&cands, 4), vec!["low-new"]);
+        // 8 needed: both lows go before any normal is touched.
+        let mut v = select_victims(&cands, 8);
+        v.sort();
+        assert_eq!(v, vec!["low-new", "low-old"]);
+        // 12 needed: the normal flare is drafted too.
+        assert_eq!(select_victims(&cands, 12).len(), 3);
+        // 13 needed: cannot cover — preempt nobody.
+        assert!(select_victims(&cands, 13).is_empty());
+        assert!(select_victims(&cands, 0).is_empty());
+    }
+
+    #[test]
+    fn select_victims_trims_redundant_reclaims() {
+        let cand = |id: &str, vcpus, seq| PreemptCandidate {
+            flare_id: id.to_string(),
+            priority: Priority::Low,
+            vcpus,
+            seq,
+        };
+        // Recency order drafts small-new (2 vCPUs) and then big (8) to
+        // cover 6; the trim pass finds big alone suffices (10 − 2 = 8 ≥ 6)
+        // and releases small-new — the minimal reclaim wins over recency.
+        let cands = vec![cand("big", 8, 1), cand("small-new", 2, 9)];
+        assert_eq!(select_victims(&cands, 6), vec!["big"]);
+    }
+
+    #[test]
+    fn wait_timeout_returns_none_until_delivery() {
+        let slot = Arc::new(ResultSlot::new());
+        let h = FlareHandle { flare_id: "f".into(), slot: slot.clone() };
+        assert!(h.wait_timeout(Duration::from_millis(10)).is_none());
+        assert!(!h.is_finished());
+        slot.deliver(Err(anyhow!("boom")));
+        let r = h.wait_timeout(Duration::from_millis(10)).expect("delivered");
+        assert!(r.is_err());
     }
 
     #[test]

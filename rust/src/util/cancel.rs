@@ -1,32 +1,90 @@
-//! Cooperative cancellation token.
+//! Cooperative cancellation token with *reasons*.
 //!
 //! A `CancelToken` is shared between a flare's submitter, the controller's
-//! kill path (`DELETE /v1/flares/<id>`), and the worker threads executing
-//! the flare. Cancellation is cooperative: tripping the token never
-//! interrupts a thread, it is *observed* at phase boundaries
-//! (`run_flare_packs`) and at explicit checkpoints inside `work` functions
-//! (`BurstContext::check_cancel`), after which the flare's reservation is
-//! released promptly.
+//! kill path (`DELETE /v1/flares/<id>`), the scheduler's preemption path,
+//! and the worker threads executing the flare. Cancellation is cooperative:
+//! tripping the token never interrupts a thread, it is *observed* at phase
+//! boundaries (`run_flare_packs`) and at explicit checkpoints inside `work`
+//! functions (`BurstContext::check_cancel`), after which the flare's
+//! reservation is released promptly.
+//!
+//! Two distinct trips exist and both may fire on the same token:
+//!
+//! * [`CancelToken::cancel`] — a *user* kill. Terminal: the flare ends
+//!   `Cancelled` and is never resurrected.
+//! * [`CancelToken::preempt`] — the *scheduler* reclaiming capacity for a
+//!   higher-priority flare. Not terminal: once the workers unwind and the
+//!   reservation is released, the flare is re-queued and runs again later.
+//!
+//! When both fire, the user kill wins ([`CancelToken::reason`] reports
+//! `User`), so a cancel racing a preempt-requeue can never be undone by the
+//! requeue.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Arc;
+
+const USER: u8 = 1 << 0;
+const PREEMPT: u8 = 1 << 1;
+
+/// Why a flare's token was tripped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Killed by a user (`Controller::cancel_flare`): terminal.
+    User,
+    /// Reclaimed by the scheduler for a higher-priority flare: the flare
+    /// unwinds, releases its reservation, and is re-queued.
+    Preempted,
+}
+
+impl CancelReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CancelReason::User => "cancelled",
+            CancelReason::Preempted => "preempted",
+        }
+    }
+}
 
 /// Shared cancellation flag (cheap to clone; all clones observe the trip).
 #[derive(Debug, Clone, Default)]
-pub struct CancelToken(Arc<AtomicBool>);
+pub struct CancelToken(Arc<AtomicU8>);
 
 impl CancelToken {
     pub fn new() -> CancelToken {
         CancelToken::default()
     }
 
-    /// Trip the token. Idempotent; never blocks.
+    /// Trip the token as a user kill. Idempotent; never blocks.
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::Release);
+        self.0.fetch_or(USER, Ordering::AcqRel);
+    }
+
+    /// Trip the token as a scheduler preemption. Idempotent; never blocks.
+    pub fn preempt(&self) {
+        self.0.fetch_or(PREEMPT, Ordering::AcqRel);
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Acquire)
+        self.0.load(Ordering::Acquire) != 0
+    }
+
+    /// Was the *user* kill path tripped? (A preempt does not count: the
+    /// requeue path uses this to let `cancel_flare` win the race.)
+    pub fn user_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire) & USER != 0
+    }
+
+    /// Why the token tripped; `None` if it has not. A user kill always wins
+    /// over a concurrent preemption.
+    pub fn reason(&self) -> Option<CancelReason> {
+        let bits = self.0.load(Ordering::Acquire);
+        if bits & USER != 0 {
+            Some(CancelReason::User)
+        } else if bits & PREEMPT != 0 {
+            Some(CancelReason::Preempted)
+        } else {
+            None
+        }
     }
 }
 
@@ -44,5 +102,29 @@ mod tests {
         assert!(t.is_cancelled());
         t.cancel(); // idempotent
         assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn reasons_are_reported_and_user_wins() {
+        let t = CancelToken::new();
+        assert_eq!(t.reason(), None);
+        t.preempt();
+        assert!(t.is_cancelled());
+        assert!(!t.user_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::Preempted));
+        // A user kill arriving after the preempt takes precedence.
+        t.cancel();
+        assert!(t.user_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::User));
+    }
+
+    #[test]
+    fn user_then_preempt_still_reports_user() {
+        let t = CancelToken::new();
+        t.cancel();
+        t.preempt();
+        assert_eq!(t.reason(), Some(CancelReason::User));
+        assert_eq!(CancelReason::User.name(), "cancelled");
+        assert_eq!(CancelReason::Preempted.name(), "preempted");
     }
 }

@@ -1,7 +1,10 @@
 //! Integration tests for the flare scheduling pipeline: queueing under a
 //! saturated pool, concurrent flares against one `InvokerPool`, backfill
 //! semantics, capacity hygiene on worker failure, multi-tenant fairness
-//! under saturation, priority placement, and the cancellation kill path.
+//! under saturation, priority placement, the cancellation kill path,
+//! preempt-and-requeue (saturation reclaim, the `preemptible = false`
+//! opt-out, the preempt-count livelock guard, the cancel-beats-requeue
+//! race), EDF ordering, and queued-deadline expiry.
 //! These use plain registered work functions (no app datasets), gated by
 //! condvars so the tests control exactly when capacity frees.
 
@@ -48,8 +51,42 @@ impl Gate {
     }
 }
 
+impl Gate {
+    /// Like [`Gate::work`], but with a cooperative cancellation point in
+    /// the poll loop: a preempt (or cancel) unwinds the worker instead of
+    /// parking it until the gate opens.
+    fn preemptible_work(gate: &Arc<Gate>) -> WorkFn {
+        let gate = gate.clone();
+        Arc::new(move |_p, ctx: &burstc::bcm::BurstContext| {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                if *gate.open.lock().unwrap() {
+                    return Ok(Json::Null);
+                }
+                ctx.check_cancel()?;
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("gate never opened (test hang guard)"));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    }
+}
+
 fn noop() -> WorkFn {
     Arc::new(|_p, _ctx| Ok(Json::Null))
+}
+
+/// Poll an arbitrary condition until it holds (or the timeout lapses).
+fn wait_until(mut pred: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if pred() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
 }
 
 fn hetero() -> BurstConfig {
@@ -408,4 +445,226 @@ fn cancel_after_terminal_is_clean_conflict() {
     );
     assert_eq!(c.cancel_flare("no-such-flare"), Err(CancelError::NotFound));
     assert_eq!(c.flare_status(&r.flare_id), Some(FlareStatus::Completed));
+}
+
+/// Tentpole acceptance: a saturated cluster of low-priority flares yields
+/// to a newly submitted high flare via preemption — the high flare runs
+/// without waiting for any victim's natural completion (the gate stays
+/// closed throughout), the victim is requeued with its preemption counted,
+/// and everything reaches a clean terminal state with capacity released.
+#[test]
+fn preemption_reclaims_saturated_cluster_for_high_flare() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-victim", Gate::preemptible_work(&gate));
+    register_work("sched-urgent", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("victim", "sched-victim", hetero()).unwrap();
+    c.deploy("urgent", "sched-urgent", hetero()).unwrap();
+
+    // A low-priority flare saturates the cluster and parks on the gate.
+    let hv = c.submit_flare("victim", vec![Json::Null; 4], &opts_for("bulk", "low")).unwrap();
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+    assert_eq!(c.pool.free_vcpus(), vec![0]);
+
+    // The high flare completes while the victim's gate never opened: its
+    // capacity can only have come from preemption.
+    let hu = c.submit_flare("urgent", vec![Json::Null; 4], &opts_for("urgent", "high")).unwrap();
+    let ru = hu.wait().unwrap();
+    assert_eq!(ru.outputs.len(), 4);
+    assert!(c.preemptions() >= 1, "the scheduler never preempted");
+
+    // The victim cycled running → queued (preempt_count = 1, visible in
+    // its record) and is re-placed once the high flare frees capacity.
+    let preempted_once = || c.db.get_flare(&hv.flare_id).is_some_and(|r| r.preempt_count == 1);
+    assert!(wait_until(preempted_once));
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+
+    // Open the gate: the requeued victim completes normally.
+    gate.open();
+    let rv = hv.wait().unwrap();
+    assert_eq!(rv.outputs.len(), 4);
+    assert_eq!(c.flare_status(&rv.flare_id), Some(FlareStatus::Completed));
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// `preemptible = false` opts a flare out: the high flare waits for the
+/// victim's natural completion, and nothing is ever preempted.
+#[test]
+fn non_preemptible_flares_are_never_preempted() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-nopre", Gate::preemptible_work(&gate));
+    register_work("sched-urgent2", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("nopre", "sched-nopre", hetero()).unwrap();
+    c.deploy("urgent2", "sched-urgent2", hetero()).unwrap();
+
+    let mut opts = opts_for("bulk", "low");
+    opts.preemptible = Some(false);
+    let hv = c.submit_flare("nopre", vec![Json::Null; 4], &opts).unwrap();
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+
+    let hu = c.submit_flare("urgent2", vec![Json::Null; 4], &opts_for("urgent", "high")).unwrap();
+    // Give the scheduler ample passes: the high flare must stay queued and
+    // the opted-out victim must keep running, unpreempted.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(c.flare_status(&hu.flare_id), Some(FlareStatus::Queued));
+    assert_eq!(c.flare_status(&hv.flare_id), Some(FlareStatus::Running));
+    assert_eq!(c.preemptions(), 0);
+
+    // Only natural completion frees the capacity.
+    gate.open();
+    hv.wait().unwrap();
+    hu.wait().unwrap();
+    assert_eq!(c.db.get_flare(&hv.flare_id).unwrap().preempt_count, 0);
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// The preempt-count livelock guard: once a victim has been preempted
+/// `max_preempts` times it stops being selectable, so a stream of high
+/// flares cannot bounce it forever.
+#[test]
+fn preempt_count_guard_prevents_livelock() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-bounce", Gate::preemptible_work(&gate));
+    register_work("sched-hi-seq", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.set_preemption_policy(true, 1);
+    c.deploy("bounce", "sched-bounce", hetero()).unwrap();
+    c.deploy("hiseq", "sched-hi-seq", hetero()).unwrap();
+
+    let hv = c.submit_flare("bounce", vec![Json::Null; 4], &opts_for("bulk", "low")).unwrap();
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+
+    // First high flare: preempts the victim (its one allowed preemption).
+    let h1 = c.submit_flare("hiseq", vec![Json::Null; 4], &opts_for("urgent", "high")).unwrap();
+    h1.wait().unwrap();
+    let preempted_once = || c.db.get_flare(&hv.flare_id).is_some_and(|r| r.preempt_count == 1);
+    assert!(wait_until(preempted_once));
+    // The victim is re-placed and parks again (gate still closed).
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+
+    // Second high flare: the victim is at the cap — no further preemption.
+    let h2 = c.submit_flare("hiseq", vec![Json::Null; 4], &opts_for("urgent", "high")).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(c.flare_status(&h2.flare_id), Some(FlareStatus::Queued));
+    assert_eq!(c.flare_status(&hv.flare_id), Some(FlareStatus::Running));
+    assert_eq!(c.preemptions(), 1, "guard must stop a second preemption");
+
+    gate.open();
+    let rv = hv.wait().unwrap();
+    assert_eq!(rv.outputs.len(), 4);
+    h2.wait().unwrap();
+    assert_eq!(c.db.get_flare(&rv.flare_id).unwrap().preempt_count, 1);
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Satellite bugfix: a user cancel racing the preempt-requeue window must
+/// win — the victim ends terminal `Cancelled` and is never resurrected,
+/// whichever side of the requeue the cancel lands on.
+#[test]
+fn cancel_beats_preempt_requeue_race() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-race", Gate::preemptible_work(&gate));
+    register_work("sched-hi-race", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("race", "sched-race", hetero()).unwrap();
+    c.deploy("hirace", "sched-hi-race", hetero()).unwrap();
+
+    let hv = c.submit_flare("race", vec![Json::Null; 4], &opts_for("bulk", "low")).unwrap();
+    assert!(wait_status(&c, &hv.flare_id, FlareStatus::Running));
+
+    // Trigger preemption and immediately fire the user cancel into the
+    // preempt → unwind → requeue window.
+    let hu = c.submit_flare("hirace", vec![Json::Null; 4], &opts_for("urgent", "high")).unwrap();
+    let id_v = hv.flare_id.clone();
+    c.cancel_flare(&id_v).expect("victim not terminal yet");
+
+    // The waiter fails, the status is terminal Cancelled, and it stays
+    // that way — no resurrection from a pending requeue.
+    let err = hv.wait().unwrap_err().to_string();
+    assert!(err.contains("cancelled"), "{err}");
+    assert!(wait_until(|| c.flare_status(&id_v) == Some(FlareStatus::Cancelled)));
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(c.flare_status(&id_v), Some(FlareStatus::Cancelled));
+    assert_eq!(c.queued_flares(), 0, "cancelled victim must not re-queue");
+
+    hu.wait().unwrap();
+    gate.open();
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// Deadline-aware placement: within one priority class, EDF orders the
+/// queue — the soonest deadline is placed first, deadline-less flares
+/// last, despite the reverse arrival order.
+#[test]
+fn edf_orders_same_class_flares_by_deadline() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-edf", Gate::work(&gate));
+    register_work(
+        "sched-sleep-edf",
+        Arc::new(|_p, _ctx| {
+            std::thread::sleep(Duration::from_millis(15));
+            Ok(Json::Null)
+        }),
+    );
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("hold", "sched-gate-edf", hetero()).unwrap();
+    c.deploy("edf", "sched-sleep-edf", hetero()).unwrap();
+
+    // Saturate, then queue no-deadline → late → soon in arrival order.
+    let ha = c.submit_flare("hold", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    let mk = |deadline_ms: Option<u64>| FlareOptions {
+        deadline_ms,
+        ..opts_for("t", "normal")
+    };
+    let h_none = c.submit_flare("edf", vec![Json::Null; 4], &mk(None)).unwrap();
+    let h_late = c.submit_flare("edf", vec![Json::Null; 4], &mk(Some(60_000))).unwrap();
+    let h_soon = c.submit_flare("edf", vec![Json::Null; 4], &mk(Some(30_000))).unwrap();
+
+    gate.open();
+    ha.wait().unwrap();
+    let r_none = h_none.wait().unwrap();
+    let r_late = h_late.wait().unwrap();
+    let r_soon = h_soon.wait().unwrap();
+    // Serial placements 15 ms apart: queue waits order as soon < late <
+    // none despite arrival order none < late < soon.
+    assert!(
+        r_soon.queue_wait_s < r_late.queue_wait_s
+            && r_late.queue_wait_s < r_none.queue_wait_s,
+        "expected EDF order, got soon={} late={} none={}",
+        r_soon.queue_wait_s,
+        r_late.queue_wait_s,
+        r_none.queue_wait_s
+    );
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
+/// A flare whose deadline lapses while queued fails fast with the distinct
+/// terminal `Expired` status, without ever being placed.
+#[test]
+fn queued_flare_past_deadline_expires() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-exp", Gate::work(&gate));
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("exp", "sched-gate-exp", hetero()).unwrap();
+
+    let ha = c.submit_flare("exp", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+
+    // 50 ms of patience behind a gated flare: can only expire.
+    let opts = FlareOptions { deadline_ms: Some(50), ..opts_for("t", "normal") };
+    let hb = c.submit_flare("exp", vec![Json::Null; 4], &opts).unwrap();
+    assert!(wait_status(&c, &hb.flare_id, FlareStatus::Expired));
+    let err = hb.wait().unwrap_err().to_string();
+    assert!(err.contains("expired"), "{err}");
+    assert_eq!(c.queued_flares(), 0);
+    assert_eq!(c.expirations(), 1);
+    let rec = c.db.get_flare(&hb.flare_id).unwrap();
+    assert_eq!(rec.deadline_ms, Some(50));
+
+    // The running flare is untouched by the expiry pass.
+    gate.open();
+    ha.wait().unwrap();
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
 }
