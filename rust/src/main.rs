@@ -11,11 +11,22 @@
 //!   status      live status of a submitted flare
 //!   cancel      cancel a queued or running flare
 //!   flares      list recent flares and their statuses
+//!   tenants     list per-tenant policy/usage, or set --weight/--quota
 //!   apps        list registered work functions
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!
+//! With `serve --state-dir DIR` the control plane is durable: deploys,
+//! flare records, and tenant policy are WAL-logged under DIR (with
+//! periodic compacted snapshots), and a restarted server recovers them —
+//! terminal flares as history, queued/running flares re-admitted in
+//! original submit order (or failed with a "lost at restart" error if
+//! their work function is gone), tenant weights/quotas reinstated before
+//! scheduling resumes. Tenant quotas are hard caps on concurrently placed
+//! vCPUs: an over-quota flare is admitted but waits (status shows
+//! `wait_reason: quota_blocked`) even when the cluster has free capacity.
+//!
 //! Examples:
-//!   burstctl serve --port 8090 --invokers 4 --vcpus 48
+//!   burstctl serve --port 8090 --invokers 4 --vcpus 48 --state-dir ./state
 //!   burstctl deploy --addr 127.0.0.1:8090 --name pr --work pagerank --granularity 16
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 16 --param-json '{"job":"demo"}'
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 960 --nowait --tenant acme --priority high
@@ -36,9 +47,11 @@ use burstc::storage::ObjectStore;
 use burstc::util::cli::Args;
 use burstc::util::json::Json;
 
-const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|apps|experiment> [options]
+const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|tenants|apps|experiment> [options]
   serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
-              [--http-workers 8]
+              [--http-workers 8] [--state-dir DIR]
+              (--state-dir makes the control plane durable: WAL + snapshots
+               under DIR; a restart recovers flares and tenant policy)
   deploy      --addr HOST:PORT --name NAME --work WORK
               [--granularity N] [--strategy mixed] [--backend dragonfly]
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
@@ -48,6 +61,11 @@ const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|ap
   status      --addr HOST:PORT --id FLARE_ID
   cancel      --addr HOST:PORT --id FLARE_ID
   flares      --addr HOST:PORT
+  tenants     --addr HOST:PORT                    list policy + live usage
+              --addr HOST:PORT --tenant NAME [--weight W] [--quota VCPUS]
+              [--no-quota]                        set policy (quota = hard
+              cap on concurrently placed vCPUs; over-quota flares wait
+              with wait_reason=quota_blocked)
   apps        (lists registered work functions)
   experiment  <table1|fig1|fig5|fig6|fig7|fig8a|fig8b|fig9|table3|fig10|table4|fig11|all>
               [--quick]";
@@ -77,6 +95,7 @@ fn run() -> Result<()> {
         Some("status") => status(&args),
         Some("cancel") => cancel(&args),
         Some("flares") => flares(&args),
+        Some("tenants") => tenants(&args),
         Some("apps") => {
             build_env(1.0)?;
             for name in burstc::platform::db::registered_work_names() {
@@ -101,11 +120,29 @@ fn serve(args: &Args) -> Result<()> {
     burstc::apps::gridsearch::generate(&env, "demo", 3, 0);
     burstc::apps::kmeans::generate(&env, "demo", 8, 4);
 
-    let controller = Controller::new(
-        ClusterSpec::uniform(args.usize("invokers", 4), args.usize("vcpus", 48)),
-        CostModel::default(),
-        NetParams::scaled(time_scale),
-    );
+    let cluster = ClusterSpec::uniform(args.usize("invokers", 4), args.usize("vcpus", 48));
+    let controller = match args.get("state-dir") {
+        Some(dir) => {
+            let c = Controller::recover(
+                cluster,
+                CostModel::default(),
+                NetParams::scaled(time_scale),
+                std::path::Path::new(dir),
+            )?;
+            let r = c.recovery_stats();
+            println!(
+                "durable state dir: {dir} (recovered: {} terminal, {} requeued, \
+                 {} lost, {} tenants)",
+                r.terminal_restored, r.requeued, r.lost_work, r.tenants_restored
+            );
+            c
+        }
+        None => Controller::new(
+            cluster,
+            CostModel::default(),
+            NetParams::scaled(time_scale),
+        ),
+    };
     let srv = HttpServer::start_with_workers(
         controller,
         args.usize("port", 8090) as u16,
@@ -200,6 +237,38 @@ fn cancel(args: &Args) -> Result<()> {
 fn flares(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
     let r = http_request(addr, "GET", "/v1/flares", None)?;
+    println!("{r}");
+    Ok(())
+}
+
+fn tenants(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    // No --tenant: list every lane's policy and live usage.
+    let Some(tenant) = args.get("tenant") else {
+        let r = http_request(addr, "GET", "/v1/tenants", None)?;
+        println!("{r}");
+        return Ok(());
+    };
+    let mut body = vec![];
+    if let Some(w) = args.get("weight") {
+        body.push(("weight", Json::Num(w.parse::<f64>()?)));
+    }
+    if args.flag("no-quota") {
+        body.push(("quota", Json::Null));
+    } else if let Some(q) = args.get("quota") {
+        body.push(("quota", Json::Num(q.parse::<f64>()?)));
+    }
+    if body.is_empty() {
+        return Err(anyhow!(
+            "set --weight W, --quota VCPUS, or --no-quota for tenant '{tenant}'"
+        ));
+    }
+    let r = http_request(
+        addr,
+        "PUT",
+        &format!("/v1/tenants/{tenant}"),
+        Some(&Json::obj(body)),
+    )?;
     println!("{r}");
     Ok(())
 }

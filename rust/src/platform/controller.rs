@@ -24,7 +24,8 @@
 //! within a priority class, and a flare still queued past its deadline
 //! fails fast with [`FlareStatus::Expired`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -38,8 +39,10 @@ use super::pack::run_flare_packs;
 use super::packing::{plan, PackSpec, PackingStrategy};
 use super::queue::{
     scheduler_loop, select_victims, FlareHandle, PreemptCandidate, Priority,
-    QueuedFlare, ResultSlot, SchedState, DEFAULT_TENANT, MAX_BACKFILL_PASSES,
+    QueuedFlare, ResultSlot, SchedState, TenantPolicy, DEFAULT_TENANT,
+    MAX_BACKFILL_PASSES,
 };
+use super::store::DurableStore;
 use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::netmodel::NetParams;
@@ -52,6 +55,43 @@ use crate::util::rng::Pcg;
 /// Default cap on how many times one flare may be preempted and requeued
 /// (the livelock guard: at the cap it stops being selectable as a victim).
 pub const DEFAULT_MAX_PREEMPTS: u32 = 3;
+
+/// What [`Controller::recover`] found and did while replaying the durable
+/// store (surfaced in `/metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Terminal flare records restored as history, byte-for-byte.
+    pub terminal_restored: u64,
+    /// Flares that were `queued`/`running` at crash time, re-admitted at
+    /// the head of their tenant lane in original submit order.
+    pub requeued: u64,
+    /// Non-terminal flares whose work function (or definition) is no
+    /// longer available: marked `Failed` with a "lost at restart" error.
+    pub lost_work: u64,
+    /// Tenant lanes whose weight/quota policy was reinstated.
+    pub tenants_restored: u64,
+    /// Burst definitions redeployed.
+    pub defs_restored: u64,
+    /// Definitions left dormant because their work fn is unregistered in
+    /// this build (they return if a later build registers it again).
+    pub defs_unregistered: u64,
+    /// Corrupt / truncated / unreadable WAL lines and records skipped.
+    pub skipped: u64,
+}
+
+impl RecoveryStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("terminal_restored", self.terminal_restored.into()),
+            ("requeued", self.requeued.into()),
+            ("lost_work", self.lost_work.into()),
+            ("tenants_restored", self.tenants_restored.into()),
+            ("defs_restored", self.defs_restored.into()),
+            ("defs_unregistered", self.defs_unregistered.into()),
+            ("skipped", self.skipped.into()),
+        ])
+    }
+}
 
 /// Per-flare execution options (overrides of the deployed config).
 #[derive(Debug, Clone, Default)]
@@ -215,12 +255,35 @@ pub struct Controller {
     /// Lifetime counters surfaced in `/metrics`.
     preempted_total: AtomicU64,
     expired_total: AtomicU64,
+    /// Durable sink for tenant-policy appends (`BurstDb` holds its own
+    /// reference for deploy/flare appends). `None` = in-memory only.
+    store: Option<Arc<DurableStore>>,
+    /// What `Controller::recover` replayed (zeroes for a fresh start).
+    recovery: Mutex<RecoveryStats>,
+    /// Flare ids currently marked `quota_blocked` in their db records
+    /// (so `sync_quota_blocked` only writes on transitions).
+    quota_marked: Mutex<HashSet<String>>,
 }
 
 impl Controller {
     pub fn new(cluster: ClusterSpec, cost: CostModel, net: NetParams) -> Arc<Controller> {
+        Controller::new_inner(cluster, cost, net, None, false)
+    }
+
+    fn new_inner(
+        cluster: ClusterSpec,
+        cost: CostModel,
+        net: NetParams,
+        store: Option<Arc<DurableStore>>,
+        paused: bool,
+    ) -> Arc<Controller> {
         Arc::new_cyclic(|weak| {
             let sched = SchedState::new(MAX_BACKFILL_PASSES);
+            if paused {
+                // Recovery replay window: the scheduler thread runs but
+                // places nothing until `SchedState::resume`.
+                sched.pause();
+            }
             let handle = {
                 let sched = sched.clone();
                 let weak = weak.clone();
@@ -229,8 +292,12 @@ impl Controller {
                     .spawn(move || scheduler_loop(sched, weak))
                     .expect("spawn flare scheduler")
             };
+            let db = BurstDb::new();
+            if let Some(s) = &store {
+                db.attach_store(s.clone());
+            }
             Controller {
-                db: BurstDb::new(),
+                db,
                 pool: InvokerPool::new(&cluster),
                 cost,
                 net,
@@ -246,8 +313,205 @@ impl Controller {
                 max_preempts: AtomicU32::new(DEFAULT_MAX_PREEMPTS),
                 preempted_total: AtomicU64::new(0),
                 expired_total: AtomicU64::new(0),
+                store,
+                recovery: Mutex::new(RecoveryStats::default()),
+                quota_marked: Mutex::new(HashSet::new()),
             }
         })
+    }
+
+    /// Build a controller whose control-plane state is durable under
+    /// `state_dir`, replaying whatever a previous process left there
+    /// (paper Fig. 4's burst DB, made restart-proof):
+    ///
+    /// * **Terminal flares** are restored as history, untouched.
+    /// * **Non-terminal flares** (queued or running at crash time) are
+    ///   re-admitted at the head of their tenant lane in original submit
+    ///   order, with their original wall-clock submit time and remaining
+    ///   deadline — or marked `Failed` with a `lost at restart` error when
+    ///   their definition / work function is no longer registered.
+    /// * **Tenant weights and quotas** are reinstated *before* the
+    ///   scheduler is allowed a placement pass (it starts paused).
+    ///
+    /// A fresh (empty) `state_dir` yields a normal controller that simply
+    /// persists from now on, so `recover` is also the way to *enable*
+    /// durability.
+    pub fn recover(
+        cluster: ClusterSpec,
+        cost: CostModel,
+        net: NetParams,
+        state_dir: &Path,
+    ) -> Result<Arc<Controller>> {
+        let store = Arc::new(DurableStore::open(state_dir)?);
+        let loaded = store.loaded();
+        let this = Controller::new_inner(cluster, cost, net, Some(store.clone()), true);
+        let mut stats =
+            RecoveryStats { skipped: loaded.skipped_lines as u64, ..Default::default() };
+
+        // Definitions first (flare re-admission resolves work through
+        // them). A def whose work fn is not registered in this build is
+        // left dormant in the store: it returns if a later build
+        // registers the work again, and its flares fail explicitly below.
+        for def in &loaded.defs {
+            let name = def.str_or("name", "").to_string();
+            let work_name = def.str_or("work", "").to_string();
+            let conf = def.get("conf").map(BurstConfig::from_json).unwrap_or_default();
+            if this.db.deploy(BurstDefinition { name, work_name, conf }).is_ok() {
+                stats.defs_restored += 1;
+            } else {
+                stats.defs_unregistered += 1;
+            }
+        }
+
+        // Tenant policy next, while the scheduler is still paused: no
+        // flare may be placed under not-yet-restored weights or quotas.
+        {
+            let mut q = this.sched.queue.lock().unwrap();
+            for (tenant, weight, quota) in &loaded.tenants {
+                q.set_tenant_weight(tenant, *weight);
+                q.set_tenant_quota(tenant, *quota);
+                stats.tenants_restored += 1;
+            }
+        }
+
+        // Flare records, oldest submission first.
+        let mut records: Vec<FlareRecord> = Vec::new();
+        for rec_json in &loaded.flares {
+            match FlareRecord::from_json(rec_json) {
+                Ok(rec) => records.push(rec),
+                Err(e) => {
+                    stats.skipped += 1;
+                    eprintln!("burstc: skipping unreadable flare record: {e}");
+                }
+            }
+        }
+        records.sort_by_key(|r| r.submit_seq);
+        let mut max_seq = 0u64;
+        for mut rec in records {
+            max_seq = max_seq.max(rec.submit_seq);
+            if rec.status.is_terminal() {
+                this.db.put_flare(rec);
+                stats.terminal_restored += 1;
+                continue;
+            }
+            match this.rebuild_queued(&rec) {
+                Ok(job) => {
+                    rec.status = FlareStatus::Queued;
+                    rec.wait_reason = None;
+                    this.db.put_flare(rec);
+                    this.cancels
+                        .lock()
+                        .unwrap()
+                        .insert(job.flare_id.clone(), job.cancel.clone());
+                    this.sched.queue.lock().unwrap().push(job);
+                    stats.requeued += 1;
+                }
+                Err(e) => {
+                    let msg = format!("lost at restart: {e}");
+                    rec.status = FlareStatus::Failed;
+                    rec.error = Some(msg);
+                    this.db.put_flare(rec);
+                    stats.lost_work += 1;
+                }
+            }
+        }
+        // Flare ids must keep ascending across restarts.
+        let next = max_seq + 1;
+        this.next_flare.fetch_max(next, Ordering::Relaxed);
+
+        // Compact now: replay re-appended every record to the WAL; fold
+        // them into one snapshot so restarts do not accrete log entries.
+        if let Err(e) = store.force_snapshot() {
+            eprintln!("burstc: post-recovery snapshot failed: {e}");
+        }
+        *this.recovery.lock().unwrap() = stats;
+        this.sched.resume();
+        Ok(this)
+    }
+
+    /// Reconstruct the queue entry for a flare that was alive at crash
+    /// time, from its persisted record + resubmission spec. Fails (→
+    /// explicit `lost at restart`) when the definition or work function
+    /// is gone, the spec is unreadable, or the burst no longer fits the
+    /// (possibly resized) cluster.
+    fn rebuild_queued(&self, rec: &FlareRecord) -> Result<QueuedFlare> {
+        let def = self.db.get_def(&rec.def_name)?;
+        let work = db::lookup_work(&def.work_name)?;
+        let spec = rec
+            .spec
+            .as_ref()
+            .ok_or_else(|| anyhow!("record carries no resubmission spec"))?;
+        let params = spec
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("resubmission spec has no params"))?
+            .to_vec();
+        let burst_size = params.len();
+        if burst_size == 0 {
+            return Err(anyhow!("resubmission spec has empty params"));
+        }
+        let capacity = self.pool.capacity();
+        if burst_size > capacity {
+            return Err(anyhow!(
+                "flare of {burst_size} workers exceeds total cluster capacity \
+                 after restart ({capacity} vCPUs)"
+            ));
+        }
+        let faas = spec.get("faas").and_then(Json::as_bool).unwrap_or(false);
+        let granularity = spec
+            .get("granularity")
+            .and_then(Json::as_usize)
+            .unwrap_or(def.conf.granularity);
+        let strategy = if faas {
+            PackingStrategy::Homogeneous { granularity: 1 }
+        } else {
+            let name = spec.str_or("strategy", &def.conf.strategy);
+            PackingStrategy::parse(name, granularity)
+                .ok_or_else(|| anyhow!("unknown packing strategy '{name}'"))?
+        };
+        let backend = spec
+            .get("backend")
+            .and_then(Json::as_str)
+            .and_then(BackendKind::parse)
+            .unwrap_or(def.conf.backend);
+        let chunk_size = spec
+            .get("chunk_size")
+            .and_then(Json::as_usize)
+            .unwrap_or(def.conf.chunk_size);
+        let preemptible = spec.get("preemptible").and_then(Json::as_bool).unwrap_or(true);
+        // Remaining deadline, anchored on the original wall-clock submit
+        // time: an already-overdue flare expires on the first pass.
+        let deadline = rec.deadline_ms.map(|ms| {
+            let elapsed = db::now_unix_ms().saturating_sub(rec.submitted_unix_ms);
+            Instant::now() + Duration::from_millis(ms.saturating_sub(elapsed))
+        });
+        Ok(QueuedFlare {
+            flare_id: rec.flare_id.clone(),
+            def_name: rec.def_name.clone(),
+            work,
+            params,
+            burst_size,
+            strategy,
+            backend,
+            chunk_size,
+            faas,
+            tenant: rec.tenant.clone(),
+            priority: rec.priority,
+            cancel: CancelToken::new(),
+            preemptible,
+            deadline,
+            preempt_count: rec.preempt_count,
+            charged: 0.0,
+            slot: Arc::new(ResultSlot::new()),
+            submitted: crate::util::timing::Stopwatch::start(),
+            passed_over: 0,
+            quota_blocked: false,
+        })
+    }
+
+    /// What recovery replayed (zeroes when the controller started fresh).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        *self.recovery.lock().unwrap()
     }
 
     /// Convenience: paper-like test platform with a compressed time scale.
@@ -345,13 +609,27 @@ impl Controller {
             anyhow!("flare can never be placed, even on an idle cluster: {e}")
         })?;
 
-        let flare_id = format!(
-            "{}-{}",
-            def_name,
-            self.next_flare.fetch_add(1, Ordering::Relaxed)
-        );
+        let submit_seq = self.next_flare.fetch_add(1, Ordering::Relaxed);
+        let flare_id = format!("{}-{}", def_name, submit_seq);
+        // Resubmission spec: everything a fresh controller needs to
+        // re-admit this flare after a crash (see `Controller::recover`).
+        // The full params clone is only worth paying for when the record
+        // can actually outlive the process.
+        let spec = self.db.is_durable().then(|| {
+            Json::obj(vec![
+                ("params", Json::Arr(input_params.clone())),
+                ("granularity", granularity.into()),
+                ("strategy", strategy_name.as_str().into()),
+                ("backend", backend_kind.name().into()),
+                ("chunk_size", def.conf.chunk_size.into()),
+                ("faas", opts.faas.into()),
+                ("preemptible", preemptible.into()),
+            ])
+        });
         self.db.put_flare(FlareRecord {
             deadline_ms: opts.deadline_ms,
+            submit_seq,
+            spec,
             ..FlareRecord::queued(&flare_id, def_name, &tenant, priority)
         });
         let slot = Arc::new(ResultSlot::new());
@@ -377,6 +655,7 @@ impl Controller {
             slot: slot.clone(),
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
+            quota_blocked: false,
         });
         self.sched.wake();
         Ok(FlareHandle { flare_id, slot })
@@ -409,10 +688,86 @@ impl Controller {
         self.sched.queue.lock().unwrap().depth_by_tenant()
     }
 
+    /// Queued flares currently waiting on their tenant's hard vCPU quota.
+    pub fn quota_blocked_flares(&self) -> usize {
+        self.sched.queue.lock().unwrap().quota_blocked_ids().len()
+    }
+
     /// Set a tenant's fair-share weight (a weight-2 lane is entitled to
-    /// twice the placed vCPUs of a weight-1 lane).
+    /// twice the placed vCPUs of a weight-1 lane). Persisted when a
+    /// durable store is attached.
     pub fn set_tenant_weight(&self, tenant: &str, weight: f64) {
-        self.sched.queue.lock().unwrap().set_tenant_weight(tenant, weight);
+        let policy = {
+            let mut q = self.sched.queue.lock().unwrap();
+            q.set_tenant_weight(tenant, weight);
+            q.policy(tenant)
+        };
+        self.persist_tenant(tenant, policy);
+    }
+
+    /// Set (or clear, with `None`) a tenant's hard cap on concurrently
+    /// placed vCPUs. A flare over the cap is admitted but waits with a
+    /// `quota_blocked` reason, even when the cluster has free capacity.
+    /// Persisted when a durable store is attached.
+    pub fn set_tenant_quota(&self, tenant: &str, quota: Option<usize>) {
+        let policy = {
+            let mut q = self.sched.queue.lock().unwrap();
+            q.set_tenant_quota(tenant, quota);
+            q.policy(tenant)
+        };
+        self.persist_tenant(tenant, policy);
+        // A lifted / raised quota may unblock waiting flares immediately.
+        self.sched.wake();
+    }
+
+    /// Every tenant lane's policy and live usage (the `/v1/tenants` view).
+    pub fn tenant_policies(&self) -> Vec<TenantPolicy> {
+        self.sched.queue.lock().unwrap().tenant_policies()
+    }
+
+    fn persist_tenant(&self, tenant: &str, policy: Option<(f64, Option<usize>)>) {
+        let (Some(store), Some((weight, quota))) = (&self.store, policy) else {
+            return;
+        };
+        if let Err(e) = store.append_tenant(tenant, weight, quota) {
+            eprintln!("burstc: WAL append failed for tenant '{tenant}' policy: {e}");
+        }
+    }
+
+    /// Reconcile `quota_blocked` wait reasons in the flare records with
+    /// the queue's latest scan (called from the scheduler pass; writes —
+    /// and WAL entries — happen only on transitions).
+    pub(crate) fn sync_quota_blocked(&self) {
+        let now: HashSet<String> = self
+            .sched
+            .queue
+            .lock()
+            .unwrap()
+            .quota_blocked_ids()
+            .into_iter()
+            .collect();
+        let mut marked = self.quota_marked.lock().unwrap();
+        for id in &now {
+            if !marked.contains(id) {
+                self.db.update_flare(id, |r| {
+                    if r.status == FlareStatus::Queued {
+                        r.wait_reason = Some("quota_blocked".into());
+                    }
+                });
+            }
+        }
+        for id in marked.iter() {
+            if !now.contains(id) {
+                self.db.update_flare(id, |r| {
+                    if r.status == FlareStatus::Queued
+                        && r.wait_reason.as_deref() == Some("quota_blocked")
+                    {
+                        r.wait_reason = None;
+                    }
+                });
+            }
+        }
+        *marked = now;
     }
 
     /// Drop a terminal flare's cancel token from the kill-path registry.
@@ -605,7 +960,10 @@ impl Controller {
                 },
             );
             let queue_wait_s = job.submitted.secs();
-            c.db.set_flare_status(&job.flare_id, FlareStatus::Running);
+            c.db.update_flare(&job.flare_id, |r| {
+                r.status = FlareStatus::Running;
+                r.wait_reason = None;
+            });
             // A panic must neither strand the waiter in `wait()` nor
             // leak the reservation (released by guard inside).
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
@@ -622,11 +980,41 @@ impl Controller {
             c.running.lock().unwrap().remove(&job.flare_id);
             // A preempted flare (and only a preempted one — a user kill
             // wins when both raced) is requeued instead of completing.
-            if result.is_err() && job.cancel.reason() == Some(CancelReason::Preempted) {
+            // `execute_placed` read the token earlier than this check, so
+            // a trip landing between the two reads can desynchronize the
+            // record from the decision; the db record's terminality is
+            // the arbiter. A flare whose record already went terminal
+            // (e.g. work genuinely failed, then a preempt trip raced in)
+            // must never be resurrected by the requeue path.
+            let record_terminal = c
+                .db
+                .get_flare(&job.flare_id)
+                .is_some_and(|r| r.status.is_terminal());
+            if result.is_err()
+                && !record_terminal
+                && job.cancel.reason() == Some(CancelReason::Preempted)
+            {
                 Controller::requeue_preempted(&c, job);
                 return;
             }
             c.clear_cancel(&job.flare_id);
+            if let Err(e) = &result {
+                // The inverse race: `execute_placed` saw `Preempted` (so
+                // it left the record alone for the requeue), but a user
+                // cancel tripped before the check above. Without this the
+                // record would be stuck `Running` forever — unkillable,
+                // never evicted, re-admitted after a restart.
+                c.db.update_flare(&job.flare_id, |r| {
+                    if !r.status.is_terminal() {
+                        r.status = if job.cancel.user_cancelled() {
+                            FlareStatus::Cancelled
+                        } else {
+                            FlareStatus::Failed
+                        };
+                        r.error = Some(e.to_string());
+                    }
+                });
+            }
             sched.wake();
             job.slot.deliver(result);
         });

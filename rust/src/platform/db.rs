@@ -11,13 +11,23 @@
 //! leak memory. Queued and running records are never evicted.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use super::queue::Priority;
+use super::store::DurableStore;
 use crate::bcm::{BackendKind, BurstContext};
 use crate::util::json::Json;
+
+/// Milliseconds since the Unix epoch (wall clock — survives restarts,
+/// unlike the `Instant`-based stopwatches used for queue-wait timing).
+pub fn now_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
 
 /// Default cap on retained *terminal* flare records (oldest evicted first).
 pub const DEFAULT_FLARE_RETENTION: usize = 4096;
@@ -130,6 +140,19 @@ impl FlareStatus {
                 | FlareStatus::Expired
         )
     }
+
+    /// Inverse of [`FlareStatus::name`] (WAL replay).
+    pub fn parse(s: &str) -> Option<FlareStatus> {
+        Some(match s {
+            "queued" => FlareStatus::Queued,
+            "running" => FlareStatus::Running,
+            "completed" => FlareStatus::Completed,
+            "failed" => FlareStatus::Failed,
+            "cancelled" => FlareStatus::Cancelled,
+            "expired" => FlareStatus::Expired,
+            _ => return None,
+        })
+    }
 }
 
 /// Flare execution record.
@@ -152,6 +175,21 @@ pub struct FlareRecord {
     /// Failure description when `status` is `Failed`, `Cancelled`, or
     /// `Expired`.
     pub error: Option<String>,
+    /// Monotonic submission sequence: recovery re-admits non-terminal
+    /// flares in this order, so a restart preserves the submit order.
+    pub submit_seq: u64,
+    /// Wall-clock submission time (ms since Unix epoch). Survives restarts
+    /// — recovery anchors a re-admitted flare's remaining deadline on it.
+    pub submitted_unix_ms: u64,
+    /// Why a queued flare is not being placed right now (e.g.
+    /// `"quota_blocked"`); cleared when it starts running.
+    pub wait_reason: Option<String>,
+    /// Resubmission spec for crash recovery: the resolved execution
+    /// parameters (`params`, `strategy`, `granularity`, `backend`,
+    /// `chunk_size`, `faas`, `preemptible`, `deadline_ms`) a fresh
+    /// controller needs to re-admit this flare. Present while the flare is
+    /// non-terminal.
+    pub spec: Option<Json>,
 }
 
 impl FlareRecord {
@@ -173,6 +211,10 @@ impl FlareRecord {
             outputs: Vec::new(),
             metadata: Json::Null,
             error: None,
+            submit_seq: 0,
+            submitted_unix_ms: now_unix_ms(),
+            wait_reason: None,
+            spec: None,
         }
     }
 
@@ -186,6 +228,8 @@ impl FlareRecord {
             ("preempt_count", (self.preempt_count as usize).into()),
             ("metadata", self.metadata.clone()),
             ("outputs", Json::Arr(self.outputs.clone())),
+            ("submit_seq", self.submit_seq.into()),
+            ("submitted_unix_ms", self.submitted_unix_ms.into()),
         ];
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", d.into()));
@@ -193,7 +237,54 @@ impl FlareRecord {
         if let Some(e) = &self.error {
             fields.push(("error", Json::Str(e.clone())));
         }
+        if let Some(w) = &self.wait_reason {
+            fields.push(("wait_reason", Json::Str(w.clone())));
+        }
+        if let Some(s) = &self.spec {
+            fields.push(("spec", s.clone()));
+        }
         Json::obj(fields)
+    }
+
+    /// Inverse of [`FlareRecord::to_json`] (WAL replay). Unknown statuses
+    /// or priorities are errors; everything else falls back to defaults so
+    /// records written by older builds still load.
+    pub fn from_json(j: &Json) -> Result<FlareRecord> {
+        let flare_id = j
+            .get("flare_id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("flare record missing 'flare_id'"))?
+            .to_string();
+        let status = FlareStatus::parse(j.str_or("status", "")).ok_or_else(|| {
+            anyhow!("flare '{flare_id}': unknown status '{}'", j.str_or("status", ""))
+        })?;
+        let priority = Priority::parse(j.str_or("priority", "normal"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "flare '{flare_id}': unknown priority '{}'",
+                    j.str_or("priority", "")
+                )
+            })?;
+        Ok(FlareRecord {
+            flare_id,
+            def_name: j.str_or("def", "").to_string(),
+            tenant: j.str_or("tenant", super::queue::DEFAULT_TENANT).to_string(),
+            priority,
+            status,
+            preempt_count: j.get("preempt_count").and_then(Json::as_usize).unwrap_or(0)
+                as u32,
+            deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
+            outputs: j.get("outputs").and_then(Json::as_arr).unwrap_or(&[]).to_vec(),
+            metadata: j.get("metadata").cloned().unwrap_or(Json::Null),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            submit_seq: j.get("submit_seq").and_then(Json::as_u64).unwrap_or(0),
+            submitted_unix_ms: j
+                .get("submitted_unix_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            wait_reason: j.get("wait_reason").and_then(Json::as_str).map(str::to_string),
+            spec: j.get("spec").cloned(),
+        })
     }
 }
 
@@ -234,6 +325,11 @@ pub struct BurstDb {
     /// Retention cap on terminal records (oldest evicted first); live
     /// (queued/running) records never count against it.
     retain_terminal: usize,
+    /// Optional durable sink: every deploy / flare mutation / retention
+    /// eviction appends a WAL entry (best-effort — an I/O failure is
+    /// logged, never blocks the control plane). Lock order is always
+    /// db lock → store lock.
+    store: OnceLock<Arc<DurableStore>>,
 }
 
 impl Default for BurstDb {
@@ -253,39 +349,68 @@ impl BurstDb {
             defs: Mutex::new(HashMap::new()),
             flares: Mutex::new((HashMap::new(), Vec::new())),
             retain_terminal,
+            store: OnceLock::new(),
         }
     }
 
-    /// Evict the oldest terminal records beyond the retention cap. Called
-    /// with the flare lock held, whenever a record is added or becomes
-    /// terminal.
+    /// Attach the durable sink: from here on every deploy / flare mutation
+    /// / retention eviction appends a WAL entry. Set once, at startup.
+    pub fn attach_store(&self, store: Arc<DurableStore>) {
+        let _ = self.store.set(store);
+    }
+
+    /// Is a durable sink attached? (The controller only pays for
+    /// resubmission specs — a full params clone per record — when the
+    /// record can actually outlive the process.)
+    pub fn is_durable(&self) -> bool {
+        self.store.get().is_some()
+    }
+
+    /// Best-effort durability: a WAL I/O failure must degrade to
+    /// in-memory-only operation, never take the control plane down.
+    fn persist(&self, f: impl FnOnce(&DurableStore) -> Result<()>) {
+        if let Some(store) = self.store.get() {
+            if let Err(e) = f(store) {
+                eprintln!("burstc: WAL append failed (state is in-memory only): {e}");
+            }
+        }
+    }
+
+    /// Evict the oldest terminal records beyond the retention cap,
+    /// returning the evicted ids (the caller appends `drop_flare` WAL
+    /// entries for them). Called with the flare lock held, whenever a
+    /// record is added or becomes terminal.
     fn evict_excess_terminal(
         map: &mut HashMap<String, FlareRecord>,
         order: &mut Vec<String>,
         cap: usize,
-    ) {
+    ) -> Vec<String> {
         let terminal = order
             .iter()
             .filter(|id| map.get(*id).is_some_and(|r| r.status.is_terminal()))
             .count();
         let mut excess = terminal.saturating_sub(cap);
+        let mut evicted = Vec::new();
         if excess == 0 {
-            return;
+            return evicted;
         }
         order.retain(|id| {
             if excess > 0 && map.get(id).is_some_and(|r| r.status.is_terminal()) {
                 map.remove(id);
                 excess -= 1;
+                evicted.push(id.clone());
                 false
             } else {
                 true
             }
         });
+        evicted
     }
 
     pub fn deploy(&self, def: BurstDefinition) -> Result<()> {
         // Validate at deploy time that the work function exists.
         lookup_work(&def.work_name)?;
+        self.persist(|s| s.append_def(&def.name, &def.work_name, &def.conf));
         self.defs.lock().unwrap().insert(def.name.clone(), def);
         Ok(())
     }
@@ -308,13 +433,25 @@ impl BurstDb {
     pub fn put_flare(&self, rec: FlareRecord) {
         let mut flares = self.flares.lock().unwrap();
         let (map, order) = &mut *flares;
+        let mut rec = rec;
         let terminal = rec.status.is_terminal();
+        if terminal {
+            // Terminal records are history: the resubmission spec and any
+            // wait reason are dead weight in memory and in the WAL.
+            rec.spec = None;
+            rec.wait_reason = None;
+        }
         let id = rec.flare_id.clone();
+        let rec_json = rec.to_json();
         if map.insert(id.clone(), rec).is_none() {
             order.push(id);
         }
+        self.persist(|s| s.append_flare(&rec_json));
         if terminal {
-            Self::evict_excess_terminal(map, order, self.retain_terminal);
+            let evicted = Self::evict_excess_terminal(map, order, self.retain_terminal);
+            for gone in &evicted {
+                self.persist(|s| s.append_drop_flare(gone));
+            }
         }
     }
 
@@ -323,22 +460,45 @@ impl BurstDb {
     }
 
     /// Apply a mutation to an existing flare record (status transitions,
-    /// attaching outputs). No-op if the id is unknown.
-    pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) {
+    /// attaching outputs). Returns whether the id was found — an unknown
+    /// id used to be a *silent* no-op, which let recovery and cancel races
+    /// hide lost updates; now it reports `false` (and warns once).
+    pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) -> bool {
         let mut flares = self.flares.lock().unwrap();
         let (map, order) = &mut *flares;
         let mut became_terminal = false;
+        let mut rec_json = None;
         if let Some(rec) = map.get_mut(id) {
             f(rec);
             became_terminal = rec.status.is_terminal();
+            if became_terminal {
+                rec.spec = None;
+                rec.wait_reason = None;
+            }
+            rec_json = Some(rec.to_json());
         }
+        let Some(rec_json) = rec_json else {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "burstc: update_flare on unknown id '{id}' dropped \
+                     (first occurrence; later ones are silent)"
+                );
+            });
+            return false;
+        };
+        self.persist(|s| s.append_flare(&rec_json));
         if became_terminal {
-            Self::evict_excess_terminal(map, order, self.retain_terminal);
+            let evicted = Self::evict_excess_terminal(map, order, self.retain_terminal);
+            for gone in &evicted {
+                self.persist(|s| s.append_drop_flare(gone));
+            }
         }
+        true
     }
 
-    pub fn set_flare_status(&self, id: &str, status: FlareStatus) {
-        self.update_flare(id, |r| r.status = status);
+    pub fn set_flare_status(&self, id: &str, status: FlareStatus) -> bool {
+        self.update_flare(id, |r| r.status = status)
     }
 
     /// Most recent `limit` flares, newest first, as `(flare_id, def_name,
@@ -449,8 +609,60 @@ mod tests {
         // Cancelled is terminal too, and serializes as such.
         assert!(FlareStatus::Cancelled.is_terminal());
         assert_eq!(FlareStatus::Cancelled.name(), "cancelled");
-        // Unknown ids are a no-op, not a panic.
-        db.set_flare_status("ghost", FlareStatus::Completed);
+        // Unknown ids are a reported no-op, not a panic.
+        assert!(!db.set_flare_status("ghost", FlareStatus::Completed));
+    }
+
+    #[test]
+    fn update_flare_reports_unknown_ids() {
+        let db = BurstDb::new();
+        db.put_flare(queued("f1"));
+        // A known id is updated and reported as found...
+        assert!(db.update_flare("f1", |r| r.status = FlareStatus::Running));
+        assert_eq!(db.get_flare("f1").unwrap().status, FlareStatus::Running);
+        // ...an unknown one returns false and mutates nothing (the silent
+        // no-op used to hide lost updates in recovery and cancel races).
+        let mut called = false;
+        assert!(!db.update_flare("ghost", |_| called = true));
+        assert!(!called, "mutation closure must not run for unknown ids");
+        assert!(db.get_flare("ghost").is_none());
+    }
+
+    #[test]
+    fn flare_record_json_roundtrip() {
+        let mut rec = FlareRecord::queued("rt-1", "def-x", "acme", Priority::High);
+        rec.status = FlareStatus::Failed;
+        rec.preempt_count = 2;
+        rec.deadline_ms = Some(1500);
+        rec.outputs = vec![Json::Num(7.0), Json::Str("x".into())];
+        rec.metadata = Json::obj(vec![("k", 1.into())]);
+        rec.error = Some("worker 0: boom".into());
+        rec.submit_seq = 42;
+        rec.wait_reason = Some("quota_blocked".into());
+        rec.spec = Some(Json::obj(vec![("params", Json::Arr(vec![Json::Null]))]));
+        let rt = FlareRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(rt.flare_id, "rt-1");
+        assert_eq!(rt.def_name, "def-x");
+        assert_eq!(rt.tenant, "acme");
+        assert_eq!(rt.priority, Priority::High);
+        assert_eq!(rt.status, FlareStatus::Failed);
+        assert_eq!(rt.preempt_count, 2);
+        assert_eq!(rt.deadline_ms, Some(1500));
+        assert_eq!(rt.outputs, rec.outputs);
+        assert_eq!(rt.metadata, rec.metadata);
+        assert_eq!(rt.error.as_deref(), Some("worker 0: boom"));
+        assert_eq!(rt.submit_seq, 42);
+        assert_eq!(rt.submitted_unix_ms, rec.submitted_unix_ms);
+        assert_eq!(rt.wait_reason.as_deref(), Some("quota_blocked"));
+        assert_eq!(rt.spec, rec.spec);
+        // Unknown statuses fail loudly instead of defaulting.
+        let mut j = rec.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("status".into(), Json::Str("mystery".into()));
+        }
+        assert!(FlareRecord::from_json(&j).is_err());
+        assert!(FlareStatus::parse("running").is_some());
+        assert!(FlareStatus::parse("mystery").is_none());
     }
 
     #[test]

@@ -24,9 +24,13 @@
 //!   DELETE /v1/flares/`<id>`  cancel: 200 (queued: removed, running: token
 //!                           tripped), 404 unknown id, 409 already terminal
 //!   GET    /v1/defs
+//!   GET    /v1/tenants      per-tenant policy (weight, quota) + live usage
+//!   PUT    /v1/tenants/`<id>` {"weight"?: W, "quota"?: N|null} set policy
+//!                           (persisted when the server runs --state-dir)
 //!   GET    /healthz
 //!   GET    /metrics         load view, total + per-tenant queue depth,
-//!                           preemption / expiry counters
+//!                           quota-blocked count, preemption / expiry
+//!                           counters, recovery counters
 //!
 //! Flare options (`options` object in both flare routes): `granularity`,
 //! `strategy`, `backend`, `faas`, plus the multi-tenant scheduling fields
@@ -53,6 +57,7 @@ use anyhow::{anyhow, Result};
 
 use super::controller::{CancelError, Controller, FlareOptions};
 use super::db::BurstConfig;
+use super::queue::TenantPolicy;
 use crate::util::json::Json;
 
 /// Quantum of the blocking route's interruptible wait: the bound on how
@@ -349,11 +354,78 @@ fn dispatch(
                     ("total_vcpus", c.pool.capacity().into()),
                     ("queued_flares", c.queued_flares().into()),
                     ("queued_by_tenant", Json::Obj(by_tenant)),
+                    ("quota_blocked_flares", c.quota_blocked_flares().into()),
                     ("preempted_total", c.preemptions().into()),
                     ("expired_total", c.expirations().into()),
                     ("deployed_defs", c.db.list_defs().len().into()),
+                    ("recovery", c.recovery_stats().to_json()),
                 ]),
             ))
+        }
+        ("GET", "/v1/tenants") => Ok((
+            200,
+            Json::Arr(c.tenant_policies().iter().map(TenantPolicy::to_json).collect()),
+        )),
+        ("PUT", p) if p.starts_with("/v1/tenants/") => {
+            let tenant = &p["/v1/tenants/".len()..];
+            if tenant.is_empty() {
+                return Ok((404, err_json("missing tenant name")));
+            }
+            let j = Json::parse(body)?;
+            let (weight, quota) = (j.get("weight"), j.get("quota"));
+            if weight.is_none() && quota.is_none() {
+                return Err(anyhow!(
+                    "set 'weight' (number > 0) and/or 'quota' \
+                     (max concurrently placed vCPUs; null clears the cap)"
+                ));
+            }
+            // Validate *both* fields before applying either, so a 400 can
+            // never leave half the request committed (and persisted).
+            let weight = match weight {
+                None => None,
+                Some(w) => {
+                    let w = w
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("'weight' must be a number"))?;
+                    if !w.is_finite() || w <= 0.0 {
+                        return Err(anyhow!("'weight' must be a finite number > 0"));
+                    }
+                    Some(w)
+                }
+            };
+            let quota = match quota {
+                None => None,
+                Some(Json::Null) => Some(None),
+                Some(q @ Json::Num(_)) => {
+                    let n = q.as_f64().unwrap_or(f64::NAN);
+                    // `as usize` would silently saturate -1 or NaN to a
+                    // tenant-freezing quota of 0; reject instead.
+                    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+                        return Err(anyhow!(
+                            "'quota' must be a non-negative whole number of vCPUs"
+                        ));
+                    }
+                    Some(Some(n as usize))
+                }
+                Some(_) => {
+                    return Err(anyhow!(
+                        "'quota' must be a number of vCPUs, or null to clear"
+                    ))
+                }
+            };
+            if let Some(w) = weight {
+                c.set_tenant_weight(tenant, w);
+            }
+            if let Some(q) = quota {
+                c.set_tenant_quota(tenant, q);
+            }
+            let policy = c
+                .tenant_policies()
+                .into_iter()
+                .find(|t| t.tenant == tenant)
+                .map(|t| t.to_json())
+                .unwrap_or(Json::Null);
+            Ok((200, policy))
         }
         ("GET", "/v1/defs") => Ok((
             200,
@@ -841,6 +913,68 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         assert_eq!(c.pool.free_vcpus(), vec![4]);
+    }
+
+    #[test]
+    fn tenant_routes_set_and_list_policy() {
+        let (_srv, addr) = setup();
+        // Setting weight + quota creates the lane and echoes the policy.
+        let body = Json::parse(r#"{"weight":2.5,"quota":8}"#).unwrap();
+        let r = http_request(&addr, "PUT", "/v1/tenants/acme", Some(&body)).unwrap();
+        assert_eq!(r.get("weight").unwrap().as_f64(), Some(2.5));
+        assert_eq!(r.get("quota").unwrap().as_usize(), Some(8));
+        assert_eq!(r.str_or("tenant", ""), "acme");
+        // Listed, with live usage fields present.
+        let list = http_request(&addr, "GET", "/v1/tenants", None).unwrap();
+        let acme = list
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|t| t.str_or("tenant", "") == "acme")
+            .expect("acme listed");
+        assert_eq!(acme.get("placed_vcpus").unwrap().as_usize(), Some(0));
+        assert_eq!(acme.get("queued").unwrap().as_usize(), Some(0));
+        // Clearing the quota with null removes it from the policy.
+        let clear = Json::parse(r#"{"quota":null}"#).unwrap();
+        let r = http_request(&addr, "PUT", "/v1/tenants/acme", Some(&clear)).unwrap();
+        assert!(r.get("quota").is_none(), "{r}");
+        // Bad requests: no fields, non-positive weight, bogus quota type,
+        // negative / fractional quota (a saturating cast would silently
+        // freeze the tenant at quota 0).
+        for bad in [
+            r#"{}"#,
+            r#"{"weight":0}"#,
+            r#"{"weight":-1}"#,
+            r#"{"quota":"x"}"#,
+            r#"{"quota":-1}"#,
+            r#"{"quota":2.5}"#,
+        ] {
+            let body = Json::parse(bad).unwrap();
+            let err = http_request(&addr, "PUT", "/v1/tenants/acme", Some(&body))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("HTTP 400"), "{bad}: {err}");
+        }
+        // A rejected request commits nothing: the valid weight riding
+        // along with a bogus quota must not be applied.
+        let half = Json::parse(r#"{"weight":9,"quota":"x"}"#).unwrap();
+        let err = http_request(&addr, "PUT", "/v1/tenants/acme", Some(&half))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 400"), "{err}");
+        let list = http_request(&addr, "GET", "/v1/tenants", None).unwrap();
+        let acme = list
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|t| t.str_or("tenant", "") == "acme")
+            .unwrap();
+        assert_eq!(acme.get("weight").unwrap().as_f64(), Some(2.5), "{acme}");
+        // Recovery counters ride on /metrics (zeroes without --state-dir).
+        let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+        let rec = m.get("recovery").unwrap();
+        assert_eq!(rec.get("requeued").unwrap().as_usize(), Some(0));
+        assert_eq!(m.get("quota_blocked_flares").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -50,16 +50,18 @@
 //!                 │
 //!                 ▼                    deadline passed
 //!            ┌─ queued ──────────────────────────────────▶ expired
-//!            │    │  ▲
-//!  cancel_flare   │  │ preempted by scheduler
+//!            │    │  ▲ ▲
+//!  cancel_flare   │  │ │ preempted by scheduler
 //!            │  placed │ (reservation released,
 //!            │    │    │  preempt_count + 1)
-//!            │    ▼    │
+//!            │    ▼    │ │
 //!            │  running ──────────┬──────────▶ completed
-//!            │    │               └──────────▶ failed
-//!            │    │ cancel_flare
-//!            ▼    ▼
-//!           cancelled
+//!            │    │     │         └──────────▶ failed ◀── lost at restart
+//!            │    │ cancel_flare  │                        (work fn gone)
+//!            │    │               │ ~~ crash ~~
+//!            ▼    ▼               ▼
+//!           cancelled      Controller::recover ── re-admitted (queued,
+//!                            (replay WAL+snapshot)  original submit order)
 //! ```
 //!
 //! `completed`, `failed`, `cancelled`, and `expired` are terminal; the
@@ -67,6 +69,24 @@
 //! at most `max_preempts` times per flare (the livelock guard), never for
 //! flares submitted with `preemptible = false`, and always lost to a
 //! concurrent `cancel_flare` (terminal `Cancelled` beats the requeue).
+//!
+//! # Durability and crash recovery
+//!
+//! With a state directory attached ([`Controller::recover`], CLI
+//! `serve --state-dir`), every deploy, flare mutation, and tenant-policy
+//! change appends to a write-ahead log with periodic compacted snapshots
+//! ([`store::DurableStore`]). After a crash — not a graceful shutdown;
+//! nothing is flushed at exit beyond the per-append flush — recovery
+//! replays snapshot ⊕ WAL: terminal flares are restored as history
+//! verbatim; flares that were `queued`/`running` are re-admitted at the
+//! head of their tenant lane in original submit order (original wall-clock
+//! submit time and remaining deadline preserved) or marked `failed` with a
+//! `lost at restart` error when their work function is no longer
+//! registered; tenant weights and hard vCPU quotas are reinstated before
+//! the scheduler's first placement pass. Quotas cap a tenant's
+//! *concurrently placed* vCPUs: an over-quota flare is admitted but waits
+//! with a `quota_blocked` reason in its record, without consuming backfill
+//! passes or skewing DRR deficits.
 //!
 //! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id,
 //! with `options.tenant` / `options.priority` / `options.preemptible` /
@@ -83,15 +103,20 @@ pub mod invoker;
 pub mod pack;
 pub mod packing;
 pub mod queue;
+pub mod store;
 
 pub use controller::{
-    CancelError, CancelOutcome, Controller, FlareOptions, FlareResult,
+    CancelError, CancelOutcome, Controller, FlareOptions, FlareResult, RecoveryStats,
     DEFAULT_MAX_PREEMPTS,
 };
-pub use db::{register_work, BurstConfig, BurstDb, BurstDefinition, FlareStatus, WorkFn};
+pub use db::{
+    register_work, BurstConfig, BurstDb, BurstDefinition, FlareRecord, FlareStatus,
+    WorkFn,
+};
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
 pub use packing::{plan, PackSpec, PackingStrategy};
 pub use queue::{
     place_with_spillback, select_victims, FlareHandle, FlareQueue, PreemptCandidate,
-    Priority, DEFAULT_TENANT,
+    Priority, TenantPolicy, DEFAULT_TENANT,
 };
+pub use store::{DurableStore, LoadedState};

@@ -145,6 +145,10 @@ pub struct QueuedFlare {
     pub submitted: Stopwatch,
     /// Times a later flare was backfilled past this one while it was blocked.
     pub passed_over: u32,
+    /// Set by the last `pop_placeable` scan when this flare was skipped
+    /// because its tenant's hard vCPU quota is exhausted (surfaced as the
+    /// record's `wait_reason`); cleared on every scan before re-checking.
+    pub quota_blocked: bool,
 }
 
 /// One-shot result mailbox shared by the execution thread and the waiter.
@@ -343,6 +347,14 @@ struct TenantLane {
     /// Fair-share weight; a lane with weight 2 is entitled to twice the
     /// placed vCPUs of a weight-1 lane.
     weight: f64,
+    /// vCPUs this tenant holds *right now* (incremented at placement,
+    /// decremented at `settle` when the reservation is released) — the
+    /// quantity the hard quota caps.
+    placed: usize,
+    /// Hard cap on concurrently placed vCPUs (`None` = unlimited). A
+    /// flare over the cap stays queued with a `quota_blocked` reason even
+    /// when the cluster has free capacity; admission is unaffected.
+    quota: Option<usize>,
 }
 
 impl TenantLane {
@@ -352,12 +364,44 @@ impl TenantLane {
             jobs: VecDeque::new(),
             consumed: 0.0,
             weight: 1.0,
+            placed: 0,
+            quota: None,
         }
     }
 
     /// Weighted share: lanes with the lowest share are scheduled first.
     fn share(&self) -> f64 {
         self.consumed / self.weight
+    }
+}
+
+/// One tenant's scheduling policy and live usage (the `GET /v1/tenants`
+/// view; weight and quota are also what the durable store persists).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantPolicy {
+    pub tenant: String,
+    /// Fair-share weight (DRR entitlement).
+    pub weight: f64,
+    /// Hard cap on concurrently placed vCPUs (`None` = unlimited).
+    pub quota: Option<usize>,
+    /// vCPUs currently placed for this tenant.
+    pub placed_vcpus: usize,
+    /// Flares waiting in this tenant's lane.
+    pub queued: usize,
+}
+
+impl TenantPolicy {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("tenant", self.tenant.as_str().into()),
+            ("weight", self.weight.into()),
+            ("placed_vcpus", self.placed_vcpus.into()),
+            ("queued", self.queued.into()),
+        ];
+        if let Some(q) = self.quota {
+            fields.push(("quota", q.into()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -378,6 +422,50 @@ impl FlareQueue {
     pub fn set_tenant_weight(&mut self, tenant: &str, weight: f64) {
         let li = self.lane_index(tenant);
         self.tenants[li].weight = weight.max(f64::MIN_POSITIVE);
+    }
+
+    /// Set (or clear, with `None`) a tenant's hard cap on concurrently
+    /// placed vCPUs. Purely a placement-time gate: admission still
+    /// succeeds and DRR deficits are untouched by quota-blocked waits.
+    pub fn set_tenant_quota(&mut self, tenant: &str, quota: Option<usize>) {
+        let li = self.lane_index(tenant);
+        self.tenants[li].quota = quota;
+    }
+
+    /// A tenant's current `(weight, quota)` policy, if its lane exists.
+    pub fn policy(&self, tenant: &str) -> Option<(f64, Option<usize>)> {
+        self.tenants
+            .iter()
+            .find(|t| t.name == tenant)
+            .map(|t| (t.weight, t.quota))
+    }
+
+    /// Every tenant lane's policy and live usage, sorted by name (the
+    /// `GET /v1/tenants` view).
+    pub fn tenant_policies(&self) -> Vec<TenantPolicy> {
+        let mut v: Vec<TenantPolicy> = self
+            .tenants
+            .iter()
+            .map(|t| TenantPolicy {
+                tenant: t.name.clone(),
+                weight: t.weight,
+                quota: t.quota,
+                placed_vcpus: t.placed,
+                queued: t.jobs.len(),
+            })
+            .collect();
+        v.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        v
+    }
+
+    /// Ids of queued flares the last scan skipped for quota exhaustion.
+    pub fn quota_blocked_ids(&self) -> Vec<String> {
+        self.tenants
+            .iter()
+            .flat_map(|t| t.jobs.iter())
+            .filter(|j| j.quota_blocked)
+            .map(|j| j.flare_id.clone())
+            .collect()
     }
 
     /// Lowest weighted share among lanes that currently hold jobs.
@@ -477,12 +565,14 @@ impl FlareQueue {
 
     /// Burst size of the queued flare of `class` that has waited longest
     /// (`None` if the class is empty): the flare the preemption policy
-    /// reclaims capacity for.
+    /// reclaims capacity for. Quota-blocked flares are excluded — they
+    /// wait on their *own tenant's* cap, so preempting other tenants'
+    /// work could never unblock them.
     pub fn oldest_of_class(&self, class: Priority) -> Option<usize> {
         self.tenants
             .iter()
             .flat_map(|t| t.jobs.iter())
-            .filter(|j| j.priority == class)
+            .filter(|j| j.priority == class && !j.quota_blocked)
             .max_by(|a, b| a.submitted.elapsed().cmp(&b.submitted.elapsed()))
             .map(|j| j.burst_size)
     }
@@ -498,6 +588,10 @@ impl FlareQueue {
         let li = self.lane_index(tenant);
         let lane = &mut self.tenants[li];
         lane.consumed = (lane.consumed + measured - provisional).max(0.0);
+        // The reservation is released: those vCPUs no longer count against
+        // the tenant's hard quota. (`provisional` is the burst size the
+        // placement charged, so this mirrors `pop_placeable` exactly.)
+        lane.placed = lane.placed.saturating_sub(provisional as usize);
     }
 
     pub fn len(&self) -> usize {
@@ -551,10 +645,25 @@ impl FlareQueue {
     /// blocked flare goes first. A successful placement charges the lane's
     /// deficit with the flare's vCPU demand (provisional; settled to
     /// measured vCPU·seconds on release).
+    ///
+    /// **Quotas.** A lane with a hard vCPU quota skips any flare that
+    /// would push its concurrently placed vCPUs past the cap, *before*
+    /// planning. A quota skip is deliberately invisible to the fairness
+    /// machinery: it does not count as a backfill pass (a quota-blocked
+    /// flare waits on its own tenant's running work, so halting the whole
+    /// scan for it would stall every other tenant for nothing) and it does
+    /// not touch DRR deficits. The skipped flare is marked
+    /// `quota_blocked` for status visibility.
     pub fn pop_placeable(
         &mut self,
         pool: &InvokerPool,
     ) -> Option<(QueuedFlare, Vec<PackSpec>)> {
+        // Re-derive quota-blocked marks from scratch each scan.
+        for lane in &mut self.tenants {
+            for job in &mut lane.jobs {
+                job.quota_blocked = false;
+            }
+        }
         let mut lane_order: Vec<usize> = (0..self.tenants.len())
             .filter(|&l| !self.tenants[l].jobs.is_empty())
             .collect();
@@ -575,10 +684,19 @@ impl FlareQueue {
 
         let mut chosen: Option<(usize, usize, Vec<PackSpec>)> = None;
         let mut skipped: Vec<(usize, usize)> = Vec::new();
+        let mut quota_hits: Vec<(usize, usize)> = Vec::new();
         'scan: for class in [Priority::High, Priority::Normal, Priority::Low] {
             for &l in &lane_order {
+                let (lane_placed, lane_quota) =
+                    (self.tenants[l].placed, self.tenants[l].quota);
                 for (j, job) in self.tenants[l].jobs.iter().enumerate() {
                     if job.priority != class {
+                        continue;
+                    }
+                    // Hard quota: checked before planning, never counted
+                    // as a backfill pass (see method docs).
+                    if lane_quota.is_some_and(|q| lane_placed + job.burst_size > q) {
+                        quota_hits.push((l, j));
                         continue;
                     }
                     let placed = if job.burst_size <= total_free {
@@ -597,6 +715,11 @@ impl FlareQueue {
                 }
             }
         }
+        // Mark quota-blocked flares whether or not anything placed — the
+        // common quota case is "nothing else is queued, yet this waits".
+        for &(ql, qj) in &quota_hits {
+            self.tenants[ql].jobs[qj].quota_blocked = true;
+        }
         let (l, j, packs) = chosen?;
         for &(sl, sj) in &skipped {
             self.tenants[sl].jobs[sj].passed_over += 1;
@@ -604,6 +727,7 @@ impl FlareQueue {
         let mut job = self.tenants[l].jobs.remove(j).expect("index in range");
         job.charged = job.burst_size as f64;
         self.tenants[l].consumed += job.charged;
+        self.tenants[l].placed += job.burst_size;
         Some((job, packs))
     }
 }
@@ -617,6 +741,11 @@ pub(crate) struct SchedState {
     /// lost (the scheduler re-checks before sleeping).
     dirty: AtomicBool,
     shutdown: AtomicBool,
+    /// While set, scheduling passes are skipped entirely: recovery
+    /// replays tenant policy and re-admits flares with the scheduler held
+    /// off, so nothing can be placed under not-yet-restored weights or
+    /// quotas. Released by `resume`.
+    paused: AtomicBool,
 }
 
 impl SchedState {
@@ -626,7 +755,19 @@ impl SchedState {
             cv: Condvar::new(),
             dirty: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
+            paused: AtomicBool::new(false),
         })
+    }
+
+    /// Hold off scheduling passes (recovery replay window).
+    pub(crate) fn pause(&self) {
+        self.paused.store(true, Ordering::Release);
+    }
+
+    /// Release a `pause` and kick a scheduling pass.
+    pub(crate) fn resume(&self) {
+        self.paused.store(false, Ordering::Release);
+        self.wake();
     }
 
     /// Nudge the scheduler: a flare was submitted or capacity was freed.
@@ -670,7 +811,10 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
     let _drain = DrainOnExit(state.clone());
 
     while !state.shutdown.load(Ordering::Acquire) {
-        if let Some(c) = controller.upgrade() {
+        if state.paused.load(Ordering::Acquire) {
+            // Recovery replay in progress: nothing may be placed until
+            // tenant weights and quotas are reinstated.
+        } else if let Some(c) = controller.upgrade() {
             // Deadline pass first: a flare whose deadline lapsed while
             // queued must fail fast, never be placed.
             c.expire_overdue_queued();
@@ -683,6 +827,8 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
                     None => break,
                 }
             }
+            // Surface quota-blocked waits in the flare records.
+            c.sync_quota_blocked();
             // Nothing placeable left: reclaim capacity for a starved
             // high-priority flare by preempting lower-priority runners.
             c.preempt_for_starved_high_flare();
@@ -731,6 +877,7 @@ mod tests {
             slot: Arc::new(ResultSlot::new()),
             submitted: Stopwatch::start(),
             passed_over: 0,
+            quota_blocked: false,
         }
     }
 
@@ -1002,6 +1149,88 @@ mod tests {
         q.settle(&z1.tenant, z1.charged, 0.1);
         assert_eq!(pop_release(&mut q, &pool), "z2");
         assert_eq!(pop_release(&mut q, &pool), "b2");
+    }
+
+    #[test]
+    fn quota_blocks_placement_even_with_free_capacity() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 16));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.set_tenant_quota("t", Some(4));
+        q.push(job_for("t1", 4, "t", Priority::Normal));
+        q.push(job_for("t2", 4, "t", Priority::Normal));
+        let (t1, _packs) = q.pop_placeable(&pool).unwrap();
+        assert_eq!(t1.flare_id, "t1");
+        // 12 vCPUs are free, but the tenant holds its full quota: t2 waits
+        // with an observable reason.
+        assert!(q.pop_placeable(&pool).is_none());
+        assert_eq!(q.quota_blocked_ids(), vec!["t2"]);
+        let policy = &q.tenant_policies()[0];
+        assert_eq!((policy.placed_vcpus, policy.quota), (4, Some(4)));
+        // Releasing t1's reservation frees the quota; t2 places.
+        q.settle("t", t1.charged, 1.0);
+        let (t2, _) = q.pop_placeable(&pool).unwrap();
+        assert_eq!(t2.flare_id, "t2");
+        assert!(!t2.quota_blocked, "marks are cleared on each scan");
+    }
+
+    #[test]
+    fn backfill_does_not_bypass_quota() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 16));
+        // A tight backfill budget: if quota skips counted as passes, the
+        // second other-tenant pop below would trip the starvation guard.
+        let mut q = FlareQueue::new(1);
+        q.set_tenant_quota("t", Some(4));
+        q.push(job_for("big", 4, "t", Priority::Normal));
+        q.push(job_for("small", 2, "t", Priority::Normal));
+        assert_eq!(q.pop_placeable(&pool).unwrap().0.flare_id, "big");
+        // "small" would fit the cluster *and* is a textbook backfill
+        // candidate — but 4 + 2 exceeds the quota, so it must wait too.
+        assert!(q.pop_placeable(&pool).is_none());
+        assert_eq!(q.quota_blocked_ids(), vec!["small"]);
+        // Other tenants are unaffected, repeatedly: a quota skip is not a
+        // backfill pass, so the pass budget of 1 never halts the scan.
+        q.push(job_for("o1", 4, "other", Priority::Normal));
+        q.push(job_for("o2", 4, "other", Priority::Normal));
+        assert_eq!(pop_release(&mut q, &pool), "o1");
+        assert_eq!(pop_release(&mut q, &pool), "o2");
+        // A full rescan with nothing placeable re-marks the quota wait.
+        assert!(q.pop_placeable(&pool).is_none());
+        assert_eq!(q.quota_blocked_ids(), vec!["small"]);
+    }
+
+    #[test]
+    fn quota_blocked_waits_leave_drr_deficits_unaffected() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(2, 8));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.set_tenant_quota("a", Some(4));
+        // a1 takes tenant a to its quota and keeps running.
+        q.push(job_for("a1", 4, "a", Priority::Normal));
+        let (a1, _) = q.pop_placeable(&pool).unwrap();
+        assert_eq!(a1.flare_id, "a1");
+        // While a is quota-blocked, b places twice (consuming share 8).
+        q.push(job_for("a2", 4, "a", Priority::Normal));
+        q.push(job_for("b1", 4, "b", Priority::Normal));
+        q.push(job_for("b2", 4, "b", Priority::Normal));
+        assert_eq!(pop_release(&mut q, &pool), "b1");
+        assert_eq!(pop_release(&mut q, &pool), "b2");
+        // a1 releases; a's share is 4 vs b's 8, so a2 goes first — the
+        // quota-blocked wait neither charged nor discounted a's deficit.
+        q.settle("a", a1.charged, 4.0);
+        q.push(job_for("b3", 4, "b", Priority::Normal));
+        assert_eq!(pop_release(&mut q, &pool), "a2");
+        assert_eq!(pop_release(&mut q, &pool), "b3");
+    }
+
+    #[test]
+    fn quota_cleared_with_none_lifts_the_cap() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 16));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        q.set_tenant_quota("t", Some(2));
+        q.push(job_for("t1", 4, "t", Priority::Normal));
+        assert!(q.pop_placeable(&pool).is_none(), "4 > quota 2");
+        q.set_tenant_quota("t", None);
+        assert_eq!(q.pop_placeable(&pool).unwrap().0.flare_id, "t1");
+        assert_eq!(q.policy("t"), Some((1.0, None)));
     }
 
     #[test]

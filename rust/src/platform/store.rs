@@ -1,0 +1,526 @@
+//! Durable control-plane state: an append-only JSON-lines write-ahead log
+//! plus periodic compacted snapshots for flare records, burst definitions,
+//! and per-tenant scheduling policy (fair-share weight + hard vCPU quota).
+//!
+//! The paper's group-invocation primitive makes the *platform* responsible
+//! for a flare's lifecycle; that promise is empty if a controller restart
+//! loses queued jobs and billing state. [`DurableStore`] is the sink the
+//! control plane appends to ([`BurstDb`](super::db::BurstDb) for
+//! deploy/flare mutations, the controller for tenant policy) and the source
+//! [`Controller::recover`](super::Controller::recover) replays on startup.
+//!
+//! # On-disk layout (one directory, the `--state-dir`)
+//!
+//! * `wal.jsonl` — one JSON object per line, appended and flushed on every
+//!   mutation. Entry shapes:
+//!   - `{"op":"deploy","def":{"name","work","conf":{...}}}`
+//!   - `{"op":"flare","rec":{...full flare record...}}`
+//!   - `{"op":"drop_flare","flare_id":"..."}` (retention eviction)
+//!   - `{"op":"tenant","tenant":"...","weight":W,"quota":Q?}`
+//! * `snapshot.json` — the full compacted state, written atomically
+//!   (tmp-file + rename) whenever the WAL exceeds
+//!   [`DEFAULT_SNAPSHOT_THRESHOLD`] entries, after which the WAL is
+//!   truncated. Recovery is snapshot ⊕ WAL replay.
+//!
+//! # Crash tolerance
+//!
+//! A crash mid-append leaves a truncated final WAL line; a crash between
+//! snapshot rename and WAL truncation leaves entries that are already in
+//! the snapshot. Both are harmless: unparseable lines are *skipped, not
+//! fatal* (counted in [`LoadedState::skipped_lines`]), and replaying an
+//! entry over the state that already contains it is idempotent — every
+//! `flare` entry carries the full record, so replay is a plain overwrite
+//! by id, never a delta.
+//!
+//! The store also maintains the materialized state in memory (applied on
+//! every append), so writing a snapshot never has to consult — or lock —
+//! the live `BurstDb`.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::db::BurstConfig;
+use crate::util::json::Json;
+
+/// WAL entries accumulated before the state is compacted into a snapshot
+/// and the log truncated.
+pub const DEFAULT_SNAPSHOT_THRESHOLD: usize = 1024;
+
+const WAL_FILE: &str = "wal.jsonl";
+const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// The state recovered from disk at [`DurableStore::open`] time: the input
+/// to `Controller::recover`'s replay.
+#[derive(Debug, Clone, Default)]
+pub struct LoadedState {
+    /// Deployed burst definitions as `{"name","work","conf"}` objects.
+    pub defs: Vec<Json>,
+    /// Flare records (full `FlareRecord` JSON), oldest submission first.
+    pub flares: Vec<Json>,
+    /// Per-tenant policy: `(tenant, weight, hard vCPU quota)`.
+    pub tenants: Vec<(String, f64, Option<usize>)>,
+    /// Corrupt or truncated WAL lines that were skipped during the load
+    /// (a crash mid-append leaves at most one).
+    pub skipped_lines: usize,
+}
+
+/// Materialized store state plus the open WAL handle.
+struct Inner {
+    wal: File,
+    wal_entries: usize,
+    defs: BTreeMap<String, Json>,
+    flares: BTreeMap<String, Json>,
+    /// Insertion (submission) order of `flares` keys.
+    flare_order: Vec<String>,
+    tenants: BTreeMap<String, (f64, Option<usize>)>,
+    skipped_lines: usize,
+}
+
+impl Inner {
+    /// Apply one entry to the materialized state. Returns `false` for a
+    /// malformed entry (unknown op or missing fields) — the caller skips
+    /// it on replay and refuses it on append.
+    fn apply(&mut self, entry: &Json) -> bool {
+        match entry.str_or("op", "") {
+            "deploy" => {
+                let Some(def) = entry.get("def") else { return false };
+                let Some(name) = def.get("name").and_then(Json::as_str) else {
+                    return false;
+                };
+                self.defs.insert(name.to_string(), def.clone());
+                true
+            }
+            "flare" => {
+                let Some(rec) = entry.get("rec") else { return false };
+                let Some(id) = rec.get("flare_id").and_then(Json::as_str) else {
+                    return false;
+                };
+                if !self.flares.contains_key(id) {
+                    self.flare_order.push(id.to_string());
+                }
+                self.flares.insert(id.to_string(), rec.clone());
+                true
+            }
+            "drop_flare" => {
+                let Some(id) = entry.get("flare_id").and_then(Json::as_str) else {
+                    return false;
+                };
+                self.flares.remove(id);
+                self.flare_order.retain(|x| x != id);
+                true
+            }
+            "tenant" => {
+                let Some(t) = entry.get("tenant").and_then(Json::as_str) else {
+                    return false;
+                };
+                let weight = entry.num_or("weight", 1.0);
+                let quota = entry.get("quota").and_then(Json::as_usize);
+                self.tenants.insert(t.to_string(), (weight, quota));
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// The durable-state sink and recovery source (see module docs).
+pub struct DurableStore {
+    dir: PathBuf,
+    snapshot_threshold: usize,
+    inner: Mutex<Inner>,
+}
+
+impl DurableStore {
+    /// Open (creating if needed) the state directory and load
+    /// snapshot ⊕ WAL into the materialized state.
+    pub fn open(dir: &Path) -> Result<DurableStore> {
+        DurableStore::open_with_threshold(dir, DEFAULT_SNAPSHOT_THRESHOLD)
+    }
+
+    /// [`DurableStore::open`] with an explicit snapshot-and-truncate
+    /// threshold (tests use tiny thresholds to exercise compaction).
+    pub fn open_with_threshold(dir: &Path, snapshot_threshold: usize) -> Result<DurableStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+
+        let mut defs = BTreeMap::new();
+        let mut flares = BTreeMap::new();
+        let mut flare_order = Vec::new();
+        let mut tenants = BTreeMap::new();
+        let mut skipped = 0usize;
+
+        // Snapshot first (written atomically, so either absent or whole —
+        // but stay lenient: an unreadable snapshot degrades to WAL-only).
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        if let Ok(text) = fs::read_to_string(&snap_path) {
+            match Json::parse(&text) {
+                Ok(snap) => {
+                    for def in snap.get("defs").and_then(Json::as_arr).unwrap_or(&[]) {
+                        if let Some(name) = def.get("name").and_then(Json::as_str) {
+                            defs.insert(name.to_string(), def.clone());
+                        }
+                    }
+                    for rec in snap.get("flares").and_then(Json::as_arr).unwrap_or(&[]) {
+                        if let Some(id) = rec.get("flare_id").and_then(Json::as_str) {
+                            if !flares.contains_key(id) {
+                                flare_order.push(id.to_string());
+                            }
+                            flares.insert(id.to_string(), rec.clone());
+                        }
+                    }
+                    if let Some(ts) = snap.get("tenants").and_then(Json::as_obj) {
+                        for (name, policy) in ts {
+                            tenants.insert(
+                                name.clone(),
+                                (
+                                    policy.num_or("weight", 1.0),
+                                    policy.get("quota").and_then(Json::as_usize),
+                                ),
+                            );
+                        }
+                    }
+                }
+                Err(e) => {
+                    skipped += 1;
+                    eprintln!(
+                        "burstc: ignoring unreadable snapshot {}: {e}",
+                        snap_path.display()
+                    );
+                }
+            }
+        }
+
+        // Read the WAL before opening the append handle. Undecodable or
+        // truncated lines (a crash mid-append) are skipped, not fatal.
+        let wal_path = dir.join(WAL_FILE);
+        let mut lines: Vec<String> = Vec::new();
+        if let Ok(f) = File::open(&wal_path) {
+            let mut reader = BufReader::new(f);
+            let mut buf = String::new();
+            loop {
+                buf.clear();
+                match reader.read_line(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => lines.push(buf.clone()),
+                    Err(_) => {
+                        skipped += 1; // non-UTF-8 tail: stop here
+                        break;
+                    }
+                }
+            }
+        }
+
+        let wal = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&wal_path)
+            .with_context(|| format!("opening WAL {}", wal_path.display()))?;
+        let mut inner = Inner {
+            wal,
+            wal_entries: 0,
+            defs,
+            flares,
+            flare_order,
+            tenants,
+            skipped_lines: skipped,
+        };
+        for line in &lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Json::parse(line) {
+                Ok(entry) if inner.apply(&entry) => inner.wal_entries += 1,
+                _ => inner.skipped_lines += 1,
+            }
+        }
+
+        Ok(DurableStore { dir: dir.to_path_buf(), snapshot_threshold, inner: Mutex::new(inner) })
+    }
+
+    /// The state directory this store persists to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// A clone of the materialized state. Called immediately after
+    /// [`DurableStore::open`] this is exactly what the previous process
+    /// left on disk — the input to `Controller::recover`'s replay.
+    pub fn loaded(&self) -> LoadedState {
+        let inner = self.inner.lock().unwrap();
+        LoadedState {
+            defs: inner.defs.values().cloned().collect(),
+            flares: inner
+                .flare_order
+                .iter()
+                .filter_map(|id| inner.flares.get(id).cloned())
+                .collect(),
+            tenants: inner
+                .tenants
+                .iter()
+                .map(|(k, (w, q))| (k.clone(), *w, *q))
+                .collect(),
+            skipped_lines: inner.skipped_lines,
+        }
+    }
+
+    /// WAL entries since the last snapshot (observability / tests).
+    pub fn wal_entries(&self) -> usize {
+        self.inner.lock().unwrap().wal_entries
+    }
+
+    /// Append a deployed burst definition.
+    pub fn append_def(&self, name: &str, work: &str, conf: &BurstConfig) -> Result<()> {
+        self.append(Json::obj(vec![
+            ("op", "deploy".into()),
+            (
+                "def",
+                Json::obj(vec![
+                    ("name", name.into()),
+                    ("work", work.into()),
+                    ("conf", conf.to_json()),
+                ]),
+            ),
+        ]))
+    }
+
+    /// Append a full flare record (`FlareRecord::to_json`). Replay is an
+    /// overwrite by id, so appending the whole record on every mutation
+    /// keeps recovery delta-free.
+    pub fn append_flare(&self, rec: &Json) -> Result<()> {
+        self.append(Json::obj(vec![("op", "flare".into()), ("rec", rec.clone())]))
+    }
+
+    /// Append a retention eviction, so terminal records evicted from the
+    /// in-memory db do not resurrect at the next recovery.
+    pub fn append_drop_flare(&self, flare_id: &str) -> Result<()> {
+        self.append(Json::obj(vec![
+            ("op", "drop_flare".into()),
+            ("flare_id", flare_id.into()),
+        ]))
+    }
+
+    /// Append a tenant's scheduling policy (fair-share weight + quota).
+    pub fn append_tenant(&self, tenant: &str, weight: f64, quota: Option<usize>) -> Result<()> {
+        let mut fields = vec![
+            ("op", "tenant".into()),
+            ("tenant", tenant.into()),
+            ("weight", weight.into()),
+        ];
+        if let Some(q) = quota {
+            fields.push(("quota", q.into()));
+        }
+        self.append(Json::obj(fields))
+    }
+
+    /// Append one entry: applied to the materialized state, written as one
+    /// flushed WAL line (the JSON writer escapes newlines, so an entry is
+    /// always exactly one line), then compacted if the log grew past the
+    /// threshold.
+    fn append(&self, entry: Json) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.apply(&entry) {
+            return Err(anyhow!("malformed WAL entry: {entry}"));
+        }
+        let mut line = entry.to_string();
+        line.push('\n');
+        inner.wal.write_all(line.as_bytes())?;
+        inner.wal.flush()?;
+        inner.wal_entries += 1;
+        if inner.wal_entries >= self.snapshot_threshold {
+            self.snapshot_locked(&mut inner)?;
+        }
+        Ok(())
+    }
+
+    /// Compact now: write the snapshot atomically and truncate the WAL
+    /// (recovery calls this after replay so repeated restarts do not
+    /// re-accumulate replayed entries).
+    pub fn force_snapshot(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.snapshot_locked(&mut inner)
+    }
+
+    fn snapshot_locked(&self, inner: &mut Inner) -> Result<()> {
+        let defs: Vec<Json> = inner.defs.values().cloned().collect();
+        let flares: Vec<Json> = inner
+            .flare_order
+            .iter()
+            .filter_map(|id| inner.flares.get(id).cloned())
+            .collect();
+        let tenants = Json::Obj(
+            inner
+                .tenants
+                .iter()
+                .map(|(name, (w, q))| {
+                    let mut policy = vec![("weight", (*w).into())];
+                    if let Some(q) = q {
+                        policy.push(("quota", (*q).into()));
+                    }
+                    (name.clone(), Json::obj(policy))
+                })
+                .collect(),
+        );
+        let snap = Json::obj(vec![
+            ("defs", Json::Arr(defs)),
+            ("flares", Json::Arr(flares)),
+            ("tenants", tenants),
+        ]);
+        // Atomic replace: a crash leaves either the old or the new
+        // snapshot, never a half-written one.
+        let tmp = self.dir.join("snapshot.json.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(snap.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, self.dir.join(SNAPSHOT_FILE))?;
+        // O_APPEND writes land at the (new) EOF, so truncation alone is
+        // enough; a crash between rename and here only leaves entries the
+        // snapshot already contains — replay is idempotent.
+        inner.wal.set_len(0)?;
+        inner.wal_entries = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::db::FlareRecord;
+    use crate::platform::queue::Priority;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("burstc-store-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(id: &str) -> Json {
+        FlareRecord::queued(id, "d", "default", Priority::Normal).to_json()
+    }
+
+    #[test]
+    fn wal_roundtrip_restores_all_entry_kinds() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_def("pr", "pagerank", &BurstConfig::default()).unwrap();
+            s.append_flare(&rec("f1")).unwrap();
+            s.append_flare(&rec("f2")).unwrap();
+            s.append_tenant("acme", 2.0, Some(16)).unwrap();
+            s.append_tenant("free", 1.0, None).unwrap();
+            s.append_drop_flare("f1").unwrap();
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        assert_eq!(loaded.defs.len(), 1);
+        assert_eq!(loaded.defs[0].str_or("name", ""), "pr");
+        assert_eq!(loaded.defs[0].str_or("work", ""), "pagerank");
+        let ids: Vec<&str> =
+            loaded.flares.iter().map(|r| r.str_or("flare_id", "")).collect();
+        assert_eq!(ids, vec!["f2"], "dropped flare must not resurrect");
+        assert_eq!(loaded.tenants.len(), 2);
+        assert!(loaded.tenants.contains(&("acme".into(), 2.0, Some(16))));
+        assert!(loaded.tenants.contains(&("free".into(), 1.0, None)));
+        assert_eq!(loaded.skipped_lines, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_compacts_and_truncates_the_wal() {
+        let dir = tmp_dir("snapshot");
+        {
+            let s = DurableStore::open_with_threshold(&dir, 4).unwrap();
+            for i in 0..10 {
+                s.append_flare(&rec(&format!("f{i}"))).unwrap();
+            }
+            // 10 appends over threshold 4: at least two compactions ran,
+            // and fewer than 4 entries remain in the live WAL.
+            assert!(s.wal_entries() < 4, "wal_entries={}", s.wal_entries());
+        }
+        assert!(dir.join("snapshot.json").exists());
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        let ids: Vec<&str> =
+            loaded.flares.iter().map(|r| r.str_or("flare_id", "")).collect();
+        let want: Vec<String> = (0..10).map(|i| format!("f{i}")).collect();
+        assert_eq!(ids, want.iter().map(String::as_str).collect::<Vec<_>>());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_line_is_skipped_not_fatal() {
+        let dir = tmp_dir("tail");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_flare(&rec("ok1")).unwrap();
+            s.append_flare(&rec("ok2")).unwrap();
+        }
+        // Simulate a crash mid-append: a final line cut short.
+        let mut f = OpenOptions::new()
+            .append(true)
+            .open(dir.join(WAL_FILE))
+            .unwrap();
+        f.write_all(b"{\"op\":\"flare\",\"rec\":{\"flare_id\":\"cut").unwrap();
+        drop(f);
+        let s = DurableStore::open(&dir).unwrap();
+        let loaded = s.loaded();
+        let ids: Vec<&str> =
+            loaded.flares.iter().map(|r| r.str_or("flare_id", "")).collect();
+        assert_eq!(ids, vec!["ok1", "ok2"]);
+        assert_eq!(loaded.skipped_lines, 1);
+        // The store stays appendable after the corrupt tail.
+        s.append_flare(&rec("ok3")).unwrap();
+        drop(s);
+        let again = DurableStore::open(&dir).unwrap().loaded();
+        assert_eq!(again.flares.len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flare_entries_overwrite_by_id_keeping_submission_order() {
+        let dir = tmp_dir("overwrite");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_flare(&rec("a")).unwrap();
+            s.append_flare(&rec("b")).unwrap();
+            let mut updated = FlareRecord::queued("a", "d", "default", Priority::Normal);
+            updated.status = crate::platform::FlareStatus::Completed;
+            s.append_flare(&updated.to_json()).unwrap();
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        let ids: Vec<&str> =
+            loaded.flares.iter().map(|r| r.str_or("flare_id", "")).collect();
+        assert_eq!(ids, vec!["a", "b"], "update keeps submission order");
+        assert_eq!(loaded.flares[0].str_or("status", ""), "completed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenant_updates_overwrite_and_clear_quota() {
+        let dir = tmp_dir("tenant");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_tenant("t", 1.0, Some(8)).unwrap();
+            s.append_tenant("t", 3.0, None).unwrap();
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        assert_eq!(loaded.tenants, vec![("t".into(), 3.0, None)]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_append_is_rejected() {
+        let dir = tmp_dir("malformed");
+        let s = DurableStore::open(&dir).unwrap();
+        assert!(s.append(Json::obj(vec![("op", "bogus".into())])).is_err());
+        assert!(s.append(Json::obj(vec![("op", "flare".into())])).is_err());
+        assert_eq!(s.wal_entries(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,307 @@
+//! Kill-and-restart harness for the durable control plane: build a
+//! controller on a temp `--state-dir`, drive flares into terminal /
+//! running / queued states, "crash" (copy the state dir byte-for-byte
+//! while the old process still holds it — exactly the files an abrupt
+//! kill leaves, with *no* graceful shutdown flush), then recover a fresh
+//! controller and assert: terminal history intact, queued flares
+//! re-admitted in original submit order, tenant weight + quota
+//! reinstated, and flares whose work fn is gone failed with a clear
+//! "lost at restart" error.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use burstc::cluster::costmodel::CostModel;
+use burstc::cluster::netmodel::NetParams;
+use burstc::cluster::ClusterSpec;
+use burstc::platform::{
+    register_work, BurstConfig, Controller, DurableStore, FlareOptions, FlareRecord,
+    FlareStatus, Priority, WorkFn,
+};
+use burstc::util::json::Json;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("burstc-recovery-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Copy the state files the way a crash leaves them: whatever is on disk
+/// right now, while the original controller still owns the directory.
+fn copy_state(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for entry in fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn recover(invokers: usize, vcpus: usize, dir: &Path) -> Arc<Controller> {
+    Controller::recover(
+        ClusterSpec::uniform(invokers, vcpus),
+        CostModel::default(),
+        NetParams::scaled(1e-6),
+        dir,
+    )
+    .expect("recover controller")
+}
+
+fn hetero(granularity: usize) -> BurstConfig {
+    BurstConfig {
+        granularity,
+        strategy: "heterogeneous".into(),
+        ..Default::default()
+    }
+}
+
+fn wait_status(c: &Controller, id: &str, want: FlareStatus) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if c.flare_status(id) == Some(want) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+/// A work function that parks (cancellation-aware) until `open` is set.
+fn gated_work(open: &Arc<Mutex<bool>>) -> WorkFn {
+    let open = open.clone();
+    Arc::new(move |_p, ctx: &burstc::bcm::BurstContext| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            if *open.lock().unwrap() {
+                return Ok(Json::Null);
+            }
+            ctx.check_cancel()?;
+            if Instant::now() >= deadline {
+                return Err(anyhow::anyhow!("gate never opened (test hang guard)"));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    })
+}
+
+/// A work function that records its `m` param once per flare (worker 0),
+/// so completion order across flares is observable.
+fn marker_work(order: &Arc<Mutex<Vec<String>>>) -> WorkFn {
+    let order = order.clone();
+    Arc::new(move |p: &Json, ctx: &burstc::bcm::BurstContext| {
+        if ctx.worker_id == 0 {
+            order.lock().unwrap().push(p.str_or("m", "?").to_string());
+        }
+        Ok(Json::Null)
+    })
+}
+
+#[test]
+fn kill_and_restart_recovers_history_queue_and_tenants() {
+    let dir_a = tmp_dir("kill-a");
+    let dir_b = tmp_dir("kill-b");
+    let completion_order: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    register_work("recovery-echo", Arc::new(|p: &Json, _ctx| Ok(p.clone())));
+    let gate = Arc::new(Mutex::new(false));
+    register_work("recovery-gated", gated_work(&gate));
+    register_work("recovery-marker", marker_work(&completion_order));
+
+    // --- The "before" controller: 1 invoker × 4 vCPUs (serial capacity).
+    let a = recover(1, 4, &dir_a);
+    a.deploy("term", "recovery-echo", hetero(2)).unwrap();
+    a.deploy("gated", "recovery-gated", hetero(4)).unwrap();
+    a.deploy("order", "recovery-marker", hetero(4)).unwrap();
+    a.set_tenant_weight("acme", 2.0);
+    a.set_tenant_quota("acme", Some(4));
+
+    // One flare reaches terminal state with real outputs...
+    let term = a
+        .flare("term", vec![Json::Num(7.0), Json::Num(8.0)], &FlareOptions::default())
+        .unwrap();
+    // ...one is running (parked on the gate, holding the whole cluster)...
+    let opts = FlareOptions { tenant: Some("acme".into()), ..Default::default() };
+    let running = a.submit_flare("gated", vec![Json::Null; 4], &opts).unwrap();
+    assert!(wait_status(&a, &running.flare_id, FlareStatus::Running));
+    // ...and three are queued behind it, in a known submit order.
+    let queued_ids: Vec<String> = ["m1", "m2", "m3"]
+        .iter()
+        .map(|m| {
+            let params = vec![Json::obj(vec![("m", (*m).into())]); 4];
+            a.submit_flare("order", params, &opts).unwrap().flare_id
+        })
+        .collect();
+    for id in &queued_ids {
+        assert_eq!(a.flare_status(id), Some(FlareStatus::Queued));
+    }
+
+    // --- Crash: take the state files as-is, no graceful shutdown.
+    copy_state(&dir_a, &dir_b);
+
+    // --- The "after" controller recovers from the copied wreckage.
+    let b = recover(1, 4, &dir_b);
+    let stats = b.recovery_stats();
+    assert_eq!(stats.terminal_restored, 1, "{stats:?}");
+    assert_eq!(stats.requeued, 4, "{stats:?}"); // gated + m1 + m2 + m3
+    assert_eq!(stats.lost_work, 0, "{stats:?}");
+    assert_eq!(stats.tenants_restored, 1, "{stats:?}");
+
+    // Terminal history intact, outputs and all.
+    let hist = b.db.get_flare(&term.flare_id).expect("terminal record survived");
+    assert_eq!(hist.status, FlareStatus::Completed);
+    assert_eq!(hist.outputs, vec![Json::Num(7.0), Json::Num(8.0)]);
+    assert!(hist.metadata.get("total_s").is_some(), "metadata survived");
+
+    // Tenant policy reinstated before anything was placed.
+    let acme = b
+        .tenant_policies()
+        .into_iter()
+        .find(|t| t.tenant == "acme")
+        .expect("acme lane recovered");
+    assert_eq!(acme.weight, 2.0);
+    assert_eq!(acme.quota, Some(4));
+
+    // The formerly-running flare was re-admitted first (original submit
+    // order); kill it in the recovered controller to let the queue drain.
+    let outcome = b.cancel_flare(&running.flare_id);
+    assert!(outcome.is_ok(), "recovered flare is cancellable: {outcome:?}");
+    assert!(wait_status(&b, &running.flare_id, FlareStatus::Cancelled));
+
+    // The queued flares run to completion in their original submit order
+    // (serial capacity ⇒ completion order == placement order). Snapshot
+    // the order before touching controller A again.
+    for id in &queued_ids {
+        assert!(wait_status(&b, id, FlareStatus::Completed), "flare {id}");
+    }
+    let order = completion_order.lock().unwrap().clone();
+    assert_eq!(order, vec!["m1", "m2", "m3"], "original submit order preserved");
+
+    // Original submit metadata survived the restart.
+    let rec = b.db.get_flare(&queued_ids[0]).unwrap();
+    assert_eq!(rec.tenant, "acme");
+    assert!(rec.submitted_unix_ms > 0);
+
+    // Controller A was never gracefully stopped; unblock it for cleanup.
+    let _ = a.cancel_flare(&running.flare_id);
+    assert!(wait_status(&a, &running.flare_id, FlareStatus::Cancelled));
+    drop(a);
+    drop(b);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn unregistered_work_fails_with_lost_at_restart_error() {
+    let dir = tmp_dir("lost-work");
+    register_work("recovery-noop", Arc::new(|_p, _ctx| Ok(Json::Null)));
+    // Craft the crash state directly through the store: one def whose work
+    // fn exists in this build, one whose does not, one queued flare each,
+    // plus a truncated WAL tail.
+    {
+        let store = DurableStore::open(&dir).unwrap();
+        store.append_def("okdef", "recovery-noop", &hetero(2)).unwrap();
+        store
+            .append_def("ghostdef", "recovery-work-that-never-existed", &hetero(2))
+            .unwrap();
+        let spec = |n: usize| {
+            Json::obj(vec![
+                ("params", Json::Arr(vec![Json::Null; n])),
+                ("granularity", n.into()),
+                ("strategy", "heterogeneous".into()),
+            ])
+        };
+        let mut ok = FlareRecord::queued("okdef-1", "okdef", "default", Priority::Normal);
+        ok.submit_seq = 1;
+        ok.spec = Some(spec(2));
+        store.append_flare(&ok.to_json()).unwrap();
+        let mut lost =
+            FlareRecord::queued("ghostdef-2", "ghostdef", "default", Priority::Normal);
+        lost.submit_seq = 2;
+        lost.spec = Some(spec(2));
+        store.append_flare(&lost.to_json()).unwrap();
+    }
+    {
+        use std::io::Write;
+        let mut f = fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("wal.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"op\":\"flare\",\"rec\":{\"flare_id\":\"cut-mid-li").unwrap();
+    }
+
+    let c = recover(1, 4, &dir);
+    let stats = c.recovery_stats();
+    assert_eq!(stats.requeued, 1, "{stats:?}");
+    assert_eq!(stats.lost_work, 1, "{stats:?}");
+    assert_eq!(stats.defs_restored, 1, "{stats:?}");
+    assert_eq!(stats.defs_unregistered, 1, "{stats:?}");
+    assert!(stats.skipped >= 1, "truncated tail counted: {stats:?}");
+
+    // The unregistered-work flare failed explicitly, with a clear error —
+    // not silently dropped, not left queued forever.
+    let lost = c.db.get_flare("ghostdef-2").unwrap();
+    assert_eq!(lost.status, FlareStatus::Failed);
+    let err = lost.error.as_deref().unwrap_or("");
+    assert!(err.contains("lost at restart"), "{err}");
+    assert!(err.contains("recovery-work-that-never-existed"), "{err}");
+
+    // The healthy flare runs to completion after recovery.
+    assert!(wait_status(&c, "okdef-1", FlareStatus::Completed));
+    drop(c);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deadline_overdue_during_downtime_expires_on_recovery() {
+    let dir = tmp_dir("deadline");
+    register_work("recovery-noop-dl", Arc::new(|_p, _ctx| Ok(Json::Null)));
+    {
+        let store = DurableStore::open(&dir).unwrap();
+        store.append_def("dl", "recovery-noop-dl", &hetero(2)).unwrap();
+        let mut rec = FlareRecord::queued("dl-1", "dl", "default", Priority::Normal);
+        rec.submit_seq = 1;
+        rec.deadline_ms = Some(50);
+        // Submitted long "before the crash": the deadline has lapsed by
+        // the time recovery replays it.
+        rec.submitted_unix_ms = rec.submitted_unix_ms.saturating_sub(60_000);
+        rec.spec = Some(Json::obj(vec![
+            ("params", Json::Arr(vec![Json::Null; 2])),
+            ("granularity", 2.into()),
+            ("strategy", "heterogeneous".into()),
+        ]));
+        store.append_flare(&rec.to_json()).unwrap();
+    }
+    let c = recover(1, 4, &dir);
+    assert_eq!(c.recovery_stats().requeued, 1);
+    // Re-admitted, then failed fast by the deadline pass — never placed.
+    assert!(wait_status(&c, "dl-1", FlareStatus::Expired));
+    assert_eq!(c.expirations(), 1);
+    drop(c);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restart_of_a_restart_keeps_history_stable() {
+    // Recovery must be idempotent: recover, crash again immediately,
+    // recover again — terminal history identical, nothing duplicated.
+    let dir1 = tmp_dir("double-1");
+    let dir2 = tmp_dir("double-2");
+    register_work("recovery-echo2", Arc::new(|p: &Json, _ctx| Ok(p.clone())));
+    let a = recover(1, 4, &dir1);
+    a.deploy("e", "recovery-echo2", hetero(2)).unwrap();
+    let done = a.flare("e", vec![Json::Num(1.0)], &FlareOptions::default()).unwrap();
+    drop(a);
+    copy_state(&dir1, &dir2);
+    let b = recover(1, 4, &dir2);
+    assert_eq!(b.recovery_stats().terminal_restored, 1);
+    // Submit ids keep ascending across the restart: no collision with the
+    // pre-crash flare.
+    let again = b.flare("e", vec![Json::Num(2.0)], &FlareOptions::default()).unwrap();
+    assert_ne!(again.flare_id, done.flare_id);
+    assert_eq!(b.db.get_flare(&done.flare_id).unwrap().outputs, vec![Json::Num(1.0)]);
+    assert_eq!(b.db.get_flare(&again.flare_id).unwrap().outputs, vec![Json::Num(2.0)]);
+    drop(b);
+    let _ = fs::remove_dir_all(&dir1);
+    let _ = fs::remove_dir_all(&dir2);
+}

@@ -668,3 +668,99 @@ fn queued_flare_past_deadline_expires() {
     ha.wait().unwrap();
     assert_eq!(c.pool.free_vcpus(), vec![4]);
 }
+
+/// Hard tenant quotas at the platform level: a tenant at its cap cannot
+/// place another flare even with plenty of free cluster capacity; the
+/// wait is observable (`wait_reason: quota_blocked`) and in `/metrics`
+/// terms the flare stays `queued`, not failed. Other tenants — including
+/// backfill-sized flares — are unaffected.
+#[test]
+fn tenant_at_quota_waits_despite_free_capacity() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-quota", Gate::work(&gate));
+    register_work("sched-noop-quota", noop());
+    // 2 invokers × 8 vCPUs: plenty of room beyond the quota.
+    let c = Controller::test_platform(2, 8, 1e-6);
+    c.deploy("gq", "sched-gate-quota", hetero()).unwrap();
+    c.deploy("nq", "sched-noop-quota", hetero()).unwrap();
+    c.set_tenant_quota("capped", Some(4));
+
+    // The capped tenant fills its quota with a gated flare...
+    let held = c
+        .submit_flare("gq", vec![Json::Null; 4], &opts_for("capped", "normal"))
+        .unwrap();
+    assert!(wait_status(&c, &held.flare_id, FlareStatus::Running));
+    // ...then a small flare of the same tenant must wait, with a reason,
+    // even though 12 vCPUs are free (backfill must not bypass the quota).
+    let blocked = c
+        .submit_flare("nq", vec![Json::Null; 2], &opts_for("capped", "normal"))
+        .unwrap();
+    assert!(wait_until(|| {
+        c.db.get_flare(&blocked.flare_id)
+            .is_some_and(|r| r.wait_reason.as_deref() == Some("quota_blocked"))
+    }));
+    assert_eq!(c.flare_status(&blocked.flare_id), Some(FlareStatus::Queued));
+    assert_eq!(c.quota_blocked_flares(), 1);
+
+    // Another tenant sails past the quota-blocked wait.
+    let free = c
+        .submit_flare("nq", vec![Json::Null; 4], &opts_for("other", "normal"))
+        .unwrap();
+    free.wait().unwrap();
+
+    // Releasing the held reservation frees the quota: the blocked flare
+    // runs and its wait reason is cleared.
+    let blocked_id = blocked.flare_id.clone();
+    gate.open();
+    held.wait().unwrap();
+    blocked.wait().unwrap();
+    let rec = c.db.get_flare(&blocked_id).unwrap();
+    assert_eq!(rec.status, FlareStatus::Completed);
+    assert_eq!(rec.wait_reason, None);
+    assert_eq!(c.quota_blocked_flares(), 0);
+    assert_eq!(c.pool.free_vcpus(), vec![8, 8]);
+}
+
+/// Raising (or clearing) a quota at runtime unblocks waiting flares on
+/// the next scheduler pass — the knob is live, not submit-time-only.
+#[test]
+fn raising_quota_unblocks_waiting_flares() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-gate-quota2", Gate::work(&gate));
+    register_work("sched-noop-quota2", noop());
+    let c = Controller::test_platform(2, 8, 1e-6);
+    c.deploy("gq2", "sched-gate-quota2", hetero()).unwrap();
+    c.deploy("nq2", "sched-noop-quota2", hetero()).unwrap();
+    c.set_tenant_quota("t", Some(4));
+
+    let held = c
+        .submit_flare("gq2", vec![Json::Null; 4], &opts_for("t", "normal"))
+        .unwrap();
+    assert!(wait_status(&c, &held.flare_id, FlareStatus::Running));
+    let blocked = c
+        .submit_flare("nq2", vec![Json::Null; 4], &opts_for("t", "normal"))
+        .unwrap();
+    assert!(wait_until(|| c.quota_blocked_flares() == 1));
+
+    // Double the cap: the waiter no longer exceeds it and completes while
+    // the first flare is *still* holding its original 4 vCPUs.
+    c.set_tenant_quota("t", Some(8));
+    blocked.wait().unwrap();
+    assert_eq!(c.flare_status(&held.flare_id), Some(FlareStatus::Running));
+
+    gate.open();
+    held.wait().unwrap();
+    // The policy is visible on the controller, usage drained to zero.
+    let t = c
+        .tenant_policies()
+        .into_iter()
+        .find(|p| p.tenant == "t")
+        .expect("lane exists");
+    assert_eq!(t.quota, Some(8));
+    assert!(wait_until(|| {
+        c.tenant_policies()
+            .into_iter()
+            .find(|p| p.tenant == "t")
+            .is_some_and(|p| p.placed_vcpus == 0)
+    }));
+}
