@@ -1,0 +1,137 @@
+//! Checkpoint/resume across a preemption: a PageRank-style iterative job
+//! is preempted mid-run by a high-priority flare and *resumes from its
+//! last per-worker checkpoint* instead of recomputing from scratch.
+//!
+//! Each worker runs `iters` refinement iterations and calls
+//! `BurstContext::checkpoint` after every one (iteration index + current
+//! rank). When the scheduler preempts the flare, the workers unwind at
+//! their next cooperative cancellation point, the platform keeps their
+//! latest checkpoints across the requeue, and the re-run's
+//! `BurstContext::restore` hands them back — so iterations completed
+//! before the preemption are never re-executed. `resume_count` in the
+//! flare's record counts the resumed runs.
+//!
+//! Run: `cargo run --release --example checkpointed_preemption`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use burstc::platform::{register_work, BurstConfig, Controller, FlareOptions};
+use burstc::util::json::Json;
+
+/// Iterations actually executed by the bulk flare (across all its runs).
+static BULK_ITERS_EXECUTED: AtomicU64 = AtomicU64::new(0);
+/// Highest iteration index any bulk worker restored from a checkpoint.
+static MAX_RESTORED_ITER: AtomicU64 = AtomicU64::new(0);
+
+fn opts(tenant: &str, priority: &str) -> FlareOptions {
+    FlareOptions {
+        tenant: Some(tenant.to_string()),
+        priority: Some(priority.to_string()),
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // PageRank-style worker: `iters` damped refinements of a rank value,
+    // ~`ms` of work each, checkpointing progress after every iteration.
+    register_work(
+        "ckpt-pagerank",
+        Arc::new(|p: &Json, ctx| {
+            let iters = p.num_or("iters", 10.0) as u64;
+            let ms = p.num_or("ms", 15.0) as u64;
+            let count = p.get("count").and_then(Json::as_bool).unwrap_or(false);
+            // Resume: 8 bytes little-endian iteration + 8 bytes rank.
+            let (start, mut rank) = match ctx.restore() {
+                Some(b) if b.len() == 16 => {
+                    let it = u64::from_le_bytes(b[..8].try_into().unwrap());
+                    let r = f64::from_le_bytes(b[8..].try_into().unwrap());
+                    if count {
+                        MAX_RESTORED_ITER.fetch_max(it, Ordering::Relaxed);
+                    }
+                    (it, r)
+                }
+                _ => (0, 1.0),
+            };
+            for it in start..iters {
+                // One iteration: sliced spinning with a cancellation point
+                // per slice, so a preempt unwinds within a millisecond.
+                let end = Instant::now() + Duration::from_millis(ms);
+                while Instant::now() < end {
+                    ctx.check_cancel()?;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                rank = 0.15 + 0.85 * rank * (1.0 - 1.0 / (it + 2) as f64);
+                if count {
+                    BULK_ITERS_EXECUTED.fetch_add(1, Ordering::Relaxed);
+                }
+                let mut state = Vec::with_capacity(16);
+                state.extend_from_slice(&(it + 1).to_le_bytes());
+                state.extend_from_slice(&rank.to_le_bytes());
+                ctx.checkpoint(state);
+            }
+            Ok(Json::Num(rank))
+        }),
+    );
+
+    // One invoker, four vCPUs: every 4-worker flare runs alone.
+    let controller = Controller::test_platform(1, 4, 1.0);
+    controller.deploy(
+        "ckpt",
+        "ckpt-pagerank",
+        BurstConfig { strategy: "heterogeneous".into(), ..Default::default() },
+    )?;
+
+    const ITERS: u64 = 10;
+    const WORKERS: usize = 4;
+    let bulk_params = vec![
+        Json::obj(vec![
+            ("iters", (ITERS as usize).into()),
+            ("ms", 15.into()),
+            ("count", true.into()),
+        ]);
+        WORKERS
+    ];
+    // The long bulk job starts and makes some checkpointed progress...
+    let bulk = controller.submit_flare("ckpt", bulk_params, &opts("bulk", "low"))?;
+    std::thread::sleep(Duration::from_millis(60));
+
+    // ...then an urgent flare preempts it mid-iteration.
+    let quick_params =
+        vec![Json::obj(vec![("iters", 1.into()), ("ms", 5.into())]); WORKERS];
+    let urgent = controller.submit_flare("ckpt", quick_params, &opts("urgent", "high"))?;
+    urgent.wait()?;
+
+    let bulk_id = bulk.flare_id.clone();
+    let r = bulk.wait()?;
+    let rec = controller.db.get_flare(&bulk_id).expect("record retained");
+    let executed = BULK_ITERS_EXECUTED.load(Ordering::Relaxed);
+    let restored = MAX_RESTORED_ITER.load(Ordering::Relaxed);
+    println!(
+        "bulk flare {bulk_id}: preempted {}x, resumed {}x, queue_wait={:.1}ms",
+        rec.preempt_count,
+        rec.resume_count,
+        r.queue_wait_s * 1e3
+    );
+    println!(
+        "iterations executed {executed} (a from-scratch re-run would need up to \
+         {}), deepest restore at iteration {restored}",
+        2 * ITERS * WORKERS as u64
+    );
+
+    assert!(rec.preempt_count >= 1, "the urgent flare should have preempted bulk");
+    assert!(rec.resume_count >= 1, "the re-run should have resumed from checkpoints");
+    assert!(controller.resumes() >= 1);
+    assert!(restored >= 1, "at least one worker restored mid-loop progress");
+    // Resume correctness: checkpointed iterations are never re-executed —
+    // at most the one in-flight iteration per worker repeats.
+    let cap = ITERS * WORKERS as u64 + WORKERS as u64 * (rec.preempt_count as u64);
+    assert!(
+        executed <= cap,
+        "executed {executed} iterations, cap {cap}: resume re-ran checkpointed work"
+    );
+    assert_eq!(controller.pool.free_vcpus(), vec![4], "capacity fully released");
+    println!("resumed_total={} — checkpointed resume verified", controller.resumes());
+    Ok(())
+}

@@ -22,12 +22,52 @@ use super::fabric::CommFabric;
 use super::mailbox::Bytes;
 use crate::util::cancel::{CancelReason, CancelToken};
 
+/// Platform-side checkpoint channel for one flare *run*, shared by every
+/// worker context of the burst. `prior` holds the checkpoints the previous
+/// run of this flare left behind (empty on a first run); `save` streams a
+/// fresh checkpoint into the platform's durable state (the burst DB and,
+/// when the controller runs with a state dir, the WAL).
+///
+/// This is what turns preemption and crash recovery into *resume*
+/// operations: a preempted or crash-lost flare re-runs with the previous
+/// run's checkpoints handed back through [`BurstContext::restore`],
+/// instead of recomputing from scratch.
+pub struct CheckpointChannel {
+    prior: HashMap<usize, Bytes>,
+    save: Box<dyn Fn(usize, Vec<u8>) + Send + Sync>,
+}
+
+impl CheckpointChannel {
+    /// A channel seeded with the previous run's checkpoints (by worker id)
+    /// and a platform sink for new ones.
+    pub fn new(
+        prior: HashMap<usize, Bytes>,
+        save: impl Fn(usize, Vec<u8>) + Send + Sync + 'static,
+    ) -> Arc<CheckpointChannel> {
+        Arc::new(CheckpointChannel { prior, save: Box::new(save) })
+    }
+
+    /// A channel with no prior state and a no-op sink: contexts built
+    /// outside the platform (unit tests, standalone fabrics) restore
+    /// nothing and drop checkpoints silently.
+    pub fn detached() -> Arc<CheckpointChannel> {
+        CheckpointChannel::new(HashMap::new(), |_, _| {})
+    }
+
+    /// How many workers have a prior checkpoint to restore.
+    pub fn prior_workers(&self) -> usize {
+        self.prior.len()
+    }
+}
+
 /// Per-worker burst context.
 pub struct BurstContext {
     pub worker_id: usize,
     fabric: Arc<CommFabric>,
     /// The flare's shared kill switch (cooperative cancellation points).
     cancel: CancelToken,
+    /// The flare run's checkpoint channel (detached outside the platform).
+    ckpt: Arc<CheckpointChannel>,
     /// Per-destination send counters (at-least-once bookkeeping, §4.5).
     send_ctrs: Mutex<HashMap<(Op, usize), u64>>,
     /// Per-source receive counters.
@@ -48,10 +88,21 @@ impl BurstContext {
         fabric: Arc<CommFabric>,
         cancel: CancelToken,
     ) -> BurstContext {
+        BurstContext::with_platform(worker_id, fabric, cancel, CheckpointChannel::detached())
+    }
+
+    /// The full platform wiring: cancellation token + checkpoint channel.
+    pub fn with_platform(
+        worker_id: usize,
+        fabric: Arc<CommFabric>,
+        cancel: CancelToken,
+        ckpt: Arc<CheckpointChannel>,
+    ) -> BurstContext {
         BurstContext {
             worker_id,
             fabric,
             cancel,
+            ckpt,
             send_ctrs: Mutex::new(HashMap::new()),
             recv_ctrs: Mutex::new(HashMap::new()),
             coll_ctr: AtomicU64::new(0),
@@ -83,6 +134,38 @@ impl BurstContext {
             None => Ok(()),
             Some(r) => Err(anyhow!("flare {}", r.name())),
         }
+    }
+
+    // --- checkpoint / resume (platform-side worker state) ---
+
+    /// Save this worker's progress with the platform. The latest
+    /// checkpoint survives a scheduler preemption (handed back on the
+    /// requeued run) and — when the controller runs with a durable state
+    /// dir — a process crash (handed back after `Controller::recover`).
+    /// Long `work` functions should checkpoint at natural boundaries
+    /// (e.g. once per iteration) so a preempt or restart resumes instead
+    /// of recomputing; outside the platform this is a silent no-op.
+    pub fn checkpoint(&self, state: Vec<u8>) {
+        (self.ckpt.save)(self.worker_id, state);
+    }
+
+    /// The latest checkpoint a *previous* run of this flare saved for this
+    /// worker, or `None` on a fresh (never preempted, never recovered)
+    /// run. Checkpoints written during the current run are not visible
+    /// here — `restore` answers "where did the last run leave off?".
+    pub fn restore(&self) -> Option<Bytes> {
+        self.ckpt.prior.get(&self.worker_id).cloned()
+    }
+
+    /// Blocking local-mailbox take wired to the flare's kill switch: a
+    /// worker parked in a collective unwinds at a cancel/preempt trip
+    /// instead of waiting out the full fabric timeout.
+    fn take_local(&self, key: &str) -> Result<Bytes> {
+        self.fabric.mailbox(self.worker_id).take_cancellable(
+            key,
+            self.fabric.config.timeout,
+            Some(&self.cancel),
+        )
     }
 
     // --- job context (paper §4.2) ---
@@ -176,9 +259,7 @@ impl BurstContext {
         }
         let t = &self.fabric.topology;
         if t.same_pack(self.worker_id, src) {
-            self.fabric
-                .mailbox(self.worker_id)
-                .take(&Self::local_key(op, src, ctr), self.fabric.config.timeout)
+            self.take_local(&Self::local_key(op, src, ctr))
         } else {
             let payload = self.fabric.remote_recv(
                 op,
@@ -222,7 +303,7 @@ impl BurstContext {
         }
 
         if my_pack == root_pack {
-            return self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout);
+            return self.take_local(&key);
         }
 
         // Remote pack: the leader reads once and fans out locally.
@@ -237,7 +318,7 @@ impl BurstContext {
             }
             Ok(data)
         } else {
-            self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout)
+            self.take_local(&key)
         }
     }
 
@@ -339,10 +420,7 @@ impl BurstContext {
         let mut out = Vec::with_capacity(n);
         for src in 0..n {
             if t.same_pack(self.worker_id, src) {
-                out.push(self.fabric.mailbox(self.worker_id).take(
-                    &Self::local_key(Op::AllToAll, src, ctr),
-                    self.fabric.config.timeout,
-                )?);
+                out.push(self.take_local(&Self::local_key(Op::AllToAll, src, ctr))?);
             } else {
                 let payload = self.fabric.remote_recv(
                     Op::AllToAll,
@@ -426,7 +504,7 @@ impl BurstContext {
             }
             Ok(data)
         } else {
-            self.fabric.mailbox(self.worker_id).take(&key, self.fabric.config.timeout)
+            self.take_local(&key)
         }
     }
 

@@ -4,7 +4,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -16,6 +16,13 @@ use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
 use crate::metrics::TrafficStats;
 use crate::util::bytes::MIB;
+use crate::util::cancel::CancelToken;
+
+/// Upper bound on one blocking backend wait inside a remote receive when a
+/// cancel token is wired in: the flare's kill/preempt trip has no way to
+/// wake a wait parked inside the backend, so remote waits run in bounded
+/// slices and re-check the token between them.
+const REMOTE_CANCEL_SLICE: Duration = Duration::from_millis(20);
 
 /// Fabric configuration.
 #[derive(Debug, Clone)]
@@ -27,11 +34,22 @@ pub struct FabricConfig {
     /// Max concurrent backend connections per pack ("shared connection
     /// pool", paper §4.5). Defaults to 2× pack size, capped.
     pub pool_cap: usize,
+    /// The flare's kill switch: when set, remote waits poll it between
+    /// bounded slices so a preempted or cancelled worker blocked in a
+    /// collective unwinds at the trip instead of waiting out `timeout`.
+    /// `None` (the default) keeps the plain single full-length blocking
+    /// wait — standalone fabrics pay no polling overhead.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for FabricConfig {
     fn default() -> Self {
-        FabricConfig { chunk_size: MIB, timeout: Duration::from_secs(60), pool_cap: 32 }
+        FabricConfig {
+            chunk_size: MIB,
+            timeout: Duration::from_secs(60),
+            pool_cap: 32,
+            cancel: None,
+        }
     }
 }
 
@@ -187,10 +205,57 @@ impl CommFabric {
         let dst_u32 = dst.map(|d| d as u32).unwrap_or(u32::MAX);
         let get = |key: &str| -> Result<Bytes> {
             self.traffic.record_backend_op();
-            let data = if consume {
-                self.backend.fetch(key, self.config.timeout)?
-            } else {
-                self.backend.read(key, self.config.timeout)?
+            let data = match &self.config.cancel {
+                // No kill switch wired in: one plain full-length blocking
+                // wait (standalone fabrics; zero polling overhead, hard
+                // backend errors propagate immediately).
+                None => {
+                    if consume {
+                        self.backend.fetch(key, self.config.timeout)?
+                    } else {
+                        self.backend.read(key, self.config.timeout)?
+                    }
+                }
+                // Platform run: the wait runs in bounded slices so the
+                // flare's cancel/preempt trip is observed at the trip, not
+                // after the full timeout (timed-out slices pay no modeled
+                // service cost).
+                Some(cancel) => {
+                    let deadline = Instant::now() + self.config.timeout;
+                    loop {
+                        let slice = deadline
+                            .saturating_duration_since(Instant::now())
+                            .min(REMOTE_CANCEL_SLICE);
+                        let asked = Instant::now();
+                        let got = if consume {
+                            self.backend.fetch(key, slice)
+                        } else {
+                            self.backend.read(key, slice)
+                        };
+                        match got {
+                            Ok(d) => break d,
+                            Err(e) => {
+                                if let Some(reason) = cancel.reason() {
+                                    return Err(anyhow!(
+                                        "remote wait for '{key}' aborted: flare {}",
+                                        reason.name()
+                                    ));
+                                }
+                                // A backend that errored well before the
+                                // slice lapsed failed *hard* (bad key,
+                                // connection refused, ...), it did not
+                                // time out: propagate instead of
+                                // retrying it for the rest of the
+                                // timeout.
+                                let failed_fast = asked.elapsed() < slice / 2
+                                    && slice >= Duration::from_millis(2);
+                                if failed_fast || Instant::now() >= deadline {
+                                    return Err(e);
+                                }
+                            }
+                        }
+                    }
+                }
             };
             self.traffic.record_remote_rx(data.len() as u64);
             Ok(data)

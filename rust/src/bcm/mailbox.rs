@@ -12,7 +12,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::util::cancel::CancelToken;
+
 pub type Bytes = Arc<Vec<u8>>;
+
+/// Upper bound on one condvar wait slice inside a cancellable take: a
+/// cancel/preempt trip has no condvar of its own, so blocked takers poll
+/// the token at least this often. Small enough that a preempted worker
+/// unwinds promptly; large enough to be invisible next to real waits.
+const CANCEL_POLL_SLICE: Duration = Duration::from_millis(20);
 
 /// One worker's inbox: keyed slots with blocking take.
 #[derive(Debug, Default)]
@@ -36,17 +44,41 @@ impl Mailbox {
 
     /// Blocking take: waits until `key` is present, then removes it.
     pub fn take(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.take_cancellable(key, timeout, None)
+    }
+
+    /// [`Mailbox::take`] that also unwinds when `cancel` trips: a worker
+    /// preempted or killed while blocked in a collective must release its
+    /// reservation at the trip, not after the full fabric timeout. The
+    /// token has no condvar, so the wait runs in bounded slices and polls
+    /// it — the unwind latency is one [`CANCEL_POLL_SLICE`], not `timeout`.
+    pub fn take_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
         let deadline = Instant::now() + timeout;
         let mut slots = self.slots.lock().unwrap();
         loop {
             if let Some(v) = slots.remove(key) {
                 return Ok(v);
             }
+            if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                return Err(anyhow!(
+                    "mailbox take of '{key}' aborted: flare {}",
+                    reason.name()
+                ));
+            }
             let now = Instant::now();
             if now >= deadline {
                 return Err(anyhow!("mailbox take timed out waiting for '{key}'"));
             }
-            let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+            let mut slice = deadline - now;
+            if cancel.is_some() {
+                slice = slice.min(CANCEL_POLL_SLICE);
+            }
+            let (guard, _t) = self.cv.wait_timeout(slots, slice).unwrap();
             slots = guard;
         }
     }
@@ -103,6 +135,40 @@ mod tests {
             m.take("src2/5", Duration::from_millis(10)).unwrap().as_ref(),
             &vec![2]
         );
+    }
+
+    #[test]
+    fn cancellable_take_unwinds_at_the_trip_not_the_timeout() {
+        let m = Mailbox::new();
+        let token = CancelToken::new();
+        let t2 = token.clone();
+        let tripper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.preempt();
+        });
+        let sw = Instant::now();
+        // A 60 s timeout, but the trip lands after ~30 ms: the take must
+        // return at the trip (plus at most one poll slice), naming it.
+        let err = m
+            .take_cancellable("never", Duration::from_secs(60), Some(&token))
+            .unwrap_err();
+        tripper.join().unwrap();
+        assert!(err.to_string().contains("preempted"), "{err}");
+        assert!(
+            sw.elapsed() < Duration::from_secs(5),
+            "unwind took {:?}, should be ~one poll slice past the trip",
+            sw.elapsed()
+        );
+    }
+
+    #[test]
+    fn cancellable_take_still_times_out_when_untripped() {
+        let m = Mailbox::new();
+        let token = CancelToken::new();
+        let err = m
+            .take_cancellable("never", Duration::from_millis(30), Some(&token))
+            .unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod mailbox;
 pub mod topology;
 
 pub use backend::{BackendKind, RemoteBackend};
-pub use context::BurstContext;
+pub use context::{BurstContext, CheckpointChannel};
 pub use fabric::{CommFabric, FabricConfig};
 pub use mailbox::Bytes;
 pub use topology::PackTopology;

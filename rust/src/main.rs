@@ -50,8 +50,13 @@ use burstc::util::json::Json;
 const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|tenants|apps|experiment> [options]
   serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
               [--http-workers 8] [--state-dir DIR]
+              [--fsync never|group|always]
               (--state-dir makes the control plane durable: WAL + snapshots
-               under DIR; a restart recovers flares and tenant policy)
+               under DIR; a restart recovers flares, tenant policy, and
+               worker checkpoints so interrupted flares resume. --fsync
+               picks power-loss durability: never = flush only, group =
+               at most one fdatasync per 10 ms [default], always = one
+               fdatasync per append)
   deploy      --addr HOST:PORT --name NAME --work WORK
               [--granularity N] [--strategy mixed] [--backend dragonfly]
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
@@ -129,11 +134,22 @@ fn serve(args: &Args) -> Result<()> {
                 NetParams::scaled(time_scale),
                 std::path::Path::new(dir),
             )?;
+            // Power-loss durability knob; group commit is the default
+            // (bounded loss window at amortized fsync cost).
+            let fsync = args.get_or("fsync", "group");
+            let policy = burstc::platform::FsyncPolicy::parse(fsync).ok_or_else(|| {
+                anyhow!("unknown --fsync '{fsync}' (expected never | group | always)")
+            })?;
+            c.set_fsync_policy(policy);
             let r = c.recovery_stats();
             println!(
-                "durable state dir: {dir} (recovered: {} terminal, {} requeued, \
-                 {} lost, {} tenants)",
-                r.terminal_restored, r.requeued, r.lost_work, r.tenants_restored
+                "durable state dir: {dir} (fsync={fsync}; recovered: {} terminal, \
+                 {} requeued, {} lost, {} tenants, {} checkpoints)",
+                r.terminal_restored,
+                r.requeued,
+                r.lost_work,
+                r.tenants_restored,
+                r.checkpoints_restored
             );
             c
         }

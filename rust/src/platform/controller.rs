@@ -42,8 +42,11 @@ use super::queue::{
     QueuedFlare, ResultSlot, SchedState, TenantPolicy, DEFAULT_TENANT,
     MAX_BACKFILL_PASSES,
 };
-use super::store::DurableStore;
-use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology, RemoteBackend};
+use super::store::{DurableStore, FsyncPolicy};
+use crate::bcm::{
+    BackendKind, Bytes, CheckpointChannel, CommFabric, FabricConfig, PackTopology,
+    RemoteBackend,
+};
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::ClusterSpec;
@@ -70,6 +73,9 @@ pub struct RecoveryStats {
     pub lost_work: u64,
     /// Tenant lanes whose weight/quota policy was reinstated.
     pub tenants_restored: u64,
+    /// Worker checkpoints re-seeded for re-admitted flares, so their
+    /// re-run resumes from saved progress instead of from scratch.
+    pub checkpoints_restored: u64,
     /// Burst definitions redeployed.
     pub defs_restored: u64,
     /// Definitions left dormant because their work fn is unregistered in
@@ -86,6 +92,7 @@ impl RecoveryStats {
             ("requeued", self.requeued.into()),
             ("lost_work", self.lost_work.into()),
             ("tenants_restored", self.tenants_restored.into()),
+            ("checkpoints_restored", self.checkpoints_restored.into()),
             ("defs_restored", self.defs_restored.into()),
             ("defs_unregistered", self.defs_unregistered.into()),
             ("skipped", self.skipped.into()),
@@ -255,6 +262,8 @@ pub struct Controller {
     /// Lifetime counters surfaced in `/metrics`.
     preempted_total: AtomicU64,
     expired_total: AtomicU64,
+    /// Runs that started with prior checkpoints to restore (resumes).
+    resumed_total: AtomicU64,
     /// Durable sink for tenant-policy appends (`BurstDb` holds its own
     /// reference for deploy/flare appends). `None` = in-memory only.
     store: Option<Arc<DurableStore>>,
@@ -313,6 +322,7 @@ impl Controller {
                 max_preempts: AtomicU32::new(DEFAULT_MAX_PREEMPTS),
                 preempted_total: AtomicU64::new(0),
                 expired_total: AtomicU64::new(0),
+                resumed_total: AtomicU64::new(0),
                 store,
                 recovery: Mutex::new(RecoveryStats::default()),
                 quota_marked: Mutex::new(HashSet::new()),
@@ -374,6 +384,19 @@ impl Controller {
             }
         }
 
+        // Group the persisted worker checkpoints by flare: re-admitted
+        // flares get them re-seeded so their re-run *resumes* (checkpoints
+        // of terminal or lost flares are dead state and simply dropped —
+        // `put_flare`'s terminal transition stages the WAL drop).
+        let mut ckpts_by_flare: HashMap<String, Vec<(usize, u64, Vec<u8>)>> =
+            HashMap::new();
+        for c in loaded.checkpoints {
+            ckpts_by_flare
+                .entry(c.flare_id)
+                .or_default()
+                .push((c.worker, c.epoch, c.data));
+        }
+
         // Flare records, oldest submission first.
         let mut records: Vec<FlareRecord> = Vec::new();
         for rec_json in &loaded.flares {
@@ -398,7 +421,20 @@ impl Controller {
                 Ok(job) => {
                     rec.status = FlareStatus::Queued;
                     rec.wait_reason = None;
+                    let flare_id = rec.flare_id.clone();
                     this.db.put_flare(rec);
+                    // Re-seed the previous process's worker checkpoints
+                    // (after `put_flare`: the record must be live) so the
+                    // re-run restores instead of recomputing. The epochs
+                    // ride along into the db table, where the placement
+                    // path picks up their max — run numbering ascends
+                    // across the restart.
+                    for (worker, epoch, data) in
+                        ckpts_by_flare.remove(&flare_id).unwrap_or_default()
+                    {
+                        this.db.put_checkpoint(&flare_id, worker, epoch, Arc::new(data));
+                        stats.checkpoints_restored += 1;
+                    }
                     this.cancels
                         .lock()
                         .unwrap()
@@ -415,6 +451,20 @@ impl Controller {
                 }
             }
         }
+        // Orphaned checkpoints — their flare is terminal, lost at restart,
+        // or unknown (e.g. a crash landed between a terminal transition
+        // and its drop entry): drop them now so snapshots do not carry
+        // dead worker state forever.
+        for flare_id in ckpts_by_flare.keys() {
+            if let Err(e) =
+                store.append_entry(DurableStore::entry_drop_checkpoints(flare_id))
+            {
+                eprintln!(
+                    "burstc: dropping orphaned checkpoints for '{flare_id}' failed: {e}"
+                );
+            }
+        }
+
         // Flare ids must keep ascending across restarts.
         let next = max_seq + 1;
         this.next_flare.fetch_max(next, Ordering::Relaxed);
@@ -501,12 +551,24 @@ impl Controller {
             preemptible,
             deadline,
             preempt_count: rec.preempt_count,
+            resume_count: rec.resume_count,
+            // The placement path derives the run epoch from the restored
+            // checkpoints' highest epoch (`checkpoints_for(..).epoch`).
+            ckpt_epoch: 0,
             charged: 0.0,
             slot: Arc::new(ResultSlot::new()),
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
             quota_blocked: false,
         })
+    }
+
+    /// Route the store's fsync policy knob (`serve --fsync=...`). A no-op
+    /// on a controller without a durable store.
+    pub fn set_fsync_policy(&self, policy: FsyncPolicy) {
+        if let Some(store) = &self.store {
+            store.set_fsync_policy(policy);
+        }
     }
 
     /// What recovery replayed (zeroes when the controller started fresh).
@@ -651,6 +713,8 @@ impl Controller {
             preemptible,
             deadline,
             preempt_count: 0,
+            resume_count: 0,
+            ckpt_epoch: 0,
             charged: 0.0,
             slot: slot.clone(),
             submitted: crate::util::timing::Stopwatch::start(),
@@ -837,6 +901,12 @@ impl Controller {
         self.expired_total.load(Ordering::Relaxed)
     }
 
+    /// Lifetime count of flare runs that *resumed* from prior worker
+    /// checkpoints (after a preemption or a crash recovery).
+    pub fn resumes(&self) -> u64 {
+        self.resumed_total.load(Ordering::Relaxed)
+    }
+
     /// Fail fast every queued flare whose deadline lapsed (scheduler pass):
     /// terminal [`FlareStatus::Expired`], waiter unblocked with an error.
     pub(crate) fn expire_overdue_queued(&self) {
@@ -927,7 +997,7 @@ impl Controller {
         let payload = Arc::new(Mutex::new(Some((job, packs))));
         let payload2 = payload.clone();
         let spawned = std::thread::Builder::new().name(name).spawn(move || {
-            let (job, packs) = payload2.lock().unwrap().take().expect("payload set");
+            let (mut job, packs) = payload2.lock().unwrap().take().expect("payload set");
             // Cancel raced the pop→spawn window: release untouched capacity
             // and finish as `Cancelled` without ever starting the packs.
             if job.cancel.is_cancelled() {
@@ -959,15 +1029,37 @@ impl Controller {
                     preempting: false,
                 },
             );
+            // Checkpoint/resume: hand back whatever the previous run (a
+            // preempted one, or the pre-crash process after recovery) left
+            // behind, and number this run's epoch past every restored one.
+            let prior_ckpts = c.db.checkpoints_for(&job.flare_id);
+            let resumed = !prior_ckpts.by_worker.is_empty();
+            if resumed {
+                job.resume_count += 1;
+                c.resumed_total.fetch_add(1, Ordering::Relaxed);
+            }
+            job.ckpt_epoch = job.ckpt_epoch.max(prior_ckpts.epoch) + 1;
+            let ckpt_channel = {
+                let cc = c.clone();
+                let flare_id = job.flare_id.clone();
+                let epoch = job.ckpt_epoch;
+                let prior: HashMap<usize, Bytes> =
+                    prior_ckpts.by_worker.into_iter().collect();
+                CheckpointChannel::new(prior, move |worker, bytes| {
+                    cc.db.put_checkpoint(&flare_id, worker, epoch, Arc::new(bytes));
+                })
+            };
             let queue_wait_s = job.submitted.secs();
+            let resume_count = job.resume_count;
             c.db.update_flare(&job.flare_id, |r| {
                 r.status = FlareStatus::Running;
                 r.wait_reason = None;
+                r.resume_count = resume_count;
             });
             // A panic must neither strand the waiter in `wait()` nor
             // leak the reservation (released by guard inside).
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                || c.execute_placed(&job, packs, queue_wait_s),
+                || c.execute_placed(&job, packs, queue_wait_s, &ckpt_channel),
             ))
             .unwrap_or_else(|_| {
                 let e = anyhow!("flare '{}' execution panicked", job.flare_id);
@@ -1105,6 +1197,7 @@ impl Controller {
         job: &QueuedFlare,
         packs: Vec<PackSpec>,
         queue_wait_s: f64,
+        ckpt: &Arc<CheckpointChannel>,
     ) -> Result<FlareResult> {
         // Release the reservation exactly once, even if something on this
         // thread panics mid-flare.
@@ -1143,7 +1236,13 @@ impl Controller {
             topo,
             self.backend(job.backend),
             &self.net,
-            FabricConfig { chunk_size: job.chunk_size, ..FabricConfig::default() },
+            FabricConfig {
+                chunk_size: job.chunk_size,
+                // Workers blocked inside a collective unwind at a
+                // cancel/preempt trip, not after the fabric timeout.
+                cancel: Some(job.cancel.clone()),
+                ..FabricConfig::default()
+            },
         );
 
         let timeline = Arc::new(Timeline::new());
@@ -1157,6 +1256,7 @@ impl Controller {
             &timeline,
             queue_wait_s,
             &job.cancel,
+            ckpt,
         );
         let work_wall_s = sw.secs();
         fabric.teardown();

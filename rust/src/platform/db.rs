@@ -10,14 +10,14 @@
 //! the oldest terminal ones are evicted, so a long-lived server does not
 //! leak memory. Queued and running records are never evicted.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use super::queue::Priority;
 use super::store::DurableStore;
-use crate::bcm::{BackendKind, BurstContext};
+use crate::bcm::{BackendKind, BurstContext, Bytes};
 use crate::util::json::Json;
 
 /// Milliseconds since the Unix epoch (wall clock — survives restarts,
@@ -168,6 +168,10 @@ pub struct FlareRecord {
     /// Times the scheduler preempted (and requeued) this flare to reclaim
     /// capacity for a higher-priority one.
     pub preempt_count: u32,
+    /// Times a run of this flare started with prior worker checkpoints
+    /// available — i.e. resumed from saved progress instead of from
+    /// scratch (after a preemption or a crash recovery).
+    pub resume_count: u32,
     /// Queueing deadline in milliseconds from submission, when one was set.
     pub deadline_ms: Option<u64>,
     pub outputs: Vec<Json>,
@@ -207,6 +211,7 @@ impl FlareRecord {
             priority,
             status: FlareStatus::Queued,
             preempt_count: 0,
+            resume_count: 0,
             deadline_ms: None,
             outputs: Vec::new(),
             metadata: Json::Null,
@@ -226,6 +231,7 @@ impl FlareRecord {
             ("priority", self.priority.name().into()),
             ("status", self.status.name().into()),
             ("preempt_count", (self.preempt_count as usize).into()),
+            ("resume_count", (self.resume_count as usize).into()),
             ("metadata", self.metadata.clone()),
             ("outputs", Json::Arr(self.outputs.clone())),
             ("submit_seq", self.submit_seq.into()),
@@ -273,6 +279,8 @@ impl FlareRecord {
             status,
             preempt_count: j.get("preempt_count").and_then(Json::as_usize).unwrap_or(0)
                 as u32,
+            resume_count: j.get("resume_count").and_then(Json::as_usize).unwrap_or(0)
+                as u32,
             deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
             outputs: j.get("outputs").and_then(Json::as_arr).unwrap_or(&[]).to_vec(),
             metadata: j.get("metadata").cloned().unwrap_or(Json::Null),
@@ -317,19 +325,51 @@ pub fn registered_work_names() -> Vec<String> {
     v
 }
 
+/// A flare's worker checkpoints: the latest payload per worker id, plus
+/// the highest run epoch that wrote any of them.
+#[derive(Debug, Clone, Default)]
+pub struct FlareCheckpoints {
+    /// Highest epoch observed across the payloads (runs are numbered
+    /// ascending across preempts *and* restarts).
+    pub epoch: u64,
+    /// Latest checkpoint per worker id.
+    pub by_worker: BTreeMap<usize, Bytes>,
+}
+
+impl FlareCheckpoints {
+    /// Total payload bytes across workers (status observability).
+    pub fn total_bytes(&self) -> usize {
+        self.by_worker.values().map(|b| b.len()).sum()
+    }
+}
+
 /// The platform database.
 pub struct BurstDb {
     defs: Mutex<HashMap<String, BurstDefinition>>,
     /// Records plus submission order (for `list_flares`, newest first).
     flares: Mutex<(HashMap<String, FlareRecord>, Vec<String>)>,
+    /// Worker checkpoints of live flares, by flare id (dropped when the
+    /// flare goes terminal). Lock order: `flares` → `ckpts`; never the
+    /// reverse.
+    ckpts: Mutex<HashMap<String, FlareCheckpoints>>,
     /// Retention cap on terminal records (oldest evicted first); live
     /// (queued/running) records never count against it.
     retain_terminal: usize,
     /// Optional durable sink: every deploy / flare mutation / retention
-    /// eviction appends a WAL entry (best-effort — an I/O failure is
-    /// logged, never blocks the control plane). Lock order is always
-    /// db lock → store lock.
+    /// eviction / checkpoint appends a WAL entry (best-effort — an I/O
+    /// failure is logged, never blocks the control plane).
+    ///
+    /// Appends do **not** run under the `flares` lock: mutations push
+    /// their entry onto `wal_queue` while holding it (cheap, preserves
+    /// mutation order) and the disk I/O happens in `drain_wal` after the
+    /// lock is released, so status reads never stall behind a WAL write
+    /// or a snapshot compaction.
     store: OnceLock<Arc<DurableStore>>,
+    /// Sequenced WAL entries awaiting append, in db-mutation order.
+    wal_queue: Mutex<VecDeque<Json>>,
+    /// Single-drainer gate: held across the pop→append loop so two
+    /// concurrent drains cannot reorder entries between queue and disk.
+    wal_drain: Mutex<()>,
 }
 
 impl Default for BurstDb {
@@ -348,8 +388,11 @@ impl BurstDb {
         BurstDb {
             defs: Mutex::new(HashMap::new()),
             flares: Mutex::new((HashMap::new(), Vec::new())),
+            ckpts: Mutex::new(HashMap::new()),
             retain_terminal,
             store: OnceLock::new(),
+            wal_queue: Mutex::new(VecDeque::new()),
+            wal_drain: Mutex::new(()),
         }
     }
 
@@ -366,11 +409,26 @@ impl BurstDb {
         self.store.get().is_some()
     }
 
-    /// Best-effort durability: a WAL I/O failure must degrade to
-    /// in-memory-only operation, never take the control plane down.
-    fn persist(&self, f: impl FnOnce(&DurableStore) -> Result<()>) {
-        if let Some(store) = self.store.get() {
-            if let Err(e) = f(store) {
+    /// Stage a WAL entry in mutation order. Called *under* the mutated
+    /// table's lock — the queue push is the only work done there; the
+    /// disk I/O happens in [`BurstDb::drain_wal`] once the lock is gone.
+    fn stage_entry(&self, entry: Json) {
+        if self.store.get().is_some() {
+            self.wal_queue.lock().unwrap().push_back(entry);
+        }
+    }
+
+    /// Append every staged entry to the durable store, preserving the
+    /// staging order. Called with no db lock held. Best-effort: a WAL I/O
+    /// failure degrades to in-memory-only operation, never takes the
+    /// control plane down.
+    fn drain_wal(&self) {
+        let Some(store) = self.store.get() else { return };
+        let _drainer = self.wal_drain.lock().unwrap();
+        loop {
+            let entry = self.wal_queue.lock().unwrap().pop_front();
+            let Some(entry) = entry else { return };
+            if let Err(e) = store.append_entry(entry) {
                 eprintln!("burstc: WAL append failed (state is in-memory only): {e}");
             }
         }
@@ -410,8 +468,16 @@ impl BurstDb {
     pub fn deploy(&self, def: BurstDefinition) -> Result<()> {
         // Validate at deploy time that the work function exists.
         lookup_work(&def.work_name)?;
-        self.persist(|s| s.append_def(&def.name, &def.work_name, &def.conf));
-        self.defs.lock().unwrap().insert(def.name.clone(), def);
+        {
+            // Stage under the defs lock (same invariant as flare
+            // mutations): concurrent re-deploys of one name must reach
+            // the WAL in the order their in-memory inserts won, or a
+            // restart would silently serve the loser's definition.
+            let mut defs = self.defs.lock().unwrap();
+            self.stage_entry(DurableStore::entry_def(&def.name, &def.work_name, &def.conf));
+            defs.insert(def.name.clone(), def);
+        }
+        self.drain_wal();
         Ok(())
     }
 
@@ -431,28 +497,33 @@ impl BurstDb {
     }
 
     pub fn put_flare(&self, rec: FlareRecord) {
-        let mut flares = self.flares.lock().unwrap();
-        let (map, order) = &mut *flares;
-        let mut rec = rec;
-        let terminal = rec.status.is_terminal();
-        if terminal {
-            // Terminal records are history: the resubmission spec and any
-            // wait reason are dead weight in memory and in the WAL.
-            rec.spec = None;
-            rec.wait_reason = None;
-        }
-        let id = rec.flare_id.clone();
-        let rec_json = rec.to_json();
-        if map.insert(id.clone(), rec).is_none() {
-            order.push(id);
-        }
-        self.persist(|s| s.append_flare(&rec_json));
-        if terminal {
-            let evicted = Self::evict_excess_terminal(map, order, self.retain_terminal);
-            for gone in &evicted {
-                self.persist(|s| s.append_drop_flare(gone));
+        {
+            let mut flares = self.flares.lock().unwrap();
+            let (map, order) = &mut *flares;
+            let mut rec = rec;
+            let terminal = rec.status.is_terminal();
+            if terminal {
+                // Terminal records are history: the resubmission spec and
+                // any wait reason are dead weight in memory and the WAL.
+                rec.spec = None;
+                rec.wait_reason = None;
+            }
+            let id = rec.flare_id.clone();
+            let rec_json = rec.to_json();
+            if map.insert(id.clone(), rec).is_none() {
+                order.push(id);
+            }
+            self.stage_entry(DurableStore::entry_flare(&rec_json));
+            if terminal {
+                self.drop_checkpoints_locked(&id);
+                let evicted =
+                    Self::evict_excess_terminal(map, order, self.retain_terminal);
+                for gone in &evicted {
+                    self.stage_entry(DurableStore::entry_drop_flare(gone));
+                }
             }
         }
+        self.drain_wal();
     }
 
     pub fn get_flare(&self, id: &str) -> Option<FlareRecord> {
@@ -464,41 +535,104 @@ impl BurstDb {
     /// id used to be a *silent* no-op, which let recovery and cancel races
     /// hide lost updates; now it reports `false` (and warns once).
     pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) -> bool {
-        let mut flares = self.flares.lock().unwrap();
-        let (map, order) = &mut *flares;
-        let mut became_terminal = false;
-        let mut rec_json = None;
-        if let Some(rec) = map.get_mut(id) {
-            f(rec);
-            became_terminal = rec.status.is_terminal();
+        {
+            let mut flares = self.flares.lock().unwrap();
+            let (map, order) = &mut *flares;
+            let mut became_terminal = false;
+            let mut rec_json = None;
+            if let Some(rec) = map.get_mut(id) {
+                f(rec);
+                became_terminal = rec.status.is_terminal();
+                if became_terminal {
+                    rec.spec = None;
+                    rec.wait_reason = None;
+                }
+                rec_json = Some(rec.to_json());
+            }
+            let Some(rec_json) = rec_json else {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "burstc: update_flare on unknown id '{id}' dropped \
+                         (first occurrence; later ones are silent)"
+                    );
+                });
+                return false;
+            };
+            self.stage_entry(DurableStore::entry_flare(&rec_json));
             if became_terminal {
-                rec.spec = None;
-                rec.wait_reason = None;
-            }
-            rec_json = Some(rec.to_json());
-        }
-        let Some(rec_json) = rec_json else {
-            static WARNED: std::sync::Once = std::sync::Once::new();
-            WARNED.call_once(|| {
-                eprintln!(
-                    "burstc: update_flare on unknown id '{id}' dropped \
-                     (first occurrence; later ones are silent)"
-                );
-            });
-            return false;
-        };
-        self.persist(|s| s.append_flare(&rec_json));
-        if became_terminal {
-            let evicted = Self::evict_excess_terminal(map, order, self.retain_terminal);
-            for gone in &evicted {
-                self.persist(|s| s.append_drop_flare(gone));
+                self.drop_checkpoints_locked(id);
+                let evicted =
+                    Self::evict_excess_terminal(map, order, self.retain_terminal);
+                for gone in &evicted {
+                    self.stage_entry(DurableStore::entry_drop_flare(gone));
+                }
             }
         }
+        self.drain_wal();
         true
     }
 
     pub fn set_flare_status(&self, id: &str, status: FlareStatus) -> bool {
         self.update_flare(id, |r| r.status = status)
+    }
+
+    // --- worker checkpoints (checkpoint/resume) ---
+
+    /// Store a worker's latest progress checkpoint for a *live* flare
+    /// (overwriting that worker's previous one) and stage the matching WAL
+    /// entry. `epoch` is the run number that wrote it. A checkpoint
+    /// arriving for a terminal or unknown flare is dropped — a straggler
+    /// worker unwinding after its flare was cancelled must not resurrect
+    /// state the terminal transition already discarded.
+    pub fn put_checkpoint(&self, flare_id: &str, worker: usize, epoch: u64, data: Bytes) {
+        // The WAL entry (base64 of the payload, O(bytes)) is a pure
+        // function of the arguments: build it before taking any lock, and
+        // only when a durable store can consume it — the flares-lock
+        // critical section must stay a pointer push, or checkpoints would
+        // reintroduce the status-read stall the staged queue removed.
+        let entry = self
+            .store
+            .get()
+            .is_some()
+            .then(|| DurableStore::entry_checkpoint(flare_id, worker, epoch, &data));
+        {
+            let flares = self.flares.lock().unwrap();
+            let live = flares
+                .0
+                .get(flare_id)
+                .is_some_and(|r| !r.status.is_terminal());
+            if !live {
+                return;
+            }
+            let mut ckpts = self.ckpts.lock().unwrap();
+            let slot = ckpts.entry(flare_id.to_string()).or_default();
+            slot.epoch = slot.epoch.max(epoch);
+            if let Some(entry) = entry {
+                self.stage_entry(entry);
+            }
+            slot.by_worker.insert(worker, data);
+        }
+        self.drain_wal();
+    }
+
+    /// The latest worker checkpoints of a flare (empty when it has none).
+    /// Payloads are `Arc`s, so this clones pointers, not data.
+    pub fn checkpoints_for(&self, flare_id: &str) -> FlareCheckpoints {
+        self.ckpts
+            .lock()
+            .unwrap()
+            .get(flare_id)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Drop a flare's checkpoints and stage the WAL drop entry. Called
+    /// with the `flares` lock held, on every terminal transition.
+    fn drop_checkpoints_locked(&self, flare_id: &str) {
+        if self.ckpts.lock().unwrap().remove(flare_id).is_some() {
+            self.stage_entry(DurableStore::entry_drop_checkpoints(flare_id));
+        }
     }
 
     /// Most recent `limit` flares, newest first, as `(flare_id, def_name,
@@ -633,6 +767,7 @@ mod tests {
         let mut rec = FlareRecord::queued("rt-1", "def-x", "acme", Priority::High);
         rec.status = FlareStatus::Failed;
         rec.preempt_count = 2;
+        rec.resume_count = 1;
         rec.deadline_ms = Some(1500);
         rec.outputs = vec![Json::Num(7.0), Json::Str("x".into())];
         rec.metadata = Json::obj(vec![("k", 1.into())]);
@@ -647,6 +782,7 @@ mod tests {
         assert_eq!(rt.priority, Priority::High);
         assert_eq!(rt.status, FlareStatus::Failed);
         assert_eq!(rt.preempt_count, 2);
+        assert_eq!(rt.resume_count, 1);
         assert_eq!(rt.deadline_ms, Some(1500));
         assert_eq!(rt.outputs, rec.outputs);
         assert_eq!(rt.metadata, rec.metadata);
@@ -707,6 +843,74 @@ mod tests {
         let summaries = db.list_flare_summaries(2);
         assert_eq!(summaries[0].1, "d");
         assert_eq!(summaries[0].2, FlareStatus::Queued);
+    }
+
+    #[test]
+    fn checkpoints_follow_the_flare_lifecycle() {
+        let db = BurstDb::new();
+        db.put_flare(queued("f1"));
+        assert!(db.checkpoints_for("f1").by_worker.is_empty());
+        db.put_checkpoint("f1", 0, 1, Arc::new(vec![1, 2, 3]));
+        db.put_checkpoint("f1", 3, 1, Arc::new(vec![9]));
+        // Overwrite per worker: the latest payload wins, epoch ratchets.
+        db.put_checkpoint("f1", 0, 2, Arc::new(vec![4, 5]));
+        let c = db.checkpoints_for("f1");
+        assert_eq!(c.epoch, 2);
+        assert_eq!(c.by_worker.len(), 2);
+        assert_eq!(c.by_worker[&0].as_ref(), &vec![4, 5]);
+        assert_eq!(c.by_worker[&3].as_ref(), &vec![9]);
+        assert_eq!(c.total_bytes(), 3);
+        // A terminal transition discards the flare's checkpoints...
+        db.set_flare_status("f1", FlareStatus::Completed);
+        assert!(db.checkpoints_for("f1").by_worker.is_empty());
+        // ...and a straggler checkpoint cannot resurrect them.
+        db.put_checkpoint("f1", 0, 2, Arc::new(vec![7]));
+        assert!(db.checkpoints_for("f1").by_worker.is_empty());
+        // Unknown flares take no checkpoints either.
+        db.put_checkpoint("ghost", 0, 1, Arc::new(vec![1]));
+        assert!(db.checkpoints_for("ghost").by_worker.is_empty());
+    }
+
+    #[test]
+    fn wal_final_state_matches_db_under_concurrent_mutation() {
+        // Mutations staged under the flares lock must reach the WAL in
+        // mutation order even though the disk appends happen outside the
+        // lock: after any concurrent interleaving, replaying the WAL must
+        // land on exactly the db's final record per id.
+        let dir = std::env::temp_dir().join(format!(
+            "burstc-db-walorder-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let db = Arc::new(BurstDb::new());
+        let store = Arc::new(DurableStore::open(&dir).unwrap());
+        db.attach_store(store.clone());
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let db = db.clone();
+                s.spawn(move || {
+                    for i in 0..20 {
+                        let id = format!("f{}", (t + i) % 5);
+                        if i % 3 == 0 {
+                            db.put_flare(queued(&id));
+                        } else {
+                            db.update_flare(&id, |r| {
+                                r.status = FlareStatus::Running;
+                                r.preempt_count = (t * 100 + i) as u32;
+                            });
+                        }
+                    }
+                });
+            }
+        });
+        drop(store);
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        for rec_json in &loaded.flares {
+            let id = rec_json.str_or("flare_id", "");
+            let want = db.get_flare(id).expect("db has id").to_json();
+            assert_eq!(rec_json, &want, "WAL diverged from db for {id}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

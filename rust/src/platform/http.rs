@@ -20,7 +20,10 @@
 //!   POST   /v1/flare        {"def", "params": [...], "options": {...}}   blocking
 //!   POST   /v1/flares       same body; 202 + flare id immediately (async)
 //!   GET    /v1/flares       recent flares with live status
-//!   GET    /v1/flares/`<id>`  live status + outputs of one flare
+//!   GET    /v1/flares/`<id>`  live status + outputs of one flare, with
+//!                           `preempt_count`/`resume_count` and — while
+//!                           worker checkpoints exist — a `checkpoint`
+//!                           summary (workers, bytes, epoch)
 //!   DELETE /v1/flares/`<id>`  cancel: 200 (queued: removed, running: token
 //!                           tripped), 404 unknown id, 409 already terminal
 //!   GET    /v1/defs
@@ -357,6 +360,7 @@ fn dispatch(
                     ("quota_blocked_flares", c.quota_blocked_flares().into()),
                     ("preempted_total", c.preemptions().into()),
                     ("expired_total", c.expirations().into()),
+                    ("resumed_total", c.resumes().into()),
                     ("deployed_defs", c.db.list_defs().len().into()),
                     ("recovery", c.recovery_stats().to_json()),
                 ]),
@@ -529,7 +533,26 @@ fn dispatch(
         ("GET", p) if p.starts_with("/v1/flares/") => {
             let id = &p["/v1/flares/".len()..];
             match c.db.get_flare(id) {
-                Some(rec) => Ok((200, rec.to_json())),
+                Some(rec) => {
+                    let mut j = rec.to_json();
+                    // Live worker-checkpoint summary: present only while
+                    // checkpoints exist (they are dropped when the flare
+                    // goes terminal).
+                    let ck = c.db.checkpoints_for(id);
+                    if !ck.by_worker.is_empty() {
+                        if let Json::Obj(m) = &mut j {
+                            m.insert(
+                                "checkpoint".into(),
+                                Json::obj(vec![
+                                    ("workers", ck.by_worker.len().into()),
+                                    ("bytes", ck.total_bytes().into()),
+                                    ("epoch", ck.epoch.into()),
+                                ]),
+                            );
+                        }
+                    }
+                    Ok((200, j))
+                }
                 None => Ok((404, err_json(format!("flare '{id}' not found")))),
             }
         }
@@ -628,6 +651,10 @@ mod tests {
         let id = r.get("flare_id").unwrap().as_str().unwrap();
         let rec = http_request(&addr, "GET", &format!("/v1/flares/{id}"), None).unwrap();
         assert_eq!(rec.str_or("status", ""), "completed");
+        // Never preempted or recovered: resume_count is 0, and a terminal
+        // flare holds no checkpoint summary.
+        assert_eq!(rec.get("resume_count").unwrap().as_usize(), Some(0));
+        assert!(rec.get("checkpoint").is_none(), "{rec}");
     }
 
     #[test]
@@ -974,7 +1001,9 @@ mod tests {
         let m = http_request(&addr, "GET", "/metrics", None).unwrap();
         let rec = m.get("recovery").unwrap();
         assert_eq!(rec.get("requeued").unwrap().as_usize(), Some(0));
+        assert_eq!(rec.get("checkpoints_restored").unwrap().as_usize(), Some(0));
         assert_eq!(m.get("quota_blocked_flares").unwrap().as_usize(), Some(0));
+        assert_eq!(m.get("resumed_total").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -38,11 +38,13 @@
 //!
 //! # Flare lifecycle
 //!
-//! The full state machine, including the preemption loop (PR 3): a
-//! starved `high` flare makes the scheduler preempt running
-//! lower-priority preemptible flares — their workers unwind at the next
-//! cancellation point and the flare goes *back to queued* (head of its
-//! lane, original submit time, `preempt_count + 1`), while a flare whose
+//! The full state machine, including the preemption loop (PR 3) and the
+//! checkpoint/resume path (PR 5): a starved `high` flare makes the
+//! scheduler preempt running lower-priority preemptible flares — their
+//! workers unwind at the next cancellation point (including *inside*
+//! blocked collectives, which trip instead of waiting out the fabric
+//! timeout) and the flare goes *back to queued* (head of its lane,
+//! original submit time, `preempt_count + 1`), while a flare whose
 //! `deadline_ms` lapses in the queue fails fast as `expired`:
 //!
 //! ```text
@@ -50,18 +52,22 @@
 //!                 │
 //!                 ▼                    deadline passed
 //!            ┌─ queued ──────────────────────────────────▶ expired
-//!            │    │  ▲ ▲
-//!  cancel_flare   │  │ │ preempted by scheduler
-//!            │  placed │ (reservation released,
-//!            │    │    │  preempt_count + 1)
-//!            │    ▼    │ │
+//!            │    │  ▲
+//!  cancel_flare   │  │ preempted by scheduler
+//!            │  placed (reservation released, preempt_count + 1,
+//!            │    │  │  worker checkpoints KEPT — the next run's
+//!            │    ▼  │  restore() resumes them, resume_count + 1)
 //!            │  running ──────────┬──────────▶ completed
-//!            │    │     │         └──────────▶ failed ◀── lost at restart
+//!            │    │               └──────────▶ failed ◀── lost at restart
 //!            │    │ cancel_flare  │                        (work fn gone)
 //!            │    │               │ ~~ crash ~~
 //!            ▼    ▼               ▼
 //!           cancelled      Controller::recover ── re-admitted (queued,
-//!                            (replay WAL+snapshot)  original submit order)
+//!                            (replay WAL+snapshot   original submit order,
+//!                             incl. checkpoints)    checkpoints re-seeded →
+//!                                                   the re-run resumes)
+//!
+//!     every terminal transition drops the flare's checkpoints
 //! ```
 //!
 //! `completed`, `failed`, `cancelled`, and `expired` are terminal; the
@@ -70,23 +76,41 @@
 //! flares submitted with `preemptible = false`, and always lost to a
 //! concurrent `cancel_flare` (terminal `Cancelled` beats the requeue).
 //!
+//! **Checkpoint/resume (PR 5).** `work` functions may call
+//! [`crate::bcm::BurstContext::checkpoint`] at natural boundaries (e.g.
+//! once per iteration); the latest per-worker payload lands in [`BurstDb`]
+//! and — with a state dir — in the WAL as its own entry kind, compacted
+//! into snapshots like flare records. The payloads survive the
+//! preempt-requeue cycle and a crash: the next run of the flare gets them
+//! back through [`crate::bcm::BurstContext::restore`], its record's
+//! `resume_count` is bumped (visible in `GET /v1/flares/<id>`, along with
+//! a live `checkpoint` summary while payloads exist), and a terminal
+//! transition discards them. Preemption and restart thus re-execute only
+//! the tail of the job past the last checkpoint — job-level operations
+//! stay cheap on long burst-parallel runs.
+//!
 //! # Durability and crash recovery
 //!
 //! With a state directory attached ([`Controller::recover`], CLI
-//! `serve --state-dir`), every deploy, flare mutation, and tenant-policy
-//! change appends to a write-ahead log with periodic compacted snapshots
-//! ([`store::DurableStore`]). After a crash — not a graceful shutdown;
-//! nothing is flushed at exit beyond the per-append flush — recovery
-//! replays snapshot ⊕ WAL: terminal flares are restored as history
-//! verbatim; flares that were `queued`/`running` are re-admitted at the
-//! head of their tenant lane in original submit order (original wall-clock
-//! submit time and remaining deadline preserved) or marked `failed` with a
-//! `lost at restart` error when their work function is no longer
-//! registered; tenant weights and hard vCPU quotas are reinstated before
-//! the scheduler's first placement pass. Quotas cap a tenant's
-//! *concurrently placed* vCPUs: an over-quota flare is admitted but waits
-//! with a `quota_blocked` reason in its record, without consuming backfill
-//! passes or skewing DRR deficits.
+//! `serve --state-dir`), every deploy, flare mutation, tenant-policy
+//! change, and worker checkpoint appends to a write-ahead log with
+//! periodic compacted snapshots ([`store::DurableStore`]). Appends are
+//! staged under the `BurstDb` lock but written *outside* it (a sequenced
+//! queue preserves mutation order), so status reads never stall behind
+//! disk I/O; the `serve --fsync={never,group,always}` knob selects
+//! power-loss durability ([`store::FsyncPolicy`], group commit by
+//! default). After a crash — not a graceful shutdown; nothing is flushed
+//! at exit beyond the per-append flush — recovery replays snapshot ⊕ WAL:
+//! terminal flares are restored as history verbatim; flares that were
+//! `queued`/`running` are re-admitted at the head of their tenant lane in
+//! original submit order (original wall-clock submit time and remaining
+//! deadline preserved) with their worker checkpoints re-seeded so the
+//! re-run resumes, or marked `failed` with a `lost at restart` error when
+//! their work function is no longer registered; tenant weights and hard
+//! vCPU quotas are reinstated before the scheduler's first placement
+//! pass. Quotas cap a tenant's *concurrently placed* vCPUs: an over-quota
+//! flare is admitted but waits with a `quota_blocked` reason in its
+//! record, without consuming backfill passes or skewing DRR deficits.
 //!
 //! Over HTTP: `POST /v1/flares` submits asynchronously (202 + flare id,
 //! with `options.tenant` / `options.priority` / `options.preemptible` /
@@ -110,8 +134,8 @@ pub use controller::{
     DEFAULT_MAX_PREEMPTS,
 };
 pub use db::{
-    register_work, BurstConfig, BurstDb, BurstDefinition, FlareRecord, FlareStatus,
-    WorkFn,
+    register_work, BurstConfig, BurstDb, BurstDefinition, FlareCheckpoints, FlareRecord,
+    FlareStatus, WorkFn,
 };
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
 pub use packing::{plan, PackSpec, PackingStrategy};
@@ -119,4 +143,4 @@ pub use queue::{
     place_with_spillback, select_victims, FlareHandle, FlareQueue, PreemptCandidate,
     Priority, TenantPolicy, DEFAULT_TENANT,
 };
-pub use store::{DurableStore, LoadedState};
+pub use store::{DurableStore, FsyncPolicy, LoadedCheckpoint, LoadedState};

@@ -9,7 +9,7 @@ use anyhow::{anyhow, Result};
 use super::db::WorkFn;
 use super::invoker::ModeledStartup;
 use super::packing::PackSpec;
-use crate::bcm::{BurstContext, CommFabric};
+use crate::bcm::{BurstContext, CheckpointChannel, CommFabric};
 use crate::metrics::{Phase, Timeline, TimelineEvent};
 use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
@@ -43,6 +43,14 @@ fn unwind_err(cancel: &CancelToken, when: &str) -> anyhow::Error {
 /// reservation is released — but the error names the reason, because the
 /// controller's disposition differs: a cancel is terminal, a preempt is
 /// followed by a requeue.
+///
+/// `ckpt` is the run's checkpoint channel: previous-run worker state is
+/// handed back through `BurstContext::restore`, and fresh
+/// `BurstContext::checkpoint` calls stream into the platform's durable
+/// state, so preempted or crash-recovered flares resume instead of
+/// recomputing (pass `CheckpointChannel::detached()` outside the
+/// platform).
+#[allow(clippy::too_many_arguments)]
 pub fn run_flare_packs(
     packs: &[PackSpec],
     fabric: &Arc<CommFabric>,
@@ -52,6 +60,7 @@ pub fn run_flare_packs(
     timeline: &Timeline,
     queue_wait_s: f64,
     cancel: &CancelToken,
+    ckpt: &Arc<CheckpointChannel>,
 ) -> Result<Vec<Json>> {
     let burst_size: usize = packs.iter().map(|p| p.workers.len()).sum();
     if params.len() != burst_size {
@@ -98,7 +107,12 @@ pub fn run_flare_packs(
                         if cancel.is_cancelled() {
                             return Err(unwind_err(cancel, "before work started"));
                         }
-                        let ctx = BurstContext::with_cancel(w, fabric, cancel.clone());
+                        let ctx = BurstContext::with_platform(
+                            w,
+                            fabric,
+                            cancel.clone(),
+                            ckpt.clone(),
+                        );
                         let sw = Stopwatch::start();
                         let out = work(param, &ctx);
                         timeline.record(TimelineEvent {
@@ -131,7 +145,7 @@ pub fn run_flare_packs(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bcm::{BackendKind, FabricConfig, PackTopology};
+    use crate::bcm::{BackendKind, CheckpointChannel, FabricConfig, PackTopology};
     use crate::cluster::costmodel::CostModel;
     use crate::cluster::netmodel::NetParams;
     use crate::platform::invoker::model_startup;
@@ -163,6 +177,11 @@ mod tests {
         CancelToken::new()
     }
 
+    /// A checkpoint channel with no prior state and a no-op sink.
+    fn ck() -> Arc<CheckpointChannel> {
+        CheckpointChannel::detached()
+    }
+
     #[test]
     fn runs_work_on_every_worker() {
         let (packs, fabric, startup) = setup(8, 3);
@@ -175,9 +194,10 @@ mod tests {
         });
         let params: Vec<Json> = (0..8).map(|i| Json::Num(i as f64)).collect();
         let timeline = Timeline::new();
-        let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
-                .unwrap();
+        let out = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none(), &ck(),
+        )
+        .unwrap();
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.get("w").unwrap().as_usize(), Some(i));
             assert_eq!(o.get("in").unwrap().as_f64(), Some(i as f64));
@@ -195,8 +215,10 @@ mod tests {
         let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
         let params = vec![Json::Null; 4];
         let timeline = Timeline::new();
-        run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 1.5, &none())
-            .unwrap();
+        run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 1.5, &none(), &ck(),
+        )
+        .unwrap();
         let queue = timeline.phase_durations(Phase::Queue);
         assert_eq!(queue.len(), 4);
         assert!(queue.iter().all(|&d| (d - 1.5).abs() < 1e-9));
@@ -221,9 +243,10 @@ mod tests {
         });
         let params = vec![Json::Null; 6];
         let timeline = Timeline::new();
-        let out =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
-                .unwrap();
+        let out = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none(), &ck(),
+        )
+        .unwrap();
         assert!(out.iter().all(|o| o.as_f64() == Some(64.0)));
     }
 
@@ -239,9 +262,10 @@ mod tests {
         });
         let params = vec![Json::Null; 4];
         let timeline = Timeline::new();
-        let err =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none())
-                .unwrap_err();
+        let err = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none(), &ck(),
+        )
+        .unwrap_err();
         assert!(err.to_string().contains("worker 2"), "{err}");
     }
 
@@ -258,9 +282,10 @@ mod tests {
         let timeline = Timeline::new();
         let cancel = CancelToken::new();
         cancel.cancel();
-        let err =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
-                .unwrap_err();
+        let err = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel, &ck(),
+        )
+        .unwrap_err();
         assert!(err.to_string().contains("cancelled"), "{err}");
         assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
@@ -278,9 +303,10 @@ mod tests {
         let timeline = Timeline::new();
         let cancel = CancelToken::new();
         cancel.preempt();
-        let err =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
-                .unwrap_err();
+        let err = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel, &ck(),
+        )
+        .unwrap_err();
         assert!(err.to_string().contains("preempted"), "{err}");
         assert!(!err.to_string().contains("cancelled"), "{err}");
         assert_eq!(ran.load(std::sync::atomic::Ordering::Relaxed), 0);
@@ -311,9 +337,10 @@ mod tests {
                 cancel.cancel();
             })
         };
-        let err =
-            run_flare_packs(&packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel)
-                .unwrap_err();
+        let err = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel, &ck(),
+        )
+        .unwrap_err();
         killer.join().unwrap();
         assert!(err.to_string().contains("cancelled"), "{err}");
     }
@@ -323,9 +350,113 @@ mod tests {
         let (packs, fabric, startup) = setup(4, 2);
         let work: WorkFn = Arc::new(|_, _| Ok(Json::Null));
         let timeline = Timeline::new();
+        assert!(run_flare_packs(
+            &packs, &fabric, &work, &[], &startup, &timeline, 0.0, &none(), &ck(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn checkpoint_channel_restores_prior_and_sinks_new_state() {
+        let (packs, fabric, startup) = setup(4, 2);
+        // Worker 2 has prior state from a "previous run"; everyone saves a
+        // fresh checkpoint naming their worker id.
+        let prior: std::collections::HashMap<usize, crate::bcm::Bytes> =
+            [(2usize, Arc::new(vec![42u8]))].into_iter().collect();
+        let saved: Arc<std::sync::Mutex<Vec<(usize, Vec<u8>)>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let saved2 = saved.clone();
+        let ckpt = CheckpointChannel::new(prior, move |w, bytes| {
+            saved2.lock().unwrap().push((w, bytes));
+        });
+        assert_eq!(ckpt.prior_workers(), 1);
+        let work: WorkFn = Arc::new(|_, ctx| {
+            let restored = ctx.restore().map(|b| b.as_ref().clone());
+            ctx.checkpoint(vec![ctx.worker_id as u8]);
+            Ok(Json::Num(restored.map_or(-1.0, |b| b[0] as f64)))
+        });
+        let params = vec![Json::Null; 4];
+        let timeline = Timeline::new();
+        let out = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &none(), &ckpt,
+        )
+        .unwrap();
+        // Only worker 2 had prior state to restore.
+        let restored: Vec<f64> = out.iter().map(|o| o.as_f64().unwrap()).collect();
+        assert_eq!(restored, vec![-1.0, -1.0, 42.0, -1.0]);
+        let mut got = saved.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(
+            got,
+            (0..4).map(|w| (w, vec![w as u8])).collect::<Vec<_>>(),
+            "every worker's checkpoint reached the sink"
+        );
+    }
+
+    /// Regression (ISSUE 5): a worker blocked *inside* a fabric collective
+    /// (here: `recv` on a peer that never sends) must unwind at the
+    /// preempt trip, not after the full `FabricConfig::timeout` (60 s by
+    /// default in production, set to 120 s here to make a timeout-based
+    /// unwind fail the test loudly).
+    #[test]
+    fn preempt_unwinds_worker_blocked_in_collective_promptly() {
+        // Granularity 2 over 3 workers: worker 1 blocks in a *local*
+        // mailbox wait and worker 2 (own pack) in a *remote* backend wait
+        // — both unwind paths are exercised.
+        let packs =
+            plan(PackingStrategy::Homogeneous { granularity: 2 }, 3, &[48]).unwrap();
+        let params_net = NetParams::scaled(1e-6);
+        let topo = PackTopology::new(
+            packs.iter().map(|p| p.workers.clone()).collect(),
+            packs.iter().map(|p| p.invoker_id).collect(),
+        );
+        let cancel = CancelToken::new();
+        let fabric = CommFabric::new(
+            "stuck",
+            topo,
+            BackendKind::DragonflyList.build(&params_net),
+            &params_net,
+            FabricConfig {
+                timeout: std::time::Duration::from_secs(120),
+                cancel: Some(cancel.clone()),
+                ..FabricConfig::default()
+            },
+        );
+        let mut rng = Pcg::new(7);
+        let startup = model_startup(&packs, &CostModel::default(), false, &mut rng);
+        // Worker 0 never sends; 1 and 2 park in a blocking recv(0).
+        let work: WorkFn = Arc::new(|_, ctx| {
+            if ctx.worker_id == 0 {
+                // Park cooperatively so the flare owns the unwind timing.
+                while !ctx.cancelled() {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                ctx.check_cancel()?;
+            }
+            let got = ctx.recv(0)?;
+            Ok(Json::Num(got.len() as f64))
+        });
+        let killer = {
+            let cancel = cancel.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+                cancel.preempt();
+            })
+        };
+        let params = vec![Json::Null; 3];
+        let timeline = Timeline::new();
+        let sw = std::time::Instant::now();
+        let err = run_flare_packs(
+            &packs, &fabric, &work, &params, &startup, &timeline, 0.0, &cancel, &ck(),
+        )
+        .unwrap_err();
+        killer.join().unwrap();
+        assert!(err.to_string().contains("preempted"), "{err}");
         assert!(
-            run_flare_packs(&packs, &fabric, &work, &[], &startup, &timeline, 0.0, &none())
-                .is_err()
+            sw.elapsed() < std::time::Duration::from_secs(10),
+            "blocked-in-recv workers took {:?} to unwind — they must trip \
+             at the preempt, not the fabric timeout",
+            sw.elapsed()
         );
     }
 }

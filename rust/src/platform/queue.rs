@@ -136,6 +136,15 @@ pub struct QueuedFlare {
     /// Times this flare has been preempted and requeued (the livelock
     /// guard: at the policy cap it stops being selectable as a victim).
     pub preempt_count: u32,
+    /// Times a run of this flare started with prior worker checkpoints to
+    /// restore (mirrors `FlareRecord::resume_count`).
+    pub resume_count: u32,
+    /// Checkpoint run epoch: bumped at each placement, so checkpoints are
+    /// stamped with the run that wrote them. A requeued victim carries its
+    /// epoch through the queue, and recovery seeds it from the restored
+    /// checkpoints' highest epoch — epochs ascend across preempts *and*
+    /// restarts.
+    pub ckpt_epoch: u64,
     /// Provisional deficit charged to the lane at placement; settled to
     /// measured vCPU·seconds when the reservation is released.
     pub charged: f64,
@@ -873,6 +882,8 @@ mod tests {
             preemptible: true,
             deadline: None,
             preempt_count: 0,
+            resume_count: 0,
+            ckpt_epoch: 0,
             charged: 0.0,
             slot: Arc::new(ResultSlot::new()),
             submitted: Stopwatch::start(),

@@ -17,6 +17,10 @@
 //!   - `{"op":"flare","rec":{...full flare record...}}`
 //!   - `{"op":"drop_flare","flare_id":"..."}` (retention eviction)
 //!   - `{"op":"tenant","tenant":"...","weight":W,"quota":Q?}`
+//!   - `{"op":"checkpoint","flare_id":"...","worker":N,"epoch":E,
+//!     "data":"base64"}` (a worker's latest progress checkpoint; overwrite
+//!     by `(flare_id, worker)`, so replay keeps only the newest)
+//!   - `{"op":"drop_checkpoints","flare_id":"..."}` (flare went terminal)
 //! * `snapshot.json` — the full compacted state, written atomically
 //!   (tmp-file + rename) whenever the WAL exceeds
 //!   [`DEFAULT_SNAPSHOT_THRESHOLD`] entries, after which the WAL is
@@ -29,8 +33,17 @@
 //! the snapshot. Both are harmless: unparseable lines are *skipped, not
 //! fatal* (counted in [`LoadedState::skipped_lines`]), and replaying an
 //! entry over the state that already contains it is idempotent — every
-//! `flare` entry carries the full record, so replay is a plain overwrite
-//! by id, never a delta.
+//! `flare` entry carries the full record and every `checkpoint` entry the
+//! full payload, so replay is a plain overwrite by id, never a delta.
+//!
+//! # Durability levels ([`FsyncPolicy`])
+//!
+//! Appends always `flush` (the line reaches the kernel before the mutation
+//! is acknowledged — an application crash loses nothing). Whether the
+//! kernel's page cache reaches the *disk* is the fsync policy: `Never`
+//! (crash-consistent, not power-loss-proof), `Group` (at most one
+//! `fdatasync` per interval — the power-loss window is bounded by the
+//! interval at amortized cost), or `Always` (fdatasync per append).
 //!
 //! The store also maintains the materialized state in memory (applied on
 //! every append), so writing a snapshot never has to consult — or lock —
@@ -41,18 +54,61 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::db::BurstConfig;
+use crate::util::bytes::{from_base64, to_base64};
 use crate::util::json::Json;
 
 /// WAL entries accumulated before the state is compacted into a snapshot
 /// and the log truncated.
 pub const DEFAULT_SNAPSHOT_THRESHOLD: usize = 1024;
 
+/// Default `Group` fsync interval: at most one `fdatasync` per this span.
+pub const DEFAULT_GROUP_COMMIT_INTERVAL: Duration = Duration::from_millis(10);
+
 const WAL_FILE: &str = "wal.jsonl";
 const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// When (if ever) WAL appends reach the disk platter, not just the kernel
+/// page cache (see the module docs' durability-levels section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Flush only. Survives an application crash; a power loss may drop
+    /// the newest appends. (The historical behavior, and the default.)
+    Never,
+    /// Group commit: `fdatasync` at most once per interval, piggybacked on
+    /// whichever append crosses it. Power-loss window ≤ the interval.
+    Group(Duration),
+    /// `fdatasync` every append: power-loss-proof, one disk flush per
+    /// control-plane mutation.
+    Always,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI knob: `never` | `group` | `always`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        Some(match s {
+            "never" => FsyncPolicy::Never,
+            "group" => FsyncPolicy::Group(DEFAULT_GROUP_COMMIT_INTERVAL),
+            "always" => FsyncPolicy::Always,
+            _ => return None,
+        })
+    }
+}
+
+/// One worker's durable checkpoint as recovered from disk.
+#[derive(Debug, Clone)]
+pub struct LoadedCheckpoint {
+    pub flare_id: String,
+    pub worker: usize,
+    /// Which run of the flare wrote it (ascending across preempts and
+    /// restarts).
+    pub epoch: u64,
+    pub data: Vec<u8>,
+}
 
 /// The state recovered from disk at [`DurableStore::open`] time: the input
 /// to `Controller::recover`'s replay.
@@ -64,6 +120,8 @@ pub struct LoadedState {
     pub flares: Vec<Json>,
     /// Per-tenant policy: `(tenant, weight, hard vCPU quota)`.
     pub tenants: Vec<(String, f64, Option<usize>)>,
+    /// Worker checkpoints of flares that were alive at crash time.
+    pub checkpoints: Vec<LoadedCheckpoint>,
     /// Corrupt or truncated WAL lines that were skipped during the load
     /// (a crash mid-append leaves at most one).
     pub skipped_lines: usize,
@@ -78,7 +136,12 @@ struct Inner {
     /// Insertion (submission) order of `flares` keys.
     flare_order: Vec<String>,
     tenants: BTreeMap<String, (f64, Option<usize>)>,
+    /// Latest checkpoint per `(flare, worker)`: `(epoch, base64 payload)`.
+    checkpoints: BTreeMap<String, BTreeMap<usize, (u64, String)>>,
     skipped_lines: usize,
+    fsync: FsyncPolicy,
+    last_fsync: Instant,
+    fsyncs: u64,
 }
 
 impl Inner {
@@ -123,6 +186,30 @@ impl Inner {
                 self.tenants.insert(t.to_string(), (weight, quota));
                 true
             }
+            "checkpoint" => {
+                let Some(id) = entry.get("flare_id").and_then(Json::as_str) else {
+                    return false;
+                };
+                let Some(worker) = entry.get("worker").and_then(Json::as_usize) else {
+                    return false;
+                };
+                let Some(data) = entry.get("data").and_then(Json::as_str) else {
+                    return false;
+                };
+                let epoch = entry.get("epoch").and_then(Json::as_u64).unwrap_or(0);
+                self.checkpoints
+                    .entry(id.to_string())
+                    .or_default()
+                    .insert(worker, (epoch, data.to_string()));
+                true
+            }
+            "drop_checkpoints" => {
+                let Some(id) = entry.get("flare_id").and_then(Json::as_str) else {
+                    return false;
+                };
+                self.checkpoints.remove(id);
+                true
+            }
             _ => false,
         }
     }
@@ -152,6 +239,8 @@ impl DurableStore {
         let mut flares = BTreeMap::new();
         let mut flare_order = Vec::new();
         let mut tenants = BTreeMap::new();
+        let mut checkpoints: BTreeMap<String, BTreeMap<usize, (u64, String)>> =
+            BTreeMap::new();
         let mut skipped = 0usize;
 
         // Snapshot first (written atomically, so either absent or whole —
@@ -182,6 +271,22 @@ impl DurableStore {
                                     policy.get("quota").and_then(Json::as_usize),
                                 ),
                             );
+                        }
+                    }
+                    if let Some(cs) = snap.get("checkpoints").and_then(Json::as_obj) {
+                        for (flare_id, by_worker) in cs {
+                            let Some(workers) = by_worker.as_obj() else { continue };
+                            let entry = checkpoints.entry(flare_id.clone()).or_default();
+                            for (worker, ckpt) in workers {
+                                let Ok(w) = worker.parse::<usize>() else { continue };
+                                let Some(data) = ckpt.get("data").and_then(Json::as_str)
+                                else {
+                                    continue;
+                                };
+                                let epoch =
+                                    ckpt.get("epoch").and_then(Json::as_u64).unwrap_or(0);
+                                entry.insert(w, (epoch, data.to_string()));
+                            }
                         }
                     }
                 }
@@ -227,7 +332,11 @@ impl DurableStore {
             flares,
             flare_order,
             tenants,
+            checkpoints,
             skipped_lines: skipped,
+            fsync: FsyncPolicy::Never,
+            last_fsync: Instant::now(),
+            fsyncs: 0,
         };
         for line in &lines {
             let line = line.trim();
@@ -253,6 +362,21 @@ impl DurableStore {
     /// left on disk — the input to `Controller::recover`'s replay.
     pub fn loaded(&self) -> LoadedState {
         let inner = self.inner.lock().unwrap();
+        let mut checkpoints = Vec::new();
+        let mut bad_payloads = 0usize;
+        for (flare_id, by_worker) in &inner.checkpoints {
+            for (&worker, (epoch, b64)) in by_worker {
+                match from_base64(b64) {
+                    Some(data) => checkpoints.push(LoadedCheckpoint {
+                        flare_id: flare_id.clone(),
+                        worker,
+                        epoch: *epoch,
+                        data,
+                    }),
+                    None => bad_payloads += 1,
+                }
+            }
+        }
         LoadedState {
             defs: inner.defs.values().cloned().collect(),
             flares: inner
@@ -265,7 +389,8 @@ impl DurableStore {
                 .iter()
                 .map(|(k, (w, q))| (k.clone(), *w, *q))
                 .collect(),
-            skipped_lines: inner.skipped_lines,
+            checkpoints,
+            skipped_lines: inner.skipped_lines + bad_payloads,
         }
     }
 
@@ -274,9 +399,26 @@ impl DurableStore {
         self.inner.lock().unwrap().wal_entries
     }
 
-    /// Append a deployed burst definition.
-    pub fn append_def(&self, name: &str, work: &str, conf: &BurstConfig) -> Result<()> {
-        self.append(Json::obj(vec![
+    /// Set when appends reach the disk (default: [`FsyncPolicy::Never`],
+    /// the historical flush-only behavior).
+    pub fn set_fsync_policy(&self, policy: FsyncPolicy) {
+        self.inner.lock().unwrap().fsync = policy;
+    }
+
+    /// Lifetime count of WAL `fdatasync` calls (observability / tests).
+    pub fn fsyncs(&self) -> u64 {
+        self.inner.lock().unwrap().fsyncs
+    }
+
+    // --- WAL entry constructors ---
+    //
+    // `BurstDb` builds entries under its own lock and appends them later
+    // (its sequenced out-of-lock queue), so the entry shapes are public
+    // constructors rather than being inlined in the `append_*` helpers.
+
+    /// `deploy` entry for a burst definition.
+    pub fn entry_def(name: &str, work: &str, conf: &BurstConfig) -> Json {
+        Json::obj(vec![
             ("op", "deploy".into()),
             (
                 "def",
@@ -286,23 +428,56 @@ impl DurableStore {
                     ("conf", conf.to_json()),
                 ]),
             ),
-        ]))
+        ])
     }
 
-    /// Append a full flare record (`FlareRecord::to_json`). Replay is an
-    /// overwrite by id, so appending the whole record on every mutation
-    /// keeps recovery delta-free.
-    pub fn append_flare(&self, rec: &Json) -> Result<()> {
-        self.append(Json::obj(vec![("op", "flare".into()), ("rec", rec.clone())]))
+    /// `flare` entry carrying a full record (`FlareRecord::to_json`).
+    /// Replay is an overwrite by id, so appending the whole record on
+    /// every mutation keeps recovery delta-free.
+    pub fn entry_flare(rec: &Json) -> Json {
+        Json::obj(vec![("op", "flare".into()), ("rec", rec.clone())])
     }
 
-    /// Append a retention eviction, so terminal records evicted from the
-    /// in-memory db do not resurrect at the next recovery.
-    pub fn append_drop_flare(&self, flare_id: &str) -> Result<()> {
-        self.append(Json::obj(vec![
-            ("op", "drop_flare".into()),
+    /// `drop_flare` entry (retention eviction), so terminal records
+    /// evicted from the in-memory db do not resurrect at the next
+    /// recovery.
+    pub fn entry_drop_flare(flare_id: &str) -> Json {
+        Json::obj(vec![("op", "drop_flare".into()), ("flare_id", flare_id.into())])
+    }
+
+    /// `checkpoint` entry: one worker's latest progress (base64 payload).
+    pub fn entry_checkpoint(flare_id: &str, worker: usize, epoch: u64, data: &[u8]) -> Json {
+        Json::obj(vec![
+            ("op", "checkpoint".into()),
             ("flare_id", flare_id.into()),
-        ]))
+            ("worker", worker.into()),
+            ("epoch", epoch.into()),
+            ("data", Json::Str(to_base64(data))),
+        ])
+    }
+
+    /// `drop_checkpoints` entry: the flare went terminal, its worker state
+    /// is dead weight.
+    pub fn entry_drop_checkpoints(flare_id: &str) -> Json {
+        Json::obj(vec![
+            ("op", "drop_checkpoints".into()),
+            ("flare_id", flare_id.into()),
+        ])
+    }
+
+    /// Append a deployed burst definition.
+    pub fn append_def(&self, name: &str, work: &str, conf: &BurstConfig) -> Result<()> {
+        self.append(Self::entry_def(name, work, conf))
+    }
+
+    /// Append a full flare record (see [`DurableStore::entry_flare`]).
+    pub fn append_flare(&self, rec: &Json) -> Result<()> {
+        self.append(Self::entry_flare(rec))
+    }
+
+    /// Append a retention eviction (see [`DurableStore::entry_drop_flare`]).
+    pub fn append_drop_flare(&self, flare_id: &str) -> Result<()> {
+        self.append(Self::entry_drop_flare(flare_id))
     }
 
     /// Append a tenant's scheduling policy (fair-share weight + quota).
@@ -318,10 +493,15 @@ impl DurableStore {
         self.append(Json::obj(fields))
     }
 
+    /// Append a pre-built WAL entry (one of the `entry_*` shapes).
+    pub fn append_entry(&self, entry: Json) -> Result<()> {
+        self.append(entry)
+    }
+
     /// Append one entry: applied to the materialized state, written as one
     /// flushed WAL line (the JSON writer escapes newlines, so an entry is
-    /// always exactly one line), then compacted if the log grew past the
-    /// threshold.
+    /// always exactly one line), fsynced per the policy, then compacted if
+    /// the log grew past the threshold.
     fn append(&self, entry: Json) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
         if !inner.apply(&entry) {
@@ -331,6 +511,20 @@ impl DurableStore {
         line.push('\n');
         inner.wal.write_all(line.as_bytes())?;
         inner.wal.flush()?;
+        match inner.fsync {
+            FsyncPolicy::Never => {}
+            FsyncPolicy::Always => {
+                inner.wal.sync_data()?;
+                inner.fsyncs += 1;
+            }
+            FsyncPolicy::Group(interval) => {
+                if inner.last_fsync.elapsed() >= interval {
+                    inner.wal.sync_data()?;
+                    inner.fsyncs += 1;
+                    inner.last_fsync = Instant::now();
+                }
+            }
+        }
         inner.wal_entries += 1;
         if inner.wal_entries >= self.snapshot_threshold {
             self.snapshot_locked(&mut inner)?;
@@ -366,10 +560,36 @@ impl DurableStore {
                 })
                 .collect(),
         );
+        let checkpoints = Json::Obj(
+            inner
+                .checkpoints
+                .iter()
+                .map(|(flare_id, by_worker)| {
+                    (
+                        flare_id.clone(),
+                        Json::Obj(
+                            by_worker
+                                .iter()
+                                .map(|(w, (epoch, data))| {
+                                    (
+                                        w.to_string(),
+                                        Json::obj(vec![
+                                            ("epoch", (*epoch).into()),
+                                            ("data", Json::Str(data.clone())),
+                                        ]),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
         let snap = Json::obj(vec![
             ("defs", Json::Arr(defs)),
             ("flares", Json::Arr(flares)),
             ("tenants", tenants),
+            ("checkpoints", checkpoints),
         ]);
         // Atomic replace: a crash leaves either the old or the new
         // snapshot, never a half-written one.
@@ -520,7 +740,101 @@ mod tests {
         let s = DurableStore::open(&dir).unwrap();
         assert!(s.append(Json::obj(vec![("op", "bogus".into())])).is_err());
         assert!(s.append(Json::obj(vec![("op", "flare".into())])).is_err());
+        assert!(s
+            .append(Json::obj(vec![("op", "checkpoint".into())]))
+            .is_err());
         assert_eq!(s.wal_entries(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_entries_roundtrip_overwrite_and_drop() {
+        let dir = tmp_dir("ckpt");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_flare(&rec("f1")).unwrap();
+            s.append_entry(DurableStore::entry_checkpoint("f1", 0, 1, b"iter-3"))
+                .unwrap();
+            s.append_entry(DurableStore::entry_checkpoint("f1", 1, 1, &[0, 255, 7]))
+                .unwrap();
+            // Overwrite by (flare, worker): replay keeps the newest only.
+            s.append_entry(DurableStore::entry_checkpoint("f1", 0, 2, b"iter-5"))
+                .unwrap();
+            s.append_flare(&rec("f2")).unwrap();
+            s.append_entry(DurableStore::entry_checkpoint("f2", 0, 1, b"gone"))
+                .unwrap();
+            s.append_entry(DurableStore::entry_drop_checkpoints("f2")).unwrap();
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        let mut got: Vec<(String, usize, u64, Vec<u8>)> = loaded
+            .checkpoints
+            .iter()
+            .map(|c| (c.flare_id.clone(), c.worker, c.epoch, c.data.clone()))
+            .collect();
+        got.sort();
+        assert_eq!(
+            got,
+            vec![
+                ("f1".to_string(), 0, 2, b"iter-5".to_vec()),
+                ("f1".to_string(), 1, 1, vec![0, 255, 7]),
+            ],
+            "newest f1 checkpoints kept, dropped f2 ones gone"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoints_survive_snapshot_compaction() {
+        let dir = tmp_dir("ckpt-snap");
+        {
+            let s = DurableStore::open_with_threshold(&dir, 3).unwrap();
+            s.append_flare(&rec("f1")).unwrap();
+            s.append_entry(DurableStore::entry_checkpoint("f1", 2, 4, b"state"))
+                .unwrap();
+            for i in 0..6 {
+                s.append_flare(&rec(&format!("pad{i}"))).unwrap();
+            }
+            assert!(s.wal_entries() < 3, "compaction ran");
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        assert_eq!(loaded.checkpoints.len(), 1);
+        let c = &loaded.checkpoints[0];
+        assert_eq!((c.flare_id.as_str(), c.worker, c.epoch), ("f1", 2, 4));
+        assert_eq!(c.data, b"state");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_policies_sync_per_policy() {
+        let dir = tmp_dir("fsync");
+        let s = DurableStore::open(&dir).unwrap();
+        // Never (default): appends succeed, zero fsyncs.
+        s.append_flare(&rec("a")).unwrap();
+        assert_eq!(s.fsyncs(), 0);
+        // Always: one fdatasync per append.
+        s.set_fsync_policy(FsyncPolicy::Always);
+        s.append_flare(&rec("b")).unwrap();
+        s.append_flare(&rec("c")).unwrap();
+        assert_eq!(s.fsyncs(), 2);
+        // Group with a huge interval: appends ride the page cache.
+        s.set_fsync_policy(FsyncPolicy::Group(Duration::from_secs(3600)));
+        for i in 0..10 {
+            s.append_flare(&rec(&format!("g{i}"))).unwrap();
+        }
+        assert_eq!(s.fsyncs(), 2, "group interval not crossed: no new fsyncs");
+        // Group with a zero interval degenerates to Always.
+        s.set_fsync_policy(FsyncPolicy::Group(Duration::ZERO));
+        s.append_flare(&rec("z")).unwrap();
+        assert_eq!(s.fsyncs(), 3);
+        // The knob parses the CLI spellings.
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(
+            FsyncPolicy::parse("group"),
+            Some(FsyncPolicy::Group(DEFAULT_GROUP_COMMIT_INTERVAL))
+        );
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+        drop(s);
         let _ = fs::remove_dir_all(&dir);
     }
 }

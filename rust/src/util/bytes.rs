@@ -35,6 +35,68 @@ pub fn parse(s: &str) -> Option<usize> {
     num.trim().parse::<f64>().ok().map(|n| (n * mult as f64) as usize)
 }
 
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 (with `=` padding). Checkpoint payloads are arbitrary
+/// bytes but the WAL is JSON lines, so they ride as base64 strings.
+pub fn to_base64(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (b[0] as u32) << 16 | (b[1] as u32) << 8 | b[2] as u32;
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            B64_ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Inverse of [`to_base64`]. `None` on any malformed input (bad length,
+/// characters outside the alphabet, misplaced padding).
+pub fn from_base64(s: &str) -> Option<Vec<u8>> {
+    let s = s.as_bytes();
+    if s.len() % 4 != 0 {
+        return None;
+    }
+    let decode = |c: u8| -> Option<u32> {
+        Some(match c {
+            b'A'..=b'Z' => (c - b'A') as u32,
+            b'a'..=b'z' => (c - b'a' + 26) as u32,
+            b'0'..=b'9' => (c - b'0' + 52) as u32,
+            b'+' => 62,
+            b'/' => 63,
+            _ => return None,
+        })
+    };
+    let mut out = Vec::with_capacity(s.len() / 4 * 3);
+    for (i, quad) in s.chunks(4).enumerate() {
+        let last = i == s.len() / 4 - 1;
+        let pads = quad.iter().rev().take_while(|&&c| c == b'=').count();
+        if pads > 2 || (pads > 0 && !last) {
+            return None;
+        }
+        let mut n = 0u32;
+        for &c in &quad[..4 - pads] {
+            n = n << 6 | decode(c)?;
+        }
+        n <<= 6 * pads as u32;
+        out.push((n >> 16) as u8);
+        if pads < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pads < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
 /// Throughput as "X.XX GiB/s".
 pub fn throughput(bytes: u64, secs: f64) -> String {
     if secs <= 0.0 {
@@ -66,5 +128,33 @@ mod tests {
     #[test]
     fn roundtrip_mib() {
         assert_eq!(parse(&human(256 * MIB as u64)).unwrap(), 256 * MIB);
+    }
+
+    #[test]
+    fn base64_known_vectors() {
+        assert_eq!(to_base64(b""), "");
+        assert_eq!(to_base64(b"f"), "Zg==");
+        assert_eq!(to_base64(b"fo"), "Zm8=");
+        assert_eq!(to_base64(b"foo"), "Zm9v");
+        assert_eq!(to_base64(b"foobar"), "Zm9vYmFy");
+        assert_eq!(from_base64("Zm9vYmFy").as_deref(), Some(&b"foobar"[..]));
+        assert_eq!(from_base64("Zg==").as_deref(), Some(&b"f"[..]));
+        assert_eq!(from_base64("").as_deref(), Some(&b""[..]));
+    }
+
+    #[test]
+    fn base64_roundtrip_all_byte_values() {
+        for len in [0usize, 1, 2, 3, 4, 255, 256, 1000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 31 % 256) as u8).collect();
+            assert_eq!(from_base64(&to_base64(&data)).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn base64_rejects_malformed() {
+        assert!(from_base64("abc").is_none(), "length not a multiple of 4");
+        assert!(from_base64("a?==").is_none(), "outside the alphabet");
+        assert!(from_base64("====").is_none(), "too much padding");
+        assert!(from_base64("Zg==Zg==").is_none(), "padding mid-stream");
     }
 }

@@ -256,6 +256,102 @@ fn wal_replay_reconstructs_db_contents_for_any_op_interleaving() {
 }
 
 #[test]
+fn checkpoint_wal_replay_matches_in_memory_with_tail_corruption() {
+    // Any interleaving of flare puts, status transitions, and worker
+    // checkpoints, replayed from disk ⊕ a truncated tail, must
+    // reconstruct exactly the live db's checkpoint table: latest payload
+    // per (flare, worker), nothing for terminal or unknown flares.
+    forall("checkpoint replay == in-memory", 25, |g| {
+        let dir = std::env::temp_dir().join(format!(
+            "burstc-prop-ckpt-{}-{}",
+            std::process::id(),
+            g.seed
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let threshold = g.usize(2, 20);
+        let store = Arc::new(
+            DurableStore::open_with_threshold(&dir, threshold).unwrap(),
+        );
+        let db = BurstDb::new();
+        db.attach_store(store.clone());
+
+        let statuses = [
+            FlareStatus::Queued,
+            FlareStatus::Running,
+            FlareStatus::Completed,
+            FlareStatus::Cancelled,
+        ];
+        let ids: Vec<String> = (0..5).map(|i| format!("f{i}")).collect();
+        let n_ops = g.usize(1, 50);
+        for i in 0..n_ops {
+            let id = &ids[g.usize(0, ids.len())];
+            match g.usize(0, 5) {
+                // (Re-)admit or transition a record.
+                0 | 1 => {
+                    let mut rec =
+                        FlareRecord::queued(id, "d", "default", Priority::Normal);
+                    rec.status = *g.choice(&statuses);
+                    rec.submit_seq = i as u64;
+                    db.put_flare(rec);
+                }
+                // Checkpoint a random worker (silently dropped unless the
+                // record is live — exactly what replay must reproduce).
+                2 | 3 => {
+                    let worker = g.usize(0, 4);
+                    let data = g.vec_u8(64);
+                    db.put_checkpoint(id, worker, i as u64, Arc::new(data));
+                }
+                // A status transition (may go terminal → drops the
+                // flare's checkpoints).
+                _ => {
+                    let status = *g.choice(&statuses);
+                    db.update_flare(id, |r| r.status = status);
+                }
+            }
+        }
+        drop(store);
+
+        // Crash tail: a final checkpoint line cut mid-record.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .create(true)
+                .open(dir.join("wal.jsonl"))
+                .unwrap();
+            f.write_all(b"{\"op\":\"checkpoint\",\"flare_id\":\"f0\",\"wor")
+                .unwrap();
+        }
+
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        // Group the replayed checkpoints by flare and compare against the
+        // live db's table, id by id.
+        let mut replayed: std::collections::BTreeMap<
+            String,
+            std::collections::BTreeMap<usize, Vec<u8>>,
+        > = Default::default();
+        for c in &loaded.checkpoints {
+            replayed
+                .entry(c.flare_id.clone())
+                .or_default()
+                .insert(c.worker, c.data.clone());
+        }
+        for id in &ids {
+            let want: std::collections::BTreeMap<usize, Vec<u8>> = db
+                .checkpoints_for(id)
+                .by_worker
+                .iter()
+                .map(|(w, b)| (*w, b.as_ref().clone()))
+                .collect();
+            let got = replayed.remove(id).unwrap_or_default();
+            assert_eq!(got, want, "replayed checkpoints diverged for {id}");
+        }
+        assert!(replayed.is_empty(), "replay invented checkpoints: {replayed:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
 fn object_store_range_reads_consistent() {
     forall("storage ranges", 40, |g| {
         let params = NetParams::scaled(1e-9);

@@ -281,6 +281,113 @@ fn deadline_overdue_during_downtime_expires_on_recovery() {
     let _ = fs::remove_dir_all(&dir);
 }
 
+/// Tentpole acceptance (ISSUE 5): a crash-recovered flare resumes from
+/// its workers' durable checkpoints instead of re-running `work` from
+/// scratch. The "before" process executes (and checkpoints) the first
+/// PARK_AT iterations per worker, crashes while parked; the recovered
+/// process re-admits the flare, `restore` hands back iteration PARK_AT,
+/// and the executed-iteration counter lands at exactly workers × ITERS —
+/// a from-scratch re-run would overshoot by workers × PARK_AT.
+#[test]
+fn kill_and_restart_resumes_from_checkpoint() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    const ITERS: u64 = 6;
+    const PARK_AT: u64 = 3;
+    const WORKERS: usize = 2;
+    let dir_a = tmp_dir("resume-a");
+    let dir_b = tmp_dir("resume-b");
+    let gate = Arc::new(Mutex::new(false));
+    let executed = Arc::new(AtomicU64::new(0));
+    let restored_max = Arc::new(AtomicU64::new(0));
+    let work: burstc::platform::WorkFn = {
+        let gate = gate.clone();
+        let executed = executed.clone();
+        let restored_max = restored_max.clone();
+        Arc::new(move |_p, ctx: &burstc::bcm::BurstContext| {
+            let start = match ctx.restore() {
+                Some(b) if b.len() == 8 => {
+                    u64::from_le_bytes(b[..8].try_into().unwrap())
+                }
+                _ => 0,
+            };
+            restored_max.fetch_max(start, Ordering::Relaxed);
+            for it in start..ITERS {
+                if it == PARK_AT {
+                    // Park (cancellable) until the gate opens — where the
+                    // "crash" takes the before-process down.
+                    let deadline = Instant::now() + Duration::from_secs(20);
+                    while !*gate.lock().unwrap() {
+                        ctx.check_cancel()?;
+                        if Instant::now() >= deadline {
+                            return Err(anyhow::anyhow!("gate never opened"));
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                // Checkpoint *before* counting: once the counter shows an
+                // iteration, its checkpoint has already been WAL-appended
+                // (the test copies the state dir after watching the
+                // counter).
+                ctx.checkpoint((it + 1).to_le_bytes().to_vec());
+                executed.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Json::Null)
+        })
+    };
+    register_work("recovery-resume", work);
+
+    // --- Before: run to the park point, checkpoints on disk.
+    let a = recover(1, 4, &dir_a);
+    a.deploy("res", "recovery-resume", hetero(2)).unwrap();
+    let h = a
+        .submit_flare("res", vec![Json::Null; WORKERS], &FlareOptions::default())
+        .unwrap();
+    assert!(wait_status(&a, &h.flare_id, FlareStatus::Running));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while executed.load(Ordering::Relaxed) < WORKERS as u64 * PARK_AT {
+        assert!(Instant::now() < deadline, "workers never reached the park point");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // --- Crash: copy the state files as-is while the workers are parked.
+    copy_state(&dir_a, &dir_b);
+
+    // Unwind the before-process *without* opening the gate (its workers
+    // must not execute — and count — any further iterations), then let
+    // the after-process run to completion.
+    let _ = a.cancel_flare(&h.flare_id);
+    assert!(wait_status(&a, &h.flare_id, FlareStatus::Cancelled));
+    drop(a);
+    *gate.lock().unwrap() = true;
+
+    // --- After: recovery re-seeds the checkpoints, the re-run resumes.
+    let b = recover(1, 4, &dir_b);
+    let stats = b.recovery_stats();
+    assert_eq!(stats.requeued, 1, "{stats:?}");
+    assert_eq!(stats.checkpoints_restored, WORKERS as u64, "{stats:?}");
+    assert!(wait_status(&b, &h.flare_id, FlareStatus::Completed));
+
+    assert_eq!(
+        executed.load(Ordering::Relaxed),
+        WORKERS as u64 * ITERS,
+        "pre-crash iterations were re-executed instead of resumed"
+    );
+    assert_eq!(
+        restored_max.load(Ordering::Relaxed),
+        PARK_AT,
+        "the re-run did not observe the pre-crash checkpoint"
+    );
+    let rec = b.db.get_flare(&h.flare_id).unwrap();
+    assert_eq!(rec.resume_count, 1);
+    assert_eq!(rec.to_json().get("resume_count").unwrap().as_usize(), Some(1));
+    assert_eq!(b.resumes(), 1);
+    // Completion discarded the checkpoints — nothing to resume anymore.
+    assert!(b.db.checkpoints_for(&h.flare_id).by_worker.is_empty());
+    drop(b);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
+
 #[test]
 fn restart_of_a_restart_keeps_history_stable() {
     // Recovery must be idempotent: recover, crash again immediately,

@@ -487,6 +487,100 @@ fn preemption_reclaims_saturated_cluster_for_high_flare() {
     assert_eq!(c.pool.free_vcpus(), vec![4]);
 }
 
+/// Tentpole acceptance (ISSUE 5): a preempted flare *resumes* from its
+/// workers' last checkpoints instead of restarting `work` from scratch.
+/// The executed-iteration counter proves it: each of the 4 workers runs
+/// its 5 iterations exactly once across both runs (a from-scratch re-run
+/// would re-execute the pre-preemption iterations), and `resume_count`
+/// lands in the record and its JSON (the `GET /v1/flares/<id>` payload).
+#[test]
+fn preempted_flare_resumes_from_checkpoint_not_scratch() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    const ITERS: u64 = 5;
+    const PARK_AT: u64 = 2;
+    let gate = Arc::new(Gate::default());
+    let executed = Arc::new(AtomicU64::new(0));
+    let restored_max = Arc::new(AtomicU64::new(0));
+    let work: WorkFn = {
+        let gate = gate.clone();
+        let executed = executed.clone();
+        let restored_max = restored_max.clone();
+        Arc::new(move |_p, ctx: &burstc::bcm::BurstContext| {
+            let start = match ctx.restore() {
+                Some(b) if b.len() == 8 => {
+                    u64::from_le_bytes(b[..8].try_into().unwrap())
+                }
+                _ => 0,
+            };
+            restored_max.fetch_max(start, Ordering::Relaxed);
+            for it in start..ITERS {
+                if it == PARK_AT {
+                    // Park (cancellable) until the test opens the gate:
+                    // the preempt trips here, with iterations 0..PARK_AT
+                    // already checkpointed.
+                    let deadline = Instant::now() + Duration::from_secs(20);
+                    while !*gate.open.lock().unwrap() {
+                        ctx.check_cancel()?;
+                        if Instant::now() >= deadline {
+                            return Err(anyhow!("gate never opened (hang guard)"));
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                ctx.checkpoint((it + 1).to_le_bytes().to_vec());
+                executed.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Json::Null)
+        })
+    };
+    register_work("sched-ckpt-victim", work);
+    register_work("sched-ckpt-urgent", noop());
+    let c = Controller::test_platform(1, 4, 1e-6);
+    c.deploy("ckvic", "sched-ckpt-victim", hetero()).unwrap();
+    c.deploy("ckurg", "sched-ckpt-urgent", hetero()).unwrap();
+
+    // The victim saturates the cluster, checkpoints PARK_AT iterations per
+    // worker, and parks.
+    let hv = c
+        .submit_flare("ckvic", vec![Json::Null; 4], &opts_for("bulk", "low"))
+        .unwrap();
+    let hv_id = hv.flare_id.clone();
+    assert!(wait_status(&c, &hv_id, FlareStatus::Running));
+    assert!(wait_until(|| executed.load(Ordering::Relaxed) == 4 * PARK_AT));
+
+    // A high flare preempts it; the parked workers unwind at the trip.
+    let hu = c
+        .submit_flare("ckurg", vec![Json::Null; 4], &opts_for("urgent", "high"))
+        .unwrap();
+    hu.wait().unwrap();
+    assert!(wait_until(|| c.db.get_flare(&hv_id).is_some_and(|r| r.preempt_count == 1)));
+    // The checkpoints survived the preempt-requeue cycle.
+    assert_eq!(c.db.checkpoints_for(&hv_id).by_worker.len(), 4);
+
+    // Let the resumed run proceed: it must pick up at PARK_AT, not 0.
+    gate.open();
+    hv.wait().unwrap();
+    assert_eq!(
+        executed.load(Ordering::Relaxed),
+        4 * ITERS,
+        "every iteration ran exactly once across both runs — \
+         checkpointed iterations were not re-executed"
+    );
+    assert_eq!(
+        restored_max.load(Ordering::Relaxed),
+        PARK_AT,
+        "the resumed run restored the last checkpoint"
+    );
+    let rec = c.db.get_flare(&hv_id).unwrap();
+    assert_eq!(rec.preempt_count, 1);
+    assert_eq!(rec.resume_count, 1);
+    assert_eq!(rec.to_json().get("resume_count").unwrap().as_usize(), Some(1));
+    assert_eq!(c.resumes(), 1);
+    // Terminal completion discarded the checkpoints.
+    assert!(c.db.checkpoints_for(&hv_id).by_worker.is_empty());
+    assert_eq!(c.pool.free_vcpus(), vec![4]);
+}
+
 /// `preemptible = false` opts a flare out: the high flare waits for the
 /// victim's natural completion, and nothing is ever preempted.
 #[test]
