@@ -3,13 +3,16 @@
 //! last per-worker checkpoint* instead of recomputing from scratch.
 //!
 //! Each worker runs `iters` refinement iterations and calls
-//! `BurstContext::checkpoint` after every one (iteration index + current
-//! rank). When the scheduler preempts the flare, the workers unwind at
-//! their next cooperative cancellation point, the platform keeps their
-//! latest checkpoints across the requeue, and the re-run's
-//! `BurstContext::restore` hands them back — so iterations completed
-//! before the preemption are never re-executed. `resume_count` in the
-//! flare's record counts the resumed runs.
+//! `BurstContext::checkpoint_all` after every one (iteration index +
+//! current rank) — the collective checkpoint barrier bounds the skew
+//! between any two workers' durable checkpoints to one epoch. When the
+//! scheduler preempts the flare, the workers unwind at their next
+//! cooperative cancellation point, the platform keeps their latest
+//! checkpoints across the requeue, and the re-run's
+//! `BurstContext::restore` hands them back; a min-reduce then agrees on
+//! the common resume iteration, so at most one iteration per worker is
+//! ever re-executed. `resume_count` in the flare's record counts the
+//! resumed runs.
 //!
 //! Run: `cargo run --release --example checkpointed_preemption`
 
@@ -54,6 +57,22 @@ fn main() -> anyhow::Result<()> {
                 }
                 _ => (0, 1.0),
             };
+            // Agree on a common resume iteration. `checkpoint_all`'s
+            // barrier guarantees the workers' restored iterations differ
+            // by at most one, so everyone restarts from the minimum: the
+            // collective loop below stays in lockstep and at most one
+            // iteration per worker is redone. (Redoing it with an
+            // already-advanced rank is fine here — the damped recurrence
+            // is contractive, and the example asserts on work counts, not
+            // exact rank values.)
+            let min_fold = |a: &mut Vec<u8>, b: &[u8]| {
+                let x = u64::from_le_bytes(a.as_slice().try_into().unwrap());
+                let y = u64::from_le_bytes(b.try_into().unwrap());
+                *a = x.min(y).to_le_bytes().to_vec();
+            };
+            let r = ctx.reduce(0, start.to_le_bytes().to_vec(), &min_fold)?;
+            let agreed = ctx.broadcast_shared(0, r)?;
+            let start = u64::from_le_bytes(agreed.as_slice().try_into().unwrap());
             for it in start..iters {
                 // One iteration: sliced spinning with a cancellation point
                 // per slice, so a preempt unwinds within a millisecond.
@@ -69,7 +88,7 @@ fn main() -> anyhow::Result<()> {
                 let mut state = Vec::with_capacity(16);
                 state.extend_from_slice(&(it + 1).to_le_bytes());
                 state.extend_from_slice(&rank.to_le_bytes());
-                ctx.checkpoint(state);
+                ctx.checkpoint_all(state)?;
             }
             Ok(Json::Num(rank))
         }),

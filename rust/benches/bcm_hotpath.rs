@@ -2,15 +2,34 @@
 //! split/reassembly, counter bookkeeping, and raw backend ops with all
 //! modeled service time disabled (time_scale ≈ 0) — this measures *our*
 //! middleware overhead, the target of the §Perf optimization pass.
+//!
+//! Besides the human-readable tables, this bench regenerates the tracked
+//! baseline `BENCH_fabric.json` at the repository root:
+//!
+//! - per-collective latency percentiles (broadcast / reduce / gather /
+//!   all-to-all on 8 workers in 2 packs),
+//! - bytes copied per delivered byte ("after" is measured from the
+//!   fabric's `copied_bytes` counter; "before" models the pre-zero-copy
+//!   fabric, which additionally materialized every locally delivered byte
+//!   into a fresh `Vec`, so `legacy_copied = copied + local_bytes`),
+//! - blocked-taker wakeup latency ("before" re-implements the legacy
+//!   20 ms poll-slice loop in-bench; "after" is the condvar/waker path).
+//!
+//! Run `--smoke` (or set `BURSTC_BENCH_SMOKE=1`) for the CI variant:
+//! tiny iteration counts, JSON artifact only.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use burstc::bcm::chunk::{self, Op};
+use burstc::bcm::mailbox::Mailbox;
 use burstc::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
 use burstc::cluster::netmodel::NetParams;
 use burstc::util::benchkit::{section, time_iters, Table};
-use burstc::util::bytes::MIB;
+use burstc::util::bytes::{KIB, MIB};
+use burstc::util::json::Json;
+use burstc::util::rng::Pcg;
+use burstc::util::stats::Summary;
 
 fn fabric(size: usize, g: usize) -> Arc<CommFabric> {
     let params = NetParams::scaled(1e-9);
@@ -23,7 +42,261 @@ fn fabric(size: usize, g: usize) -> Arc<CommFabric> {
     )
 }
 
+/// Run a collective `warmup + iters` times on `n` lockstepped workers and
+/// summarize worker 0's post-warmup per-iteration wall time in seconds.
+fn time_collective(
+    fabric: &Arc<CommFabric>,
+    n: usize,
+    warmup: usize,
+    iters: usize,
+    f: &(dyn Fn(&BurstContext, usize) + Sync),
+) -> Summary {
+    let samples = Mutex::new(Vec::with_capacity(warmup + iters));
+    std::thread::scope(|s| {
+        for w in 0..n {
+            let fabric = fabric.clone();
+            let samples = &samples;
+            s.spawn(move || {
+                let ctx = BurstContext::new(w, fabric);
+                for i in 0..warmup + iters {
+                    let t = Instant::now();
+                    f(&ctx, i);
+                    if w == 0 {
+                        samples.lock().unwrap().push(t.elapsed().as_secs_f64());
+                    }
+                }
+            });
+        }
+    });
+    let samples = samples.into_inner().unwrap();
+    Summary::of(&samples[warmup..])
+}
+
+/// Latency from `put` to a blocked taker returning, through the legacy
+/// 20 ms poll-slice loop this fabric used before the waker protocol. The
+/// putter staggers by a uniform 0–20 ms so the poll phase is sampled
+/// uniformly (expectation ≈ half a slice, worst case a full slice).
+fn wakeup_latency_poll(samples: usize) -> Summary {
+    let mb = Mailbox::new();
+    let mut rng = Pcg::new(7);
+    let mut out = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let key = format!("wake-{i}");
+        let stagger = Duration::from_micros((rng.f64() * 20_000.0) as u64);
+        let t0: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+        std::thread::scope(|s| {
+            let mb2 = mb.clone();
+            let t0c = t0.clone();
+            let key2 = key.clone();
+            s.spawn(move || {
+                std::thread::sleep(stagger);
+                *t0c.lock().unwrap() = Some(Instant::now());
+                mb2.put(key2, Arc::new(vec![1u8]));
+            });
+            loop {
+                if mb.take(&key, Duration::ZERO).is_ok() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            out.push(t0.lock().unwrap().unwrap().elapsed().as_secs_f64());
+        });
+    }
+    Summary::of(&out)
+}
+
+/// Latency from `put` to a blocked taker returning through the current
+/// event-driven wait (condvar wakeup, no polling).
+fn wakeup_latency_event(samples: usize) -> Summary {
+    let mb = Mailbox::new();
+    let mut rng = Pcg::new(11);
+    let mut out = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let key = format!("wake-{i}");
+        let stagger = Duration::from_micros(500 + (rng.f64() * 1_500.0) as u64);
+        let t0: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+        std::thread::scope(|s| {
+            let mb2 = mb.clone();
+            let t0c = t0.clone();
+            let key2 = key.clone();
+            s.spawn(move || {
+                std::thread::sleep(stagger);
+                *t0c.lock().unwrap() = Some(Instant::now());
+                mb2.put(key2, Arc::new(vec![1u8]));
+            });
+            mb.take(&key, Duration::from_secs(5)).unwrap();
+            out.push(t0.lock().unwrap().unwrap().elapsed().as_secs_f64());
+        });
+    }
+    Summary::of(&out)
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", s.n.into()),
+        ("median_us", (s.median * 1e6).into()),
+        ("p95_us", (s.p95 * 1e6).into()),
+        ("p99_us", (s.p99 * 1e6).into()),
+    ])
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BURSTC_BENCH_SMOKE").is_ok_and(|v| v == "1");
+
+    if !smoke {
+        legacy_tables();
+    }
+
+    section(if smoke {
+        "fabric baseline (smoke mode)"
+    } else {
+        "fabric baseline"
+    });
+
+    // --- per-collective latency percentiles: 8 workers, 2 packs of 4 ---
+    let (warmup, iters) = if smoke { (2, 15) } else { (10, 150) };
+    let n = 8usize;
+    let payload = vec![5u8; 64 * KIB];
+    let cell = vec![9u8; 4 * KIB];
+    let fold = |a: &mut Vec<u8>, b: &[u8]| {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x = x.wrapping_add(*y);
+        }
+    };
+    let mut collectives: Vec<(&str, Summary)> = Vec::new();
+    {
+        let f = fabric(n, 4);
+        let payload = &payload;
+        let s = time_collective(&f, n, warmup, iters, &|ctx: &BurstContext, _i: usize| {
+            let data = (ctx.worker_id == 0).then(|| payload.clone());
+            ctx.broadcast(0, data).unwrap();
+        });
+        collectives.push(("broadcast_64KiB", s));
+    }
+    {
+        let f = fabric(n, 4);
+        let payload = &payload;
+        let fold = &fold;
+        let s = time_collective(&f, n, warmup, iters, &|ctx: &BurstContext, _i: usize| {
+            ctx.reduce(0, payload.clone(), fold).unwrap();
+        });
+        collectives.push(("reduce_64KiB", s));
+    }
+    {
+        let f = fabric(n, 4);
+        let cell = &cell;
+        let s = time_collective(&f, n, warmup, iters, &|ctx: &BurstContext, _i: usize| {
+            ctx.gather(0, cell.clone()).unwrap();
+        });
+        collectives.push(("gather_4KiB", s));
+    }
+    {
+        let f = fabric(n, 4);
+        let cell = &cell;
+        let s = time_collective(&f, n, warmup, iters, &|ctx: &BurstContext, _i: usize| {
+            ctx.all_to_all(vec![cell.clone(); 8]).unwrap();
+        });
+        collectives.push(("all_to_all_4KiB", s));
+    }
+
+    // --- bytes copied per delivered byte, zero-copy vs the legacy model ---
+    let zc_iters = if smoke { 3 } else { 20 };
+    let f = fabric(n, 4);
+    f.traffic.reset();
+    {
+        let payload = &payload;
+        let fold = &fold;
+        std::thread::scope(|s| {
+            for w in 0..n {
+                let f = f.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, f);
+                    for _ in 0..zc_iters {
+                        let data = (w == 0).then(|| payload.clone());
+                        ctx.broadcast(0, data).unwrap();
+                        ctx.reduce(0, payload.clone(), fold).unwrap();
+                    }
+                });
+            }
+        });
+    }
+    let local = f.traffic.local();
+    let delivered = local + f.traffic.remote_rx();
+    let copied = f.traffic.copied();
+    // The pre-zero-copy fabric also memcpy'd every locally delivered byte
+    // into a per-receiver Vec; the Arc hand-off eliminated exactly those.
+    let legacy_copied = copied + local;
+    let ratio = copied as f64 / delivered as f64;
+    let legacy_ratio = legacy_copied as f64 / delivered as f64;
+
+    // --- blocked-taker wakeup latency, poll-slice vs event-driven ---
+    let (poll_n, event_n) = if smoke { (8, 40) } else { (50, 200) };
+    let poll = wakeup_latency_poll(poll_n);
+    let event = wakeup_latency_event(event_n);
+
+    let mut t = Table::new(&["metric", "before", "after"]);
+    t.row(vec![
+        "copied bytes / delivered byte".into(),
+        format!("{legacy_ratio:.3}"),
+        format!("{ratio:.3}"),
+    ]);
+    t.row(vec![
+        "wakeup latency (median)".into(),
+        format!("{:.1}us", poll.median * 1e6),
+        format!("{:.1}us", event.median * 1e6),
+    ]);
+    t.row(vec![
+        "wakeup latency (p95)".into(),
+        format!("{:.1}us", poll.p95 * 1e6),
+        format!("{:.1}us", event.p95 * 1e6),
+    ]);
+    for (name, s) in &collectives {
+        t.row(vec![
+            format!("{name} median/p95"),
+            "-".into(),
+            format!("{:.1}us / {:.1}us", s.median * 1e6, s.p95 * 1e6),
+        ]);
+    }
+    t.print();
+
+    // --- tracked artifact ---
+    let doc = Json::obj(vec![
+        ("schema", "burstc-fabric-bench/1".into()),
+        ("mode", if smoke { "smoke".into() } else { "full".into() }),
+        (
+            "collectives",
+            Json::obj(
+                collectives.iter().map(|(name, s)| (*name, summary_json(s))).collect(),
+            ),
+        ),
+        (
+            "zero_copy",
+            Json::obj(vec![
+                ("workload", "8 workers / 2 packs, 64KiB broadcast+reduce".into()),
+                ("delivered_bytes", delivered.into()),
+                ("copied_bytes", copied.into()),
+                ("copied_per_delivered", ratio.into()),
+                ("legacy_copied_bytes", legacy_copied.into()),
+                ("legacy_copied_per_delivered", legacy_ratio.into()),
+            ]),
+        ),
+        (
+            "wakeup_latency",
+            Json::obj(vec![
+                ("poll_20ms_before", summary_json(&poll)),
+                ("event_driven_after", summary_json(&event)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fabric.json");
+    std::fs::write(path, format!("{doc}\n")).unwrap();
+    println!("\nwrote {path}");
+}
+
+/// The original hot-path tables (skipped in smoke mode: they are for
+/// humans, not for the tracked artifact).
+fn legacy_tables() {
     section("BCM hot path micro-benchmarks (modeled time disabled)");
     let mut t = Table::new(&["operation", "payload", "median", "p95", "throughput"]);
 

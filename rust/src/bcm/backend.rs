@@ -3,15 +3,29 @@
 //! one-to-one messages (`put`/`fetch`, consume-once queues) from
 //! one-to-many messages (`publish`/`read`, read-many) because backends map
 //! them differently (e.g. RabbitMQ direct vs fan-out exchanges).
+//!
+//! Blocking waits come in two flavors: the plain `fetch`/`read` pair, and
+//! `fetch_cancellable`/`read_cancellable` which also unwind when a flare's
+//! [`CancelToken`] trips. The in-tree backends wire the trip straight into
+//! their internal condvars through a registered waker (event-driven,
+//! sub-millisecond unwind); the trait provides a bounded-slice polling
+//! fallback so any third-party backend is cancellable out of the box.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
+use crate::util::cancel::{CancelToken, Waker};
+
+/// Upper bound on one blocking wait slice in the *polled* cancellable-wait
+/// fallback below. Backends with native waker wiring never pay this; the
+/// fallback re-checks the token at least this often.
+pub const CANCEL_POLL_SLICE: Duration = Duration::from_millis(20);
 
 pub trait RemoteBackend: Send + Sync {
     fn name(&self) -> String;
@@ -28,6 +42,36 @@ pub trait RemoteBackend: Send + Sync {
     /// One-to-many: blocking non-consuming read of `key`.
     fn read(&self, key: &str, timeout: Duration) -> Result<Bytes>;
 
+    /// [`RemoteBackend::fetch`] that also unwinds when `cancel` trips.
+    /// Backends with internal condvars override this to register a waker on
+    /// the token (event-driven unwind); the default falls back to bounded-
+    /// slice polling, which is correct for any backend.
+    fn fetch_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        match cancel {
+            None => self.fetch(key, timeout),
+            Some(token) => polled_cancellable(token, timeout, |slice| self.fetch(key, slice)),
+        }
+    }
+
+    /// [`RemoteBackend::read`] that also unwinds when `cancel` trips (see
+    /// [`RemoteBackend::fetch_cancellable`]).
+    fn read_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        match cancel {
+            None => self.read(key, timeout),
+            Some(token) => polled_cancellable(token, timeout, |slice| self.read(key, slice)),
+        }
+    }
+
     /// Drop all state under a key prefix (flare teardown).
     fn clear_prefix(&self, prefix: &str);
 
@@ -38,6 +82,68 @@ pub trait RemoteBackend: Send + Sync {
     }
 
     fn stats(&self) -> BackendStats;
+}
+
+/// Polled fallback for cancellable blocking waits: run `wait` in bounded
+/// slices, re-checking the token between them. Timed-out slices pay no
+/// modeled service cost; a backend that errors well before its slice lapsed
+/// failed *hard* (bad key, connection refused, ...) and the error
+/// propagates instead of being retried for the rest of the timeout.
+pub fn polled_cancellable(
+    cancel: &CancelToken,
+    timeout: Duration,
+    mut wait: impl FnMut(Duration) -> Result<Bytes>,
+) -> Result<Bytes> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let slice = deadline.saturating_duration_since(Instant::now()).min(CANCEL_POLL_SLICE);
+        let asked = Instant::now();
+        match wait(slice) {
+            Ok(d) => return Ok(d),
+            Err(e) => {
+                if let Some(reason) = cancel.reason() {
+                    return Err(anyhow!("aborted: flare {}", reason.name()));
+                }
+                let failed_fast =
+                    asked.elapsed() < slice / 2 && slice >= Duration::from_millis(2);
+                if failed_fast || Instant::now() >= deadline {
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+/// Per-token waker registry for a backend: holds the strong waker handles
+/// (the token stores only `Weak`s) so each token is wired up exactly once
+/// per backend, and the blocked-wait fast path allocates nothing per wait.
+#[derive(Default)]
+pub struct CancelWakers {
+    registered: Mutex<HashMap<usize, Arc<Waker>>>,
+}
+
+impl std::fmt::Debug for CancelWakers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelWakers")
+            .field("registered", &self.registered.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl CancelWakers {
+    /// Ensure `token` has a waker registered, building it with `make` on
+    /// first sight. Callers must not hold any lock the waker itself takes:
+    /// an already-tripped token invokes the waker inline.
+    pub fn ensure(&self, token: &CancelToken, make: impl FnOnce() -> Arc<Waker>) {
+        let mut reg = self.registered.lock().unwrap();
+        if reg.contains_key(&token.id()) {
+            return;
+        }
+        let w = make();
+        reg.insert(token.id(), w.clone());
+        drop(reg);
+        token.register_waker(&w);
+    }
 }
 
 /// Aggregate backend counters (snapshot).

@@ -56,6 +56,24 @@ impl RemoteBackend for FlakyBackend {
         self.inner.fetch(key, timeout)
     }
 
+    fn fetch_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&crate::util::cancel::CancelToken>,
+    ) -> Result<Bytes> {
+        self.inner.fetch_cancellable(key, timeout, cancel)
+    }
+
+    fn read_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&crate::util::cancel::CancelToken>,
+    ) -> Result<Bytes> {
+        self.inner.read_cancellable(key, timeout, cancel)
+    }
+
     fn publish(&self, key: &str, data: Bytes) -> Result<()> {
         if self.flip() {
             self.dups_injected.fetch_add(1, Ordering::Relaxed);
@@ -125,6 +143,64 @@ mod tests {
             flaky2.dups_injected.load(Ordering::Relaxed) > 0,
             "no duplicates were actually injected"
         );
+    }
+
+    /// Pipelined reduce/gather (children and sources streamed concurrently)
+    /// must be byte-identical to the old store-and-forward semantics even
+    /// when the network duplicates chunks mid-stream. Root 3 is not its
+    /// pack's leader, so the zero-copy forwarded-`Arc` path is exercised
+    /// too.
+    #[test]
+    fn pipelined_reduce_and_gather_match_reference_under_duplicates() {
+        fn payload(w: usize) -> Vec<u8> {
+            (0..700).map(|i| ((w * 31 + i) % 251) as u8).collect()
+        }
+        let n = 9usize;
+        let expected_sum: Vec<u8> = (0..700)
+            .map(|i| {
+                (0..n).fold(0u8, |a, w| a.wrapping_add(((w * 31 + i) % 251) as u8))
+            })
+            .collect();
+        let params = NetParams::scaled(1e-7);
+        let flaky = FlakyBackend::wrap(BackendKind::RedisList.build(&params), 42, 0.5);
+        let fabric = CommFabric::new(
+            "flaky3",
+            PackTopology::contiguous(n, 2), // 5 packs: reduce tree has 2-child nodes
+            flaky.clone(),
+            &params,
+            FabricConfig {
+                chunk_size: 96, // 700-byte payloads stream as 8 chunks
+                timeout: Duration::from_secs(20),
+                ..Default::default()
+            },
+        );
+        std::thread::scope(|s| {
+            for w in 0..n {
+                let fabric = fabric.clone();
+                let expected_sum = expected_sum.clone();
+                s.spawn(move || {
+                    let ctx = BurstContext::new(w, fabric);
+                    let f = |a: &mut Vec<u8>, b: &[u8]| {
+                        for (x, y) in a.iter_mut().zip(b) {
+                            *x = x.wrapping_add(*y);
+                        }
+                    };
+                    let r = ctx.reduce(3, payload(w), &f).unwrap();
+                    if w == 3 {
+                        assert_eq!(r.unwrap().as_slice(), expected_sum.as_slice());
+                    } else {
+                        assert!(r.is_none());
+                    }
+                    let g = ctx.gather(4, payload(w)).unwrap();
+                    if w == 4 {
+                        for (src, got) in g.unwrap().iter().enumerate() {
+                            assert_eq!(got.as_slice(), payload(src).as_slice(), "src={src}");
+                        }
+                    }
+                });
+            }
+        });
+        assert!(flaky.dups_injected.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

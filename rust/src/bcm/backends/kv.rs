@@ -23,10 +23,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::backend::{BackendCounters, BackendStats, CancelWakers, RemoteBackend};
 use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::cancel::{CancelToken, Waker};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -46,13 +47,15 @@ struct Shard {
 /// Simulated sharded KV server.
 pub struct KvServer {
     name: String,
-    shards: Vec<Shard>,
+    shards: Arc<Vec<Shard>>,
     op_latency_s: f64,
     per_byte_s: f64,
     time_scale: f64,
     /// Server NIC cap shared by all shards (bytes/sec of modeled time).
     nic: TokenBucket,
     counters: BackendCounters,
+    /// One trip waker per cancel token: a trip pokes every shard condvar.
+    wakers: CancelWakers,
 }
 
 impl KvServer {
@@ -66,19 +69,40 @@ impl KvServer {
         let scale = params.time_scale.max(1e-9);
         Arc::new(KvServer {
             name: name.to_string(),
-            shards: (0..shards.max(1))
-                .map(|_| Shard {
-                    executor: Mutex::new(()),
-                    store: Mutex::new(ShardStore::default()),
-                    cv: Condvar::new(),
-                })
-                .collect(),
+            shards: Arc::new(
+                (0..shards.max(1))
+                    .map(|_| Shard {
+                        executor: Mutex::new(()),
+                        store: Mutex::new(ShardStore::default()),
+                        cv: Condvar::new(),
+                    })
+                    .collect(),
+            ),
             op_latency_s,
             per_byte_s: 1.0 / shard_bw,
             time_scale: params.time_scale,
             nic: TokenBucket::new(params.server_nic_bw / scale, params.server_nic_bw / 4.0),
             counters: BackendCounters::default(),
+            wakers: CancelWakers::default(),
         })
+    }
+
+    /// Wire a cancel token's trip into every shard condvar (once per token).
+    fn wire_cancel(&self, token: &CancelToken) {
+        let shards = Arc::downgrade(&self.shards);
+        self.wakers.ensure(token, || {
+            Arc::new(move || {
+                if let Some(shards) = shards.upgrade() {
+                    for sh in shards.iter() {
+                        // Briefly take the store lock before notifying so a
+                        // waiter between its reason() check and its wait
+                        // never misses the trip.
+                        drop(sh.store.lock().unwrap());
+                        sh.cv.notify_all();
+                    }
+                }
+            }) as Arc<Waker>
+        });
     }
 
     /// Redis-like: single-threaded event loop.
@@ -145,6 +169,18 @@ impl RemoteBackend for KvServer {
     }
 
     fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.fetch_cancellable(key, timeout, None)
+    }
+
+    fn fetch_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         let shard = self.shard_of(key);
         let deadline = Instant::now() + timeout;
         let data = {
@@ -154,6 +190,13 @@ impl RemoteBackend for KvServer {
                     if let Some(v) = q.pop_front() {
                         break v;
                     }
+                }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "{}: fetch('{key}') aborted: flare {}",
+                        self.name,
+                        reason.name()
+                    ));
                 }
                 let now = Instant::now();
                 if now >= deadline {
@@ -183,6 +226,18 @@ impl RemoteBackend for KvServer {
     }
 
     fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.read_cancellable(key, timeout, None)
+    }
+
+    fn read_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         let shard = self.shard_of(key);
         let deadline = Instant::now() + timeout;
         let data = {
@@ -190,6 +245,13 @@ impl RemoteBackend for KvServer {
             loop {
                 if let Some(v) = st.published.get(key) {
                     break v.clone();
+                }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "{}: read('{key}') aborted: flare {}",
+                        self.name,
+                        reason.name()
+                    ));
                 }
                 let now = Instant::now();
                 if now >= deadline {
@@ -317,6 +379,27 @@ mod tests {
         stream.put("b", payload).unwrap();
         let ts = t2.secs();
         assert!(ts > tl * 1.2, "list {tl} stream {ts}");
+    }
+
+    #[test]
+    fn cancellable_fetch_unwinds_at_the_trip() {
+        let s = KvServer::dragonfly(&fast(), false);
+        let token = CancelToken::new();
+        let s2 = s.clone();
+        let t2 = token.clone();
+        let h = std::thread::spawn(move || {
+            s2.fetch_cancellable("never", Duration::from_secs(60), Some(&t2)).unwrap_err()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let trip = Instant::now();
+        token.cancel();
+        let err = h.join().unwrap();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert!(
+            trip.elapsed() < Duration::from_millis(500),
+            "unwind took {:?} after the trip",
+            trip.elapsed()
+        );
     }
 
     #[test]

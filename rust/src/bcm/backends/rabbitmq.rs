@@ -14,10 +14,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::backend::{BackendCounters, BackendStats, CancelWakers, RemoteBackend};
 use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::cancel::{CancelToken, Waker};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -26,9 +27,16 @@ struct BrokerStore {
     fanout: HashMap<String, Bytes>,
 }
 
-pub struct RabbitBackend {
+/// The waitable broker state, `Arc`-shared so cancel-trip wakers can poke
+/// the condvar without keeping the whole backend alive.
+#[derive(Default)]
+struct BrokerWait {
     store: Mutex<BrokerStore>,
     cv: Condvar,
+}
+
+pub struct RabbitBackend {
+    wait: Arc<BrokerWait>,
     /// IO thread pool: limits op concurrency.
     io_slots: Arc<TokenBucket>,
     /// Global pipeline throughput cap.
@@ -37,14 +45,14 @@ pub struct RabbitBackend {
     time_scale: f64,
     max_payload: usize,
     counters: BackendCounters,
+    wakers: CancelWakers,
 }
 
 impl RabbitBackend {
     pub fn new(params: &NetParams) -> Arc<RabbitBackend> {
         let scale = params.time_scale.max(1e-9);
         Arc::new(RabbitBackend {
-            store: Mutex::new(BrokerStore::default()),
-            cv: Condvar::new(),
+            wait: Arc::new(BrokerWait::default()),
             io_slots: Arc::new(TokenBucket::new(
                 params.rabbit_io_threads as f64 / params.rabbit_op_latency_s / scale,
                 params.rabbit_io_threads as f64,
@@ -57,7 +65,21 @@ impl RabbitBackend {
             time_scale: params.time_scale,
             max_payload: params.rabbit_max_payload,
             counters: BackendCounters::default(),
+            wakers: CancelWakers::default(),
         })
+    }
+
+    /// Wire a cancel token's trip into the broker condvar (once per token).
+    fn wire_cancel(&self, token: &CancelToken) {
+        let wait = Arc::downgrade(&self.wait);
+        self.wakers.ensure(token, || {
+            Arc::new(move || {
+                if let Some(w) = wait.upgrade() {
+                    drop(w.store.lock().unwrap());
+                    w.cv.notify_all();
+                }
+            }) as Arc<Waker>
+        });
     }
 
     fn serve(&self, bytes: usize) -> Result<()> {
@@ -85,27 +107,45 @@ impl RemoteBackend for RabbitBackend {
         self.serve(data.len())?;
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.direct.entry(key.to_string()).or_default().push_back(data);
-        self.cv.notify_all();
+        self.wait.cv.notify_all();
         Ok(())
     }
 
     fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.fetch_cancellable(key, timeout, None)
+    }
+
+    fn fetch_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.store.lock().unwrap();
+            let mut st = self.wait.store.lock().unwrap();
             loop {
                 if let Some(q) = st.direct.get_mut(key) {
                     if let Some(v) = q.pop_front() {
                         break v;
                     }
                 }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "rabbitmq: fetch('{key}') aborted: flare {}",
+                        reason.name()
+                    ));
+                }
                 let now = Instant::now();
                 if now >= deadline {
                     return Err(anyhow!("rabbitmq: fetch('{key}') timed out"));
                 }
-                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
                 st = g;
             }
         };
@@ -119,25 +159,43 @@ impl RemoteBackend for RabbitBackend {
         self.serve(data.len())?;
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.fanout.insert(key.to_string(), data);
-        self.cv.notify_all();
+        self.wait.cv.notify_all();
         Ok(())
     }
 
     fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.read_cancellable(key, timeout, None)
+    }
+
+    fn read_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.store.lock().unwrap();
+            let mut st = self.wait.store.lock().unwrap();
             loop {
                 if let Some(v) = st.fanout.get(key) {
                     break v.clone();
+                }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "rabbitmq: read('{key}') aborted: flare {}",
+                        reason.name()
+                    ));
                 }
                 let now = Instant::now();
                 if now >= deadline {
                     return Err(anyhow!("rabbitmq: read('{key}') timed out"));
                 }
-                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
                 st = g;
             }
         };
@@ -148,7 +206,7 @@ impl RemoteBackend for RabbitBackend {
     }
 
     fn clear_prefix(&self, prefix: &str) {
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.direct.retain(|k, _| !k.starts_with(prefix));
         st.fanout.retain(|k, _| !k.starts_with(prefix));
     }

@@ -14,10 +14,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::super::backend::{BackendCounters, BackendStats, RemoteBackend};
+use super::super::backend::{BackendCounters, BackendStats, CancelWakers, RemoteBackend};
 use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::cancel::{CancelToken, Waker};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -26,9 +27,16 @@ struct S3Store {
     objects: HashMap<String, Bytes>,
 }
 
-pub struct S3Backend {
+/// The waitable object state, `Arc`-shared so cancel-trip wakers can poke
+/// the condvar without keeping the whole backend alive.
+#[derive(Default)]
+struct S3Wait {
     store: Mutex<S3Store>,
     cv: Condvar,
+}
+
+pub struct S3Backend {
+    wait: Arc<S3Wait>,
     get_rate: TokenBucket,
     put_rate: TokenBucket,
     get_latency_s: f64,
@@ -36,14 +44,14 @@ pub struct S3Backend {
     per_byte_s: f64,
     time_scale: f64,
     counters: BackendCounters,
+    wakers: CancelWakers,
 }
 
 impl S3Backend {
     pub fn new(params: &NetParams) -> Arc<S3Backend> {
         let scale = params.time_scale.max(1e-9);
         Arc::new(S3Backend {
-            store: Mutex::new(S3Store::default()),
-            cv: Condvar::new(),
+            wait: Arc::new(S3Wait::default()),
             get_rate: TokenBucket::new(params.s3_get_rate / scale, params.s3_get_rate / 4.0),
             put_rate: TokenBucket::new(params.s3_put_rate / scale, params.s3_put_rate / 4.0),
             get_latency_s: params.s3_get_latency_s,
@@ -51,7 +59,21 @@ impl S3Backend {
             per_byte_s: 1.0 / params.s3_conn_bw,
             time_scale: params.time_scale,
             counters: BackendCounters::default(),
+            wakers: CancelWakers::default(),
         })
+    }
+
+    /// Wire a cancel token's trip into the store condvar (once per token).
+    fn wire_cancel(&self, token: &CancelToken) {
+        let wait = Arc::downgrade(&self.wait);
+        self.wakers.ensure(token, || {
+            Arc::new(move || {
+                if let Some(w) = wait.upgrade() {
+                    drop(w.store.lock().unwrap());
+                    w.cv.notify_all();
+                }
+            }) as Arc<Waker>
+        });
     }
 
     /// Requests run fully in parallel (no executor lock): S3 scales with
@@ -73,29 +95,47 @@ impl RemoteBackend for S3Backend {
         self.serve(self.put_latency_s, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.queues.entry(key.to_string()).or_default().push_back(data);
-        self.cv.notify_all();
+        self.wait.cv.notify_all();
         Ok(())
     }
 
     fn fetch(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.fetch_cancellable(key, timeout, None)
+    }
+
+    fn fetch_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         // S3 has no blocking read: consumers poll. We model the poll loop
         // with rate-limited existence checks, then pay the GET.
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.store.lock().unwrap();
+            let mut st = self.wait.store.lock().unwrap();
             loop {
                 if let Some(q) = st.queues.get_mut(key) {
                     if let Some(v) = q.pop_front() {
                         break v;
                     }
                 }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "s3: fetch('{key}') aborted: flare {}",
+                        reason.name()
+                    ));
+                }
                 let now = Instant::now();
                 if now >= deadline {
                     return Err(anyhow!("s3: fetch('{key}') timed out"));
                 }
-                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
                 st = g;
             }
         };
@@ -111,25 +151,43 @@ impl RemoteBackend for S3Backend {
         self.serve(self.put_latency_s, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.objects.insert(key.to_string(), data);
-        self.cv.notify_all();
+        self.wait.cv.notify_all();
         Ok(())
     }
 
     fn read(&self, key: &str, timeout: Duration) -> Result<Bytes> {
+        self.read_cancellable(key, timeout, None)
+    }
+
+    fn read_cancellable(
+        &self,
+        key: &str,
+        timeout: Duration,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Bytes> {
+        if let Some(token) = cancel {
+            self.wire_cancel(token);
+        }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.store.lock().unwrap();
+            let mut st = self.wait.store.lock().unwrap();
             loop {
                 if let Some(v) = st.objects.get(key) {
                     break v.clone();
+                }
+                if let Some(reason) = cancel.and_then(CancelToken::reason) {
+                    return Err(anyhow!(
+                        "s3: read('{key}') aborted: flare {}",
+                        reason.name()
+                    ));
                 }
                 let now = Instant::now();
                 if now >= deadline {
                     return Err(anyhow!("s3: read('{key}') timed out"));
                 }
-                let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
                 st = g;
             }
         };
@@ -141,7 +199,7 @@ impl RemoteBackend for S3Backend {
     }
 
     fn clear_prefix(&self, prefix: &str) {
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.wait.store.lock().unwrap();
         st.queues.retain(|k, _| !k.starts_with(prefix));
         st.objects.retain(|k, _| !k.starts_with(prefix));
     }

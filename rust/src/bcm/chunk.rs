@@ -132,6 +132,81 @@ pub fn split(
         .collect()
 }
 
+/// Streaming chunk tracker: dedupes chunks and computes their payload
+/// offsets *without* buffering anything, so a consumer (reduction,
+/// concatenation, direct-to-destination write) can eat each chunk the
+/// moment it arrives instead of waiting for full reassembly.
+///
+/// Offsets follow the same rule as [`Reassembly`]: every non-final chunk
+/// carries a full `chunk_size` payload so `off = idx * payload_len`; the
+/// final chunk is anchored to the end of the payload, which is consistent
+/// regardless of arrival order.
+#[derive(Debug)]
+pub struct StreamAssembly {
+    seen: Vec<bool>,
+    remaining: usize,
+    n_chunks: usize,
+    total_len: usize,
+}
+
+impl StreamAssembly {
+    /// Build from any chunk's decoded header (the first one to arrive).
+    pub fn new(hdr: &Header) -> StreamAssembly {
+        let n = hdr.n_chunks as usize;
+        StreamAssembly {
+            seen: vec![false; n],
+            remaining: n,
+            n_chunks: n,
+            total_len: hdr.total_len as usize,
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.total_len
+    }
+
+    /// Accept a framed chunk: returns `Some((offset, payload))` for a fresh
+    /// chunk, `None` for a duplicate (at-least-once tolerated). Out-of-range
+    /// or overflowing chunks are errors.
+    pub fn accept<'a>(&mut self, chunk: &'a [u8]) -> Result<Option<(usize, &'a [u8])>> {
+        let hdr = Header::decode(chunk)?;
+        let idx = hdr.chunk_idx as usize;
+        if idx >= self.n_chunks {
+            return Err(anyhow!("chunk idx {idx} out of range {}", self.n_chunks));
+        }
+        if self.seen[idx] {
+            return Ok(None); // duplicate — at-least-once tolerated
+        }
+        let payload = &chunk[HEADER_LEN..];
+        let off = if idx == self.n_chunks - 1 {
+            self.total_len.checked_sub(payload.len()).ok_or_else(|| {
+                anyhow!("final chunk larger than payload ({} > {})", payload.len(), self.total_len)
+            })?
+        } else {
+            idx * payload.len()
+        };
+        if off + payload.len() > self.total_len {
+            return Err(anyhow!(
+                "chunk {idx} overflows payload ({} + {} > {})",
+                off,
+                payload.len(),
+                self.total_len
+            ));
+        }
+        self.seen[idx] = true;
+        self.remaining -= 1;
+        Ok(Some((off, payload)))
+    }
+
+    pub fn complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn missing(&self) -> usize {
+        self.remaining
+    }
+}
+
 /// Reassembly buffer: the full payload is reserved up front and chunks are
 /// written to their offsets as they come in (paper §4.5).
 #[derive(Debug)]
@@ -300,5 +375,56 @@ mod tests {
         let (r, _) = Reassembly::from_first(&chunks[0]).unwrap();
         assert!(!r.complete());
         assert!(r.into_payload().is_err());
+    }
+
+    /// The streamed path must be byte-identical to store-and-forward
+    /// reassembly for the same chunk sequence, including out-of-order
+    /// arrival and injected duplicates.
+    #[test]
+    fn streamed_matches_store_and_forward_under_out_of_order_and_dups() {
+        let payload: Vec<u8> = (0..9973).map(|i| (i * 7 % 256) as u8).collect();
+        let chunks = split(Op::Reduce, 3, 4, 11, &payload, 512);
+        let n = chunks.len();
+        // Shuffled arrival order with every third chunk duplicated.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.reverse();
+        order.rotate_left(n / 3);
+        let arrivals: Vec<usize> =
+            order.iter().flat_map(|&i| if i % 3 == 0 { vec![i, i] } else { vec![i] }).collect();
+
+        // Store-and-forward reference.
+        let (mut reass, _) = Reassembly::from_first(&chunks[arrivals[0]]).unwrap();
+        for &i in &arrivals[1..] {
+            reass.accept(&chunks[i]).unwrap();
+        }
+        let reference = reass.into_payload().unwrap();
+
+        // Streamed: consume each fresh chunk at its offset as it arrives.
+        let hdr = Header::decode(&chunks[arrivals[0]]).unwrap();
+        let mut sa = StreamAssembly::new(&hdr);
+        let mut streamed = vec![0u8; sa.total_len()];
+        let mut fresh = 0;
+        for &i in &arrivals {
+            if let Some((off, p)) = sa.accept(&chunks[i]).unwrap() {
+                streamed[off..off + p.len()].copy_from_slice(p);
+                fresh += 1;
+            }
+        }
+        assert!(sa.complete());
+        assert_eq!(fresh, n, "every chunk delivered exactly once");
+        assert_eq!(streamed, reference);
+        assert_eq!(streamed, payload);
+    }
+
+    #[test]
+    fn stream_assembly_rejects_bad_chunks() {
+        let chunks = split(Op::Direct, 0, 1, 0, &vec![0u8; 2048], 1024);
+        let hdr = Header::decode(&chunks[0]).unwrap();
+        let mut sa = StreamAssembly::new(&hdr);
+        assert!(!sa.complete());
+        assert_eq!(sa.missing(), 2);
+        // Out-of-range index errors.
+        let bad = split(Op::Direct, 0, 1, 0, &vec![0u8; 4096], 1024).pop().unwrap();
+        assert!(sa.accept(&bad).is_err());
     }
 }

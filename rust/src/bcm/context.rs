@@ -157,6 +157,19 @@ impl BurstContext {
         self.ckpt.prior.get(&self.worker_id).cloned()
     }
 
+    /// Collective-aware checkpoint: every worker saves `state` at the same
+    /// logical cut. An entry barrier guarantees no worker checkpoints an
+    /// iteration its peers haven't reached; an exit barrier guarantees no
+    /// worker races ahead (and gets preempted mid-collective) before the
+    /// whole burst's cut is saved. Use this instead of bare
+    /// [`BurstContext::checkpoint`] when workers exchange data, so a
+    /// resumed run restarts from a mutually consistent iteration.
+    pub fn checkpoint_all(&self, state: Vec<u8>) -> Result<()> {
+        self.barrier()?;
+        self.checkpoint(state);
+        self.barrier()
+    }
+
     /// Blocking local-mailbox take wired to the flare's kill switch: a
     /// worker parked in a collective unwinds at a cancel/preempt trip
     /// instead of waiting out the full fabric timeout.
@@ -280,6 +293,13 @@ impl BurstContext {
     /// pack** (the pack leader fans it out locally) — remote volume is
     /// proportional to the number of packs, not workers (paper §5.3).
     pub fn broadcast(&self, root: usize, data: Option<Vec<u8>>) -> Result<Bytes> {
+        self.broadcast_shared(root, data.map(Arc::new))
+    }
+
+    /// [`BurstContext::broadcast`] over an already-shared buffer: the root
+    /// forwards the `Arc` it holds (e.g. a `reduce` result in an
+    /// all-reduce) with zero additional copies on the local path.
+    pub fn broadcast_shared(&self, root: usize, data: Option<Bytes>) -> Result<Bytes> {
         let ctr = self.next_coll();
         let t = &self.fabric.topology;
         let my_pack = self.pack_id();
@@ -287,8 +307,7 @@ impl BurstContext {
         let key = Self::local_key(Op::Broadcast, root, ctr);
 
         if self.worker_id == root {
-            let data =
-                Arc::new(data.ok_or_else(|| anyhow!("broadcast: root must supply data"))?);
+            let data = data.ok_or_else(|| anyhow!("broadcast: root must supply data"))?;
             // Local fan-out within the root's pack.
             for &w in t.members(my_pack) {
                 if w != root {
@@ -330,12 +349,19 @@ impl BurstContext {
     /// `f(acc, other)` folds in place — the accumulator buffer is reused
     /// across every fold step, so a reduce of `k` inputs of `n` bytes
     /// allocates O(n), not O(k·n) (§Perf).
+    ///
+    /// The result is `Arc`-shared: a root that isn't its pack's leader gets
+    /// the forwarded buffer as-is (no defensive copy), and the returned
+    /// handle can be re-broadcast via [`BurstContext::broadcast_shared`]
+    /// without another copy. Inter-pack child subtrees are received
+    /// *concurrently* (chunked transfers stream side by side) but folded in
+    /// fixed child order, so the result is deterministic.
     pub fn reduce(
         &self,
         root: usize,
         data: Vec<u8>,
         f: &(dyn Fn(&mut Vec<u8>, &[u8]) + Sync),
-    ) -> Result<Option<Vec<u8>>> {
+    ) -> Result<Option<Bytes>> {
         let ctr = self.next_coll();
         let t = &self.fabric.topology;
         let my_pack = self.pack_id();
@@ -347,10 +373,10 @@ impl BurstContext {
         if self.worker_id != leader {
             self.send_op(Op::Reduce, leader, data, ctr)?;
             // Non-leaders may still be the root (when root isn't its pack's
-            // leader): the root-pack leader forwards the final value.
+            // leader): the root-pack leader forwards the final value, and we
+            // hand back the same shared buffer it arrived in.
             if self.worker_id == root {
-                let v = self.recv_op(Op::Reduce, leader, ctr)?;
-                return Ok(Some(v.as_ref().clone()));
+                return Ok(Some(self.recv_op(Op::Reduce, leader, ctr)?));
             }
             return Ok(None);
         }
@@ -369,11 +395,29 @@ impl BurstContext {
         let n_packs = t.n_packs();
         let vp = (my_pack + n_packs - root_pack) % n_packs;
         let unvirt = |v: usize| (v + root_pack) % n_packs;
-        for c in [2 * vp + 1, 2 * vp + 2] {
-            if c < n_packs {
-                let child_leader = t.leader(unvirt(c));
-                let v = self.recv_op(Op::Reduce, child_leader, ctr)?;
+        let children: Vec<usize> =
+            [2 * vp + 1, 2 * vp + 2].into_iter().filter(|&c| c < n_packs).collect();
+        match children[..] {
+            [] => {}
+            [c] => {
+                let v = self.recv_op(Op::Reduce, t.leader(unvirt(c)), ctr)?;
                 f(&mut acc, &v);
+            }
+            [c1, c2, ..] => {
+                // Both child subtrees stream in concurrently; the first is
+                // folded as soon as it lands (while the second may still be
+                // arriving), then the second — fixed order, so `f` need not
+                // be commutative.
+                std::thread::scope(|s| -> Result<()> {
+                    let second =
+                        s.spawn(|| self.recv_op(Op::Reduce, t.leader(unvirt(c2)), ctr));
+                    let v1 = self.recv_op(Op::Reduce, t.leader(unvirt(c1)), ctr)?;
+                    f(&mut acc, &v1);
+                    drop(v1);
+                    let v2 = second.join().expect("reduce child receiver panicked")?;
+                    f(&mut acc, &v2);
+                    Ok(())
+                })?;
             }
         }
         if vp != 0 {
@@ -384,7 +428,7 @@ impl BurstContext {
 
         // Root pack's leader holds the final value.
         if self.worker_id == root {
-            Ok(Some(acc))
+            Ok(Some(Arc::new(acc)))
         } else {
             self.send_op(Op::Reduce, root, acc, ctr)?;
             Ok(None)
@@ -438,22 +482,54 @@ impl BurstContext {
 
     /// `gather(data, root)`: root receives every worker's payload ordered
     /// by worker id (extension collective; paper leaves it as future work).
+    ///
+    /// Remote sources are received *concurrently* (each source's chunked
+    /// transfer streams independently through the pack pool) while the
+    /// root drains same-pack mailbox hand-offs on its own thread; the
+    /// returned vector is still ordered by worker id.
     pub fn gather(&self, root: usize, data: Vec<u8>) -> Result<Option<Vec<Bytes>>> {
         let ctr = self.next_coll();
         if self.worker_id != root {
             self.send_op(Op::Gather, root, data, ctr)?;
             return Ok(None);
         }
-        let own = Arc::new(data);
-        let mut out = Vec::with_capacity(self.burst_size());
-        for src in 0..self.burst_size() {
-            if src == root {
-                out.push(own.clone());
-            } else {
-                out.push(self.recv_op(Op::Gather, src, ctr)?);
+        let t = &self.fabric.topology;
+        let n = self.burst_size();
+        let mut out: Vec<Option<Bytes>> = (0..n).map(|_| None).collect();
+        out[root] = Some(Arc::new(data));
+        let remote: Vec<usize> =
+            (0..n).filter(|&s| s != root && !t.same_pack(self.worker_id, s)).collect();
+        let slots: Vec<Mutex<Option<Result<Bytes>>>> =
+            remote.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicU64::new(0);
+        let width = remote.len().min(self.fabric.config.pool_cap).max(1);
+        std::thread::scope(|s| -> Result<()> {
+            if !remote.is_empty() {
+                for _ in 0..width {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed) as usize;
+                        let Some(&src) = remote.get(i) else { return };
+                        *slots[i].lock().unwrap() =
+                            Some(self.recv_op(Op::Gather, src, ctr));
+                    });
+                }
             }
+            // Same-pack hand-offs drain here while remote transfers stream.
+            for src in 0..n {
+                if src != root && t.same_pack(self.worker_id, src) {
+                    out[src] = Some(self.recv_op(Op::Gather, src, ctr)?);
+                }
+            }
+            Ok(())
+        })?;
+        for (i, slot) in slots.into_iter().enumerate() {
+            out[remote[i]] = Some(
+                slot.into_inner()
+                    .unwrap()
+                    .expect("gather remote receiver did not run")?,
+            );
         }
-        Ok(Some(out))
+        Ok(Some(out.into_iter().map(|b| b.expect("gather slot unfilled")).collect()))
     }
 
     /// `scatter([data], root)`: root supplies one payload per worker; each

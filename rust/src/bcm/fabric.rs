@@ -4,7 +4,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -18,12 +18,6 @@ use crate::metrics::TrafficStats;
 use crate::util::bytes::MIB;
 use crate::util::cancel::CancelToken;
 
-/// Upper bound on one blocking backend wait inside a remote receive when a
-/// cancel token is wired in: the flare's kill/preempt trip has no way to
-/// wake a wait parked inside the backend, so remote waits run in bounded
-/// slices and re-check the token between them.
-const REMOTE_CANCEL_SLICE: Duration = Duration::from_millis(20);
-
 /// Fabric configuration.
 #[derive(Debug, Clone)]
 pub struct FabricConfig {
@@ -34,11 +28,11 @@ pub struct FabricConfig {
     /// Max concurrent backend connections per pack ("shared connection
     /// pool", paper §4.5). Defaults to 2× pack size, capped.
     pub pool_cap: usize,
-    /// The flare's kill switch: when set, remote waits poll it between
-    /// bounded slices so a preempted or cancelled worker blocked in a
-    /// collective unwinds at the trip instead of waiting out `timeout`.
-    /// `None` (the default) keeps the plain single full-length blocking
-    /// wait — standalone fabrics pay no polling overhead.
+    /// The flare's kill switch: when set, remote waits are wired to it —
+    /// the backends register a waker on the token so a preempted or
+    /// cancelled worker blocked in a collective unwinds at the trip, not
+    /// after `timeout` (and with no poll slices on the wait path).
+    /// `None` (the default) keeps the plain full-length blocking wait.
     pub cancel: Option<CancelToken>,
 }
 
@@ -137,6 +131,8 @@ impl CommFabric {
         let dst_u32 = dst.map(|d| d as u32).unwrap_or(u32::MAX);
         let chunks =
             chunk::split(op, src as u32, dst_u32, ctr, payload, self.config.chunk_size);
+        // Framing copies the payload once into the wire chunks.
+        self.traffic.record_copied(payload.len() as u64);
         let n = chunks.len();
         let src_pack = self.topology.pack_of(src);
         self.nic_tx[src_pack].take(payload.len() as f64);
@@ -192,7 +188,9 @@ impl CommFabric {
     }
 
     /// Chunked remote receive of the message (`op`, `src`→`dst`, `ctr`).
-    /// `consume=false` is the read-many path (broadcast readers).
+    /// `consume=false` is the read-many path (broadcast readers). Built on
+    /// [`CommFabric::remote_recv_streaming`]: chunks are written straight
+    /// into the result buffer as they arrive.
     pub fn remote_recv(
         &self,
         op: Op,
@@ -202,67 +200,67 @@ impl CommFabric {
         reader_pack: usize,
         consume: bool,
     ) -> Result<Vec<u8>> {
+        let buf: Mutex<Vec<u8>> = Mutex::new(Vec::new());
+        let total =
+            self.remote_recv_streaming(op, src, dst, ctr, reader_pack, consume, &|total,
+                                                                                  off,
+                                                                                  p| {
+                let mut b = buf.lock().unwrap();
+                if b.len() < total {
+                    b.resize(total, 0);
+                }
+                b[off..off + p.len()].copy_from_slice(p);
+            })?;
+        let b = buf.into_inner().unwrap();
+        debug_assert_eq!(b.len(), total);
+        Ok(b)
+    }
+
+    /// Streaming chunked remote receive: `sink(total_len, offset, payload)`
+    /// is invoked exactly once per distinct chunk, the moment it arrives
+    /// (duplicates deduped; arrival order arbitrary; calls serialized). A
+    /// reduction or concatenation consumes each chunk while the remaining
+    /// fetches are still in flight, instead of waiting for the whole
+    /// payload to be reassembled first. Returns the payload's total length.
+    pub fn remote_recv_streaming(
+        &self,
+        op: Op,
+        src: usize,
+        dst: Option<usize>,
+        ctr: u64,
+        reader_pack: usize,
+        consume: bool,
+        sink: &(dyn Fn(usize, usize, &[u8]) + Sync),
+    ) -> Result<usize> {
         let dst_u32 = dst.map(|d| d as u32).unwrap_or(u32::MAX);
         let get = |key: &str| -> Result<Bytes> {
             self.traffic.record_backend_op();
-            let data = match &self.config.cancel {
-                // No kill switch wired in: one plain full-length blocking
-                // wait (standalone fabrics; zero polling overhead, hard
-                // backend errors propagate immediately).
-                None => {
-                    if consume {
-                        self.backend.fetch(key, self.config.timeout)?
-                    } else {
-                        self.backend.read(key, self.config.timeout)?
-                    }
-                }
-                // Platform run: the wait runs in bounded slices so the
-                // flare's cancel/preempt trip is observed at the trip, not
-                // after the full timeout (timed-out slices pay no modeled
-                // service cost).
-                Some(cancel) => {
-                    let deadline = Instant::now() + self.config.timeout;
-                    loop {
-                        let slice = deadline
-                            .saturating_duration_since(Instant::now())
-                            .min(REMOTE_CANCEL_SLICE);
-                        let asked = Instant::now();
-                        let got = if consume {
-                            self.backend.fetch(key, slice)
-                        } else {
-                            self.backend.read(key, slice)
-                        };
-                        match got {
-                            Ok(d) => break d,
-                            Err(e) => {
-                                if let Some(reason) = cancel.reason() {
-                                    return Err(anyhow!(
-                                        "remote wait for '{key}' aborted: flare {}",
-                                        reason.name()
-                                    ));
-                                }
-                                // A backend that errored well before the
-                                // slice lapsed failed *hard* (bad key,
-                                // connection refused, ...), it did not
-                                // time out: propagate instead of
-                                // retrying it for the rest of the
-                                // timeout.
-                                let failed_fast = asked.elapsed() < slice / 2
-                                    && slice >= Duration::from_millis(2);
-                                if failed_fast || Instant::now() >= deadline {
-                                    return Err(e);
-                                }
-                            }
-                        }
-                    }
-                }
+            let cancel = self.config.cancel.as_ref();
+            let res = if consume {
+                self.backend.fetch_cancellable(key, self.config.timeout, cancel)
+            } else {
+                self.backend.read_cancellable(key, self.config.timeout, cancel)
             };
-            self.traffic.record_remote_rx(data.len() as u64);
-            Ok(data)
+            match res {
+                Ok(data) => {
+                    self.traffic.record_remote_rx(data.len() as u64);
+                    Ok(data)
+                }
+                // The flare's kill switch tripping while we were parked is
+                // reported as the abort it is, whatever error the backend
+                // surfaced first.
+                Err(e) => match cancel.and_then(CancelToken::reason) {
+                    Some(reason) => Err(anyhow!(
+                        "remote wait for '{key}' aborted: flare {}",
+                        reason.name()
+                    )),
+                    None => Err(e),
+                },
+            }
         };
         // First chunk tells us the full framing.
         let first = get(&self.chunk_key(op, src as u32, dst_u32, ctr, 0))?;
-        let (reass, hdr) = chunk::Reassembly::from_first(&first)?;
+        let hdr = chunk::Header::decode(&first)?;
         if hdr.src != src as u32 || hdr.counter != ctr || hdr.op != op {
             return Err(anyhow!(
                 "chunk header mismatch: got src={} ctr={} op={:?}, want src={src} ctr={ctr} op={op:?}",
@@ -271,13 +269,20 @@ impl CommFabric {
                 hdr.op
             ));
         }
-        let n = hdr.n_chunks as usize;
+        let mut sa = chunk::StreamAssembly::new(&hdr);
+        let total = sa.total_len();
         self.nic_rx[reader_pack].take(hdr.total_len as f64);
-        if n == 1 {
-            return reass.into_payload();
+        if let Some((off, p)) = sa.accept(&first)? {
+            self.traffic.record_copied(p.len() as u64);
+            sink(total, off, p);
         }
-        // Remaining chunks fetched concurrently through the pack pool.
-        let reass = Mutex::new(reass);
+        if sa.complete() {
+            return Ok(total);
+        }
+        // Remaining chunks fetched concurrently through the pack pool and
+        // handed to the sink as they land.
+        let n = hdr.n_chunks as usize;
+        let sa = Mutex::new(sa);
         let next = AtomicUsize::new(1);
         let width = self.pool_width(reader_pack, n - 1);
         let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
@@ -290,9 +295,20 @@ impl CommFabric {
                     }
                     match get(&self.chunk_key(op, src as u32, dst_u32, ctr, i)) {
                         Ok(data) => {
-                            if let Err(e) = reass.lock().unwrap().accept(&data) {
-                                *err.lock().unwrap() = Some(e);
-                                return;
+                            // Dedup + offset under the tracker lock; the
+                            // sink runs inside it too, so consumers see
+                            // serialized, exactly-once chunk deliveries.
+                            let mut sa = sa.lock().unwrap();
+                            match sa.accept(&data) {
+                                Ok(Some((off, p))) => {
+                                    self.traffic.record_copied(p.len() as u64);
+                                    sink(total, off, p);
+                                }
+                                Ok(None) => {}
+                                Err(e) => {
+                                    *err.lock().unwrap() = Some(e);
+                                    return;
+                                }
                             }
                         }
                         Err(e) => {
@@ -306,7 +322,11 @@ impl CommFabric {
         if let Some(e) = err.into_inner().unwrap() {
             return Err(e);
         }
-        reass.into_inner().unwrap().into_payload()
+        let sa = sa.into_inner().unwrap();
+        if !sa.complete() {
+            return Err(anyhow!("streamed receive incomplete: {} chunks missing", sa.missing()));
+        }
+        Ok(total)
     }
 
     /// Flare teardown: drop all backend state for this flare.
@@ -383,6 +403,56 @@ mod tests {
         );
         // Config asked for 256 MiB chunks but AMQP caps at 128 MiB.
         assert!(f.config.chunk_size <= 128 * MIB);
+    }
+
+    #[test]
+    fn cancelled_remote_wait_unwinds_at_the_trip_with_reason() {
+        let params = NetParams::scaled(1e-6);
+        let backend = BackendKind::DragonflyList.build(&params);
+        let token = CancelToken::new();
+        let f = CommFabric::new(
+            "tc",
+            PackTopology::contiguous(2, 1),
+            backend,
+            &params,
+            FabricConfig {
+                timeout: Duration::from_secs(60),
+                cancel: Some(token.clone()),
+                ..FabricConfig::default()
+            },
+        );
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            f2.remote_recv(Op::Direct, 0, Some(1), 0, 1, true).unwrap_err()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let trip = std::time::Instant::now();
+        token.preempt();
+        let err = h.join().unwrap();
+        assert!(err.to_string().contains("aborted: flare preempted"), "{err}");
+        assert!(
+            trip.elapsed() < Duration::from_secs(2),
+            "remote wait unwind took {:?} after the trip",
+            trip.elapsed()
+        );
+    }
+
+    #[test]
+    fn streaming_recv_delivers_each_chunk_once() {
+        let f = fabric(4, 2, 128);
+        let payload: Vec<u8> = (0..1500).map(|i| (i % 251) as u8).collect();
+        f.remote_send(Op::Gather, 0, Some(2), 3, &payload).unwrap();
+        let got = Mutex::new(vec![0u8; payload.len()]);
+        let calls = AtomicUsize::new(0);
+        let total = f
+            .remote_recv_streaming(Op::Gather, 0, Some(2), 3, 1, true, &|_, off, p| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                got.lock().unwrap()[off..off + p.len()].copy_from_slice(p);
+            })
+            .unwrap();
+        assert_eq!(total, payload.len());
+        assert_eq!(calls.load(Ordering::Relaxed), payload.len().div_ceil(128));
+        assert_eq!(got.into_inner().unwrap(), payload);
     }
 
     #[test]

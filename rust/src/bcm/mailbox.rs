@@ -5,6 +5,13 @@
 //! worker's mailbox; no `shm_open`/`mmap`, no copies. Keys encode
 //! `(op, src, dst, counter)` so out-of-order arrivals and selective receive
 //! work naturally.
+//!
+//! Cancellation is event-driven: a cancel/preempt trip on the flare's
+//! [`CancelToken`] notifies the mailbox condvar directly through a
+//! registered waker, so blocked takers unwind with sub-millisecond latency
+//! instead of polling the token in bounded slices. One waker is registered
+//! per `(mailbox, token)` pair — the blocked-take fast path allocates
+//! nothing per wait.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -12,21 +19,35 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::util::cancel::CancelToken;
+use crate::util::cancel::{CancelToken, Waker};
 
 pub type Bytes = Arc<Vec<u8>>;
 
-/// Upper bound on one condvar wait slice inside a cancellable take: a
-/// cancel/preempt trip has no condvar of its own, so blocked takers poll
-/// the token at least this often. Small enough that a preempted worker
-/// unwinds promptly; large enough to be invisible next to real waits.
-const CANCEL_POLL_SLICE: Duration = Duration::from_millis(20);
+/// Slot table plus the strong waker handles that keep per-token trip
+/// notifications alive for the mailbox's lifetime.
+#[derive(Default)]
+struct Inner {
+    slots: HashMap<String, Bytes>,
+    /// Keyed by [`CancelToken::id`]: one registered waker per token, ever.
+    wakers: HashMap<usize, Arc<Waker>>,
+}
+
+#[derive(Default)]
+struct Shared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
 
 /// One worker's inbox: keyed slots with blocking take.
-#[derive(Debug, Default)]
+#[derive(Default)]
 pub struct Mailbox {
-    slots: Mutex<HashMap<String, Bytes>>,
-    cv: Condvar,
+    shared: Arc<Shared>,
+}
+
+impl std::fmt::Debug for Mailbox {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mailbox").field("len", &self.len()).finish()
+    }
 }
 
 impl Mailbox {
@@ -38,8 +59,8 @@ impl Mailbox {
     /// Duplicate keys overwrite — at-least-once delivery upstream means the
     /// payload for a key is always identical.
     pub fn put(&self, key: String, data: Bytes) {
-        self.slots.lock().unwrap().insert(key, data);
-        self.cv.notify_all();
+        self.shared.inner.lock().unwrap().slots.insert(key, data);
+        self.shared.cv.notify_all();
     }
 
     /// Blocking take: waits until `key` is present, then removes it.
@@ -49,9 +70,9 @@ impl Mailbox {
 
     /// [`Mailbox::take`] that also unwinds when `cancel` trips: a worker
     /// preempted or killed while blocked in a collective must release its
-    /// reservation at the trip, not after the full fabric timeout. The
-    /// token has no condvar, so the wait runs in bounded slices and polls
-    /// it — the unwind latency is one [`CANCEL_POLL_SLICE`], not `timeout`.
+    /// reservation at the trip, not after the full fabric timeout. The trip
+    /// notifies this mailbox's condvar through a waker registered on the
+    /// token, so the unwind latency is a condvar wakeup, not a poll slice.
     pub fn take_cancellable(
         &self,
         key: &str,
@@ -59,11 +80,33 @@ impl Mailbox {
         cancel: Option<&CancelToken>,
     ) -> Result<Bytes> {
         let deadline = Instant::now() + timeout;
-        let mut slots = self.slots.lock().unwrap();
+        let mut inner = self.shared.inner.lock().unwrap();
+        if let Some(token) = cancel {
+            if !inner.wakers.contains_key(&token.id()) {
+                let shared = Arc::downgrade(&self.shared);
+                let waker: Arc<Waker> = Arc::new(move || {
+                    if let Some(s) = shared.upgrade() {
+                        // Briefly acquire the slot lock before notifying so a
+                        // taker between its reason() check and its wait can
+                        // never miss the wakeup.
+                        drop(s.inner.lock().unwrap());
+                        s.cv.notify_all();
+                    }
+                });
+                inner.wakers.insert(token.id(), waker.clone());
+                // The registry may invoke the waker inline (already-tripped
+                // token) and the waker takes `inner` — release it first.
+                drop(inner);
+                token.register_waker(&waker);
+                inner = self.shared.inner.lock().unwrap();
+            }
+        }
         loop {
-            if let Some(v) = slots.remove(key) {
+            if let Some(v) = inner.slots.remove(key) {
                 return Ok(v);
             }
+            // Registered-then-check ordering: a trip landing after this
+            // check still wakes the wait below via the waker.
             if let Some(reason) = cancel.and_then(CancelToken::reason) {
                 return Err(anyhow!(
                     "mailbox take of '{key}' aborted: flare {}",
@@ -74,17 +117,13 @@ impl Mailbox {
             if now >= deadline {
                 return Err(anyhow!("mailbox take timed out waiting for '{key}'"));
             }
-            let mut slice = deadline - now;
-            if cancel.is_some() {
-                slice = slice.min(CANCEL_POLL_SLICE);
-            }
-            let (guard, _t) = self.cv.wait_timeout(slots, slice).unwrap();
-            slots = guard;
+            let (guard, _t) = self.shared.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
         }
     }
 
     pub fn len(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.shared.inner.lock().unwrap().slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -148,7 +187,7 @@ mod tests {
         });
         let sw = Instant::now();
         // A 60 s timeout, but the trip lands after ~30 ms: the take must
-        // return at the trip (plus at most one poll slice), naming it.
+        // return at the trip, naming it.
         let err = m
             .take_cancellable("never", Duration::from_secs(60), Some(&token))
             .unwrap_err();
@@ -156,9 +195,66 @@ mod tests {
         assert!(err.to_string().contains("preempted"), "{err}");
         assert!(
             sw.elapsed() < Duration::from_secs(5),
-            "unwind took {:?}, should be ~one poll slice past the trip",
+            "unwind took {:?}, should follow the trip promptly",
             sw.elapsed()
         );
+    }
+
+    #[test]
+    fn blocked_taker_wakeup_latency_is_sub_slice() {
+        // Regression for the event-driven rewire: the old implementation
+        // polled the token in 20 ms slices, so worst-case unwind latency was
+        // a full slice. With a registered waker the trip itself wakes the
+        // condvar — latency must be well under one old slice.
+        let m = Mailbox::new();
+        let token = CancelToken::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let m2 = m.clone();
+        let t2 = token.clone();
+        let h = std::thread::spawn(move || {
+            let err = m2
+                .take_cancellable("never", Duration::from_secs(60), Some(&t2))
+                .unwrap_err();
+            tx.send(Instant::now()).unwrap();
+            err
+        });
+        std::thread::sleep(Duration::from_millis(50)); // let the taker block
+        let trip = Instant::now();
+        token.preempt();
+        let woke = rx.recv().unwrap();
+        let err = h.join().unwrap();
+        assert!(err.to_string().contains("preempted"), "{err}");
+        let latency = woke.duration_since(trip);
+        assert!(
+            latency < Duration::from_millis(10),
+            "wakeup latency {latency:?} — the trip must notify the condvar, \
+             not wait out a poll slice"
+        );
+    }
+
+    #[test]
+    fn waker_is_registered_once_per_token() {
+        let m = Mailbox::new();
+        let token = CancelToken::new();
+        for _ in 0..5 {
+            // Short cancellable waits with the same token: each re-uses the
+            // one registered waker rather than allocating another.
+            let _ = m.take_cancellable("never", Duration::from_millis(1), Some(&token));
+        }
+        assert_eq!(m.shared.inner.lock().unwrap().wakers.len(), 1);
+    }
+
+    #[test]
+    fn already_tripped_token_fails_fast_without_blocking() {
+        let m = Mailbox::new();
+        let token = CancelToken::new();
+        token.cancel();
+        let sw = Instant::now();
+        let err = m
+            .take_cancellable("never", Duration::from_secs(60), Some(&token))
+            .unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert!(sw.elapsed() < Duration::from_secs(1));
     }
 
     #[test]

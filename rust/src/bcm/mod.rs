@@ -6,6 +6,33 @@
 //! (Redis / DragonflyDB / RabbitMQ / S3 simulations). Collectives
 //! (broadcast, reduce, all-to-all, gather, scatter) are structured so that
 //! remote volume scales with the number of *packs*, not workers.
+//!
+//! # Fabric hot path
+//!
+//! Two invariants keep the delivery path cheap; `benches/bcm_hotpath.rs`
+//! tracks both in `BENCH_fabric.json`:
+//!
+//! - **Zero-copy ownership.** A payload becomes a [`Bytes`]
+//!   (`Arc<Vec<u8>>`) once, at the producer, and every local hand-off —
+//!   mailbox delivery, broadcast fan-out, a reduce result returned at a
+//!   non-leader root, gather/all-to-all inboxes — clones the `Arc`, never
+//!   the bytes. Receivers get shared immutable buffers; anyone who needs
+//!   to mutate clones explicitly (`as_ref().clone()`). The fabric only
+//!   copies payload bytes at the remote boundary (chunk framing on send,
+//!   chunk consumption on receive), so `TrafficStats::copied_bytes` over
+//!   delivered bytes is the figure of merit. Pipelined remote reduce and
+//!   gather fold/store chunks as they stream in, preserving a fixed
+//!   deterministic fold order.
+//!
+//! - **Event-driven waits.** Blocked takers never poll. A mailbox take or
+//!   backend fetch parks on a condvar; `put` notifies it, and a
+//!   [`crate::util::cancel::CancelToken`] trip wakes it through a waker
+//!   registered on the token (the waker briefly acquires the slot lock
+//!   before notifying, so a taker between its reason check and its wait
+//!   cannot miss the wakeup). Cancellation and delivery latency are a
+//!   condvar wakeup — microseconds — instead of the legacy 20 ms poll
+//!   slice, which survives only as `polled_cancellable`, the fallback for
+//!   custom [`RemoteBackend`]s that opt out of the waker protocol.
 
 pub mod backend;
 pub mod backends;
@@ -124,7 +151,7 @@ mod tests {
                 for (w, v) in got.iter().enumerate() {
                     if w == root {
                         assert_eq!(
-                            u64::from_le_bytes(v.as_deref().unwrap().try_into().unwrap()),
+                            u64::from_le_bytes(v.as_ref().unwrap().as_slice().try_into().unwrap()),
                             expected,
                             "g={g} root={root}"
                         );
@@ -258,7 +285,8 @@ mod tests {
             for (w, (blen, r)) in got.iter().enumerate() {
                 assert_eq!(*blen, payload);
                 if w == root {
-                    let sum = u64::from_le_bytes(r.as_deref().unwrap().try_into().unwrap());
+                    let sum =
+                        u64::from_le_bytes(r.as_ref().unwrap().as_slice().try_into().unwrap());
                     assert_eq!(sum, size as u64);
                 } else {
                     assert!(r.is_none());

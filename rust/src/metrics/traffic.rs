@@ -19,6 +19,11 @@ pub struct TrafficStats {
     pub remote_msgs: AtomicU64,
     /// Backend requests issued (chunk puts + gets), for op-overhead studies.
     pub backend_ops: AtomicU64,
+    /// Payload bytes physically copied by the fabric (chunk framing on
+    /// send, chunk consumption on receive). Local `Arc` hand-offs copy
+    /// nothing, so copied / delivered is the zero-copy figure of merit
+    /// tracked by `BENCH_fabric.json`.
+    pub copied_bytes: AtomicU64,
 }
 
 impl TrafficStats {
@@ -44,6 +49,10 @@ impl TrafficStats {
         self.backend_ops.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_copied(&self, bytes: u64) {
+        self.copied_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn local(&self) -> u64 {
         self.local_bytes.load(Ordering::Relaxed)
     }
@@ -66,6 +75,10 @@ impl TrafficStats {
         self.backend_ops.load(Ordering::Relaxed)
     }
 
+    pub fn copied(&self) -> u64 {
+        self.copied_bytes.load(Ordering::Relaxed)
+    }
+
     /// Fraction of all moved bytes that stayed local.
     pub fn locality_ratio(&self) -> f64 {
         let l = self.local() as f64;
@@ -83,6 +96,7 @@ impl TrafficStats {
         self.local_msgs.store(0, Ordering::Relaxed);
         self.remote_msgs.store(0, Ordering::Relaxed);
         self.backend_ops.store(0, Ordering::Relaxed);
+        self.copied_bytes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -97,9 +111,11 @@ mod tests {
         t.record_remote_tx(40);
         t.record_remote_rx(60);
         t.record_backend_op();
+        t.record_copied(25);
         assert_eq!(t.local(), 100);
         assert_eq!(t.remote(), 100);
         assert_eq!(t.ops(), 1);
+        assert_eq!(t.copied(), 25);
         assert!((t.locality_ratio() - 0.5).abs() < 1e-12);
     }
 

@@ -1354,10 +1354,12 @@ mod tests {
                     *a = (x + y).to_le_bytes().to_vec();
                 };
                 let r = ctx.reduce(0, (ctx.worker_id as u64).to_le_bytes().to_vec(), &f)?;
+                // All-reduce: re-broadcast the reduce result's shared buffer
+                // without copying it.
                 let sum = if ctx.worker_id == 0 {
-                    ctx.broadcast(0, Some(r.unwrap()))?
+                    ctx.broadcast_shared(0, Some(r.unwrap()))?
                 } else {
-                    ctx.broadcast(0, None)?
+                    ctx.broadcast_shared(0, None)?
                 };
                 Ok(Json::Num(u64::from_le_bytes(sum.as_slice().try_into().unwrap()) as f64))
             }),

@@ -365,11 +365,20 @@ pub struct BurstDb {
     /// lock is released, so status reads never stall behind a WAL write
     /// or a snapshot compaction.
     store: OnceLock<Arc<DurableStore>>,
-    /// Sequenced WAL entries awaiting append, in db-mutation order.
-    wal_queue: Mutex<VecDeque<Json>>,
+    /// Sequenced WAL items awaiting append, in db-mutation order.
+    wal_queue: Mutex<VecDeque<WalItem>>,
     /// Single-drainer gate: held across the pop→append loop so two
     /// concurrent drains cannot reorder entries between queue and disk.
     wal_drain: Mutex<()>,
+}
+
+/// One staged unit of durable work. Checkpoints stay a separate variant so
+/// the payload rides the queue as an `Arc` clone — it is never base64'd
+/// into a JSON entry; [`DurableStore::append_checkpoint`] writes the raw
+/// bytes to the flare's side-file and appends only a reference line.
+enum WalItem {
+    Entry(Json),
+    Checkpoint { flare_id: String, worker: usize, epoch: u64, data: Bytes },
 }
 
 impl Default for BurstDb {
@@ -413,12 +422,16 @@ impl BurstDb {
     /// table's lock — the queue push is the only work done there; the
     /// disk I/O happens in [`BurstDb::drain_wal`] once the lock is gone.
     fn stage_entry(&self, entry: Json) {
+        self.stage_item(WalItem::Entry(entry));
+    }
+
+    fn stage_item(&self, item: WalItem) {
         if self.store.get().is_some() {
-            self.wal_queue.lock().unwrap().push_back(entry);
+            self.wal_queue.lock().unwrap().push_back(item);
         }
     }
 
-    /// Append every staged entry to the durable store, preserving the
+    /// Append every staged item to the durable store, preserving the
     /// staging order. Called with no db lock held. Best-effort: a WAL I/O
     /// failure degrades to in-memory-only operation, never takes the
     /// control plane down.
@@ -426,9 +439,15 @@ impl BurstDb {
         let Some(store) = self.store.get() else { return };
         let _drainer = self.wal_drain.lock().unwrap();
         loop {
-            let entry = self.wal_queue.lock().unwrap().pop_front();
-            let Some(entry) = entry else { return };
-            if let Err(e) = store.append_entry(entry) {
+            let item = self.wal_queue.lock().unwrap().pop_front();
+            let Some(item) = item else { return };
+            let r = match item {
+                WalItem::Entry(entry) => store.append_entry(entry),
+                WalItem::Checkpoint { flare_id, worker, epoch, data } => {
+                    store.append_checkpoint(&flare_id, worker, epoch, &data)
+                }
+            };
+            if let Err(e) = r {
                 eprintln!("burstc: WAL append failed (state is in-memory only): {e}");
             }
         }
@@ -586,16 +605,6 @@ impl BurstDb {
     /// worker unwinding after its flare was cancelled must not resurrect
     /// state the terminal transition already discarded.
     pub fn put_checkpoint(&self, flare_id: &str, worker: usize, epoch: u64, data: Bytes) {
-        // The WAL entry (base64 of the payload, O(bytes)) is a pure
-        // function of the arguments: build it before taking any lock, and
-        // only when a durable store can consume it — the flares-lock
-        // critical section must stay a pointer push, or checkpoints would
-        // reintroduce the status-read stall the staged queue removed.
-        let entry = self
-            .store
-            .get()
-            .is_some()
-            .then(|| DurableStore::entry_checkpoint(flare_id, worker, epoch, &data));
         {
             let flares = self.flares.lock().unwrap();
             let live = flares
@@ -608,9 +617,17 @@ impl BurstDb {
             let mut ckpts = self.ckpts.lock().unwrap();
             let slot = ckpts.entry(flare_id.to_string()).or_default();
             slot.epoch = slot.epoch.max(epoch);
-            if let Some(entry) = entry {
-                self.stage_entry(entry);
-            }
+            // Staging is a pointer push: the payload rides as an `Arc`
+            // clone and is only materialized on disk by `drain_wal` (into
+            // the flare's side-file, never as base64 in a WAL line), so
+            // the flares-lock critical section stays O(1) and status
+            // reads never stall behind checkpoint bytes.
+            self.stage_item(WalItem::Checkpoint {
+                flare_id: flare_id.to_string(),
+                worker,
+                epoch,
+                data: data.clone(),
+            });
             slot.by_worker.insert(worker, data);
         }
         self.drain_wal();

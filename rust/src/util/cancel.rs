@@ -1,4 +1,4 @@
-//! Cooperative cancellation token with *reasons*.
+//! Cooperative cancellation token with *reasons* and registered wakers.
 //!
 //! A `CancelToken` is shared between a flare's submitter, the controller's
 //! kill path (`DELETE /v1/flares/<id>`), the scheduler's preemption path,
@@ -19,12 +19,39 @@
 //! When both fire, the user kill wins ([`CancelToken::reason`] reports
 //! `User`), so a cancel racing a preempt-requeue can never be undone by the
 //! requeue.
+//!
+//! # Wakers
+//!
+//! Threads that block on a condvar while honouring a token (mailbox takers,
+//! remote-backend fetch loops) register a *waker* — a callback invoked on
+//! trip — via [`CancelToken::register_waker`]. This turns cancellation from
+//! a polled event (historically 20 ms slices) into a notified one: a trip
+//! wakes every blocked waiter directly, with sub-millisecond latency.
+//!
+//! Protocol (see `bcm/mod.rs` for the full hot-path notes):
+//!
+//! * Wakers are stored as `Weak`; the registering side owns the strong
+//!   `Arc` so a dropped mailbox/backend never leaks callbacks. Dead
+//!   entries are pruned on every registration.
+//! * A trip snapshots the live wakers *under* the registry lock but
+//!   invokes them *after* releasing it, so a waker may itself take locks
+//!   (e.g. the mailbox mutex before `notify_all`) without deadlocking
+//!   against a concurrent `register_waker`.
+//! * To close the trip-during-registration race, waiters must
+//!   register-then-check: call `register_waker`, *then* re-check
+//!   [`CancelToken::reason`] before blocking.
+//! * Registration after the trip invokes the waker immediately — a late
+//!   registrant can never sleep through an already-tripped token.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 
 const USER: u8 = 1 << 0;
 const PREEMPT: u8 = 1 << 1;
+
+/// Callback invoked when the owning token trips. Must be cheap and must not
+/// block for long: it runs on the *tripping* thread (controller/scheduler).
+pub type Waker = dyn Fn() + Send + Sync;
 
 /// Why a flare's token was tripped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,39 +72,86 @@ impl CancelReason {
     }
 }
 
+#[derive(Default)]
+struct Inner {
+    bits: AtomicU8,
+    wakers: Mutex<Vec<Weak<Waker>>>,
+}
+
+impl std::fmt::Debug for Inner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Inner").field("bits", &self.bits).finish_non_exhaustive()
+    }
+}
+
 /// Shared cancellation flag (cheap to clone; all clones observe the trip).
 #[derive(Debug, Clone, Default)]
-pub struct CancelToken(Arc<AtomicU8>);
+pub struct CancelToken(Arc<Inner>);
 
 impl CancelToken {
     pub fn new() -> CancelToken {
         CancelToken::default()
     }
 
-    /// Trip the token as a user kill. Idempotent; never blocks.
+    /// Stable identity of the shared token (same across clones). Lets a
+    /// mailbox/backend register one waker per *token* rather than one per
+    /// wait, keeping the blocked-take fast path allocation-free.
+    pub fn id(&self) -> usize {
+        Arc::as_ptr(&self.0) as usize
+    }
+
+    /// Register a callback to be invoked when the token trips. Stored weak:
+    /// the caller keeps the strong `Arc` alive for as long as it wants the
+    /// notification. If the token has *already* tripped the waker is invoked
+    /// immediately (register-then-check still recommended for waiters).
+    pub fn register_waker(&self, waker: &Arc<Waker>) {
+        {
+            let mut ws = self.0.wakers.lock().unwrap();
+            ws.retain(|w| w.strong_count() > 0);
+            ws.push(Arc::downgrade(waker));
+        }
+        if self.0.bits.load(Ordering::Acquire) != 0 {
+            waker();
+        }
+    }
+
+    /// Snapshot live wakers under the lock, invoke them after releasing it.
+    fn wake_all(&self) {
+        let live: Vec<Arc<Waker>> =
+            self.0.wakers.lock().unwrap().iter().filter_map(|w| w.upgrade()).collect();
+        for w in live {
+            w();
+        }
+    }
+
+    /// Trip the token as a user kill. Idempotent; never blocks (beyond the
+    /// short waker-registry lock). Wakes all registered waiters.
     pub fn cancel(&self) {
-        self.0.fetch_or(USER, Ordering::AcqRel);
+        self.0.bits.fetch_or(USER, Ordering::AcqRel);
+        self.wake_all();
     }
 
     /// Trip the token as a scheduler preemption. Idempotent; never blocks.
+    /// Wakes all registered waiters.
     pub fn preempt(&self) {
-        self.0.fetch_or(PREEMPT, Ordering::AcqRel);
+        self.0.bits.fetch_or(PREEMPT, Ordering::AcqRel);
+        self.wake_all();
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Acquire) != 0
+        self.0.bits.load(Ordering::Acquire) != 0
     }
 
     /// Was the *user* kill path tripped? (A preempt does not count: the
     /// requeue path uses this to let `cancel_flare` win the race.)
     pub fn user_cancelled(&self) -> bool {
-        self.0.load(Ordering::Acquire) & USER != 0
+        self.0.bits.load(Ordering::Acquire) & USER != 0
     }
 
     /// Why the token tripped; `None` if it has not. A user kill always wins
     /// over a concurrent preemption.
     pub fn reason(&self) -> Option<CancelReason> {
-        let bits = self.0.load(Ordering::Acquire);
+        let bits = self.0.bits.load(Ordering::Acquire);
         if bits & USER != 0 {
             Some(CancelReason::User)
         } else if bits & PREEMPT != 0 {
@@ -91,6 +165,7 @@ impl CancelToken {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn clones_share_the_trip() {
@@ -126,5 +201,59 @@ mod tests {
         assert_eq!(t.reason(), Some(CancelReason::User));
         assert_eq!(CancelReason::User.name(), "cancelled");
         assert_eq!(CancelReason::Preempted.name(), "preempted");
+    }
+
+    #[test]
+    fn wakers_fire_on_trip_and_clones_share_identity() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert_eq!(t.id(), t2.id());
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let waker: Arc<Waker> = Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        t.register_waker(&waker);
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        t2.preempt();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // A second trip wakes again (idempotent trips, not one-shot wakers).
+        t2.cancel();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn late_registration_on_tripped_token_fires_immediately() {
+        let t = CancelToken::new();
+        t.cancel();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let waker: Arc<Waker> = Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        t.register_waker(&waker);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn dropped_wakers_are_pruned_and_never_fire() {
+        let t = CancelToken::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let h = hits.clone();
+            let w: Arc<Waker> = Arc::new(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            t.register_waker(&w);
+            // `w` dropped here: its weak entry must not fire.
+        }
+        let h = hits.clone();
+        let live: Arc<Waker> = Arc::new(move || {
+            h.fetch_add(100, Ordering::SeqCst);
+        });
+        t.register_waker(&live); // registration also prunes dead entries
+        assert!(t.0.wakers.lock().unwrap().len() <= 2);
+        t.cancel();
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
     }
 }

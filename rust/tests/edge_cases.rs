@@ -87,7 +87,7 @@ fn single_worker_burst_degenerates_gracefully() {
     let r = ctx
         .reduce(0, vec![5], &|_a: &mut Vec<u8>, _b: &[u8]| {})
         .unwrap();
-    assert_eq!(r.unwrap(), vec![5]);
+    assert_eq!(r.unwrap().as_ref(), &vec![5]);
     let a = ctx.all_to_all(vec![vec![9]]).unwrap();
     assert_eq!(a[0].as_ref(), &vec![9]);
     let g = ctx.gather(0, vec![3]).unwrap().unwrap();

@@ -92,7 +92,8 @@ fn reduce_equals_sequential_fold_any_shape() {
                     };
                     let r = ctx.reduce(root, mine, &f).unwrap();
                     if w == root {
-                        let got = u64::from_le_bytes(r.unwrap().try_into().unwrap());
+                        let got =
+                            u64::from_le_bytes(r.unwrap().as_slice().try_into().unwrap());
                         assert_eq!(got, expected);
                     } else {
                         assert!(r.is_none());
