@@ -7,35 +7,48 @@
 //! work naturally.
 //!
 //! Cancellation is event-driven: a cancel/preempt trip on the flare's
-//! [`CancelToken`] notifies the mailbox condvar directly through a
-//! registered waker, so blocked takers unwind with sub-millisecond latency
-//! instead of polling the token in bounded slices. One waker is registered
-//! per `(mailbox, token)` pair — the blocked-take fast path allocates
-//! nothing per wait.
+//! [`CancelToken`] notifies the mailbox condvar directly, so blocked takers
+//! unwind with sub-millisecond latency instead of polling the token in
+//! bounded slices. The mailbox's own shared state implements
+//! [`WakeTarget`], so registering with a token is a refcount bump — no
+//! `Arc<Waker>` closure is allocated per `(mailbox, token)` pair, and the
+//! blocked-take fast path allocates nothing per wait.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::util::cancel::{CancelToken, Waker};
+use crate::util::cancel::{CancelToken, WakeTarget};
 
 pub type Bytes = Arc<Vec<u8>>;
 
-/// Slot table plus the strong waker handles that keep per-token trip
-/// notifications alive for the mailbox's lifetime.
+/// Slot table plus the set of tokens whose trips already notify this
+/// mailbox.
 #[derive(Default)]
 struct Inner {
     slots: HashMap<String, Bytes>,
-    /// Keyed by [`CancelToken::id`]: one registered waker per token, ever.
-    wakers: HashMap<usize, Arc<Waker>>,
+    /// Keyed by [`CancelToken::id`]: one registration per token, ever. The
+    /// token registry holds a `Weak` to [`Shared`] itself, so the entry dies
+    /// with the mailbox and costs no allocation to create.
+    registered: HashSet<usize>,
 }
 
 #[derive(Default)]
 struct Shared {
     inner: Mutex<Inner>,
     cv: Condvar,
+}
+
+impl WakeTarget for Shared {
+    /// Trip notification: briefly acquire the slot lock before notifying so
+    /// a taker between its `reason()` check and its wait can never miss the
+    /// wakeup.
+    fn wake(&self) {
+        drop(self.inner.lock().unwrap());
+        self.cv.notify_all();
+    }
 }
 
 /// One worker's inbox: keyed slots with blocking take.
@@ -82,22 +95,14 @@ impl Mailbox {
         let deadline = Instant::now() + timeout;
         let mut inner = self.shared.inner.lock().unwrap();
         if let Some(token) = cancel {
-            if !inner.wakers.contains_key(&token.id()) {
-                let shared = Arc::downgrade(&self.shared);
-                let waker: Arc<Waker> = Arc::new(move || {
-                    if let Some(s) = shared.upgrade() {
-                        // Briefly acquire the slot lock before notifying so a
-                        // taker between its reason() check and its wait can
-                        // never miss the wakeup.
-                        drop(s.inner.lock().unwrap());
-                        s.cv.notify_all();
-                    }
-                });
-                inner.wakers.insert(token.id(), waker.clone());
-                // The registry may invoke the waker inline (already-tripped
-                // token) and the waker takes `inner` — release it first.
+            if inner.registered.insert(token.id()) {
+                // First wait on this token: register the mailbox itself as
+                // the wake target — a refcount bump, no closure allocation.
+                // The registry may invoke the target inline (already-tripped
+                // token) and `wake` takes `inner` — release it first.
                 drop(inner);
-                token.register_waker(&waker);
+                let target: Arc<dyn WakeTarget> = self.shared.clone();
+                token.register_wake_target(&target);
                 inner = self.shared.inner.lock().unwrap();
             }
         }
@@ -238,10 +243,10 @@ mod tests {
         let token = CancelToken::new();
         for _ in 0..5 {
             // Short cancellable waits with the same token: each re-uses the
-            // one registered waker rather than allocating another.
+            // one registration rather than creating another.
             let _ = m.take_cancellable("never", Duration::from_millis(1), Some(&token));
         }
-        assert_eq!(m.shared.inner.lock().unwrap().wakers.len(), 1);
+        assert_eq!(m.shared.inner.lock().unwrap().registered.len(), 1);
     }
 
     #[test]

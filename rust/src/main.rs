@@ -11,9 +11,17 @@
 //!   status      live status of a submitted flare
 //!   cancel      cancel a queued or running flare
 //!   flares      list recent flares and their statuses
-//!   tenants     list per-tenant policy/usage, or set --weight/--quota
+//!   nodes       list invoker nodes (liveness, resource views, counters)
+//!   tenants     list per-tenant policy/usage, set --weight/--quota, or
+//!               export one tenant's settled vCPU·seconds with --usage
 //!   apps        list registered work functions
 //!   experiment  regenerate a paper table/figure (or `all`)
+//!
+//! `serve --nodes N` starts N invoker nodes (node-0..node-N-1), each with
+//! its own --invokers × --vcpus pool, under the two-level control plane:
+//! flares are placed on exactly one node (the message fabric is
+//! node-local) by scored, explainable placement — see `GET /v1/nodes` and
+//! the `placement` object on a flare's status.
 //!
 //! With `serve --state-dir DIR` the control plane is durable: deploys,
 //! flare records, and tenant policy are WAL-logged under DIR (with
@@ -30,6 +38,9 @@
 //!   burstctl deploy --addr 127.0.0.1:8090 --name pr --work pagerank --granularity 16
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 16 --param-json '{"job":"demo"}'
 //!   burstctl flare --addr 127.0.0.1:8090 --def pr --size 960 --nowait --tenant acme --priority high
+//!   burstctl serve --port 8090 --nodes 3 --invokers 2 --vcpus 16
+//!   burstctl nodes --addr 127.0.0.1:8090
+//!   burstctl tenants --addr 127.0.0.1:8090 --tenant acme --usage
 //!   burstctl status --addr 127.0.0.1:8090 --id pr-3
 //!   burstctl cancel --addr 127.0.0.1:8090 --id pr-3
 //!   burstctl experiment fig10 --quick
@@ -47,10 +58,13 @@ use burstc::storage::ObjectStore;
 use burstc::util::cli::Args;
 use burstc::util::json::Json;
 
-const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|tenants|apps|experiment> [options]
-  serve       --port 8090 --invokers 4 --vcpus 48 [--time-scale 1.0]
-              [--http-workers 8] [--state-dir DIR]
+const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|nodes|tenants|apps|experiment> [options]
+  serve       --port 8090 --invokers 4 --vcpus 48 [--nodes 1]
+              [--time-scale 1.0] [--http-workers 8] [--state-dir DIR]
               [--fsync never|group|always]
+              (--nodes N starts N invoker nodes node-0..node-N-1, each
+               with its own --invokers x --vcpus pool; a flare runs on
+               exactly one node)
               (--state-dir makes the control plane durable: WAL + snapshots
                under DIR; a restart recovers flares, tenant policy, and
                worker checkpoints so interrupted flares resume. --fsync
@@ -66,11 +80,15 @@ const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|te
   status      --addr HOST:PORT --id FLARE_ID
   cancel      --addr HOST:PORT --id FLARE_ID
   flares      --addr HOST:PORT
+  nodes       --addr HOST:PORT                    list invoker nodes with
+              liveness, heartbeat age, view vs true free vCPUs, counters
   tenants     --addr HOST:PORT                    list policy + live usage
               --addr HOST:PORT --tenant NAME [--weight W] [--quota VCPUS]
               [--no-quota]                        set policy (quota = hard
               cap on concurrently placed vCPUs; over-quota flares wait
               with wait_reason=quota_blocked)
+              --addr HOST:PORT --tenant NAME --usage
+              billing export: settled vCPU*seconds for one tenant
   apps        (lists registered work functions)
   experiment  <table1|fig1|fig5|fig6|fig7|fig8a|fig8b|fig9|table3|fig10|table4|fig11|all>
               [--quick]";
@@ -100,6 +118,7 @@ fn run() -> Result<()> {
         Some("status") => status(&args),
         Some("cancel") => cancel(&args),
         Some("flares") => flares(&args),
+        Some("nodes") => nodes(&args),
         Some("tenants") => tenants(&args),
         Some("apps") => {
             build_env(1.0)?;
@@ -125,11 +144,19 @@ fn serve(args: &Args) -> Result<()> {
     burstc::apps::gridsearch::generate(&env, "demo", 3, 0);
     burstc::apps::kmeans::generate(&env, "demo", 8, 4);
 
-    let cluster = ClusterSpec::uniform(args.usize("invokers", 4), args.usize("vcpus", 48));
+    // --nodes N: node-0..node-N-1, each its own --invokers x --vcpus pool.
+    let n_nodes = args.usize("nodes", 1).max(1);
+    let node_specs: Vec<(String, ClusterSpec)> = (0..n_nodes)
+        .map(|i| {
+            let spec =
+                ClusterSpec::uniform(args.usize("invokers", 4), args.usize("vcpus", 48));
+            (format!("node-{i}"), spec)
+        })
+        .collect();
     let controller = match args.get("state-dir") {
         Some(dir) => {
-            let c = Controller::recover(
-                cluster,
+            let c = Controller::recover_multi(
+                node_specs,
                 CostModel::default(),
                 NetParams::scaled(time_scale),
                 std::path::Path::new(dir),
@@ -153,8 +180,8 @@ fn serve(args: &Args) -> Result<()> {
             );
             c
         }
-        None => Controller::new(
-            cluster,
+        None => Controller::new_multi(
+            node_specs,
             CostModel::default(),
             NetParams::scaled(time_scale),
         ),
@@ -164,7 +191,7 @@ fn serve(args: &Args) -> Result<()> {
         args.usize("port", 8090) as u16,
         args.usize("http-workers", burstc::platform::http::DEFAULT_HTTP_WORKERS),
     )?;
-    println!("burst controller listening on {}", srv.addr);
+    println!("burst controller listening on {} ({n_nodes} node(s))", srv.addr);
     println!("demo datasets loaded under job name 'demo'");
     println!("Ctrl-C to stop");
     loop {
@@ -257,6 +284,13 @@ fn flares(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn nodes(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let r = http_request(addr, "GET", "/v1/nodes", None)?;
+    println!("{r}");
+    Ok(())
+}
+
 fn tenants(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
     // No --tenant: list every lane's policy and live usage.
@@ -265,6 +299,12 @@ fn tenants(args: &Args) -> Result<()> {
         println!("{r}");
         return Ok(());
     };
+    // --usage: billing export of the tenant's settled vCPU·seconds.
+    if args.flag("usage") {
+        let r = http_request(addr, "GET", &format!("/v1/tenants/{tenant}/usage"), None)?;
+        println!("{r}");
+        return Ok(());
+    }
     let mut body = vec![];
     if let Some(w) = args.get("weight") {
         body.push(("weight", Json::Num(w.parse::<f64>()?)));

@@ -2,9 +2,17 @@
 //! oversees invoker resources, performs worker packing, and stores results.
 //!
 //! Flares flow through the scheduling pipeline in [`super::queue`]:
-//! `submit_flare` admits (validates against *total* cluster capacity) and
-//! queues without blocking; the scheduler thread places and runs each flare
-//! on its own execution thread; `flare` is a thin submit-and-wait wrapper.
+//! `submit_flare` admits (validates against the largest registered node's
+//! capacity) and queues without blocking; the scheduler thread places and
+//! runs each flare on its own execution thread; `flare` is a thin
+//! submit-and-wait wrapper.
+//!
+//! Placement is **two-level** (see [`super::node`]): the cluster-side
+//! [`NodeRegistry`] scores candidate nodes per flare and each node's agent
+//! makes the local admission decision — a refusal (stale view, concurrency
+//! cap) spills the flare back for re-planning under a bounded budget, and
+//! the explainable decision (winner score, per-candidate reject reasons)
+//! is persisted on the flare record.
 //!
 //! Every flare belongs to a *tenant* lane with a *priority* class
 //! ([`FlareOptions::tenant`] / [`FlareOptions::priority`]) and can be
@@ -24,7 +32,7 @@
 //! within a priority class, and a flare still queued past its deadline
 //! fails fast with [`FlareStatus::Expired`].
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -35,8 +43,9 @@ use anyhow::{anyhow, Result};
 
 use super::db::{self, BurstConfig, BurstDb, BurstDefinition, FlareRecord, FlareStatus};
 use super::invoker::{model_startup, InvokerPool, ModeledStartup};
+use super::node::{NodePlacement, NodeRegistry, DEFAULT_NODE};
 use super::pack::run_flare_packs;
-use super::packing::{plan, PackSpec, PackingStrategy};
+use super::packing::{PackSpec, PackingStrategy};
 use super::queue::{
     scheduler_loop, select_victims, FlareHandle, PreemptCandidate, Priority,
     QueuedFlare, ResultSlot, SchedState, TenantPolicy, DEFAULT_TENANT,
@@ -234,12 +243,20 @@ struct RunningFlare {
     /// Already tripped for preemption: its vCPUs count as in-flight
     /// reclaim, so successive scheduler passes don't over-preempt.
     preempting: bool,
+    /// Node hosting the reservation (victim selection is node-aware, and
+    /// a node death fails over exactly the flares it was hosting).
+    node: String,
 }
 
 /// The burst platform controller.
 pub struct Controller {
     pub db: BurstDb,
-    pub pool: InvokerPool,
+    /// The first registered node's pool (the whole cluster in the
+    /// single-node constructors; a convenience handle in multi-node ones).
+    pub pool: Arc<InvokerPool>,
+    /// Cluster control plane: registered nodes, liveness, resource views,
+    /// and the placement engine over them.
+    pub nodes: Arc<NodeRegistry>,
     pub cost: CostModel,
     pub net: NetParams,
     /// Backends are created per kind on first use and shared across flares
@@ -269,23 +286,46 @@ pub struct Controller {
     store: Option<Arc<DurableStore>>,
     /// What `Controller::recover` replayed (zeroes for a fresh start).
     recovery: Mutex<RecoveryStats>,
-    /// Flare ids currently marked `quota_blocked` in their db records
-    /// (so `sync_quota_blocked` only writes on transitions).
-    quota_marked: Mutex<HashSet<String>>,
+    /// Flare id → wait reason currently written on its db record
+    /// (`quota_blocked` / `no_feasible_node`), so `sync_wait_reasons`
+    /// only writes — and WALs — on transitions.
+    wait_marked: Mutex<HashMap<String, &'static str>>,
 }
 
 impl Controller {
     pub fn new(cluster: ClusterSpec, cost: CostModel, net: NetParams) -> Arc<Controller> {
-        Controller::new_inner(cluster, cost, net, None, false)
+        Controller::new_multi(vec![(DEFAULT_NODE.to_string(), cluster)], cost, net)
+    }
+
+    /// Build a controller over several invoker nodes, each owning its own
+    /// pool behind a node agent. A flare never spans nodes (the fabric is
+    /// node-local), so admission bounds against the *largest* node.
+    pub fn new_multi(
+        nodes: Vec<(String, ClusterSpec)>,
+        cost: CostModel,
+        net: NetParams,
+    ) -> Arc<Controller> {
+        Controller::new_inner(&nodes, cost, net, None, false)
     }
 
     fn new_inner(
-        cluster: ClusterSpec,
+        node_specs: &[(String, ClusterSpec)],
         cost: CostModel,
         net: NetParams,
         store: Option<Arc<DurableStore>>,
         paused: bool,
     ) -> Arc<Controller> {
+        assert!(!node_specs.is_empty(), "a controller needs at least one node");
+        let nodes = Arc::new(NodeRegistry::new());
+        let mut first_pool = None;
+        for (name, cluster) in node_specs {
+            let pool = Arc::new(InvokerPool::new(cluster));
+            nodes.register(name, pool.clone());
+            if first_pool.is_none() {
+                first_pool = Some(pool);
+            }
+        }
+        let pool = first_pool.expect("at least one node");
         Arc::new_cyclic(|weak| {
             let sched = SchedState::new(MAX_BACKFILL_PASSES);
             if paused {
@@ -307,7 +347,8 @@ impl Controller {
             }
             Controller {
                 db,
-                pool: InvokerPool::new(&cluster),
+                pool,
+                nodes,
                 cost,
                 net,
                 backends: Mutex::new(Vec::new()),
@@ -325,7 +366,7 @@ impl Controller {
                 resumed_total: AtomicU64::new(0),
                 store,
                 recovery: Mutex::new(RecoveryStats::default()),
-                quota_marked: Mutex::new(HashSet::new()),
+                wait_marked: Mutex::new(HashMap::new()),
             }
         })
     }
@@ -352,9 +393,27 @@ impl Controller {
         net: NetParams,
         state_dir: &Path,
     ) -> Result<Arc<Controller>> {
+        Controller::recover_multi(
+            vec![(DEFAULT_NODE.to_string(), cluster)],
+            cost,
+            net,
+            state_dir,
+        )
+    }
+
+    /// Multi-node [`Controller::recover`]: the `nodes` list is the set of
+    /// nodes that *re-registered* after the restart. A non-terminal flare
+    /// whose recorded node is not in that set is failed as lost — its
+    /// state lived on a node that never came back.
+    pub fn recover_multi(
+        nodes: Vec<(String, ClusterSpec)>,
+        cost: CostModel,
+        net: NetParams,
+        state_dir: &Path,
+    ) -> Result<Arc<Controller>> {
         let store = Arc::new(DurableStore::open(state_dir)?);
         let loaded = store.loaded();
-        let this = Controller::new_inner(cluster, cost, net, Some(store.clone()), true);
+        let this = Controller::new_inner(&nodes, cost, net, Some(store.clone()), true);
         let mut stats =
             RecoveryStats { skipped: loaded.skipped_lines as u64, ..Default::default() };
 
@@ -375,12 +434,17 @@ impl Controller {
 
         // Tenant policy next, while the scheduler is still paused: no
         // flare may be placed under not-yet-restored weights or quotas.
+        // Lifetime billing meters are re-seeded from their last settled
+        // absolute totals (usage entries replay as idempotent overwrites).
         {
             let mut q = this.sched.queue.lock().unwrap();
             for (tenant, weight, quota) in &loaded.tenants {
                 q.set_tenant_weight(tenant, *weight);
                 q.set_tenant_quota(tenant, *quota);
                 stats.tenants_restored += 1;
+            }
+            for (tenant, total) in &loaded.usage {
+                q.seed_billed(tenant, *total);
             }
         }
 
@@ -416,6 +480,21 @@ impl Controller {
                 this.db.put_flare(rec);
                 stats.terminal_restored += 1;
                 continue;
+            }
+            // Re-homing: a flare that was placed on (or last ran on) a
+            // node that did not re-register has no surviving home for its
+            // warm containers or in-flight state — fail it explicitly
+            // rather than silently rescheduling it somewhere else.
+            if let Some(node) = rec.node.clone() {
+                if !this.nodes.has_node(&node) {
+                    rec.status = FlareStatus::Failed;
+                    rec.error = Some(format!(
+                        "lost at restart: node '{node}' was not re-registered"
+                    ));
+                    this.db.put_flare(rec);
+                    stats.lost_work += 1;
+                    continue;
+                }
             }
             match this.rebuild_queued(&rec) {
                 Ok(job) => {
@@ -500,7 +579,7 @@ impl Controller {
         if burst_size == 0 {
             return Err(anyhow!("resubmission spec has empty params"));
         }
-        let capacity = self.pool.capacity();
+        let capacity = self.nodes.max_node_capacity();
         if burst_size > capacity {
             return Err(anyhow!(
                 "flare of {burst_size} workers exceeds total cluster capacity \
@@ -560,6 +639,10 @@ impl Controller {
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
             quota_blocked: false,
+            // Locality: prefer the node that already hosted this flare's
+            // warm containers and checkpoints, when it re-registered.
+            prior_node: rec.node.clone(),
+            infeasible: false,
         })
     }
 
@@ -609,7 +692,16 @@ impl Controller {
     /// that fits current free capacity.
     pub fn suggest_burst_size(&self, input_bytes: u64, bytes_per_worker: u64) -> usize {
         let wanted = (input_bytes.div_ceil(bytes_per_worker.max(1))).max(1) as usize;
-        let capacity: usize = self.pool.free_vcpus().iter().sum();
+        // A flare cannot span nodes: clamp to the most free capacity any
+        // single alive node has right now.
+        let capacity = self
+            .nodes
+            .node_statuses()
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.free.iter().sum::<usize>())
+            .max()
+            .unwrap_or(0);
         wanted.min(capacity.max(1))
     }
 
@@ -659,15 +751,16 @@ impl Controller {
         let deadline = opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
 
         // Admission: a flare that cannot be placed on an *idle* cluster can
-        // never run, so reject it now — distinct from "busy, queued".
-        let capacity = self.pool.capacity();
+        // never run, so reject it now — distinct from "busy, queued". A
+        // flare cannot span nodes, so the bound is the largest node.
+        let capacity = self.nodes.max_node_capacity();
         if burst_size > capacity {
             return Err(anyhow!(
                 "flare of {burst_size} workers exceeds total cluster capacity: \
                  needs {burst_size} vCPUs, cluster has {capacity}"
             ));
         }
-        plan(strategy, burst_size, self.pool.total_vcpus()).map_err(|e| {
+        self.nodes.plan_check(strategy, burst_size).map_err(|e| {
             anyhow!("flare can never be placed, even on an idle cluster: {e}")
         })?;
 
@@ -720,6 +813,8 @@ impl Controller {
             submitted: crate::util::timing::Stopwatch::start(),
             passed_over: 0,
             quota_blocked: false,
+            prior_node: None,
+            infeasible: false,
         });
         self.sched.wake();
         Ok(FlareHandle { flare_id, slot })
@@ -798,33 +893,39 @@ impl Controller {
         }
     }
 
-    /// Reconcile `quota_blocked` wait reasons in the flare records with
-    /// the queue's latest scan (called from the scheduler pass; writes —
-    /// and WAL entries — happen only on transitions).
-    pub(crate) fn sync_quota_blocked(&self) {
-        let now: HashSet<String> = self
-            .sched
-            .queue
-            .lock()
-            .unwrap()
-            .quota_blocked_ids()
-            .into_iter()
-            .collect();
-        let mut marked = self.quota_marked.lock().unwrap();
-        for id in &now {
-            if !marked.contains(id) {
+    /// Reconcile wait reasons in the flare records with the queue's latest
+    /// scan: `quota_blocked` (tenant hard cap) and `no_feasible_node`
+    /// (aggregate capacity suffices, but no single node can host the flare
+    /// — or every candidate refused within the spillback budget). Called
+    /// from the scheduler pass; writes — and WAL entries — happen only on
+    /// transitions.
+    pub(crate) fn sync_wait_reasons(&self) {
+        let (quota, infeasible) = {
+            let q = self.sched.queue.lock().unwrap();
+            (q.quota_blocked_ids(), q.infeasible_ids())
+        };
+        let mut now: HashMap<String, &'static str> = HashMap::new();
+        for id in quota {
+            now.insert(id, "quota_blocked");
+        }
+        for id in infeasible {
+            now.entry(id).or_insert("no_feasible_node");
+        }
+        let mut marked = self.wait_marked.lock().unwrap();
+        for (id, reason) in &now {
+            if marked.get(id) != Some(reason) {
                 self.db.update_flare(id, |r| {
                     if r.status == FlareStatus::Queued {
-                        r.wait_reason = Some("quota_blocked".into());
+                        r.wait_reason = Some((*reason).into());
                     }
                 });
             }
         }
-        for id in marked.iter() {
-            if !now.contains(id) {
+        for (id, reason) in marked.iter() {
+            if !now.contains_key(id) {
                 self.db.update_flare(id, |r| {
                     if r.status == FlareStatus::Queued
-                        && r.wait_reason.as_deref() == Some("quota_blocked")
+                        && r.wait_reason.as_deref() == Some(reason)
                     {
                         r.wait_reason = None;
                     }
@@ -832,6 +933,25 @@ impl Controller {
             }
         }
         *marked = now;
+    }
+
+    /// Settle a lane's provisional placement charge to measured usage and
+    /// persist the tenant's new lifetime vCPU·second total. The WAL entry
+    /// carries the *absolute* total, so replay is an idempotent overwrite
+    /// (`GET /v1/tenants/<id>/usage` survives restarts).
+    fn settle_usage(&self, tenant: &str, provisional: f64, measured: f64) {
+        let total = self.sched.queue.lock().unwrap().settle(tenant, provisional, measured);
+        if let Some(store) = &self.store {
+            if let Err(e) = store.append_entry(DurableStore::entry_usage(tenant, total)) {
+                eprintln!("burstc: WAL append failed for tenant '{tenant}' usage: {e}");
+            }
+        }
+    }
+
+    /// Lifetime settled vCPU·seconds billed to a tenant (`None`: the
+    /// tenant has no lane — it never submitted and has no policy).
+    pub fn tenant_usage(&self, tenant: &str) -> Option<f64> {
+        self.sched.queue.lock().unwrap().usage_of(tenant)
     }
 
     /// Drop a terminal flare's cancel token from the kill-path registry.
@@ -939,20 +1059,32 @@ impl Controller {
         }
         let starved = self.sched.queue.lock().unwrap().oldest_of_class(Priority::High);
         let Some(burst_size) = starved else { return };
-        let free: usize = self.pool.free_vcpus().iter().sum();
         let max = self.max_preempts.load(Ordering::Relaxed);
         let mut running = self.running.lock().unwrap();
         // vCPUs already being reclaimed by in-flight preemptions count as
-        // covered: successive scheduler passes must not pile on victims.
-        let mut inflight = 0usize;
+        // covered *on their node*: successive scheduler passes must not
+        // pile on victims, and reclaim on node A cannot unblock node B.
+        let mut inflight_by_node: HashMap<&str, usize> = HashMap::new();
         for r in running.values().filter(|r| r.preempting) {
-            inflight += r.vcpus;
+            *inflight_by_node.entry(r.node.as_str()).or_insert(0) += r.vcpus;
         }
-        let covered = free + inflight;
-        if burst_size <= covered {
+        // Per-node shortfall, over nodes that could host the flare at all:
+        // freeing that much *contiguous* capacity there makes it placeable.
+        let mut needed_by_node: BTreeMap<String, usize> = BTreeMap::new();
+        for s in self.nodes.node_statuses() {
+            if !s.alive || s.total.iter().sum::<usize>() < burst_size {
+                continue;
+            }
+            let free: usize = s.free.iter().sum();
+            let covered = free + inflight_by_node.get(s.name.as_str()).copied().unwrap_or(0);
+            if covered >= burst_size {
+                return; // some node already (or soon) has room
+            }
+            needed_by_node.insert(s.name, burst_size - covered);
+        }
+        if needed_by_node.is_empty() {
             return;
         }
-        let needed = burst_size - covered;
         let cands: Vec<PreemptCandidate> = running
             .iter()
             .filter(|(_, r)| {
@@ -966,13 +1098,36 @@ impl Controller {
                 priority: r.priority,
                 vcpus: r.vcpus,
                 seq: r.seq,
+                node: r.node.clone(),
             })
             .collect();
-        for id in select_victims(&cands, needed) {
+        for id in select_victims(&cands, &needed_by_node) {
             if let Some(r) = running.get_mut(&id) {
                 r.preempting = true;
                 r.cancel.preempt();
                 self.preempted_total.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Node liveness pass (scheduler loop): drive in-process heartbeats,
+    /// declare silent nodes dead once their miss budget is exhausted, and
+    /// fail over the dead nodes' running flares — their tokens trip with
+    /// the `Preempted` reason (regardless of the preemptible flag: the
+    /// *node* is gone, not reclaimed), so each unwinds and requeues to be
+    /// re-placed on a surviving node, resuming from its checkpoints. Not
+    /// counted as scheduler preemptions in `/metrics`.
+    pub(crate) fn node_maintenance(&self) {
+        self.nodes.pulse();
+        let dead = self.nodes.reap_dead();
+        if dead.is_empty() {
+            return;
+        }
+        let mut running = self.running.lock().unwrap();
+        for r in running.values_mut() {
+            if dead.contains(&r.node) && !r.preempting {
+                r.preempting = true;
+                r.cancel.preempt();
             }
         }
     }
@@ -984,7 +1139,7 @@ impl Controller {
     pub(crate) fn spawn_execution(
         this: &Arc<Controller>,
         job: QueuedFlare,
-        packs: Vec<PackSpec>,
+        placement: NodePlacement,
         sched: &Arc<SchedState>,
     ) {
         let c = this.clone();
@@ -994,17 +1149,18 @@ impl Controller {
         // job, fail it cleanly, and release the reservation — panicking
         // here would kill the scheduler loop and hang every waiter.
         let name = format!("flare-{}", job.flare_id);
-        let payload = Arc::new(Mutex::new(Some((job, packs))));
+        let payload = Arc::new(Mutex::new(Some((job, placement))));
         let payload2 = payload.clone();
         let spawned = std::thread::Builder::new().name(name).spawn(move || {
-            let (mut job, packs) = payload2.lock().unwrap().take().expect("payload set");
+            let (mut job, placement) =
+                payload2.lock().unwrap().take().expect("payload set");
             // Cancel raced the pop→spawn window: release untouched capacity
             // and finish as `Cancelled` without ever starting the packs.
             if job.cancel.is_cancelled() {
-                c.pool.release(&packs);
+                c.nodes.release(&placement.node, &placement.packs);
                 // The lane was provisionally charged at placement; the
                 // flare never ran, so the measured usage settles to zero.
-                c.sched.queue.lock().unwrap().settle(&job.tenant, job.charged, 0.0);
+                c.settle_usage(&job.tenant, job.charged, 0.0);
                 let e = anyhow!("flare '{}' cancelled before placement", job.flare_id);
                 c.db.update_flare(&job.flare_id, |r| {
                     r.status = FlareStatus::Cancelled;
@@ -1027,8 +1183,13 @@ impl Controller {
                     preempt_count: job.preempt_count,
                     cancel: job.cancel.clone(),
                     preempting: false,
+                    node: placement.node.clone(),
                 },
             );
+            // Locality hint for the *next* placement of this flare (a
+            // preempt-requeue or post-restart re-admission): its warm
+            // containers and checkpoints live on this node now.
+            job.prior_node = Some(placement.node.clone());
             // Checkpoint/resume: hand back whatever the previous run (a
             // preempted one, or the pre-crash process after recovery) left
             // behind, and number this run's epoch past every restored one.
@@ -1055,12 +1216,22 @@ impl Controller {
                 r.status = FlareStatus::Running;
                 r.wait_reason = None;
                 r.resume_count = resume_count;
+                // Explainable placement: which node won, at what score,
+                // and why each other candidate was rejected.
+                r.node = Some(placement.node.clone());
+                r.placement = Some(placement.decision.clone());
             });
             // A panic must neither strand the waiter in `wait()` nor
             // leak the reservation (released by guard inside).
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                || c.execute_placed(&job, packs, queue_wait_s, &ckpt_channel),
-            ))
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c.execute_placed(
+                    &job,
+                    &placement.node,
+                    placement.packs,
+                    queue_wait_s,
+                    &ckpt_channel,
+                )
+            }))
             .unwrap_or_else(|_| {
                 let e = anyhow!("flare '{}' execution panicked", job.flare_id);
                 c.db.update_flare(&job.flare_id, |r| {
@@ -1111,9 +1282,9 @@ impl Controller {
             job.slot.deliver(result);
         });
         if spawned.is_err() {
-            if let Some((job, packs)) = payload.lock().unwrap().take() {
-                this.pool.release(&packs);
-                this.sched.queue.lock().unwrap().settle(&job.tenant, job.charged, 0.0);
+            if let Some((job, placement)) = payload.lock().unwrap().take() {
+                this.nodes.release(&placement.node, &placement.packs);
+                this.settle_usage(&job.tenant, job.charged, 0.0);
                 let e = anyhow!(
                     "could not spawn execution thread for flare '{}'",
                     job.flare_id
@@ -1195,31 +1366,36 @@ impl Controller {
     fn execute_placed(
         &self,
         job: &QueuedFlare,
+        node: &str,
         packs: Vec<PackSpec>,
         queue_wait_s: f64,
         ckpt: &Arc<CheckpointChannel>,
     ) -> Result<FlareResult> {
         // Release the reservation exactly once, even if something on this
-        // thread panics mid-flare.
+        // thread panics mid-flare. Routing through the registry re-syncs
+        // the node's cluster-side view, so freed capacity is immediately
+        // placeable.
         struct ReleaseOnDrop<'a> {
-            pool: &'a InvokerPool,
+            nodes: &'a NodeRegistry,
+            node: &'a str,
             packs: Option<Vec<PackSpec>>,
         }
         impl ReleaseOnDrop<'_> {
             fn release_now(&mut self) -> Vec<PackSpec> {
                 let packs = self.packs.take().expect("released once");
-                self.pool.release(&packs);
+                self.nodes.release(self.node, &packs);
                 packs
             }
         }
         impl Drop for ReleaseOnDrop<'_> {
             fn drop(&mut self) {
                 if let Some(p) = self.packs.take() {
-                    self.pool.release(&p);
+                    self.nodes.release(self.node, &p);
                 }
             }
         }
-        let mut reservation = ReleaseOnDrop { pool: &self.pool, packs: Some(packs) };
+        let mut reservation =
+            ReleaseOnDrop { nodes: self.nodes.as_ref(), node, packs: Some(packs) };
         let packs = reservation.packs.as_ref().expect("held");
 
         // Modeled start-up latencies (container creation dominates, §5.1).
@@ -1264,12 +1440,9 @@ impl Controller {
         // Settle the lane's provisional placement charge to the measured
         // vCPU·seconds the reservation was actually held (bugfix: a flare
         // that failed, was cancelled, or was preempted early must not be
-        // billed as if it ran to completion).
-        self.sched.queue.lock().unwrap().settle(
-            &job.tenant,
-            job.charged,
-            job.burst_size as f64 * work_wall_s,
-        );
+        // billed as if it ran to completion), and persist the tenant's new
+        // lifetime usage total.
+        self.settle_usage(&job.tenant, job.charged, job.burst_size as f64 * work_wall_s);
         match result {
             Ok(outputs) => {
                 let res = FlareResult {
@@ -1513,6 +1686,39 @@ mod tests {
         assert_eq!(c.suggest_burst_size(1 << 40, 1 << 20), 16);
         // Tiny inputs still get one worker.
         assert_eq!(c.suggest_burst_size(1, 1 << 20), 1);
+    }
+
+    #[test]
+    fn placement_is_recorded_on_the_flare_record() {
+        register_echo();
+        let c = Controller::new_multi(
+            vec![
+                ("node-0".into(), ClusterSpec::uniform(1, 4)),
+                ("node-1".into(), ClusterSpec::uniform(1, 8)),
+            ],
+            CostModel::default(),
+            NetParams::scaled(1e-6),
+        );
+        c.deploy("place", "ctrl-echo", BurstConfig::default()).unwrap();
+        let r = c.flare("place", vec![Json::Null; 8], &FlareOptions::default()).unwrap();
+        let rec = c.db.get_flare(&r.flare_id).unwrap();
+        assert_eq!(rec.node.as_deref(), Some("node-1"));
+        let d = rec.placement.expect("decision recorded");
+        assert_eq!(d.get("winner").unwrap().as_str(), Some("node-1"));
+        let cands = d.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        // node-0 (1×4) could never host 8 workers: reject reason recorded.
+        let n0 = cands
+            .iter()
+            .find(|x| x.get("node").unwrap().as_str() == Some("node-0"))
+            .unwrap();
+        assert!(n0.get("reject").is_some());
+        // Admission bounds against the largest single node, not the sum.
+        let err = c
+            .flare("place", vec![Json::Null; 10], &FlareOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cluster has 8"), "{err}");
     }
 
     #[test]

@@ -194,6 +194,13 @@ pub struct FlareRecord {
     /// controller needs to re-admit this flare. Present while the flare is
     /// non-terminal.
     pub spec: Option<Json>,
+    /// The node the flare was placed on (set at each `Running` transition,
+    /// kept afterwards — recovery re-homes against it, and history shows
+    /// where a flare ran).
+    pub node: Option<String>,
+    /// Explainable placement decision: winner score, spillback count, and
+    /// per-candidate scores / reject reasons (see `platform::node`).
+    pub placement: Option<Json>,
 }
 
 impl FlareRecord {
@@ -220,6 +227,8 @@ impl FlareRecord {
             submitted_unix_ms: now_unix_ms(),
             wait_reason: None,
             spec: None,
+            node: None,
+            placement: None,
         }
     }
 
@@ -248,6 +257,12 @@ impl FlareRecord {
         }
         if let Some(s) = &self.spec {
             fields.push(("spec", s.clone()));
+        }
+        if let Some(n) = &self.node {
+            fields.push(("node", Json::Str(n.clone())));
+        }
+        if let Some(p) = &self.placement {
+            fields.push(("placement", p.clone()));
         }
         Json::obj(fields)
     }
@@ -292,6 +307,8 @@ impl FlareRecord {
                 .unwrap_or(0),
             wait_reason: j.get("wait_reason").and_then(Json::as_str).map(str::to_string),
             spec: j.get("spec").cloned(),
+            node: j.get("node").and_then(Json::as_str).map(str::to_string),
+            placement: j.get("placement").cloned(),
         })
     }
 }
@@ -792,6 +809,8 @@ mod tests {
         rec.submit_seq = 42;
         rec.wait_reason = Some("quota_blocked".into());
         rec.spec = Some(Json::obj(vec![("params", Json::Arr(vec![Json::Null]))]));
+        rec.node = Some("node-1".into());
+        rec.placement = Some(Json::obj(vec![("winner", Json::Str("node-1".into()))]));
         let rt = FlareRecord::from_json(&rec.to_json()).unwrap();
         assert_eq!(rt.flare_id, "rt-1");
         assert_eq!(rt.def_name, "def-x");
@@ -808,6 +827,8 @@ mod tests {
         assert_eq!(rt.submitted_unix_ms, rec.submitted_unix_ms);
         assert_eq!(rt.wait_reason.as_deref(), Some("quota_blocked"));
         assert_eq!(rt.spec, rec.spec);
+        assert_eq!(rt.node.as_deref(), Some("node-1"));
+        assert_eq!(rt.placement, rec.placement);
         // Unknown statuses fail loudly instead of defaulting.
         let mut j = rec.to_json();
         if let Json::Obj(m) = &mut j {

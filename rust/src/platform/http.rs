@@ -30,10 +30,17 @@
 //!   GET    /v1/tenants      per-tenant policy (weight, quota) + live usage
 //!   PUT    /v1/tenants/`<id>` {"weight"?: W, "quota"?: N|null} set policy
 //!                           (persisted when the server runs --state-dir)
+//!   GET    /v1/tenants/`<id>`/usage  settled vCPU·seconds billed to one
+//!                           tenant (404 until it has submitted something)
+//!   GET    /v1/nodes        registered invoker nodes: liveness, heartbeat
+//!                           age, approximate view vs ground-truth free
+//!                           vCPUs, admission counters
 //!   GET    /healthz
 //!   GET    /metrics         load view, total + per-tenant queue depth,
 //!                           quota-blocked count, preemption / expiry
-//!                           counters, recovery counters
+//!                           counters, recovery counters, node liveness and
+//!                           placement counters (spillbacks, refusals,
+//!                           no-feasible-node, retry budget)
 //!
 //! Flare options (`options` object in both flare routes): `granularity`,
 //! `strategy`, `backend`, `faas`, plus the multi-tenant scheduling fields
@@ -60,7 +67,8 @@ use anyhow::{anyhow, Result};
 
 use super::controller::{CancelError, Controller, FlareOptions};
 use super::db::BurstConfig;
-use super::queue::TenantPolicy;
+use super::node::NodeStatus;
+use super::queue::{TenantPolicy, SPILLBACK_RETRIES};
 use crate::util::json::Json;
 
 /// Quantum of the blocking route's interruptible wait: the bound on how
@@ -363,13 +371,53 @@ fn dispatch(
                     ("resumed_total", c.resumes().into()),
                     ("deployed_defs", c.db.list_defs().len().into()),
                     ("recovery", c.recovery_stats().to_json()),
+                    ("nodes", {
+                        let (alive, dead) = c.nodes.alive_count();
+                        Json::obj(vec![
+                            ("alive", alive.into()),
+                            ("dead", dead.into()),
+                            ("deaths_total", c.nodes.deaths_total().into()),
+                        ])
+                    }),
+                    (
+                        "placement",
+                        Json::obj(vec![
+                            ("spillbacks_total", c.nodes.spillbacks_total().into()),
+                            ("refusals_total", c.nodes.refusals_total().into()),
+                            ("no_feasible_total", c.nodes.no_feasible_total().into()),
+                            ("spillback_retry_budget", SPILLBACK_RETRIES.into()),
+                        ]),
+                    ),
                 ]),
             ))
         }
+        ("GET", "/v1/nodes") => Ok((
+            200,
+            Json::Arr(c.nodes.node_statuses().iter().map(NodeStatus::to_json).collect()),
+        )),
         ("GET", "/v1/tenants") => Ok((
             200,
             Json::Arr(c.tenant_policies().iter().map(TenantPolicy::to_json).collect()),
         )),
+        ("GET", p) if p.starts_with("/v1/tenants/") && p.ends_with("/usage") => {
+            let tenant = &p["/v1/tenants/".len()..p.len() - "/usage".len()];
+            if tenant.is_empty() {
+                return Ok((404, err_json("missing tenant name")));
+            }
+            match c.tenant_usage(tenant) {
+                Some(vcpu_s) => Ok((
+                    200,
+                    Json::obj(vec![
+                        ("tenant", tenant.into()),
+                        ("vcpu_seconds", Json::Num(vcpu_s)),
+                    ]),
+                )),
+                None => Ok((
+                    404,
+                    err_json(format!("tenant '{tenant}' has no recorded usage")),
+                )),
+            }
+        }
         ("PUT", p) if p.starts_with("/v1/tenants/") => {
             let tenant = &p["/v1/tenants/".len()..];
             if tenant.is_empty() {
@@ -1004,6 +1052,59 @@ mod tests {
         assert_eq!(rec.get("checkpoints_restored").unwrap().as_usize(), Some(0));
         assert_eq!(m.get("quota_blocked_flares").unwrap().as_usize(), Some(0));
         assert_eq!(m.get("resumed_total").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn nodes_route_lists_the_registered_node_with_live_view() {
+        let (_srv, addr) = setup();
+        let nodes = http_request(&addr, "GET", "/v1/nodes", None).unwrap();
+        let nodes = nodes.as_arr().unwrap();
+        assert_eq!(nodes.len(), 1, "single-node test platform");
+        let n = &nodes[0];
+        assert_eq!(n.str_or("name", ""), "node-0");
+        assert!(matches!(n.get("alive"), Some(Json::Bool(true))), "{n}");
+        // test_platform(2, 8): two invokers of 8 vCPUs, all free.
+        let total: f64 = n
+            .get("total_vcpus")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_f64)
+            .sum();
+        assert_eq!(total, 16.0);
+        assert_eq!(n.get("admitted_flares").unwrap().as_usize(), Some(0));
+        // Node liveness and placement counters ride on /metrics.
+        let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+        let nm = m.get("nodes").unwrap();
+        assert_eq!(nm.get("alive").unwrap().as_usize(), Some(1));
+        assert_eq!(nm.get("dead").unwrap().as_usize(), Some(0));
+        let pm = m.get("placement").unwrap();
+        assert_eq!(pm.get("refusals_total").unwrap().as_usize(), Some(0));
+        assert_eq!(
+            pm.get("spillback_retry_budget").unwrap().as_usize(),
+            Some(SPILLBACK_RETRIES)
+        );
+    }
+
+    #[test]
+    fn usage_route_reports_settled_vcpu_seconds_after_a_flare() {
+        let (_srv, addr) = setup();
+        deploy_add(&addr);
+        // Unknown tenant: 404 until it has submitted something.
+        let err = http_request(&addr, "GET", "/v1/tenants/ghost/usage", None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HTTP 404"), "{err}");
+
+        let flare = Json::parse(
+            r#"{"def":"add","params":[1,1,1,1],"options":{"tenant":"acme"}}"#,
+        )
+        .unwrap();
+        http_request(&addr, "POST", "/v1/flare", Some(&flare)).unwrap();
+        let u = http_request(&addr, "GET", "/v1/tenants/acme/usage", None).unwrap();
+        assert_eq!(u.str_or("tenant", ""), "acme");
+        let billed = u.get("vcpu_seconds").unwrap().as_f64().unwrap();
+        assert!(billed > 0.0, "completed work must settle a positive charge: {u}");
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!   returns a [`FlareHandle`] without blocking (`Controller::flare` is a
 //!   submit-and-wait wrapper).
 //! * **admit** — requests that can never run (unknown definition, burst
-//!   larger than total cluster capacity, granularity no idle invoker can
+//!   larger than the largest registered node — a flare cannot span nodes,
+//!   the message fabric is node-local — granularity no idle invoker can
 //!   host) are rejected fast with an error naming required vs available
 //!   vCPUs; everything else is admitted even when the cluster is busy.
 //! * **queue** — admitted flares wait in a multi-tenant queue
@@ -18,9 +19,14 @@
 //!   then FIFO within a lane, and bounded backfill — a small flare may
 //!   jump a blocked head-of-line flare it cannot unblock, until an
 //!   anti-starvation pass budget stops the queue scheduling past it.
-//! * **place** — the scheduler thread packs against the live load view and
-//!   reserves capacity, retrying lost reservation races against a fresh
-//!   snapshot up to a spillback budget ([`queue::SPILLBACK_RETRIES`]).
+//! * **place** — the cluster placement engine ([`node::NodeRegistry`])
+//!   scores every alive node (fit, locality, fragmentation) against its
+//!   approximate free-vCPU view, records an explainable per-candidate
+//!   decision on the flare record, and asks the winner's
+//!   [`node::NodeAgent`] to admit; a refusal (stale view, node concurrency
+//!   cap) triggers spillback to the next-best node up to a bounded budget
+//!   ([`queue::SPILLBACK_RETRIES`]), after which the flare waits with
+//!   `wait_reason = no_feasible_node`.
 //! * **execute** — each placed flare runs on its own thread, so many flares
 //!   proceed concurrently against one [`InvokerPool`].
 //! * **complete** — results and the status lifecycle (`queued` → `running`
@@ -76,6 +82,33 @@
 //! flares submitted with `preemptible = false`, and always lost to a
 //! concurrent `cancel_flare` (terminal `Cancelled` beats the requeue).
 //!
+//! **Node layer (PR 7).** The `placed` edge above runs through the
+//! two-level control plane ([`node`]): the cluster side registers invoker
+//! nodes, tracks their liveness by heartbeat, and places each flare on
+//! exactly one node; the node side ([`node::NodeAgent`]) re-validates the
+//! placement against pool ground truth and may *refuse* it:
+//!
+//! ```text
+//!  register(node-0 .. node-N)            heartbeat ──▶ view refreshed
+//!       │                                miss budget exceeded ──▶ dead:
+//!       ▼                                running flares preempted back
+//!  NodeRegistry ── place(flare):         to queued, re-homed elsewhere
+//!       │          score each alive node
+//!       │          0.6·fit + 0.3·locality + 0.1·defrag
+//!       ▼
+//!  winner's NodeAgent.admit ──refuse (stale view / concurrency cap)──┐
+//!       │ ok                                                         ▼
+//!       ▼                                     spillback: exclude refuser,
+//!  execute on that node                       re-plan ≤ SPILLBACK_RETRIES,
+//!  (mailbox fabric is node-local;             then back to queued with
+//!   release updates view to truth)            wait_reason=no_feasible_node
+//! ```
+//!
+//! Every attempt is recorded: the flare record's `placement` object names
+//! the winner, its score, and each candidate's score or reject reason
+//! (`GET /v1/flares/<id>`); `GET /v1/nodes` lists per-node views and
+//! counters, and `/metrics` aggregates spillbacks/refusals/deaths.
+//!
 //! **Checkpoint/resume (PR 5).** `work` functions may call
 //! [`crate::bcm::BurstContext::checkpoint`] at natural boundaries (e.g.
 //! once per iteration); the latest per-worker payload lands in [`BurstDb`]
@@ -106,9 +139,13 @@
 //! original submit order (original wall-clock submit time and remaining
 //! deadline preserved) with their worker checkpoints re-seeded so the
 //! re-run resumes, or marked `failed` with a `lost at restart` error when
-//! their work function is no longer registered; tenant weights and hard
-//! vCPU quotas are reinstated before the scheduler's first placement
-//! pass. Quotas cap a tenant's *concurrently placed* vCPUs: an over-quota
+//! their work function is no longer registered *or* the node they were
+//! assigned to was not re-registered (re-admitted flares are otherwise
+//! re-homed by a fresh placement pass over the restarted node set);
+//! tenant weights and hard vCPU quotas are reinstated before the
+//! scheduler's first placement pass, and per-tenant settled vCPU·second
+//! totals (`GET /v1/tenants/<id>/usage`) replay from their own WAL entry
+//! kind. Quotas cap a tenant's *concurrently placed* vCPUs: an over-quota
 //! flare is admitted but waits with a `quota_blocked` reason in its
 //! record, without consuming backfill passes or skewing DRR deficits.
 //!
@@ -124,6 +161,7 @@ pub mod controller;
 pub mod db;
 pub mod http;
 pub mod invoker;
+pub mod node;
 pub mod pack;
 pub mod packing;
 pub mod queue;
@@ -138,6 +176,7 @@ pub use db::{
     FlareStatus, WorkFn,
 };
 pub use invoker::{model_startup, InvokerPool, ModeledStartup};
+pub use node::{NodeAgent, NodePlacement, NodeRegistry, NodeStatus, Placer, DEFAULT_NODE};
 pub use packing::{plan, PackSpec, PackingStrategy};
 pub use queue::{
     place_with_spillback, select_victims, FlareHandle, FlareQueue, PreemptCandidate,

@@ -52,7 +52,7 @@
 //! fails, is cancelled, or is preempted early is not billed as if it ran
 //! to completion.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
@@ -62,6 +62,7 @@ use anyhow::{anyhow, Result};
 use super::controller::{Controller, FlareResult};
 use super::db::WorkFn;
 use super::invoker::InvokerPool;
+use super::node::{NodePlacement, Placer};
 use super::packing::{plan, PackSpec, PackingStrategy};
 use crate::bcm::BackendKind;
 use crate::util::cancel::CancelToken;
@@ -158,6 +159,15 @@ pub struct QueuedFlare {
     /// because its tenant's hard vCPU quota is exhausted (surfaced as the
     /// record's `wait_reason`); cleared on every scan before re-checking.
     pub quota_blocked: bool,
+    /// The node this flare last ran on (placement locality hint: warm
+    /// containers, checkpoint affinity). Set at each placement; restored
+    /// from the flare record across restarts.
+    pub prior_node: Option<String>,
+    /// Set by the last `pop_placeable` scan when aggregate capacity
+    /// sufficed but no single node could host this flare — planning
+    /// failed or every candidate refused within the spillback budget
+    /// (surfaced as `wait_reason=no_feasible_node`); cleared each scan.
+    pub infeasible: bool,
 }
 
 /// One-shot result mailbox shared by the execution thread and the waiter.
@@ -291,20 +301,22 @@ pub struct PreemptCandidate {
     pub vcpus: usize,
     /// Placement sequence number; higher = started more recently.
     pub seq: u64,
+    /// Node hosting the reservation: victims are only useful if they free
+    /// *contiguous* capacity on one node a flare can actually land on.
+    pub node: String,
 }
 
-/// Pick which running flares to preempt so `needed` vCPUs can be
-/// reclaimed: lowest priority first, most-recently-started first within a
-/// priority class (old flares keep their progress), then a trim pass drops
-/// every victim whose reclaim turned out redundant — largest first — so
-/// the set of reclaimed vCPUs is minimal. Returns an empty vector when the
-/// candidates cannot cover `needed`: a partial preemption would destroy
-/// work without unblocking anything.
-pub fn select_victims(cands: &[PreemptCandidate], needed: usize) -> Vec<String> {
-    if needed == 0 {
-        return Vec::new();
-    }
-    let mut order: Vec<&PreemptCandidate> = cands.iter().collect();
+/// Pick which running flares on ONE node to preempt: lowest priority
+/// first, most-recently-started first within a priority class (old flares
+/// keep their progress), then a trim pass drops every victim whose reclaim
+/// turned out redundant — largest first — so the set of reclaimed vCPUs is
+/// minimal. `None` when the candidates cannot cover `needed`: a partial
+/// preemption would destroy work without unblocking anything.
+fn victims_on_node(
+    cands: &[&PreemptCandidate],
+    needed: usize,
+) -> Option<(usize, Vec<String>)> {
+    let mut order: Vec<&PreemptCandidate> = cands.to_vec();
     order.sort_by(|a, b| a.priority.cmp(&b.priority).then(b.seq.cmp(&a.seq)));
     let mut picked: Vec<&PreemptCandidate> = Vec::new();
     let mut sum = 0usize;
@@ -316,7 +328,7 @@ pub fn select_victims(cands: &[PreemptCandidate], needed: usize) -> Vec<String> 
         picked.push(c);
     }
     if sum < needed {
-        return Vec::new();
+        return None;
     }
     let mut by_size: Vec<usize> = (0..picked.len()).collect();
     by_size.sort_by(|&a, &b| picked[b].vcpus.cmp(&picked[a].vcpus));
@@ -327,12 +339,46 @@ pub fn select_victims(cands: &[PreemptCandidate], needed: usize) -> Vec<String> 
             keep[i] = false;
         }
     }
-    picked
+    let ids = picked
         .iter()
         .zip(keep)
         .filter(|(_, k)| *k)
         .map(|(c, _)| c.flare_id.clone())
-        .collect()
+        .collect();
+    Some((sum, ids))
+}
+
+/// Fragmentation-aware victim selection: `needed_by_node` maps each node
+/// that *could* host the starved flare to the vCPUs still missing there
+/// (node total ≥ burst, so freeing that much makes the flare placeable on
+/// that node). Candidate victims are grouped by hosting node and each
+/// node's minimal cover is computed independently; the cheapest feasible
+/// single-node plan wins (fewest vCPUs reclaimed, then fewest victims,
+/// then node name for determinism). Empty when no node's candidates can
+/// cover its shortfall — preempting across nodes would destroy work
+/// without freeing contiguous capacity anywhere.
+pub fn select_victims(
+    cands: &[PreemptCandidate],
+    needed_by_node: &BTreeMap<String, usize>,
+) -> Vec<String> {
+    let mut best: Option<(usize, usize, Vec<String>)> = None;
+    for (node, &needed) in needed_by_node {
+        if needed == 0 {
+            continue;
+        }
+        let on_node: Vec<&PreemptCandidate> =
+            cands.iter().filter(|c| &c.node == node).collect();
+        if let Some((reclaimed, ids)) = victims_on_node(&on_node, needed) {
+            let cheaper = match &best {
+                None => true,
+                Some((r, n, _)) => (reclaimed, ids.len()) < (*r, *n),
+            };
+            if cheaper {
+                best = Some((reclaimed, ids.len(), ids));
+            }
+        }
+    }
+    best.map(|(_, _, ids)| ids).unwrap_or_default()
 }
 
 /// EDF comparison: does deadline `a` come strictly before `b`? A missing
@@ -364,6 +410,10 @@ struct TenantLane {
     /// flare over the cap stays queued with a `quota_blocked` reason even
     /// when the cluster has free capacity; admission is unaffected.
     quota: Option<usize>,
+    /// Lifetime vCPU·seconds settled for this tenant (the billing meter:
+    /// every `settle` adds its *measured* charge). Restored from the WAL's
+    /// absolute-total usage entries at recovery.
+    billed_vcpu_s: f64,
 }
 
 impl TenantLane {
@@ -375,6 +425,7 @@ impl TenantLane {
             weight: 1.0,
             placed: 0,
             quota: None,
+            billed_vcpu_s: 0.0,
         }
     }
 
@@ -397,6 +448,8 @@ pub struct TenantPolicy {
     pub placed_vcpus: usize,
     /// Flares waiting in this tenant's lane.
     pub queued: usize,
+    /// Lifetime settled vCPU·seconds (the billing meter).
+    pub billed_vcpu_s: f64,
 }
 
 impl TenantPolicy {
@@ -406,6 +459,7 @@ impl TenantPolicy {
             ("weight", self.weight.into()),
             ("placed_vcpus", self.placed_vcpus.into()),
             ("queued", self.queued.into()),
+            ("vcpu_seconds", self.billed_vcpu_s.into()),
         ];
         if let Some(q) = self.quota {
             fields.push(("quota", q.into()));
@@ -461,6 +515,7 @@ impl FlareQueue {
                 quota: t.quota,
                 placed_vcpus: t.placed,
                 queued: t.jobs.len(),
+                billed_vcpu_s: t.billed_vcpu_s,
             })
             .collect();
         v.sort_by(|a, b| a.tenant.cmp(&b.tenant));
@@ -473,6 +528,17 @@ impl FlareQueue {
             .iter()
             .flat_map(|t| t.jobs.iter())
             .filter(|j| j.quota_blocked)
+            .map(|j| j.flare_id.clone())
+            .collect()
+    }
+
+    /// Ids of queued flares the last scan found infeasible: aggregate
+    /// capacity sufficed, but no single node could host them.
+    pub fn infeasible_ids(&self) -> Vec<String> {
+        self.tenants
+            .iter()
+            .flat_map(|t| t.jobs.iter())
+            .filter(|j| j.infeasible)
             .map(|j| j.flare_id.clone())
             .collect()
     }
@@ -593,7 +659,10 @@ impl FlareQueue {
     /// fairness epoch can zero a lane while one of its flares is still
     /// running, and that flare's settle must not push the lane into
     /// negative consumption (an unearned advantage in the new epoch).
-    pub fn settle(&mut self, tenant: &str, provisional: f64, measured: f64) {
+    /// Returns the tenant's new lifetime billed vCPU·seconds total — the
+    /// absolute value the controller journals as a `usage` WAL entry
+    /// (absolute so replay is an idempotent overwrite, never a re-sum).
+    pub fn settle(&mut self, tenant: &str, provisional: f64, measured: f64) -> f64 {
         let li = self.lane_index(tenant);
         let lane = &mut self.tenants[li];
         lane.consumed = (lane.consumed + measured - provisional).max(0.0);
@@ -601,6 +670,23 @@ impl FlareQueue {
         // the tenant's hard quota. (`provisional` is the burst size the
         // placement charged, so this mirrors `pop_placeable` exactly.)
         lane.placed = lane.placed.saturating_sub(provisional as usize);
+        lane.billed_vcpu_s += measured;
+        lane.billed_vcpu_s
+    }
+
+    /// Recovery: restore a tenant's lifetime billed total from the WAL's
+    /// last absolute `usage` entry (creating its lane if needed).
+    pub fn seed_billed(&mut self, tenant: &str, total: f64) {
+        let li = self.lane_index(tenant);
+        self.tenants[li].billed_vcpu_s = total;
+    }
+
+    /// One tenant's lifetime billed vCPU·seconds, if its lane exists.
+    pub fn usage_of(&self, tenant: &str) -> Option<f64> {
+        self.tenants
+            .iter()
+            .find(|t| t.name == tenant)
+            .map(|t| t.billed_vcpu_s)
     }
 
     pub fn len(&self) -> usize {
@@ -639,7 +725,8 @@ impl FlareQueue {
     }
 
     /// Remove and return the first flare that can be placed right now,
-    /// together with its reserved pack plan.
+    /// together with its committed node placement (node, reserved pack
+    /// plan, score, decision record).
     ///
     /// Three-level pick: priority classes are scanned high-to-low across
     /// the *whole* queue — priority is strictly dominant over tenant
@@ -663,14 +750,23 @@ impl FlareQueue {
     /// scan for it would stall every other tenant for nothing) and it does
     /// not touch DRR deficits. The skipped flare is marked
     /// `quota_blocked` for status visibility.
+    ///
+    /// **Infeasibility.** A flare that passes the aggregate free-capacity
+    /// pre-check yet cannot be placed by the `placer` (no single node can
+    /// host it, or every candidate refused within the spillback budget) is
+    /// marked `infeasible` for status visibility
+    /// (`wait_reason=no_feasible_node`); the skip still counts as a
+    /// backfill pass, exactly like any other failed placement.
     pub fn pop_placeable(
         &mut self,
-        pool: &InvokerPool,
-    ) -> Option<(QueuedFlare, Vec<PackSpec>)> {
-        // Re-derive quota-blocked marks from scratch each scan.
+        placer: &dyn Placer,
+    ) -> Option<(QueuedFlare, NodePlacement)> {
+        // Re-derive quota-blocked and infeasible marks from scratch each
+        // scan.
         for lane in &mut self.tenants {
             for job in &mut lane.jobs {
                 job.quota_blocked = false;
+                job.infeasible = false;
             }
         }
         let mut lane_order: Vec<usize> = (0..self.tenants.len())
@@ -689,11 +785,12 @@ impl FlareQueue {
         // this keeps the periodic rescan O(queue) comparisons, not
         // O(queue) plan() calls, under the queue lock. (Skipping a job this
         // way is exactly a failed placement: pass accounting is identical.)
-        let total_free: usize = pool.free_vcpus().iter().sum();
+        let total_free: usize = placer.total_free();
 
-        let mut chosen: Option<(usize, usize, Vec<PackSpec>)> = None;
+        let mut chosen: Option<(usize, usize, NodePlacement)> = None;
         let mut skipped: Vec<(usize, usize)> = Vec::new();
         let mut quota_hits: Vec<(usize, usize)> = Vec::new();
+        let mut infeasible_hits: Vec<(usize, usize)> = Vec::new();
         'scan: for class in [Priority::High, Priority::Normal, Priority::Low] {
             for &l in &lane_order {
                 let (lane_placed, lane_quota) =
@@ -709,12 +806,17 @@ impl FlareQueue {
                         continue;
                     }
                     let placed = if job.burst_size <= total_free {
-                        place_with_spillback(pool, job.strategy, job.burst_size, SPILLBACK_RETRIES)
+                        let p = placer.place(job);
+                        if p.is_none() {
+                            // Fit the aggregate view but no node took it.
+                            infeasible_hits.push((l, j));
+                        }
+                        p
                     } else {
                         None
                     };
-                    if let Some(packs) = placed {
-                        chosen = Some((l, j, packs));
+                    if let Some(placement) = placed {
+                        chosen = Some((l, j, placement));
                         break 'scan;
                     }
                     if job.passed_over >= self.max_backfill_passes {
@@ -724,12 +826,16 @@ impl FlareQueue {
                 }
             }
         }
-        // Mark quota-blocked flares whether or not anything placed — the
-        // common quota case is "nothing else is queued, yet this waits".
+        // Mark quota-blocked and infeasible flares whether or not anything
+        // placed — the common case is "nothing else is queued, yet this
+        // waits".
         for &(ql, qj) in &quota_hits {
             self.tenants[ql].jobs[qj].quota_blocked = true;
         }
-        let (l, j, packs) = chosen?;
+        for &(il, ij) in &infeasible_hits {
+            self.tenants[il].jobs[ij].infeasible = true;
+        }
+        let (l, j, placement) = chosen?;
         for &(sl, sj) in &skipped {
             self.tenants[sl].jobs[sj].passed_over += 1;
         }
@@ -737,7 +843,7 @@ impl FlareQueue {
         job.charged = job.burst_size as f64;
         self.tenants[l].consumed += job.charged;
         self.tenants[l].placed += job.burst_size;
-        Some((job, packs))
+        Some((job, placement))
     }
 }
 
@@ -827,17 +933,22 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // Deadline pass first: a flare whose deadline lapsed while
             // queued must fail fast, never be placed.
             c.expire_overdue_queued();
+            // Node liveness pass: drive heartbeats, declare silent nodes
+            // dead, and fail over their flares.
+            c.node_maintenance();
             loop {
-                let placed = state.queue.lock().unwrap().pop_placeable(&c.pool);
+                let placed =
+                    state.queue.lock().unwrap().pop_placeable(c.nodes.as_ref());
                 match placed {
-                    Some((job, packs)) => {
-                        Controller::spawn_execution(&c, job, packs, &state)
+                    Some((job, placement)) => {
+                        Controller::spawn_execution(&c, job, placement, &state)
                     }
                     None => break,
                 }
             }
-            // Surface quota-blocked waits in the flare records.
-            c.sync_quota_blocked();
+            // Surface quota-blocked and no-feasible-node waits in the
+            // flare records.
+            c.sync_wait_reasons();
             // Nothing placeable left: reclaim capacity for a starved
             // high-priority flare by preempting lower-priority runners.
             c.preempt_for_starved_high_flare();
@@ -889,6 +1000,8 @@ mod tests {
             submitted: Stopwatch::start(),
             passed_over: 0,
             quota_blocked: false,
+            prior_node: None,
+            infeasible: false,
         }
     }
 
@@ -901,8 +1014,8 @@ mod tests {
     /// Pop, assert the id, and release the reservation (serial-capacity
     /// helper for the fairness tests).
     fn pop_release(q: &mut FlareQueue, pool: &InvokerPool) -> String {
-        let (job, packs) = q.pop_placeable(pool).expect("placeable");
-        pool.release(&packs);
+        let (job, p) = q.pop_placeable(pool).expect("placeable");
+        pool.release(&p.packs);
         job.flare_id
     }
 
@@ -912,9 +1025,10 @@ mod tests {
         let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
         q.push(job("a", 4));
         q.push(job("b", 4));
-        let (first, packs) = q.pop_placeable(&pool).unwrap();
+        let (first, p) = q.pop_placeable(&pool).unwrap();
         assert_eq!(first.flare_id, "a");
-        assert_eq!(packs.iter().map(PackSpec::vcpus).sum::<usize>(), 4);
+        assert_eq!(p.packs.iter().map(PackSpec::vcpus).sum::<usize>(), 4);
+        assert_eq!(p.node, crate::platform::node::DEFAULT_NODE);
         let (second, _) = q.pop_placeable(&pool).unwrap();
         assert_eq!(second.flare_id, "b");
         assert!(q.pop_placeable(&pool).is_none());
@@ -954,9 +1068,9 @@ mod tests {
         assert!(q.pop_placeable(&pool).is_none());
         // Once the rest of the machine frees, the big flare goes first.
         pool.release(&[PackSpec { invoker_id: 0, workers: (0..6).collect() }]);
-        let (big, big_packs) = q.pop_placeable(&pool).unwrap();
+        let (big, big_p) = q.pop_placeable(&pool).unwrap();
         assert_eq!(big.flare_id, "big");
-        pool.release(&big_packs);
+        pool.release(&big_p.packs);
         assert_eq!(q.pop_placeable(&pool).unwrap().0.flare_id, "s3");
     }
 
@@ -1118,10 +1232,10 @@ mod tests {
         victim.passed_over = 7;
         q.requeue_preempted(victim);
         assert_eq!(pop_release(&mut q, &pool), "hi");
-        let (v, packs) = q.pop_placeable(&pool).unwrap();
+        let (v, p) = q.pop_placeable(&pool).unwrap();
         assert_eq!(v.flare_id, "victim");
         assert_eq!(v.passed_over, 0, "requeue resets the backfill pass count");
-        pool.release(&packs);
+        pool.release(&p.packs);
         assert_eq!(pop_release(&mut q, &pool), "n1");
         assert_eq!(pop_release(&mut q, &pool), "n2");
     }
@@ -1148,10 +1262,10 @@ mod tests {
         q.push(job_for("b1", 4, "b", Priority::Normal));
         q.push(job_for("b2", 4, "b", Priority::Normal));
         assert_eq!(pop_release(&mut q, &pool), "b1"); // 0:0 tie → name
-        let (z1, packs) = q.pop_placeable(&pool).unwrap();
+        let (z1, p) = q.pop_placeable(&pool).unwrap();
         assert_eq!(z1.flare_id, "z1");
         assert_eq!(z1.charged, 4.0);
-        pool.release(&packs);
+        pool.release(&p.packs);
         // z1 was cancelled almost immediately: settle the provisional
         // 4-vCPU charge down to the measured 0.1 vCPU·s. Lane z now holds
         // the better share, so z2 goes before b2 — with placement-time
@@ -1244,6 +1358,11 @@ mod tests {
         assert_eq!(q.policy("t"), Some((1.0, None)));
     }
 
+    /// `needed_by_node` helper for the single-node victim tests.
+    fn need(node: &str, n: usize) -> BTreeMap<String, usize> {
+        BTreeMap::from([(node.to_string(), n)])
+    }
+
     #[test]
     fn select_victims_prefers_lowest_priority_then_recency() {
         let cand = |id: &str, priority, vcpus, seq| PreemptCandidate {
@@ -1251,6 +1370,7 @@ mod tests {
             priority,
             vcpus,
             seq,
+            node: "node-0".to_string(),
         };
         let cands = vec![
             cand("norm-new", Priority::Normal, 4, 9),
@@ -1258,16 +1378,18 @@ mod tests {
             cand("low-new", Priority::Low, 4, 5),
         ];
         // 4 vCPUs needed: the newest low-priority flare alone covers it.
-        assert_eq!(select_victims(&cands, 4), vec!["low-new"]);
+        assert_eq!(select_victims(&cands, &need("node-0", 4)), vec!["low-new"]);
         // 8 needed: both lows go before any normal is touched.
-        let mut v = select_victims(&cands, 8);
+        let mut v = select_victims(&cands, &need("node-0", 8));
         v.sort();
         assert_eq!(v, vec!["low-new", "low-old"]);
         // 12 needed: the normal flare is drafted too.
-        assert_eq!(select_victims(&cands, 12).len(), 3);
+        assert_eq!(select_victims(&cands, &need("node-0", 12)).len(), 3);
         // 13 needed: cannot cover — preempt nobody.
-        assert!(select_victims(&cands, 13).is_empty());
-        assert!(select_victims(&cands, 0).is_empty());
+        assert!(select_victims(&cands, &need("node-0", 13)).is_empty());
+        assert!(select_victims(&cands, &need("node-0", 0)).is_empty());
+        // Victims on another node cannot free capacity on this one.
+        assert!(select_victims(&cands, &need("node-1", 4)).is_empty());
     }
 
     #[test]
@@ -1277,12 +1399,93 @@ mod tests {
             priority: Priority::Low,
             vcpus,
             seq,
+            node: "node-0".to_string(),
         };
         // Recency order drafts small-new (2 vCPUs) and then big (8) to
         // cover 6; the trim pass finds big alone suffices (10 − 2 = 8 ≥ 6)
         // and releases small-new — the minimal reclaim wins over recency.
         let cands = vec![cand("big", 8, 1), cand("small-new", 2, 9)];
-        assert_eq!(select_victims(&cands, 6), vec!["big"]);
+        assert_eq!(select_victims(&cands, &need("node-0", 6)), vec!["big"]);
+    }
+
+    #[test]
+    fn select_victims_frees_contiguous_capacity_on_one_node() {
+        let cand = |id: &str, vcpus, seq, node: &str| PreemptCandidate {
+            flare_id: id.to_string(),
+            priority: Priority::Low,
+            vcpus,
+            seq,
+            node: node.to_string(),
+        };
+        let cands = vec![
+            cand("a1", 2, 1, "node-a"),
+            cand("a2", 2, 2, "node-a"),
+            cand("b1", 4, 3, "node-b"),
+        ];
+        // 4 vCPUs short on either node. Aggregate selection would pick
+        // victims across nodes (2+2 beats 4 on reclaim ties) — useless,
+        // since no single node would end up with 4 contiguous free vCPUs.
+        // The node-aware plan reclaims exactly one node's cover; on a
+        // (4 reclaimed, 1 victim) vs (4 reclaimed, 2 victims) tie the
+        // fewer-victims plan wins.
+        let needs =
+            BTreeMap::from([("node-a".to_string(), 4), ("node-b".to_string(), 4)]);
+        assert_eq!(select_victims(&cands, &needs), vec!["b1"]);
+        // A node whose candidates cannot cover its shortfall is skipped in
+        // favor of one that can.
+        let needs =
+            BTreeMap::from([("node-a".to_string(), 6), ("node-b".to_string(), 4)]);
+        assert_eq!(select_victims(&cands, &needs), vec!["b1"]);
+        // No node can cover: preempt nobody.
+        let needs =
+            BTreeMap::from([("node-a".to_string(), 6), ("node-b".to_string(), 6)]);
+        assert!(select_victims(&cands, &needs).is_empty());
+    }
+
+    #[test]
+    fn settle_accumulates_lifetime_billing() {
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        assert_eq!(q.usage_of("t"), None);
+        assert_eq!(q.settle("t", 4.0, 2.5), 2.5);
+        assert_eq!(q.settle("t", 4.0, 1.5), 4.0);
+        assert_eq!(q.usage_of("t"), Some(4.0));
+        // Recovery restores the absolute total, not a delta.
+        q.seed_billed("t", 10.0);
+        assert_eq!(q.usage_of("t"), Some(10.0));
+        assert_eq!(q.settle("t", 1.0, 1.0), 11.0);
+        let policy = &q.tenant_policies()[0];
+        assert_eq!(policy.billed_vcpu_s, 11.0);
+        assert!(matches!(
+            policy.to_json().get("vcpu_seconds"),
+            Some(Json::Num(v)) if *v == 11.0
+        ));
+    }
+
+    #[test]
+    fn infeasible_flare_is_marked_but_backfill_continues() {
+        let reg = crate::platform::node::NodeRegistry::new();
+        reg.register("node-a", Arc::new(InvokerPool::new(&ClusterSpec::uniform(1, 4))));
+        reg.register("node-b", Arc::new(InvokerPool::new(&ClusterSpec::uniform(1, 8))));
+        let mut q = FlareQueue::new(MAX_BACKFILL_PASSES);
+        // Locality steers the filler onto node-b, leaving free = [4, 4].
+        let mut filler = job("filler", 4);
+        filler.prior_node = Some("node-b".to_string());
+        q.push(filler);
+        let (_, filler_p) = q.pop_placeable(&reg).unwrap();
+        assert_eq!(filler_p.node, "node-b");
+        // Aggregate free is 8 ≥ 6, but no single node can host 6: "wide"
+        // is marked infeasible while "narrow" backfills past it.
+        q.push(job("wide", 6));
+        q.push(job("narrow", 4));
+        let (narrow, _) = q.pop_placeable(&reg).expect("backfill places narrow");
+        assert_eq!(narrow.flare_id, "narrow");
+        assert_eq!(q.infeasible_ids(), vec!["wide"]);
+        // The mark is re-derived each scan: once node-b frees up, the
+        // flare places there and no mark remains.
+        reg.release("node-b", &filler_p.packs);
+        let (wide, wide_p) = q.pop_placeable(&reg).unwrap();
+        assert_eq!((wide.flare_id.as_str(), wide_p.node.as_str()), ("wide", "node-b"));
+        assert!(q.infeasible_ids().is_empty());
     }
 
     #[test]

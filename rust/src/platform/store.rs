@@ -17,6 +17,9 @@
 //!   - `{"op":"flare","rec":{...full flare record...}}`
 //!   - `{"op":"drop_flare","flare_id":"..."}` (retention eviction)
 //!   - `{"op":"tenant","tenant":"...","weight":W,"quota":Q?}`
+//!   - `{"op":"usage","tenant":"...","vcpu_s":X}` — the tenant's lifetime
+//!     settled vCPU·seconds as an **absolute total**, so replay is an
+//!     idempotent overwrite (the latest entry wins)
 //!   - `{"op":"checkpoint","flare_id":"...","worker":N,"epoch":E,
 //!     "file":"...","off":O,"len":L,"crc":C}` (a worker's latest progress
 //!     checkpoint; overwrite by `(flare_id, worker)`, so replay keeps only
@@ -155,6 +158,9 @@ pub struct LoadedState {
     pub flares: Vec<Json>,
     /// Per-tenant policy: `(tenant, weight, hard vCPU quota)`.
     pub tenants: Vec<(String, f64, Option<usize>)>,
+    /// Per-tenant lifetime settled vCPU·seconds (absolute totals — the
+    /// billing meter `GET /v1/tenants/<id>/usage` serves).
+    pub usage: Vec<(String, f64)>,
     /// Worker checkpoints of flares that were alive at crash time.
     pub checkpoints: Vec<LoadedCheckpoint>,
     /// Corrupt or truncated WAL lines that were skipped during the load
@@ -210,6 +216,8 @@ struct Inner {
     /// Insertion (submission) order of `flares` keys.
     flare_order: Vec<String>,
     tenants: BTreeMap<String, (f64, Option<usize>)>,
+    /// Latest settled lifetime vCPU·second total per tenant.
+    usage: BTreeMap<String, f64>,
     /// Latest checkpoint per `(flare, worker)`: `(epoch, payload ref)`.
     checkpoints: BTreeMap<String, BTreeMap<usize, (u64, CkptPayload)>>,
     skipped_lines: usize,
@@ -261,6 +269,14 @@ impl Inner {
                 let weight = entry.num_or("weight", 1.0);
                 let quota = entry.get("quota").and_then(Json::as_usize);
                 self.tenants.insert(t.to_string(), (weight, quota));
+                true
+            }
+            "usage" => {
+                let Some(t) = entry.get("tenant").and_then(Json::as_str) else {
+                    return false;
+                };
+                // Absolute total: replay overwrites, the latest entry wins.
+                self.usage.insert(t.to_string(), entry.num_or("vcpu_s", 0.0));
                 true
             }
             "checkpoint" => {
@@ -334,6 +350,7 @@ impl DurableStore {
         let mut flares = BTreeMap::new();
         let mut flare_order = Vec::new();
         let mut tenants = BTreeMap::new();
+        let mut usage = BTreeMap::new();
         let mut checkpoints: BTreeMap<String, BTreeMap<usize, (u64, CkptPayload)>> =
             BTreeMap::new();
         let mut skipped = 0usize;
@@ -366,6 +383,13 @@ impl DurableStore {
                                     policy.get("quota").and_then(Json::as_usize),
                                 ),
                             );
+                        }
+                    }
+                    if let Some(us) = snap.get("usage").and_then(Json::as_obj) {
+                        for (name, total) in us {
+                            if let Some(v) = total.as_f64() {
+                                usage.insert(name.clone(), v);
+                            }
                         }
                     }
                     if let Some(cs) = snap.get("checkpoints").and_then(Json::as_obj) {
@@ -426,6 +450,7 @@ impl DurableStore {
             flares,
             flare_order,
             tenants,
+            usage,
             checkpoints,
             skipped_lines: skipped,
             fsync: FsyncPolicy::Never,
@@ -533,6 +558,7 @@ impl DurableStore {
                 .iter()
                 .map(|(k, (w, q))| (k.clone(), *w, *q))
                 .collect(),
+            usage: inner.usage.iter().map(|(k, v)| (k.clone(), *v)).collect(),
             checkpoints,
             skipped_lines: inner.skipped_lines + bad_payloads,
         }
@@ -647,6 +673,16 @@ impl DurableStore {
 
     /// `drop_checkpoints` entry: the flare went terminal, its worker state
     /// is dead weight.
+    /// A `usage` entry: the tenant's lifetime settled vCPU·seconds as an
+    /// absolute total (replay overwrites — idempotent by construction).
+    pub fn entry_usage(tenant: &str, vcpu_s: f64) -> Json {
+        Json::obj(vec![
+            ("op", "usage".into()),
+            ("tenant", tenant.into()),
+            ("vcpu_s", vcpu_s.into()),
+        ])
+    }
+
     pub fn entry_drop_checkpoints(flare_id: &str) -> Json {
         Json::obj(vec![
             ("op", "drop_checkpoints".into()),
@@ -841,10 +877,14 @@ impl DurableStore {
                 })
                 .collect(),
         );
+        let usage = Json::Obj(
+            inner.usage.iter().map(|(name, v)| (name.clone(), Json::Num(*v))).collect(),
+        );
         let snap = Json::obj(vec![
             ("defs", Json::Arr(defs)),
             ("flares", Json::Arr(flares)),
             ("tenants", tenants),
+            ("usage", usage),
             ("checkpoints", checkpoints),
         ]);
         // Atomic replace: a crash leaves either the old or the new
@@ -899,6 +939,9 @@ mod tests {
             s.append_tenant("acme", 2.0, Some(16)).unwrap();
             s.append_tenant("free", 1.0, None).unwrap();
             s.append_drop_flare("f1").unwrap();
+            // Absolute totals: the later entry overwrites, never adds.
+            s.append_entry(DurableStore::entry_usage("acme", 10.0)).unwrap();
+            s.append_entry(DurableStore::entry_usage("acme", 12.5)).unwrap();
         }
         let loaded = DurableStore::open(&dir).unwrap().loaded();
         assert_eq!(loaded.defs.len(), 1);
@@ -910,7 +953,22 @@ mod tests {
         assert_eq!(loaded.tenants.len(), 2);
         assert!(loaded.tenants.contains(&("acme".into(), 2.0, Some(16))));
         assert!(loaded.tenants.contains(&("free".into(), 1.0, None)));
+        assert_eq!(loaded.usage, vec![("acme".to_string(), 12.5)]);
         assert_eq!(loaded.skipped_lines, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn usage_totals_survive_snapshot_compaction() {
+        let dir = tmp_dir("usage-snap");
+        {
+            let s = DurableStore::open(&dir).unwrap();
+            s.append_entry(DurableStore::entry_usage("acme", 7.25)).unwrap();
+            s.force_snapshot().unwrap();
+            assert_eq!(s.wal_entries(), 0, "usage lives in the snapshot now");
+        }
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        assert_eq!(loaded.usage, vec![("acme".to_string(), 7.25)]);
         let _ = fs::remove_dir_all(&dir);
     }
 

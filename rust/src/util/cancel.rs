@@ -42,6 +42,10 @@
 //!   [`CancelToken::reason`] before blocking.
 //! * Registration after the trip invokes the waker immediately — a late
 //!   registrant can never sleep through an already-tripped token.
+//! * Long-lived waiters (mailboxes) should implement [`WakeTarget`] and use
+//!   [`CancelToken::register_wake_target`] instead of a boxed closure: it
+//!   registers the waiter's own shared state, so the blocked-take fast path
+//!   performs no `Arc<Waker>` allocation per (mailbox, token) pair.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, Weak};
@@ -52,6 +56,49 @@ const PREEMPT: u8 = 1 << 1;
 /// Callback invoked when the owning token trips. Must be cheap and must not
 /// block for long: it runs on the *tripping* thread (controller/scheduler).
 pub type Waker = dyn Fn() + Send + Sync;
+
+/// Allocation-free alternative to a boxed [`Waker`] closure: a long-lived
+/// shared object (e.g. a mailbox's `Shared` state) implements `wake` directly
+/// and registers *itself*. Registration then only bumps the object's existing
+/// refcount — no per-(mailbox, token) `Arc<Waker>` allocation — which matters
+/// on the blocked-take fast path where every queue/token pairing used to
+/// allocate a fresh closure. Same contract as `Waker`: cheap, non-blocking,
+/// runs on the tripping thread.
+pub trait WakeTarget: Send + Sync {
+    fn wake(&self);
+}
+
+/// A registered waiter: either a legacy boxed closure or a zero-alloc
+/// [`WakeTarget`]. Both are held weak; the registering side owns liveness.
+enum WakerEntry {
+    Closure(Weak<Waker>),
+    Target(Weak<dyn WakeTarget>),
+}
+
+impl WakerEntry {
+    fn is_live(&self) -> bool {
+        match self {
+            WakerEntry::Closure(w) => w.strong_count() > 0,
+            WakerEntry::Target(w) => w.strong_count() > 0,
+        }
+    }
+}
+
+/// An upgraded-for-invocation entry; kept out of the registry lock so wakers
+/// may themselves take locks without deadlocking against registration.
+enum LiveWaker {
+    Closure(Arc<Waker>),
+    Target(Arc<dyn WakeTarget>),
+}
+
+impl LiveWaker {
+    fn invoke(&self) {
+        match self {
+            LiveWaker::Closure(w) => w(),
+            LiveWaker::Target(t) => t.wake(),
+        }
+    }
+}
 
 /// Why a flare's token was tripped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,7 +122,7 @@ impl CancelReason {
 #[derive(Default)]
 struct Inner {
     bits: AtomicU8,
-    wakers: Mutex<Vec<Weak<Waker>>>,
+    wakers: Mutex<Vec<WakerEntry>>,
 }
 
 impl std::fmt::Debug for Inner {
@@ -107,20 +154,45 @@ impl CancelToken {
     pub fn register_waker(&self, waker: &Arc<Waker>) {
         {
             let mut ws = self.0.wakers.lock().unwrap();
-            ws.retain(|w| w.strong_count() > 0);
-            ws.push(Arc::downgrade(waker));
+            ws.retain(WakerEntry::is_live);
+            ws.push(WakerEntry::Closure(Arc::downgrade(waker)));
         }
         if self.0.bits.load(Ordering::Acquire) != 0 {
             waker();
         }
     }
 
+    /// Like [`CancelToken::register_waker`] but allocation-free: the caller's
+    /// own shared state implements [`WakeTarget`] and is registered directly,
+    /// so the only cost is a refcount bump and a `Weak` pushed into the
+    /// registry. Same trip semantics, including the immediate invoke when the
+    /// token has already tripped.
+    pub fn register_wake_target(&self, target: &Arc<dyn WakeTarget>) {
+        {
+            let mut ws = self.0.wakers.lock().unwrap();
+            ws.retain(WakerEntry::is_live);
+            ws.push(WakerEntry::Target(Arc::downgrade(target)));
+        }
+        if self.0.bits.load(Ordering::Acquire) != 0 {
+            target.wake();
+        }
+    }
+
     /// Snapshot live wakers under the lock, invoke them after releasing it.
     fn wake_all(&self) {
-        let live: Vec<Arc<Waker>> =
-            self.0.wakers.lock().unwrap().iter().filter_map(|w| w.upgrade()).collect();
+        let live: Vec<LiveWaker> = self
+            .0
+            .wakers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|w| match w {
+                WakerEntry::Closure(c) => c.upgrade().map(LiveWaker::Closure),
+                WakerEntry::Target(t) => t.upgrade().map(LiveWaker::Target),
+            })
+            .collect();
         for w in live {
-            w();
+            w.invoke();
         }
     }
 
@@ -255,5 +327,43 @@ mod tests {
         assert!(t.0.wakers.lock().unwrap().len() <= 2);
         t.cancel();
         assert_eq!(hits.load(Ordering::SeqCst), 100);
+    }
+
+    struct CountingTarget(AtomicUsize);
+
+    impl WakeTarget for CountingTarget {
+        fn wake(&self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn wake_targets_fire_on_trip_without_closure_allocation() {
+        let t = CancelToken::new();
+        let target = Arc::new(CountingTarget(AtomicUsize::new(0)));
+        let as_dyn: Arc<dyn WakeTarget> = target.clone();
+        t.register_wake_target(&as_dyn);
+        assert_eq!(target.0.load(Ordering::SeqCst), 0);
+        t.preempt();
+        assert_eq!(target.0.load(Ordering::SeqCst), 1);
+        t.cancel();
+        assert_eq!(target.0.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn wake_target_registered_after_trip_fires_immediately_and_prunes() {
+        let t = CancelToken::new();
+        t.cancel();
+        let target = Arc::new(CountingTarget(AtomicUsize::new(0)));
+        let as_dyn: Arc<dyn WakeTarget> = target.clone();
+        t.register_wake_target(&as_dyn);
+        assert_eq!(target.0.load(Ordering::SeqCst), 1);
+        drop(as_dyn);
+        drop(target);
+        // A later registration prunes the now-dead target entry.
+        let live = Arc::new(CountingTarget(AtomicUsize::new(0)));
+        let live_dyn: Arc<dyn WakeTarget> = live.clone();
+        t.register_wake_target(&live_dyn);
+        assert!(t.0.wakers.lock().unwrap().len() <= 1);
     }
 }

@@ -1,0 +1,385 @@
+//! In-process multi-node harness for the two-level control plane: several
+//! invoker nodes behind one controller, a pinned heartbeat clock, and the
+//! `ingest_view` seam to open stale-view race windows deterministically.
+//! Covers: the `GET /v1/nodes`-backed status view, explainable placement
+//! decisions on the flare record, the stale-view refusal → spillback race
+//! (exactly one landing), heartbeat-loss failover to a surviving node, and
+//! kill-and-restart recovery that re-homes flares against the
+//! re-registered node set (or fails them when their node never returns).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+use burstc::cluster::costmodel::CostModel;
+use burstc::cluster::netmodel::NetParams;
+use burstc::cluster::ClusterSpec;
+use burstc::platform::{
+    register_work, BurstConfig, Controller, FlareOptions, FlareStatus, WorkFn,
+};
+use burstc::util::json::Json;
+
+/// Build a controller over the given `(name, invokers, vcpus)` node set.
+fn multi(nodes: &[(&str, usize, usize)]) -> Arc<Controller> {
+    Controller::new_multi(
+        nodes
+            .iter()
+            .map(|&(n, i, v)| (n.to_string(), ClusterSpec::uniform(i, v)))
+            .collect(),
+        CostModel::default(),
+        NetParams::scaled(1e-6),
+    )
+}
+
+fn recover_multi(nodes: &[(&str, usize, usize)], dir: &Path) -> Arc<Controller> {
+    Controller::recover_multi(
+        nodes
+            .iter()
+            .map(|&(n, i, v)| (n.to_string(), ClusterSpec::uniform(i, v)))
+            .collect(),
+        CostModel::default(),
+        NetParams::scaled(1e-6),
+        dir,
+    )
+    .expect("recover controller")
+}
+
+/// Pin the registry's heartbeat clock to a test-controlled counter, so
+/// views go stale (and nodes die) only when the test advances time.
+fn pin_clock(c: &Controller) -> Arc<AtomicU64> {
+    let t = Arc::new(AtomicU64::new(0));
+    let t2 = t.clone();
+    c.nodes.set_clock(Arc::new(move || t2.load(Ordering::SeqCst)));
+    t
+}
+
+fn hetero(granularity: usize) -> BurstConfig {
+    BurstConfig {
+        granularity,
+        strategy: "heterogeneous".into(),
+        ..Default::default()
+    }
+}
+
+fn wait_status(c: &Controller, id: &str, want: FlareStatus) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if c.flare_status(id) == Some(want) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+fn wait_until(mut pred: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if pred() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+/// A gate every worker of a flare blocks on (cancellation-aware) until the
+/// test opens it.
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn work(gate: &Arc<Gate>) -> WorkFn {
+        let gate = gate.clone();
+        Arc::new(move |_p, ctx: &burstc::bcm::BurstContext| {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                if *gate.open.lock().unwrap() {
+                    return Ok(Json::Null);
+                }
+                ctx.check_cancel()?;
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("gate never opened (test hang guard)"));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+fn noop() -> WorkFn {
+    Arc::new(|_p, _ctx| Ok(Json::Null))
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("burstc-nodes-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Copy the state files the way a crash leaves them: whatever is on disk
+/// right now, while the original controller still owns the directory.
+fn copy_state(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for entry in fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+/// `GET /v1/nodes` substrate: every registered node is listed with its
+/// liveness, heartbeat age, and (initially identical) view vs truth.
+#[test]
+fn node_statuses_list_every_registered_node() {
+    let c = multi(&[("node-0", 1, 4), ("node-1", 2, 8), ("node-2", 1, 16)]);
+    let statuses = c.nodes.node_statuses();
+    assert_eq!(statuses.len(), 3);
+    let names: Vec<&str> = statuses.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, vec!["node-0", "node-1", "node-2"], "BTreeMap order");
+    for s in &statuses {
+        assert!(s.alive);
+        assert_eq!(s.view, s.free, "fresh registration: view == truth");
+        assert_eq!(s.free, s.total);
+        assert_eq!(s.admitted, 0);
+    }
+    assert_eq!(statuses[1].total, vec![8, 8]);
+    // Admission bounds against the largest node, not the cluster sum.
+    assert_eq!(c.nodes.max_node_capacity(), 16);
+    assert_eq!(c.nodes.alive_count(), (3, 0));
+}
+
+/// Acceptance: a placed flare's record names its node, the winning score,
+/// and a per-candidate score-or-reject log — all riding the record JSON
+/// that `GET /v1/flares/<id>` serves.
+#[test]
+fn placement_decision_is_recorded_and_explainable() {
+    register_work("nodes-noop", noop());
+    let c = multi(&[("node-0", 1, 4), ("node-1", 1, 8)]);
+    c.deploy("wide", "nodes-noop", hetero(8)).unwrap();
+
+    // Only node-1 can host 8 workers in one pack.
+    let r = c.flare("wide", vec![Json::Null; 8], &FlareOptions::default()).unwrap();
+    let rec = c.db.get_flare(&r.flare_id).unwrap();
+    assert_eq!(rec.node.as_deref(), Some("node-1"));
+    let placement = rec.placement.as_ref().expect("decision recorded");
+    assert_eq!(placement.str_or("winner", ""), "node-1");
+    assert!(placement.get("score").unwrap().as_f64().unwrap() > 0.0);
+    let cands = placement.get("candidates").unwrap().as_arr().unwrap();
+    assert_eq!(cands.len(), 2, "{placement}");
+    let node0 = cands
+        .iter()
+        .find(|cand| cand.str_or("node", "") == "node-0")
+        .expect("losing candidate logged");
+    assert!(!node0.str_or("reject", "").is_empty(), "node-0 cannot fit 8: {node0}");
+
+    // Both surface through the record's JSON (the HTTP status payload).
+    let j = rec.to_json();
+    assert_eq!(j.get("node").unwrap().as_str(), Some("node-1"));
+    assert_eq!(j.get("placement").unwrap().str_or("winner", ""), "node-1");
+
+    // Wider than the largest node: rejected at admission, with the bound.
+    let err = c
+        .submit_flare("wide", vec![Json::Null; 10], &FlareOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("cluster has 8"), "{err}");
+}
+
+/// Tentpole acceptance: the stale-view race, deterministically. The
+/// cluster-side view claims node-0 has room it does not have; the node
+/// agent refuses the placement against pool ground truth, and spillback
+/// re-plans onto node-1 — exactly one landing, no double booking.
+#[test]
+fn stale_view_refusal_spills_back_to_surviving_candidate() {
+    let gate = Arc::new(Gate::default());
+    register_work("nodes-gated-stale", Gate::work(&gate));
+    let c = multi(&[("node-0", 1, 4), ("node-1", 1, 4)]);
+    let _t = pin_clock(&c); // heartbeats frozen: nothing refreshes the lie
+    c.deploy("hold", "nodes-gated-stale", hetero(4)).unwrap();
+
+    // Flare A fills node-0 (score tie broken lexicographically).
+    let ha = c.submit_flare("hold", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &ha.flare_id, FlareStatus::Running));
+    assert_eq!(c.db.get_flare(&ha.flare_id).unwrap().node.as_deref(), Some("node-0"));
+
+    // The stale heartbeat: node-0 reports 4 free vCPUs it no longer has.
+    c.nodes.ingest_view("node-0", vec![4]);
+
+    // Flare B prefers the (lying) node-0, is refused by its agent, and
+    // spills back onto node-1 — landing exactly once.
+    let hb = c.submit_flare("hold", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &hb.flare_id, FlareStatus::Running));
+    let rec = c.db.get_flare(&hb.flare_id).unwrap();
+    assert_eq!(rec.node.as_deref(), Some("node-1"), "spilled back off the stale view");
+    let placement = rec.placement.as_ref().unwrap();
+    assert_eq!(placement.get("spillbacks").unwrap().as_usize(), Some(1), "{placement}");
+    let cands = placement.get("candidates").unwrap().as_arr().unwrap();
+    let node0 = cands.iter().find(|cand| cand.str_or("node", "") == "node-0").unwrap();
+    assert!(
+        node0.str_or("reject", "").contains("refused placement"),
+        "the refusal is explainable: {node0}"
+    );
+    assert_eq!(c.nodes.refusals_total(), 1);
+    assert_eq!(c.nodes.spillbacks_total(), 1);
+    // The refusal re-synced node-0's view to ground truth, and each node
+    // currently holds exactly one admitted flare.
+    let status = c.nodes.node_statuses();
+    assert_eq!(status[0].view, vec![0]);
+    assert_eq!(status.iter().map(|s| s.admitted).collect::<Vec<_>>(), vec![1, 1]);
+
+    gate.open();
+    ha.wait().unwrap();
+    hb.wait().unwrap();
+    let statuses = c.nodes.node_statuses();
+    assert!(statuses.iter().all(|s| s.free.iter().sum::<usize>() == 4));
+    assert!(statuses.iter().all(|s| s.admitted == 0), "releases drained the gauge");
+}
+
+/// Tentpole acceptance: heartbeat loss. A node stops heartbeating, blows
+/// its miss budget on the pinned clock, and is declared dead; its running
+/// flare is preempted off it and re-homed onto the surviving node.
+#[test]
+fn heartbeat_loss_fails_over_running_flare_to_surviving_node() {
+    let gate = Arc::new(Gate::default());
+    register_work("nodes-gated-hb", Gate::work(&gate));
+    let c = multi(&[("node-0", 1, 4), ("node-1", 1, 4)]);
+    let t = pin_clock(&c);
+    c.nodes.set_liveness(50, 2); // dead after 100 ms of silence
+    c.deploy("hb", "nodes-gated-hb", hetero(4)).unwrap();
+
+    let h = c.submit_flare("hb", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &h.flare_id, FlareStatus::Running));
+    assert_eq!(c.db.get_flare(&h.flare_id).unwrap().node.as_deref(), Some("node-0"));
+
+    // node-0 goes silent; the clock jumps past interval × budget.
+    c.nodes.agent("node-0").unwrap().set_heartbeats(false);
+    t.store(1_000, Ordering::SeqCst);
+
+    // The scheduler's maintenance pass reaps node-0 and preempts the flare
+    // off it; placement re-homes it onto node-1 (node-0 rejected as dead).
+    assert!(wait_until(|| {
+        c.db.get_flare(&h.flare_id)
+            .is_some_and(|r| r.node.as_deref() == Some("node-1"))
+    }));
+    assert!(wait_status(&c, &h.flare_id, FlareStatus::Running));
+    assert_eq!(c.nodes.deaths_total(), 1);
+    assert_eq!(c.nodes.alive_count(), (1, 1));
+    let rec = c.db.get_flare(&h.flare_id).unwrap();
+    assert_eq!(rec.preempt_count, 1, "failover rides the preempt-requeue edge");
+    let node0 = rec
+        .placement
+        .as_ref()
+        .unwrap()
+        .get("candidates")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|cand| cand.str_or("node", "") == "node-0")
+        .cloned()
+        .unwrap();
+    assert!(node0.str_or("reject", "").contains("dead"), "{node0}");
+
+    gate.open();
+    h.wait().unwrap();
+    // The dead node leaked nothing: its reservation was released on unwind.
+    let statuses = c.nodes.node_statuses();
+    assert!(statuses.iter().all(|s| s.free.iter().sum::<usize>() == 4));
+}
+
+/// Kill-and-restart: a flare running on node-1 at crash time is re-homed
+/// when node-1 re-registers, and failed with a clear "lost at restart"
+/// error when it never comes back.
+#[test]
+fn recovery_rehomes_flares_against_the_reregistered_node_set() {
+    let dir_a = tmp_dir("rehome-a");
+    let dir_b = tmp_dir("rehome-b");
+    let dir_c = tmp_dir("rehome-c");
+    let gate = Arc::new(Gate::default());
+    register_work("nodes-gated-rec", Gate::work(&gate));
+    let nodes = [("node-0", 1, 4), ("node-1", 1, 8)];
+
+    // --- Before: an 8-wide flare is running on node-1, parked on the gate.
+    let a = recover_multi(&nodes, &dir_a);
+    a.deploy("wide", "nodes-gated-rec", hetero(8)).unwrap();
+    let h = a.submit_flare("wide", vec![Json::Null; 8], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&a, &h.flare_id, FlareStatus::Running));
+    assert_eq!(a.db.get_flare(&h.flare_id).unwrap().node.as_deref(), Some("node-1"));
+
+    // --- Crash: copy the state as-is, twice (two recovery scenarios).
+    copy_state(&dir_a, &dir_b);
+    copy_state(&dir_a, &dir_c);
+    let _ = a.cancel_flare(&h.flare_id);
+    assert!(wait_status(&a, &h.flare_id, FlareStatus::Cancelled));
+    drop(a);
+    gate.open();
+
+    // --- Scenario 1: node-1 never re-registers — the flare cannot be
+    // re-homed (it does not fit node-0 and its node is gone): failed, with
+    // an error naming the missing node.
+    let b = recover_multi(&nodes[..1], &dir_b);
+    assert_eq!(b.recovery_stats().lost_work, 1, "{:?}", b.recovery_stats());
+    let lost = b.db.get_flare(&h.flare_id).unwrap();
+    assert_eq!(lost.status, FlareStatus::Failed);
+    let err = lost.error.as_deref().unwrap_or("");
+    assert!(err.contains("lost at restart"), "{err}");
+    assert!(err.contains("node-1"), "{err}");
+    drop(b);
+
+    // --- Scenario 2: both nodes return — the flare is re-admitted and
+    // re-homed by a fresh placement pass (the gate is open: it completes).
+    let c = recover_multi(&nodes, &dir_c);
+    assert_eq!(c.recovery_stats().requeued, 1, "{:?}", c.recovery_stats());
+    assert!(wait_status(&c, &h.flare_id, FlareStatus::Completed));
+    let rec = c.db.get_flare(&h.flare_id).unwrap();
+    assert_eq!(rec.node.as_deref(), Some("node-1"), "re-homed to the only fitting node");
+    drop(c);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+    let _ = fs::remove_dir_all(&dir_c);
+}
+
+/// Billing export durability: settled vCPU·seconds survive a crash — the
+/// usage WAL entry carries absolute totals, so replay is idempotent.
+#[test]
+fn settled_usage_survives_kill_and_restart() {
+    let dir_a = tmp_dir("usage-a");
+    let dir_b = tmp_dir("usage-b");
+    register_work(
+        "nodes-paid",
+        Arc::new(|_p, _ctx| {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(Json::Null)
+        }),
+    );
+    let a = recover_multi(&[("node-0", 1, 4)], &dir_a);
+    a.deploy("paid", "nodes-paid", hetero(2)).unwrap();
+    let opts = FlareOptions { tenant: Some("acme".into()), ..Default::default() };
+    a.flare("paid", vec![Json::Null; 2], &opts).unwrap();
+    let billed = a.tenant_usage("acme").expect("lane exists");
+    assert!(billed > 0.0, "completed work settles a positive charge");
+
+    copy_state(&dir_a, &dir_b);
+    drop(a);
+
+    let b = recover_multi(&[("node-0", 1, 4)], &dir_b);
+    let recovered = b.tenant_usage("acme").expect("usage replayed from the WAL");
+    assert!(
+        (recovered - billed).abs() < 1e-9,
+        "absolute totals replay exactly: {recovered} vs {billed}"
+    );
+    drop(b);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
