@@ -1,0 +1,621 @@
+//! Control-plane hot-path benchmark: sustained flare submission and
+//! status polling against the sharded store, the batched-admission
+//! scheduler, and the event-driven HTTP server.
+//!
+//! Three phases, each with an in-bench legacy baseline where the refactor
+//! replaced one (the same pattern `bcm_hotpath` uses for the fabric):
+//!
+//! 1. **store** — concurrent status reads + record updates against the
+//!    sharded `BurstDb` vs a re-implementation of the pre-refactor store
+//!    (one `Mutex` around `(HashMap, Vec)` serializing every access).
+//!    Reports read-latency percentiles and status-read throughput.
+//! 2. **admission** — per-submit enqueue latency with producers pushing
+//!    into the scheduler's inbox (contending only a `mem::take`) vs the
+//!    legacy discipline where every submit takes the *same* lock the
+//!    scheduler holds for its whole placement pass.
+//! 3. **serve** — an open-loop generator drives `POST /v1/flares` for two
+//!    tenants at stepped load levels against a live `HttpServer` while
+//!    pollers hammer status routes; reports client submit RTT, server-side
+//!    submit→placed latency (`metadata.queue_wait_s`, poll-free),
+//!    status-read QPS, scheduler pass cost (`/metrics`), per-tenant
+//!    queue-wait-vs-load curves, and a preemption-latency CDF for `high`
+//!    flares submitted under saturation.
+//!
+//! Regenerates the tracked `BENCH_control_plane.json` at the repository
+//! root. Run `--smoke` (or set `BURSTC_BENCH_SMOKE=1`) for the CI
+//! variant: tiny durations, JSON artifact only.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use burstc::platform::http::{http_request, HttpServer};
+use burstc::platform::{
+    register_work, BurstDb, Controller, FlareRecord, FlareStatus, Priority, WorkFn,
+};
+use burstc::util::benchkit::{section, Table};
+use burstc::util::json::Json;
+use burstc::util::rng::Pcg;
+use burstc::util::stats::{cdf, Summary};
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", s.n.into()),
+        ("median_us", (s.median * 1e6).into()),
+        ("p95_us", (s.p95 * 1e6).into()),
+        ("p99_us", (s.p99 * 1e6).into()),
+    ])
+}
+
+/// Spread sample indices over the id space (decorrelates threads).
+fn pick(i: u64, n: usize) -> usize {
+    i.wrapping_mul(2654435761).rotate_left(17) as usize % n
+}
+
+fn busy_wait(d: Duration) {
+    let t = Instant::now();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 1: store — sharded BurstDb vs legacy single-lock store
+// ---------------------------------------------------------------------------
+
+type FlareTable = (HashMap<String, FlareRecord>, Vec<String>);
+
+/// The pre-refactor store, re-implemented in-bench: one mutex around the
+/// record map and the insertion-order list, so every read, update, and
+/// list serializes — including the cloning done while holding it.
+struct LegacyStore {
+    flares: Mutex<FlareTable>,
+}
+
+impl LegacyStore {
+    fn new() -> LegacyStore {
+        LegacyStore { flares: Mutex::new((HashMap::new(), Vec::new())) }
+    }
+
+    fn put(&self, rec: FlareRecord) {
+        let mut t = self.flares.lock().unwrap();
+        t.1.push(rec.flare_id.clone());
+        t.0.insert(rec.flare_id.clone(), rec);
+    }
+
+    fn get(&self, id: &str) -> Option<FlareRecord> {
+        self.flares.lock().unwrap().0.get(id).cloned()
+    }
+
+    fn update(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) {
+        if let Some(rec) = self.flares.lock().unwrap().0.get_mut(id) {
+            f(rec);
+        }
+    }
+
+    fn list(&self, limit: usize) -> Vec<(String, String, FlareStatus)> {
+        let t = self.flares.lock().unwrap();
+        t.1.iter()
+            .rev()
+            .take(limit)
+            .filter_map(|id| {
+                t.0.get(id).map(|r| (r.flare_id.clone(), r.def_name.clone(), r.status))
+            })
+            .collect()
+    }
+}
+
+/// Run `readers` status-reading threads against `writers` mutating
+/// threads for `run_for`; returns read-latency summary and reads/sec.
+fn run_store_workload(
+    read: &(dyn Fn(u64) + Sync),
+    write: &(dyn Fn(u64) + Sync),
+    readers: usize,
+    writers: usize,
+    run_for: Duration,
+) -> (Summary, f64) {
+    let stop = AtomicBool::new(false);
+    let all: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let sw = Instant::now();
+    std::thread::scope(|s| {
+        for r in 0..readers {
+            let (stop, all) = (&stop, &all);
+            s.spawn(move || {
+                let mut local = Vec::new();
+                let mut i = r as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let t = Instant::now();
+                    read(i);
+                    local.push(t.elapsed().as_secs_f64());
+                    i = i.wrapping_add(readers as u64);
+                }
+                all.lock().unwrap().extend(local);
+            });
+        }
+        for w in 0..writers {
+            let stop = &stop;
+            s.spawn(move || {
+                let mut i = w as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    write(i);
+                    i = i.wrapping_add(writers as u64);
+                    std::thread::sleep(Duration::from_micros(10));
+                }
+            });
+        }
+        std::thread::sleep(run_for);
+        stop.store(true, Ordering::Relaxed);
+    });
+    let elapsed = sw.elapsed().as_secs_f64();
+    let samples = all.into_inner().unwrap();
+    let qps = samples.len() as f64 / elapsed;
+    (Summary::of(&samples), qps)
+}
+
+fn store_phase(smoke: bool) -> (Json, [(Summary, f64); 2]) {
+    let n_flares = if smoke { 256 } else { 4096 };
+    let (readers, writers) = (4usize, 2usize);
+    let run_for = Duration::from_millis(if smoke { 60 } else { 600 });
+    let ids: Vec<String> = (0..n_flares).map(|i| format!("cp-{i}")).collect();
+    let running = |id: &str| {
+        let mut rec = FlareRecord::queued(id, "bench", "default", Priority::Normal);
+        rec.status = FlareStatus::Running;
+        rec
+    };
+
+    let db = BurstDb::new();
+    for id in &ids {
+        db.put_flare(running(id));
+    }
+    let sharded = run_store_workload(
+        &|i| {
+            if i % 64 == 0 {
+                assert!(!db.list_flare_summaries(50).is_empty());
+            } else {
+                assert!(db.get_flare(&ids[pick(i, n_flares)]).is_some());
+            }
+        },
+        &|i| {
+            let id = &ids[pick(i.wrapping_mul(31).wrapping_add(7), n_flares)];
+            db.update_flare(id, |r| r.resume_count = r.resume_count.wrapping_add(1));
+        },
+        readers,
+        writers,
+        run_for,
+    );
+
+    let legacy_store = LegacyStore::new();
+    for id in &ids {
+        legacy_store.put(running(id));
+    }
+    let legacy = run_store_workload(
+        &|i| {
+            if i % 64 == 0 {
+                assert!(!legacy_store.list(50).is_empty());
+            } else {
+                assert!(legacy_store.get(&ids[pick(i, n_flares)]).is_some());
+            }
+        },
+        &|i| {
+            let id = &ids[pick(i.wrapping_mul(31).wrapping_add(7), n_flares)];
+            legacy_store.update(id, |r| r.resume_count = r.resume_count.wrapping_add(1));
+        },
+        readers,
+        writers,
+        run_for,
+    );
+
+    let j = Json::obj(vec![
+        (
+            "workload",
+            format!(
+                "{readers} readers + {writers} writers over {n_flares} records, \
+                 {}ms (1/64 reads list 50)",
+                run_for.as_millis()
+            )
+            .into(),
+        ),
+        (
+            "sharded",
+            Json::obj(vec![
+                ("read_latency", summary_json(&sharded.0)),
+                ("reads_per_sec", sharded.1.into()),
+            ]),
+        ),
+        (
+            "legacy_single_lock",
+            Json::obj(vec![
+                ("read_latency", summary_json(&legacy.0)),
+                ("reads_per_sec", legacy.1.into()),
+            ]),
+        ),
+    ]);
+    (j, [legacy, sharded])
+}
+
+// ---------------------------------------------------------------------------
+// Phase 2: admission — inbox push vs legacy per-submit queue lock
+// ---------------------------------------------------------------------------
+
+/// Per-submit enqueue latency under a scheduler stand-in running
+/// `pass_cost`-long placement passes. `batched = false` reproduces the
+/// pre-refactor discipline: submitters take the very lock the pass holds.
+/// `batched = true` mirrors the inbox: the pass only `mem::take`s it.
+fn run_admission(
+    batched: bool,
+    producers: usize,
+    run_for: Duration,
+    pass_cost: Duration,
+) -> (Summary, f64) {
+    let submit_point: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let stop = AtomicBool::new(false);
+    let all: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let submitted = AtomicU64::new(0);
+    let sw = Instant::now();
+    std::thread::scope(|s| {
+        {
+            let (submit_point, stop) = (&submit_point, &stop);
+            s.spawn(move || {
+                let mut queue: Vec<u64> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    if batched {
+                        let batch = std::mem::take(&mut *submit_point.lock().unwrap());
+                        queue.extend(batch);
+                        busy_wait(pass_cost); // placement pass, submit lock free
+                        std::hint::black_box(queue.len());
+                        queue.clear();
+                    } else {
+                        let mut q = submit_point.lock().unwrap();
+                        busy_wait(pass_cost); // placement pass under the lock
+                        q.clear();
+                    }
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            });
+        }
+        for p in 0..producers {
+            let (submit_point, stop, all, submitted) = (&submit_point, &stop, &all, &submitted);
+            s.spawn(move || {
+                let mut local = Vec::new();
+                let mut i = p as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let t = Instant::now();
+                    submit_point.lock().unwrap().push(i);
+                    local.push(t.elapsed().as_secs_f64());
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    i = i.wrapping_add(producers as u64);
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                all.lock().unwrap().extend(local);
+            });
+        }
+        std::thread::sleep(run_for);
+        stop.store(true, Ordering::Relaxed);
+    });
+    let elapsed = sw.elapsed().as_secs_f64();
+    let samples = all.into_inner().unwrap();
+    let rate = submitted.load(Ordering::Relaxed) as f64 / elapsed;
+    (Summary::of(&samples), rate)
+}
+
+fn admission_phase(smoke: bool) -> (Json, [(Summary, f64); 2]) {
+    let producers = 4usize;
+    let run_for = Duration::from_millis(if smoke { 60 } else { 600 });
+    let pass_cost = Duration::from_micros(200);
+    let legacy = run_admission(false, producers, run_for, pass_cost);
+    let batched = run_admission(true, producers, run_for, pass_cost);
+    let j = Json::obj(vec![
+        (
+            "workload",
+            format!(
+                "{producers} producers vs {}us placement passes, {}ms",
+                pass_cost.as_micros(),
+                run_for.as_millis()
+            )
+            .into(),
+        ),
+        (
+            "batched_inbox",
+            Json::obj(vec![
+                ("submit_latency", summary_json(&batched.0)),
+                ("submits_per_sec", batched.1.into()),
+            ]),
+        ),
+        (
+            "legacy_per_submit",
+            Json::obj(vec![
+                ("submit_latency", summary_json(&legacy.0)),
+                ("submits_per_sec", legacy.1.into()),
+            ]),
+        ),
+    ]);
+    (j, [legacy, batched])
+}
+
+// ---------------------------------------------------------------------------
+// Phase 3: serve — open-loop load against a live platform over HTTP
+// ---------------------------------------------------------------------------
+
+fn wait_all_terminal(c: &Controller, ids: &[String], timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    for id in ids {
+        loop {
+            let done = c.db.get_flare(id).map(|r| r.status.is_terminal()).unwrap_or(false);
+            if done {
+                break;
+            }
+            assert!(Instant::now() < deadline, "flare '{id}' never went terminal");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Server-side submit→placed seconds of one completed flare (recorded by
+/// the controller as `metadata.queue_wait_s` — no polling error).
+fn queue_wait_of(c: &Controller, id: &str) -> Option<f64> {
+    let rec = c.db.get_flare(id)?;
+    if rec.status != FlareStatus::Completed {
+        return None;
+    }
+    rec.metadata.get("queue_wait_s").and_then(Json::as_f64)
+}
+
+fn serve_phase(smoke: bool) -> (Json, Json, Json) {
+    let work_ms: u64 = if smoke { 10 } else { 20 };
+    let work: WorkFn = Arc::new(move |_p, _ctx| {
+        std::thread::sleep(Duration::from_millis(work_ms));
+        Ok(Json::Null)
+    });
+    register_work("cp-serve-work", work);
+    // 2 invokers x 4 vCPUs; burst size 2 => 4 concurrent flares, so the
+    // top load level approaches saturation and queue waits rise.
+    let c = Controller::test_platform(2, 4, 1e-6);
+    let srv = HttpServer::start(c.clone(), 0).unwrap();
+    let addr = srv.addr.clone();
+    let deploy = Json::parse(
+        r#"{"name":"cp","work":"cp-serve-work","conf":{"granularity":2,"strategy":"heterogeneous"}}"#,
+    )
+    .unwrap();
+    http_request(&addr, "POST", "/v1/deploy", Some(&deploy)).unwrap();
+
+    // Per-tenant open-loop rates (flares/s); combined capacity is
+    // 4 slots / work_ms, so the last level sits near saturation.
+    let levels: Vec<f64> = if smoke {
+        vec![40.0]
+    } else {
+        vec![25.0, 60.0, 100.0]
+    };
+    let window = Duration::from_millis(if smoke { 300 } else { 2_000 });
+
+    // Status pollers hammer read routes for the whole phase.
+    let known: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let polls = Arc::new(AtomicU64::new(0));
+    let poll_stop = Arc::new(AtomicBool::new(false));
+    let pollers: Vec<_> = (0..2u64)
+        .map(|p| {
+            let addr = addr.clone();
+            let known = known.clone();
+            let polls = polls.clone();
+            let stop = poll_stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg::new(90 + p);
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let id = {
+                        let k = known.lock().unwrap();
+                        if k.is_empty() {
+                            None
+                        } else {
+                            Some(k[rng.usize(0, k.len())].clone())
+                        }
+                    };
+                    let r = match id {
+                        Some(id) if i % 32 != 0 => {
+                            http_request(&addr, "GET", &format!("/v1/flares/{id}"), None)
+                        }
+                        _ if i % 2 == 0 => http_request(&addr, "GET", "/v1/flares", None),
+                        _ => http_request(&addr, "GET", "/metrics", None),
+                    };
+                    if r.is_ok() {
+                        polls.fetch_add(1, Ordering::Relaxed);
+                    }
+                    i = i.wrapping_add(1);
+                }
+            })
+        })
+        .collect();
+
+    let poll_sw = Instant::now();
+    let rtts: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let mut level_rows: Vec<Json> = Vec::new();
+    let mut all_waits: Vec<f64> = Vec::new();
+    for &rate in &levels {
+        let submitted: Mutex<Vec<(String, String)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for tenant in ["acme", "beta"] {
+                let addr = addr.clone();
+                let known = known.clone();
+                let (submitted, rtts) = (&submitted, &rtts);
+                s.spawn(move || {
+                    let body = Json::parse(&format!(
+                        r#"{{"def":"cp","params":[1,1],"options":{{"tenant":"{tenant}"}}}}"#
+                    ))
+                    .unwrap();
+                    let interval = Duration::from_secs_f64(1.0 / rate);
+                    let start = Instant::now();
+                    let mut k: u32 = 0;
+                    while start.elapsed() < window {
+                        let due = interval * k;
+                        let now = start.elapsed();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let t = Instant::now();
+                        if let Ok(r) = http_request(&addr, "POST", "/v1/flares", Some(&body)) {
+                            rtts.lock().unwrap().push(t.elapsed().as_secs_f64());
+                            let id = r.str_or("flare_id", "").to_string();
+                            submitted.lock().unwrap().push((tenant.to_string(), id.clone()));
+                            known.lock().unwrap().push(id);
+                        }
+                        k += 1;
+                    }
+                });
+            }
+        });
+        let submitted = submitted.into_inner().unwrap();
+        let ids: Vec<String> = submitted.iter().map(|(_, id)| id.clone()).collect();
+        wait_all_terminal(&c, &ids, Duration::from_secs(60));
+        let mut by_tenant: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for (tenant, id) in &submitted {
+            if let Some(w) = queue_wait_of(&c, id) {
+                by_tenant.entry(tenant.clone()).or_default().push(w);
+            }
+        }
+        let mut tenants = BTreeMap::new();
+        for (tenant, waits) in &by_tenant {
+            all_waits.extend(waits.iter().copied());
+            let s = Summary::of(waits);
+            let j = Json::obj(vec![
+                ("n", s.n.into()),
+                ("mean_wait_ms", (s.mean * 1e3).into()),
+                ("p95_wait_ms", (s.p95 * 1e3).into()),
+            ]);
+            tenants.insert(tenant.clone(), j);
+        }
+        let row = Json::obj(vec![
+            ("rate_per_tenant_per_s", rate.into()),
+            ("tenants", Json::Obj(tenants)),
+        ]);
+        level_rows.push(row);
+    }
+
+    // Preemption latency: saturate with low-priority flares, then submit
+    // `high` ones — their queue_wait_s is the submit→placed latency
+    // including victim preemption and unwind.
+    let bulk_n = if smoke { 8 } else { 30 };
+    let high_n = if smoke { 5 } else { 20 };
+    let low = Json::parse(
+        r#"{"def":"cp","params":[1,1],"options":{"tenant":"bulk","priority":"low"}}"#,
+    )
+    .unwrap();
+    let high = Json::parse(
+        r#"{"def":"cp","params":[1,1],"options":{"tenant":"urgent","priority":"high"}}"#,
+    )
+    .unwrap();
+    let mut preempt_ids: Vec<String> = Vec::new();
+    let mut high_ids: Vec<String> = Vec::new();
+    for _ in 0..bulk_n {
+        let r = http_request(&addr, "POST", "/v1/flares", Some(&low)).unwrap();
+        preempt_ids.push(r.str_or("flare_id", "").to_string());
+    }
+    for _ in 0..high_n {
+        let r = http_request(&addr, "POST", "/v1/flares", Some(&high)).unwrap();
+        let id = r.str_or("flare_id", "").to_string();
+        preempt_ids.push(id.clone());
+        high_ids.push(id);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    wait_all_terminal(&c, &preempt_ids, Duration::from_secs(60));
+    let high_waits: Vec<f64> = high_ids.iter().filter_map(|id| queue_wait_of(&c, id)).collect();
+
+    poll_stop.store(true, Ordering::Relaxed);
+    for h in pollers {
+        let _ = h.join();
+    }
+    let status_read_qps = polls.load(Ordering::Relaxed) as f64 / poll_sw.elapsed().as_secs_f64();
+
+    // Scheduler pass cost, straight off /metrics.
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+    let sched = m.get("scheduler").cloned().unwrap_or(Json::Null);
+    let passes = sched.get("passes").and_then(Json::as_f64).unwrap_or(0.0);
+    let admitted = sched.get("admitted").and_then(Json::as_f64).unwrap_or(0.0);
+    let pass_us = sched.get("pass_micros_total").and_then(Json::as_f64).unwrap_or(0.0);
+    let mean_pass_us = if passes > 0.0 { pass_us / passes } else { 0.0 };
+
+    let serve = Json::obj(vec![
+        (
+            "workload",
+            format!(
+                "2 invokers x 4 vCPUs, {work_ms}ms flares of 2 workers; 2 tenants, \
+                 {}ms per level; 2 status pollers",
+                window.as_millis()
+            )
+            .into(),
+        ),
+        ("submit_rtt", summary_json(&Summary::of(&rtts.into_inner().unwrap()))),
+        ("submit_to_placed", summary_json(&Summary::of(&all_waits))),
+        ("status_read_qps", status_read_qps.into()),
+        (
+            "scheduler",
+            Json::obj(vec![
+                ("passes", passes.into()),
+                ("admitted", admitted.into()),
+                ("mean_pass_us", mean_pass_us.into()),
+            ]),
+        ),
+    ]);
+    let curves = Json::obj(vec![("levels", Json::Arr(level_rows))]);
+    let preemption = if high_waits.is_empty() {
+        Json::obj(vec![("n", 0.into()), ("cdf_ms", Json::Arr(vec![]))])
+    } else {
+        let points: Vec<Json> = cdf(&high_waits, 20)
+            .into_iter()
+            .map(|(v, q)| Json::Arr(vec![(v * 1e3).into(), q.into()]))
+            .collect();
+        Json::obj(vec![("n", high_waits.len().into()), ("cdf_ms", Json::Arr(points))])
+    };
+    srv.shutdown();
+    (serve, curves, preemption)
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BURSTC_BENCH_SMOKE").is_ok_and(|v| v == "1");
+
+    if smoke {
+        section("control-plane hot path (smoke mode)");
+    } else {
+        section("control-plane hot path");
+    }
+
+    let (store_json, store) = store_phase(smoke);
+    let (admission_json, admission) = admission_phase(smoke);
+    let (serve_json, curves_json, preemption_json) = serve_phase(smoke);
+
+    let [store_before, store_after] = &store;
+    let [adm_before, adm_after] = &admission;
+    let mut t = Table::new(&["metric", "before", "after"]);
+    t.row(vec![
+        "status read p50/p99".into(),
+        format!("{:.1}us / {:.1}us", store_before.0.median * 1e6, store_before.0.p99 * 1e6),
+        format!("{:.1}us / {:.1}us", store_after.0.median * 1e6, store_after.0.p99 * 1e6),
+    ]);
+    t.row(vec![
+        "status reads/sec".into(),
+        format!("{:.0}", store_before.1),
+        format!("{:.0}", store_after.1),
+    ]);
+    t.row(vec![
+        "submit enqueue p50/p99".into(),
+        format!("{:.1}us / {:.1}us", adm_before.0.median * 1e6, adm_before.0.p99 * 1e6),
+        format!("{:.1}us / {:.1}us", adm_after.0.median * 1e6, adm_after.0.p99 * 1e6),
+    ]);
+    t.print();
+
+    let mode = if smoke { "smoke" } else { "full" };
+    let doc = Json::obj(vec![
+        ("schema", "burstc-control-plane-bench/1".into()),
+        ("mode", mode.into()),
+        ("store", store_json),
+        ("admission", admission_json),
+        ("serve", serve_json),
+        ("queue_wait_curves", curves_json),
+        ("preemption_latency_cdf", preemption_json),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_control_plane.json");
+    std::fs::write(path, format!("{doc}\n")).unwrap();
+    println!("\nwrote {path}");
+}

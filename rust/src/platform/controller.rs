@@ -790,7 +790,12 @@ impl Controller {
         let slot = Arc::new(ResultSlot::new());
         let cancel = CancelToken::new();
         self.cancels.lock().unwrap().insert(flare_id.clone(), cancel.clone());
-        self.sched.queue.lock().unwrap().push(QueuedFlare {
+        // Batched admission: submission only appends to the scheduler's
+        // inbox (a short, rarely contended push) — the scheduler adopts
+        // the whole batch into the DRR queue at the start of its next
+        // pass, so a burst of submitters never serializes on the queue
+        // lock a scheduling pass is holding.
+        self.sched.inbox.lock().unwrap().push(QueuedFlare {
             flare_id: flare_id.clone(),
             def_name: def_name.to_string(),
             work,
@@ -837,14 +842,41 @@ impl Controller {
         self.db.get_flare(flare_id).map(|r| r.status)
     }
 
-    /// Number of admitted flares currently waiting for capacity.
+    /// Number of admitted flares currently waiting for capacity,
+    /// including submissions still in the admission inbox (they are
+    /// queued from the caller's point of view; the scheduler adopts them
+    /// at its next pass).
     pub fn queued_flares(&self) -> usize {
-        self.sched.queue.lock().unwrap().len()
+        let queued = self.sched.queue.lock().unwrap().len();
+        queued + self.sched.inbox.lock().unwrap().len()
     }
 
-    /// Queue depth per tenant (lanes with pending flares only, by name).
+    /// Queue depth per tenant (lanes with pending flares only, by name),
+    /// counting inbox submissions toward their tenant so metrics never
+    /// under-report between admission batches.
     pub fn queued_by_tenant(&self) -> Vec<(String, usize)> {
-        self.sched.queue.lock().unwrap().depth_by_tenant()
+        let mut depth = self.sched.queue.lock().unwrap().depth_by_tenant();
+        let inbox = self.sched.inbox.lock().unwrap();
+        for job in inbox.iter() {
+            match depth.iter_mut().find(|(t, _)| *t == job.tenant) {
+                Some((_, n)) => *n += 1,
+                None => depth.push((job.tenant.clone(), 1)),
+            }
+        }
+        depth
+    }
+
+    /// Scheduler hot-path counters: `(passes, admitted, pass_micros)` —
+    /// completed scheduling passes, flares admitted from the batched
+    /// inbox, and accumulated active pass time in microseconds. The
+    /// sustained-load bench derives scheduler-pass cost and batch sizes
+    /// from these (exported on `/metrics`).
+    pub fn scheduler_pass_stats(&self) -> (u64, u64, u64) {
+        (
+            self.sched.passes.load(Ordering::Relaxed),
+            self.sched.admitted.load(Ordering::Relaxed),
+            self.sched.pass_micros.load(Ordering::Relaxed),
+        )
     }
 
     /// Queued flares currently waiting on their tenant's hard vCPU quota.
@@ -966,8 +998,18 @@ impl Controller {
     /// reservation is released promptly. Cancelling a terminal flare is a
     /// conflict, an unknown id is not found.
     pub fn cancel_flare(&self, flare_id: &str) -> Result<CancelOutcome, CancelError> {
-        // Fast path: still queued → pull it out before it is ever placed.
-        let queued = self.sched.queue.lock().unwrap().remove(flare_id);
+        // Fast path: still waiting — in the admission inbox (submitted,
+        // not yet adopted by a scheduling pass) or in the queue proper —
+        // → pull it out before it is ever placed.
+        let inboxed = {
+            let mut inbox = self.sched.inbox.lock().unwrap();
+            inbox
+                .iter()
+                .position(|j| j.flare_id == flare_id)
+                .map(|i| inbox.remove(i))
+        };
+        let queued =
+            inboxed.or_else(|| self.sched.queue.lock().unwrap().remove(flare_id));
         if let Some(job) = queued {
             job.cancel.cancel();
             self.db.update_flare(flare_id, |r| {

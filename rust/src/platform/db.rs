@@ -9,8 +9,47 @@
 //! cap: once more than [`DEFAULT_FLARE_RETENTION`] *terminal* records exist
 //! the oldest terminal ones are evicted, so a long-lived server does not
 //! leak memory. Queued and running records are never evicted.
+//!
+//! # Sharded flare store (control-plane hot path)
+//!
+//! Flare records live in [`FLARE_SHARDS`] lock shards keyed by a hash of
+//! the flare id, each an `RwLock<HashMap>`:
+//!
+//! - **Status reads** (`get_flare`) take only their shard's *read* lock, so
+//!   thousands of concurrent polls contend neither with each other nor with
+//!   mutations of unrelated flares in other shards.
+//! - **Mutations** (`put_flare` / `update_flare` / `put_checkpoint`) take
+//!   one shard's *write* lock; per-id mutation order is serialized by that
+//!   shard lock alone.
+//! - **Listing order + retention** live in a separate `order` table (the
+//!   submission-order vec, a membership set, and the set of ids believed
+//!   terminal), touched only on insert and on terminal transitions — never
+//!   on the status-read or running-update hot paths.
+//!
+//! ## Lock order
+//!
+//! `order → shard → ckpts → wal_queue`, always in that direction. A
+//! mutation takes its shard lock, releases it, and only then touches
+//! `order`; retention eviction (under `order`) takes each victim's shard
+//! lock one at a time. Holding a shard lock while waiting on `order` is a
+//! deadlock and must never be introduced.
+//!
+//! ## WAL ordering invariant (PR 5, preserved across shards)
+//!
+//! Every WAL entry is staged on `wal_queue` **under the mutated shard's
+//! write lock** (checkpoint entries: under the shard *read* lock + the
+//! `ckpts` mutex, which a terminal transition's write lock excludes), so
+//! the per-id entry order always equals the per-id mutation order; disk
+//! I/O still happens in `drain_wal` after every lock is released. Entries
+//! of *different* ids may interleave in either order — replay is an
+//! idempotent full-record overwrite per id, so cross-id order is
+//! irrelevant, and replaying the WAL lands on exactly the db's final
+//! record for every id. Retention evictions stage their `drop_flare`
+//! entry under the victim's shard lock at the moment of removal, after
+//! re-checking the record is still terminal (a concurrent re-put may have
+//! revived it between victim selection and removal).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
@@ -31,6 +70,13 @@ pub fn now_unix_ms() -> u64 {
 
 /// Default cap on retained *terminal* flare records (oldest evicted first).
 pub const DEFAULT_FLARE_RETENTION: usize = 4096;
+
+/// Number of flare-record lock shards. A fixed power of two: enough that
+/// concurrent status polls almost never share a shard with an unrelated
+/// mutation, small enough that the per-shard maps stay cache-friendly.
+/// Changing it is safe across restarts — the shard index is an in-memory
+/// detail, never persisted.
+pub const FLARE_SHARDS: usize = 16;
 
 /// The `work` function signature (paper Table 2): every worker runs it with
 /// its input parameters and the burst context.
@@ -360,13 +406,29 @@ impl FlareCheckpoints {
     }
 }
 
+/// Listing order and retention bookkeeping for the sharded flare store.
+/// `present` mirrors `order` for O(1) membership; `terminal` tracks which
+/// ids are believed terminal so a retention pass needs no full-shard scan.
+/// Both are repaired lazily against shard ground truth during eviction.
+#[derive(Default)]
+struct FlareOrder {
+    order: Vec<String>,
+    present: HashSet<String>,
+    terminal: HashSet<String>,
+}
+
 /// The platform database.
 pub struct BurstDb {
     defs: Mutex<HashMap<String, BurstDefinition>>,
-    /// Records plus submission order (for `list_flares`, newest first).
-    flares: Mutex<(HashMap<String, FlareRecord>, Vec<String>)>,
+    /// Flare records, sharded by id hash (see the module docs): status
+    /// reads take one shard's read lock and nothing else.
+    shards: [RwLock<HashMap<String, FlareRecord>>; FLARE_SHARDS],
+    /// Submission order + retention state (for `list_flares`, newest
+    /// first). Lock order: a shard lock is always *released* before this
+    /// is taken; eviction (under this lock) may take shard locks.
+    order: RwLock<FlareOrder>,
     /// Worker checkpoints of live flares, by flare id (dropped when the
-    /// flare goes terminal). Lock order: `flares` → `ckpts`; never the
+    /// flare goes terminal). Lock order: shard → `ckpts`; never the
     /// reverse.
     ckpts: Mutex<HashMap<String, FlareCheckpoints>>,
     /// Retention cap on terminal records (oldest evicted first); live
@@ -413,13 +475,28 @@ impl BurstDb {
     pub fn with_retention(retain_terminal: usize) -> BurstDb {
         BurstDb {
             defs: Mutex::new(HashMap::new()),
-            flares: Mutex::new((HashMap::new(), Vec::new())),
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            order: RwLock::new(FlareOrder::default()),
             ckpts: Mutex::new(HashMap::new()),
             retain_terminal,
             store: OnceLock::new(),
             wal_queue: Mutex::new(VecDeque::new()),
             wal_drain: Mutex::new(()),
         }
+    }
+
+    /// Shard index of a flare id (stable within a process run; never
+    /// persisted).
+    fn shard_idx(id: &str) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        id.hash(&mut h);
+        (h.finish() as usize) % FLARE_SHARDS
+    }
+
+    /// The shard holding a flare id.
+    fn shard(&self, id: &str) -> &RwLock<HashMap<String, FlareRecord>> {
+        &self.shards[Self::shard_idx(id)]
     }
 
     /// Attach the durable sink: from here on every deploy / flare mutation
@@ -470,35 +547,65 @@ impl BurstDb {
         }
     }
 
-    /// Evict the oldest terminal records beyond the retention cap,
-    /// returning the evicted ids (the caller appends `drop_flare` WAL
-    /// entries for them). Called with the flare lock held, whenever a
-    /// record is added or becomes terminal.
-    fn evict_excess_terminal(
-        map: &mut HashMap<String, FlareRecord>,
-        order: &mut Vec<String>,
-        cap: usize,
-    ) -> Vec<String> {
-        let terminal = order
-            .iter()
-            .filter(|id| map.get(*id).is_some_and(|r| r.status.is_terminal()))
-            .count();
-        let mut excess = terminal.saturating_sub(cap);
-        let mut evicted = Vec::new();
+    /// Evict the oldest terminal records beyond the retention cap. Called
+    /// with the `order` write lock held (and no shard lock), whenever a
+    /// record becomes terminal. Each victim's removal — and its
+    /// `drop_flare` WAL entry — happens under the victim's shard write
+    /// lock, after re-checking it is still terminal there: a concurrent
+    /// re-put may have revived the id between selection and removal, in
+    /// which case it is kept and the stale `terminal` membership repaired.
+    fn evict_excess_terminal_locked(&self, st: &mut FlareOrder) {
+        let mut excess = st.terminal.len().saturating_sub(self.retain_terminal);
         if excess == 0 {
-            return evicted;
+            return;
         }
+        let FlareOrder { order, present, terminal } = st;
         order.retain(|id| {
-            if excess > 0 && map.get(id).is_some_and(|r| r.status.is_terminal()) {
-                map.remove(id);
-                excess -= 1;
-                evicted.push(id.clone());
-                false
-            } else {
-                true
+            if excess == 0 || !terminal.contains(id) {
+                return true;
+            }
+            let mut shard = self.shards[Self::shard_idx(id)].write().unwrap();
+            match shard.get(id).map(|r| r.status.is_terminal()) {
+                Some(true) => {
+                    shard.remove(id);
+                    self.stage_entry(DurableStore::entry_drop_flare(id));
+                    drop(shard);
+                    present.remove(id);
+                    terminal.remove(id);
+                    excess -= 1;
+                    false
+                }
+                Some(false) => {
+                    // Revived by a concurrent re-put: keep, repair.
+                    drop(shard);
+                    terminal.remove(id);
+                    true
+                }
+                None => {
+                    // Already gone from its shard: drop the stale entry.
+                    drop(shard);
+                    present.remove(id);
+                    terminal.remove(id);
+                    false
+                }
             }
         });
-        evicted
+    }
+
+    /// Record a mutated id's order/retention state and run eviction if it
+    /// is (or just became) terminal. Called with no shard lock held.
+    fn note_in_order(&self, id: &str, terminal: bool) {
+        let mut st = self.order.write().unwrap();
+        if !st.present.contains(id) {
+            st.present.insert(id.to_string());
+            st.order.push(id.to_string());
+        }
+        if terminal {
+            st.terminal.insert(id.to_string());
+            self.evict_excess_terminal_locked(&mut st);
+        } else {
+            st.terminal.remove(id);
+        }
     }
 
     pub fn deploy(&self, def: BurstDefinition) -> Result<()> {
@@ -533,37 +640,36 @@ impl BurstDb {
     }
 
     pub fn put_flare(&self, rec: FlareRecord) {
+        let mut rec = rec;
+        let terminal = rec.status.is_terminal();
+        if terminal {
+            // Terminal records are history: the resubmission spec and
+            // any wait reason are dead weight in memory and the WAL.
+            rec.spec = None;
+            rec.wait_reason = None;
+        }
+        let id = rec.flare_id.clone();
+        let rec_json = rec.to_json();
         {
-            let mut flares = self.flares.lock().unwrap();
-            let (map, order) = &mut *flares;
-            let mut rec = rec;
-            let terminal = rec.status.is_terminal();
-            if terminal {
-                // Terminal records are history: the resubmission spec and
-                // any wait reason are dead weight in memory and the WAL.
-                rec.spec = None;
-                rec.wait_reason = None;
-            }
-            let id = rec.flare_id.clone();
-            let rec_json = rec.to_json();
-            if map.insert(id.clone(), rec).is_none() {
-                order.push(id);
-            }
+            let mut shard = self.shard(&id).write().unwrap();
+            shard.insert(id.clone(), rec);
+            // Staged under the shard lock: per-id WAL order == per-id
+            // mutation order (see the module docs).
             self.stage_entry(DurableStore::entry_flare(&rec_json));
             if terminal {
                 self.drop_checkpoints_locked(&id);
-                let evicted =
-                    Self::evict_excess_terminal(map, order, self.retain_terminal);
-                for gone in &evicted {
-                    self.stage_entry(DurableStore::entry_drop_flare(gone));
-                }
             }
         }
+        // Shard lock released before the order lock (lock-order rule).
+        self.note_in_order(&id, terminal);
         self.drain_wal();
     }
 
+    /// Status read: takes only the id's shard *read* lock, so it contends
+    /// neither with reads of other flares nor with mutations in other
+    /// shards.
     pub fn get_flare(&self, id: &str) -> Option<FlareRecord> {
-        self.flares.lock().unwrap().0.get(id).cloned()
+        self.shard(id).read().unwrap().get(id).cloned()
     }
 
     /// Apply a mutation to an existing flare record (status transitions,
@@ -571,21 +677,10 @@ impl BurstDb {
     /// id used to be a *silent* no-op, which let recovery and cancel races
     /// hide lost updates; now it reports `false` (and warns once).
     pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) -> bool {
+        let became_terminal;
         {
-            let mut flares = self.flares.lock().unwrap();
-            let (map, order) = &mut *flares;
-            let mut became_terminal = false;
-            let mut rec_json = None;
-            if let Some(rec) = map.get_mut(id) {
-                f(rec);
-                became_terminal = rec.status.is_terminal();
-                if became_terminal {
-                    rec.spec = None;
-                    rec.wait_reason = None;
-                }
-                rec_json = Some(rec.to_json());
-            }
-            let Some(rec_json) = rec_json else {
+            let mut shard = self.shard(id).write().unwrap();
+            let Some(rec) = shard.get_mut(id) else {
                 static WARNED: std::sync::Once = std::sync::Once::new();
                 WARNED.call_once(|| {
                     eprintln!(
@@ -595,15 +690,22 @@ impl BurstDb {
                 });
                 return false;
             };
+            f(rec);
+            became_terminal = rec.status.is_terminal();
+            if became_terminal {
+                rec.spec = None;
+                rec.wait_reason = None;
+            }
+            let rec_json = rec.to_json();
             self.stage_entry(DurableStore::entry_flare(&rec_json));
             if became_terminal {
                 self.drop_checkpoints_locked(id);
-                let evicted =
-                    Self::evict_excess_terminal(map, order, self.retain_terminal);
-                for gone in &evicted {
-                    self.stage_entry(DurableStore::entry_drop_flare(gone));
-                }
             }
+        }
+        if became_terminal {
+            // The running-update hot path skips the order lock entirely;
+            // only terminal transitions pay for retention bookkeeping.
+            self.note_in_order(id, true);
         }
         self.drain_wal();
         true
@@ -623,9 +725,14 @@ impl BurstDb {
     /// state the terminal transition already discarded.
     pub fn put_checkpoint(&self, flare_id: &str, worker: usize, epoch: u64, data: Bytes) {
         {
-            let flares = self.flares.lock().unwrap();
-            let live = flares
-                .0
+            // The shard *read* lock is held across the liveness check and
+            // the ckpts insert + WAL staging: a terminal transition takes
+            // the shard *write* lock, so it cannot interleave — its
+            // `drop_checkpoints` entry always lands after this checkpoint
+            // entry, and a straggler arriving after the transition sees
+            // the terminal status and is dropped.
+            let shard = self.shard(flare_id).read().unwrap();
+            let live = shard
                 .get(flare_id)
                 .is_some_and(|r| !r.status.is_terminal());
             if !live {
@@ -662,7 +769,8 @@ impl BurstDb {
     }
 
     /// Drop a flare's checkpoints and stage the WAL drop entry. Called
-    /// with the `flares` lock held, on every terminal transition.
+    /// with the flare's shard *write* lock held, on every terminal
+    /// transition (lock order: shard → `ckpts`).
     fn drop_checkpoints_locked(&self, flare_id: &str) {
         if self.ckpts.lock().unwrap().remove(flare_id).is_some() {
             self.stage_entry(DurableStore::entry_drop_checkpoints(flare_id));
@@ -670,22 +778,27 @@ impl BurstDb {
     }
 
     /// Most recent `limit` flares, newest first, as `(flare_id, def_name,
-    /// status)` — O(limit) under the lock regardless of output sizes.
+    /// status)` — O(limit) lock work regardless of output sizes.
     /// (Deliberately not a full-record listing: cloning whole output
-    /// arrays under the db lock would stall the scheduler on every poll.)
+    /// arrays under store locks would stall the scheduler on every poll.)
+    ///
+    /// Snapshot-first: the newest ids are copied under the `order` *read*
+    /// lock, then each summary is fetched under its shard's read lock —
+    /// no lock is held across the whole listing, and callers serialize
+    /// the result with no store lock held at all.
     pub fn list_flare_summaries(
         &self,
         limit: usize,
     ) -> Vec<(String, String, FlareStatus)> {
-        let flares = self.flares.lock().unwrap();
-        flares
-            .1
-            .iter()
-            .rev()
-            .take(limit)
+        let ids: Vec<String> = {
+            let st = self.order.read().unwrap();
+            st.order.iter().rev().take(limit).cloned().collect()
+        };
+        ids.iter()
             .filter_map(|id| {
-                flares
-                    .0
+                self.shard(id)
+                    .read()
+                    .unwrap()
                     .get(id)
                     .map(|r| (r.flare_id.clone(), r.def_name.clone(), r.status))
             })
@@ -978,5 +1091,77 @@ mod tests {
             .map(|(id, _, _)| id)
             .collect();
         assert_eq!(ids, vec!["f5", "f4", "f1", "f0"]);
+    }
+
+    /// Two ids guaranteed to land in different lock shards.
+    fn ids_in_different_shards() -> (String, String) {
+        let a = "shard-probe-0".to_string();
+        for i in 1..10_000 {
+            let b = format!("shard-probe-{i}");
+            if BurstDb::shard_idx(&b) != BurstDb::shard_idx(&a) {
+                return (a, b);
+            }
+        }
+        panic!("no second shard found — is FLARE_SHARDS 1?");
+    }
+
+    /// Regression for the sharded read path: a status read must complete
+    /// while a writer holds a *different* shard's write lock (under the
+    /// old single flares mutex this read would block behind the writer).
+    #[test]
+    fn status_reads_complete_while_a_writer_holds_another_shard() {
+        let (wid, rid) = ids_in_different_shards();
+        let db = Arc::new(BurstDb::new());
+        db.put_flare(queued(&wid));
+        db.put_flare(queued(&rid));
+        let gate = Arc::new((Mutex::new(0u8), std::sync::Condvar::new()));
+        let writer = {
+            let db = db.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                // The closure runs under `wid`'s shard write lock: park
+                // there until the main thread has finished its read.
+                db.update_flare(&wid, |r| {
+                    r.status = FlareStatus::Running;
+                    let (m, cv) = &*gate;
+                    let mut stage = m.lock().unwrap();
+                    *stage = 1; // writer holds the shard lock
+                    cv.notify_all();
+                    let deadline =
+                        std::time::Instant::now() + std::time::Duration::from_secs(10);
+                    while *stage < 2 {
+                        if std::time::Instant::now() >= deadline {
+                            panic!("reader never released the writer (test hang guard)");
+                        }
+                        let (g, _) = cv
+                            .wait_timeout(stage, std::time::Duration::from_millis(20))
+                            .unwrap();
+                        stage = g;
+                    }
+                });
+            })
+        };
+        {
+            let (m, cv) = &*gate;
+            let mut stage = m.lock().unwrap();
+            while *stage < 1 {
+                let (g, _) = cv
+                    .wait_timeout(stage, std::time::Duration::from_millis(20))
+                    .unwrap();
+                stage = g;
+            }
+        }
+        // Writer is parked inside its shard's write lock: a read of the
+        // other shard must still return (a shared lock would deadlock
+        // here, since the writer only proceeds after this read).
+        let rec = db.get_flare(&rid).expect("read completed concurrently");
+        assert_eq!(rec.status, FlareStatus::Queued);
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = 2;
+            cv.notify_all();
+        }
+        writer.join().unwrap();
+        assert_eq!(db.get_flare(&wid).unwrap().status, FlareStatus::Running);
     }
 }

@@ -1,14 +1,29 @@
 //! HTTP interface to the controller (paper Fig. 4 steps 1–3): `deploy` and
 //! `flare` endpoints plus result retrieval and cancellation. Minimal
 //! HTTP/1.1 over `std::net` (no async runtime is available offline —
-//! DESIGN.md §3). Connections are served by a small fixed worker pool fed
-//! from a bounded queue, so a burst of clients cannot spawn unbounded
-//! threads. Flare *execution* runs on the controller's scheduler; the
-//! blocking `POST /v1/flare` still occupies its HTTP worker while it
-//! waits, so concurrent blocking handlers are capped *below* the pool size
-//! (excess get `429` + a hint) and control-plane GETs always find a free
-//! worker. Heavy clients should prefer the async `POST /v1/flares` +
-//! status polling, which returns in microseconds.
+//! DESIGN.md §3).
+//!
+//! **Event-driven connection handling.** A single reactor thread owns a
+//! nonblocking listener and every open connection as a small state
+//! machine (read head → check body cap → read body → dispatch → write
+//! response → close), polled for readiness (`WouldBlock` ends a turn;
+//! idle ticks sleep briefly). Fast routes — every GET, the async
+//! `POST /v1/flares`, deploys, cancels — are dispatched inline on the
+//! reactor: none of them blocks, so thousands of concurrent status polls
+//! progress together instead of exhausting a fixed worker pool. Only the
+//! blocking `POST /v1/flare` is handed off (with its socket) to a small
+//! blocking worker pool, since it parks for the flare's duration; those
+//! handlers are capped by a counting gate *below* the pool size (excess
+//! get `429` + a hint), so the reactor plus gate keep the control plane
+//! responsive no matter how many blocking clients arrive. Heavy clients
+//! should prefer the async `POST /v1/flares` + status polling, which
+//! returns in microseconds.
+//!
+//! Bounded work: open connections are capped (excess stay in the kernel
+//! accept backlog), per-connection buffers are capped by
+//! [`MAX_BODY_BYTES`] / `MAX_HEAD_BYTES`, idle connections are reaped
+//! after `READ_TIMEOUT`, and shutdown is bounded by one reactor tick plus
+//! one blocking wait quantum.
 //!
 //! Hardening: request bodies are capped at [`MAX_BODY_BYTES`] (oversized
 //! requests get `413` before any allocation); malformed or inadmissible
@@ -56,12 +71,11 @@
 //! stalling for the flare's full duration (the flare itself keeps running;
 //! the parked client gets `503` + the id to poll).
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -75,22 +89,32 @@ use crate::util::json::Json;
 /// long a parked `POST /v1/flare` handler can delay shutdown.
 const BLOCKING_WAIT_QUANTUM: Duration = Duration::from_millis(100);
 
-/// Default size of the connection-handling worker pool.
+/// Default size of the *blocking-route* worker pool (`POST /v1/flare`
+/// handlers park for the flare's duration, so they run off the reactor).
+/// Every other route is served event-driven by the reactor thread.
 pub const DEFAULT_HTTP_WORKERS: usize = 8;
-/// Hard cap on a request body. `handle_conn` trusts `Content-Length` only
+/// Hard cap on a request body. The reactor trusts `Content-Length` only
 /// up to this bound; anything larger is rejected with `413` before a
 /// single byte of it is buffered, so a hostile or buggy client cannot
 /// trigger an unbounded allocation.
 pub const MAX_BODY_BYTES: usize = 8 << 20;
-/// Accepted connections waiting for a free worker; once full, the accept
-/// loop itself blocks — an implicit connection cap.
-const CONN_BACKLOG: usize = 64;
-/// Bound on how long a worker can sit in a dead connection's read.
+/// Hard cap on a request's head (request line + headers): a client that
+/// never finishes its headers cannot grow the buffer unboundedly.
+const MAX_HEAD_BYTES: usize = 64 << 10;
+/// Cap on simultaneously open connections in the reactor. Beyond it the
+/// reactor stops accepting for a tick and excess clients wait in the
+/// kernel backlog — bounded memory, no dropped connections.
+const MAX_OPEN_CONNS: usize = 4096;
+/// Idle-connection bound: a connection making no progress (no bytes read
+/// or written) for this long is reaped.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Reactor sleep between ticks when no connection made progress: bounds
+/// added latency at well under a millisecond without spinning a core.
+const IDLE_TICK: Duration = Duration::from_micros(500);
 
 /// Counting gate capping concurrent blocking `POST /v1/flare` handlers
-/// below the worker-pool size, so status/metrics routes always find a free
-/// worker even when every blocking client is parked on a slow flare.
+/// below the blocking-pool size, so a spare worker always exists and the
+/// reactor never hands off more parked requests than the pool can absorb.
 struct BlockingGate {
     slots: AtomicUsize,
 }
@@ -100,39 +124,51 @@ impl BlockingGate {
         BlockingGate { slots: AtomicUsize::new(slots) }
     }
 
-    /// Take a slot if one is free; the permit returns it on drop.
-    fn try_acquire(&self) -> Option<BlockingPermit<'_>> {
+    /// Take a slot if one is free; the permit returns it on drop. The
+    /// permit owns an `Arc` of the gate so it can cross threads (the
+    /// reactor acquires, the blocking worker releases).
+    fn try_acquire(self: &Arc<Self>) -> Option<BlockingPermit> {
         self.slots
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
             .ok()
-            .map(|_| BlockingPermit(self))
+            .map(|_| BlockingPermit(self.clone()))
     }
 }
 
-struct BlockingPermit<'a>(&'a BlockingGate);
+struct BlockingPermit(Arc<BlockingGate>);
 
-impl Drop for BlockingPermit<'_> {
+impl Drop for BlockingPermit {
     fn drop(&mut self) {
         self.0.slots.fetch_add(1, Ordering::AcqRel);
     }
+}
+
+/// A blocking `POST /v1/flare` request handed off by the reactor: the
+/// worker owns the socket from here (the body is already read and capped)
+/// and writes the response itself.
+struct BlockingJob {
+    stream: TcpStream,
+    body: String,
+    permit: BlockingPermit,
 }
 
 /// A running HTTP server bound to a local port.
 pub struct HttpServer {
     pub addr: String,
     stop: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl HttpServer {
     /// Start serving the controller on `127.0.0.1:port` (0 = ephemeral)
-    /// with the default worker pool.
+    /// with the default blocking pool.
     pub fn start(controller: Arc<Controller>, port: u16) -> Result<HttpServer> {
         HttpServer::start_with_workers(controller, port, DEFAULT_HTTP_WORKERS)
     }
 
-    /// Start with an explicit connection-worker count.
+    /// Start with an explicit blocking-worker count (fast routes are
+    /// served by the reactor regardless of this value).
     pub fn start_with_workers(
         controller: Arc<Controller>,
         port: u16,
@@ -143,72 +179,98 @@ impl HttpServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
 
-        let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
-            std::sync::mpsc::sync_channel(CONN_BACKLOG);
+        let (tx, rx) = std::sync::mpsc::channel::<BlockingJob>();
         let rx = Arc::new(Mutex::new(rx));
         let pool_size = n_workers.max(1);
-        // Blocking flare handlers may take all but one worker (with a
-        // single worker the cap degenerates to 1 — blocking still works,
-        // but such a deployment has no spare worker to protect).
+        // Blocking flare handlers may take all but one permit of the pool
+        // (with a single worker the cap degenerates to 1 — blocking still
+        // works, and fast routes are on the reactor anyway). Because every
+        // hand-off carries a permit, the channel can never hold more jobs
+        // than the pool can absorb.
         let gate = Arc::new(BlockingGate::new(pool_size.saturating_sub(1).max(1)));
         let workers = (0..pool_size)
             .map(|i| {
                 let rx = rx.clone();
                 let c = controller.clone();
-                let gate = gate.clone();
                 let stop = stop.clone();
                 std::thread::Builder::new()
-                    .name(format!("http-worker-{i}"))
+                    .name(format!("http-blocking-{i}"))
                     .spawn(move || loop {
                         // Lock only to pop; serving runs unlocked.
-                        let stream = match rx.lock().unwrap().recv() {
-                            Ok(s) => s,
-                            Err(_) => return, // acceptor gone: shutdown
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return, // reactor gone: shutdown
                         };
-                        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-                        let _ = handle_conn(stream, &c, &gate, &stop);
+                        serve_blocking(job, &c, &stop);
                     })
-                    .expect("spawn http worker")
+                    .expect("spawn http blocking worker")
             })
             .collect();
 
         let stop2 = stop.clone();
-        let accept = std::thread::Builder::new()
-            .name("http-accept".into())
+        let reactor = std::thread::Builder::new()
+            .name("http-reactor".into())
             .spawn(move || {
-                'accept: while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            // Non-blocking hand-off so a full backlog can't
-                            // trap this thread past a shutdown request.
-                            let mut stream = stream;
-                            loop {
-                                match tx.try_send(stream) {
-                                    Ok(()) => break,
-                                    Err(TrySendError::Full(back)) => {
-                                        if stop2.load(Ordering::Relaxed) {
-                                            break 'accept;
-                                        }
-                                        stream = back;
-                                        std::thread::sleep(Duration::from_millis(5));
-                                    }
-                                    Err(TrySendError::Disconnected(_)) => {
-                                        break 'accept; // all workers exited
-                                    }
+                let mut conns: Vec<Conn> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    let mut progressed = false;
+                    // Accept up to the open-connection cap; beyond it new
+                    // clients wait in the kernel backlog until a slot
+                    // frees, so memory stays bounded under any burst.
+                    while conns.len() < MAX_OPEN_CONNS {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if stream.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                conns.push(Conn::new(stream));
+                                progressed = true;
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(_) => break,
+                        }
+                    }
+                    // Drive every connection as far as readiness allows.
+                    let mut i = 0;
+                    while i < conns.len() {
+                        let (action, moved) = conns[i].poll(&controller, &gate);
+                        progressed |= moved;
+                        if moved {
+                            conns[i].deadline = Instant::now() + READ_TIMEOUT;
+                        }
+                        match action {
+                            ConnAction::Pending => {
+                                if Instant::now() >= conns[i].deadline {
+                                    // Idle past the bound: reap.
+                                    conns.swap_remove(i);
+                                } else {
+                                    i += 1;
                                 }
                             }
+                            ConnAction::Close => {
+                                conns.swap_remove(i);
+                            }
+                            ConnAction::Handoff { body, permit } => {
+                                let conn = conns.swap_remove(i);
+                                let _ = tx.send(BlockingJob {
+                                    stream: conn.stream,
+                                    body,
+                                    permit,
+                                });
+                            }
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
+                    }
+                    if !progressed {
+                        std::thread::sleep(IDLE_TICK);
                     }
                 }
-                // Dropping `tx` here unblocks every worker's `recv`.
+                // Dropping `tx` here unblocks every blocking worker's
+                // `recv`; in-flight handlers notice `stop` within one
+                // wait quantum.
             })
-            .expect("spawn http acceptor");
+            .expect("spawn http reactor");
 
-        Ok(HttpServer { addr, stop, accept: Some(accept), workers })
+        Ok(HttpServer { addr, stop, reactor: Some(reactor), workers })
     }
 
     pub fn shutdown(mut self) {
@@ -217,7 +279,7 @@ impl HttpServer {
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.reactor.take() {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
@@ -232,58 +294,251 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_conn(
+/// One open connection on the reactor: a nonblocking socket plus the
+/// request parse state. `deadline` is refreshed on any byte of progress;
+/// a connection idle past it is reaped.
+struct Conn {
     stream: TcpStream,
-    controller: &Controller,
-    gate: &BlockingGate,
-    stop: &AtomicBool,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut request_line = String::new();
-    reader.read_line(&mut request_line)?;
-    let mut parts = request_line.split_whitespace();
+    buf: Vec<u8>,
+    state: ConnState,
+    deadline: Instant,
+}
+
+enum ConnState {
+    /// Buffering the request head (request line + headers).
+    ReadHead,
+    /// Head parsed and within caps; buffering `content_length` body bytes.
+    ReadBody { method: String, path: String, content_length: usize },
+    /// Response built; flushing it as writability allows.
+    Write { response: Vec<u8>, written: usize },
+}
+
+enum ConnAction {
+    /// Waiting on socket readiness; keep polling.
+    Pending,
+    /// Finished (or failed): drop the connection.
+    Close,
+    /// A blocking `POST /v1/flare` with a permit: move the socket to the
+    /// blocking pool.
+    Handoff { body: String, permit: BlockingPermit },
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            state: ConnState::ReadHead,
+            deadline: Instant::now() + READ_TIMEOUT,
+        }
+    }
+
+    /// Drive the connection as far as readiness allows. Returns the next
+    /// action plus whether any bytes moved (progress refreshes the idle
+    /// deadline and keeps the reactor from sleeping this tick).
+    fn poll(&mut self, c: &Controller, gate: &Arc<BlockingGate>) -> (ConnAction, bool) {
+        let mut moved = false;
+        loop {
+            if let ConnState::Write { response, written } = &mut self.state {
+                match (&self.stream).write(&response[*written..]) {
+                    Ok(0) => return (ConnAction::Close, moved),
+                    Ok(n) => {
+                        moved = true;
+                        *written += n;
+                        if *written == response.len() {
+                            return (ConnAction::Close, moved);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return (ConnAction::Pending, moved)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return (ConnAction::Close, moved),
+                }
+            } else {
+                let mut tmp = [0u8; 4096];
+                match (&self.stream).read(&mut tmp) {
+                    Ok(0) => return (ConnAction::Close, moved), // peer closed
+                    Ok(n) => {
+                        moved = true;
+                        self.buf.extend_from_slice(&tmp[..n]);
+                        if let Some(action) = self.advance(c, gate) {
+                            return (action, moved);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return (ConnAction::Pending, moved)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return (ConnAction::Close, moved),
+                }
+            }
+        }
+    }
+
+    /// Apply the state transitions newly buffered bytes enable. Returns
+    /// `Some` only for a blocking hand-off; inline responses just switch
+    /// the state to `Write` and let `poll`'s loop flush them.
+    fn advance(&mut self, c: &Controller, gate: &Arc<BlockingGate>) -> Option<ConnAction> {
+        if matches!(self.state, ConnState::ReadHead) {
+            match head_end(&self.buf) {
+                None => {
+                    if self.buf.len() > MAX_HEAD_BYTES {
+                        // A head that never terminates cannot grow the
+                        // buffer unboundedly.
+                        self.respond(
+                            400,
+                            &err_json(format!(
+                                "request head exceeds the {MAX_HEAD_BYTES}-byte cap"
+                            )),
+                        );
+                    }
+                    return None;
+                }
+                Some(pos) => {
+                    let head = String::from_utf8_lossy(&self.buf[..pos]).to_string();
+                    let (method, path, content_length) = parse_head(&head);
+                    self.buf.drain(..pos + 4);
+                    // The declared length is untrusted input: reject
+                    // oversized bodies before buffering a single byte.
+                    if content_length > MAX_BODY_BYTES {
+                        self.respond(
+                            413,
+                            &err_json(format!(
+                                "request body of {content_length} bytes exceeds \
+                                 the {MAX_BODY_BYTES}-byte cap"
+                            )),
+                        );
+                        return None;
+                    }
+                    self.state = ConnState::ReadBody { method, path, content_length };
+                }
+            }
+        }
+        if let ConnState::ReadBody { content_length, .. } = &self.state {
+            if self.buf.len() >= *content_length {
+                let ConnState::ReadBody { method, path, content_length } =
+                    std::mem::replace(&mut self.state, ConnState::ReadHead)
+                else {
+                    unreachable!()
+                };
+                let body = String::from_utf8_lossy(&self.buf[..content_length]).to_string();
+                if method == "POST" && path == "/v1/flare" {
+                    // Blocking invoke: parks for the flare's duration, so
+                    // it must leave the reactor. Gate first, so blocking
+                    // clients can never saturate the pool (the permit
+                    // frees when the worker finishes the response).
+                    match gate.try_acquire() {
+                        Some(permit) => return Some(ConnAction::Handoff { body, permit }),
+                        None => {
+                            self.respond(
+                                429,
+                                &err_json(
+                                    "too many concurrent blocking flares; use async \
+                                     POST /v1/flares + GET /v1/flares/<id> polling",
+                                ),
+                            );
+                            return None;
+                        }
+                    }
+                }
+                // Every other route is nonblocking: dispatch inline.
+                let (status, payload) = route(&method, &path, &body, c);
+                self.respond(status, &payload);
+            }
+        }
+        None
+    }
+
+    fn respond(&mut self, status: u16, payload: &Json) {
+        self.state = ConnState::Write { response: response_bytes(status, payload), written: 0 };
+    }
+}
+
+/// Offset of the first `\r\n\r\n` (head/body boundary), if the head is
+/// complete.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse a request head into (method, path, content-length). Only
+/// `Content-Length` matters to the routes we serve.
+fn parse_head(head: &str) -> (String, String, usize) {
+    let mut lines = head.split("\r\n");
+    let mut parts = lines.next().unwrap_or("").split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
-
-    // Headers (we only need Content-Length).
     let mut content_length = 0usize;
-    loop {
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        let line = line.trim();
-        if line.is_empty() {
-            break;
-        }
+    for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
             }
         }
     }
-    // The declared length is untrusted input: reject oversized bodies
-    // before allocating or reading anything.
-    let (status, payload) = if content_length > MAX_BODY_BYTES {
-        (
-            413,
-            err_json(format!(
-                "request body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
-            )),
-        )
-    } else {
-        let mut body = vec![0u8; content_length];
-        reader.read_exact(&mut body)?;
-        let body = String::from_utf8_lossy(&body).to_string();
-        route(&method, &path, &body, controller, gate, stop)
-    };
+    (method, path, content_length)
+}
+
+/// Serialize a complete HTTP/1.1 response (JSON body, `Connection: close`).
+fn response_bytes(status: u16, payload: &Json) -> Vec<u8> {
     let body = payload.to_string();
-    let mut stream = reader.into_inner();
-    write!(
-        stream,
+    format!(
         "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         status_text(status),
         body.len()
-    )?;
-    Ok(())
+    )
+    .into_bytes()
+}
+
+/// Run one handed-off blocking `POST /v1/flare` on a pool worker: submit,
+/// wait interruptibly, write the response on the (re-blocked) socket.
+fn serve_blocking(job: BlockingJob, c: &Controller, stop: &AtomicBool) {
+    let BlockingJob { stream, body, permit } = job;
+    let _permit = permit; // held for the handler's whole lifetime
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(READ_TIMEOUT));
+    let (status, payload) = blocking_flare(&body, c, stop);
+    let _ = (&stream).write_all(&response_bytes(status, &payload));
+}
+
+fn blocking_flare(body: &str, c: &Controller, stop: &AtomicBool) -> (u16, Json) {
+    // Submit errors are the client's fault (400); once admitted, an
+    // execution failure is the platform's (500).
+    let (def, params, opts) = match parse_flare_body(body) {
+        Ok(t) => t,
+        Err(e) => return (400, err_json(e)),
+    };
+    let handle = match c.submit_flare(&def, params, &opts) {
+        Ok(h) => h,
+        Err(e) => return (400, err_json(e)),
+    };
+    // Interruptible wait (ROADMAP-known bug): a shutdown request must not
+    // park this worker for the flare's full duration. The flare keeps
+    // running; the parked client gets the id to poll instead.
+    loop {
+        if let Some(result) = handle.wait_timeout(BLOCKING_WAIT_QUANTUM) {
+            return match result {
+                Ok(r) => {
+                    let mut summary = r.summary_json();
+                    if let Json::Obj(m) = &mut summary {
+                        m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
+                    }
+                    (200, summary)
+                }
+                Err(e) => (500, err_json(e)),
+            };
+        }
+        if stop.load(Ordering::Relaxed) {
+            return (
+                503,
+                err_json(format!(
+                    "server shutting down before flare '{}' completed; \
+                     it is still running — poll GET /v1/flares/{}",
+                    handle.flare_id, handle.flare_id
+                )),
+            );
+        }
+    }
 }
 
 fn status_text(code: u16) -> &'static str {
@@ -307,15 +562,13 @@ fn err_json(msg: impl std::fmt::Display) -> Json {
 /// `dispatch` with its error contract applied: an `Err` means the request
 /// itself was malformed or inadmissible (`400`). Failures *after* a flare
 /// was admitted are returned by `dispatch` as explicit `5xx` pairs.
-fn route(
-    method: &str,
-    path: &str,
-    body: &str,
-    c: &Controller,
-    gate: &BlockingGate,
-    stop: &AtomicBool,
-) -> (u16, Json) {
-    match dispatch(method, path, body, c, gate, stop) {
+///
+/// Runs inline on the reactor thread, so every arm must be nonblocking:
+/// snapshot under short-lived store/scheduler locks, serialize outside
+/// them (the blocking `POST /v1/flare` never reaches here — the reactor
+/// hands it to the blocking pool).
+fn route(method: &str, path: &str, body: &str, c: &Controller) -> (u16, Json) {
+    match dispatch(method, path, body, c) {
         Ok(r) => r,
         Err(e) => (400, err_json(e)),
     }
@@ -338,22 +591,35 @@ fn parse_flare_body(body: &str) -> Result<(String, Vec<Json>, FlareOptions)> {
     Ok((def, params, opts))
 }
 
-fn dispatch(
-    method: &str,
-    path: &str,
-    body: &str,
-    c: &Controller,
-    gate: &BlockingGate,
-    stop: &AtomicBool,
-) -> Result<(u16, Json)> {
+fn dispatch(method: &str, path: &str, body: &str, c: &Controller) -> Result<(u16, Json)> {
     match (method, path) {
         ("GET", "/healthz") => Ok((200, Json::obj(vec![("status", "ok".into())]))),
         ("GET", "/metrics") => {
             // Controller load view (CPU-based invoker monitoring, §4.4)
             // plus the scheduler's total and per-tenant queue depth.
+            //
+            // Snapshot every counter into plain locals *first*, then
+            // build the response object: each accessor takes and releases
+            // its own short-lived lock, and serialization — the expensive
+            // part — runs with no platform lock held at all.
             let free = c.pool.free_vcpus();
+            let capacity = c.pool.capacity();
+            let queued_by_tenant = c.queued_by_tenant();
+            let queued = c.queued_flares();
+            let quota_blocked = c.quota_blocked_flares();
+            let preempted = c.preemptions();
+            let expired = c.expirations();
+            let resumed = c.resumes();
+            let deployed = c.db.list_defs().len();
+            let recovery = c.recovery_stats();
+            let (passes, admitted, pass_micros) = c.scheduler_pass_stats();
+            let (alive, dead) = c.nodes.alive_count();
+            let deaths = c.nodes.deaths_total();
+            let spillbacks = c.nodes.spillbacks_total();
+            let refusals = c.nodes.refusals_total();
+            let no_feasible = c.nodes.no_feasible_total();
             let mut by_tenant = std::collections::BTreeMap::new();
-            for (tenant, depth) in c.queued_by_tenant() {
+            for (tenant, depth) in queued_by_tenant {
                 by_tenant.insert(tenant, Json::from(depth));
             }
             Ok((
@@ -362,29 +628,37 @@ fn dispatch(
                     ("invokers", free.len().into()),
                     ("free_vcpus", Json::Arr(free.iter().map(|&f| f.into()).collect())),
                     ("total_free_vcpus", free.iter().sum::<usize>().into()),
-                    ("total_vcpus", c.pool.capacity().into()),
-                    ("queued_flares", c.queued_flares().into()),
+                    ("total_vcpus", capacity.into()),
+                    ("queued_flares", queued.into()),
                     ("queued_by_tenant", Json::Obj(by_tenant)),
-                    ("quota_blocked_flares", c.quota_blocked_flares().into()),
-                    ("preempted_total", c.preemptions().into()),
-                    ("expired_total", c.expirations().into()),
-                    ("resumed_total", c.resumes().into()),
-                    ("deployed_defs", c.db.list_defs().len().into()),
-                    ("recovery", c.recovery_stats().to_json()),
-                    ("nodes", {
-                        let (alive, dead) = c.nodes.alive_count();
+                    ("quota_blocked_flares", quota_blocked.into()),
+                    ("preempted_total", preempted.into()),
+                    ("expired_total", expired.into()),
+                    ("resumed_total", resumed.into()),
+                    ("deployed_defs", deployed.into()),
+                    ("recovery", recovery.to_json()),
+                    (
+                        "scheduler",
+                        Json::obj(vec![
+                            ("passes", passes.into()),
+                            ("admitted", admitted.into()),
+                            ("pass_micros_total", pass_micros.into()),
+                        ]),
+                    ),
+                    (
+                        "nodes",
                         Json::obj(vec![
                             ("alive", alive.into()),
                             ("dead", dead.into()),
-                            ("deaths_total", c.nodes.deaths_total().into()),
-                        ])
-                    }),
+                            ("deaths_total", deaths.into()),
+                        ]),
+                    ),
                     (
                         "placement",
                         Json::obj(vec![
-                            ("spillbacks_total", c.nodes.spillbacks_total().into()),
-                            ("refusals_total", c.nodes.refusals_total().into()),
-                            ("no_feasible_total", c.nodes.no_feasible_total().into()),
+                            ("spillbacks_total", spillbacks.into()),
+                            ("refusals_total", refusals.into()),
+                            ("no_feasible_total", no_feasible.into()),
                             ("spillback_retry_budget", SPILLBACK_RETRIES.into()),
                         ]),
                     ),
@@ -497,55 +771,10 @@ fn dispatch(
             c.deploy(name, work, conf)?;
             Ok((200, Json::obj(vec![("deployed", name.into())])))
         }
-        ("POST", "/v1/flare") => {
-            // Blocking invoke: submit, wait, return the full result. Held
-            // to the gate so blocking clients can never occupy every HTTP
-            // worker (the permit frees on return).
-            let _permit = match gate.try_acquire() {
-                Some(p) => p,
-                None => {
-                    return Ok((
-                        429,
-                        err_json(
-                            "too many concurrent blocking flares; use async \
-                             POST /v1/flares + GET /v1/flares/<id> polling",
-                        ),
-                    ))
-                }
-            };
-            let (def, params, opts) = parse_flare_body(body)?;
-            // Submit errors are the client's fault (400, via `?`); once
-            // admitted, an execution failure is the platform's (500).
-            let handle = c.submit_flare(&def, params, &opts)?;
-            // Interruptible wait (ROADMAP-known bug): a shutdown request
-            // must not park this worker for the flare's full duration.
-            // The flare keeps running; the parked client gets the id to
-            // poll instead.
-            loop {
-                if let Some(result) = handle.wait_timeout(BLOCKING_WAIT_QUANTUM) {
-                    return Ok(match result {
-                        Ok(r) => {
-                            let mut summary = r.summary_json();
-                            if let Json::Obj(m) = &mut summary {
-                                m.insert("outputs".into(), Json::Arr(r.outputs.clone()));
-                            }
-                            (200, summary)
-                        }
-                        Err(e) => (500, err_json(e)),
-                    });
-                }
-                if stop.load(Ordering::Relaxed) {
-                    return Ok((
-                        503,
-                        err_json(format!(
-                            "server shutting down before flare '{}' completed; \
-                             it is still running — poll GET /v1/flares/{}",
-                            handle.flare_id, handle.flare_id
-                        )),
-                    ));
-                }
-            }
-        }
+        // ("POST", "/v1/flare") is intentionally absent: the blocking
+        // route parks for the flare's duration, so the reactor hands it
+        // (socket and all) to the blocking pool before dispatch — see
+        // `Conn::advance` and `blocking_flare`.
         ("POST", "/v1/flares") => {
             // Async invoke: 202 + flare id immediately; poll for status.
             let (def, params, opts) = parse_flare_body(body)?;
@@ -563,7 +792,10 @@ fn dispatch(
             ))
         }
         ("GET", "/v1/flares") => {
-            // Recent flares, newest first, compact view.
+            // Recent flares, newest first, compact view. The store hands
+            // back an owned (id, def, status) snapshot — the order lock
+            // and shard locks are all released before this JSON is built,
+            // so a slow list can never stall writers.
             let list = c
                 .db
                 .list_flare_summaries(50)
@@ -580,6 +812,9 @@ fn dispatch(
         }
         ("GET", p) if p.starts_with("/v1/flares/") => {
             let id = &p["/v1/flares/".len()..];
+            // `get_flare` clones the record under a single shard's read
+            // lock (status reads on other shards proceed concurrently);
+            // serialization below runs on the owned clone, lock-free.
             match c.db.get_flare(id) {
                 Some(rec) => {
                     let mut j = rec.to_json();

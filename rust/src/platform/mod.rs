@@ -7,7 +7,9 @@
 //!
 //! * **submit** — `Controller::submit_flare` resolves the configuration and
 //!   returns a [`FlareHandle`] without blocking (`Controller::flare` is a
-//!   submit-and-wait wrapper).
+//!   submit-and-wait wrapper). The admitted job is pushed onto the
+//!   scheduler's *inbox* — a plain mutex-protected vector — and the
+//!   scheduler is woken; submits never contend the DRR queue itself.
 //! * **admit** — requests that can never run (unknown definition, burst
 //!   larger than the largest registered node — a flare cannot span nodes,
 //!   the message fabric is node-local — granularity no idle invoker can
@@ -82,6 +84,36 @@
 //! flares submitted with `preemptible = false`, and always lost to a
 //! concurrent `cancel_flare` (terminal `Cancelled` beats the requeue).
 //!
+//! **Control-plane hot path (PR 8).** Two refactors keep the
+//! submit/status path flat under sustained load:
+//!
+//! * *Batched admission.* Rather than taking the queue lock once per
+//!   submit, each scheduler pass begins by adopting the whole inbox into
+//!   the DRR queue under **one** queue lock, in submission order — DRR
+//!   fairness, priorities, quotas, deadlines, and preemption all apply
+//!   exactly as before, just a pass later at the earliest. Recovery and
+//!   the preempt-requeue edge bypass the inbox deliberately (recovery
+//!   runs with the scheduler paused; a preempted flare re-enters at the
+//!   head of its lane). Pass count, flares admitted, and cumulative pass
+//!   cost are exported as the `scheduler` block of `/metrics`.
+//! * *Sharded flare store.* [`BurstDb`] splits flare records over
+//!   [`db::FLARE_SHARDS`] independent `RwLock` shards keyed by flare id,
+//!   plus one small order index for newest-first listing and terminal
+//!   eviction; a status read takes a single shard's read lock, so reads
+//!   scale with polling clients and never stall behind an unrelated
+//!   writer. WAL entries are still staged under the mutated shard's lock
+//!   (per-id order is all replay needs — see [`db`]'s module docs for the
+//!   lock hierarchy and ordering invariant).
+//!
+//! ```text
+//!   submit ──▶ inbox (one mutex push) ─┐        status poll
+//!                                      │             │
+//!                  scheduler pass:     ▼             ▼
+//!                  adopt batch ──▶ DRR queue    shard read lock
+//!                  (one lock/pass)    │         (1 of FLARE_SHARDS)
+//!                                  place ──▶ shard write + WAL stage
+//! ```
+//!
 //! **Node layer (PR 7).** The `placed` edge above runs through the
 //! two-level control plane ([`node`]): the cluster side registers invoker
 //! nodes, tracks their liveness by heartbeat, and places each flare on
@@ -153,8 +185,10 @@
 //! with `options.tenant` / `options.priority` / `options.preemptible` /
 //! `options.deadline_ms`), `GET /v1/flares/<id>` reports live status and
 //! `preempt_count`, `DELETE /v1/flares/<id>` cancels, `GET /v1/flares`
-//! lists recent flares; the blocking `POST /v1/flare` remains for simple
-//! clients, capped below the HTTP worker-pool size and waiting
+//! lists recent flares. All of those are served inline by the HTTP
+//! server's event-driven reactor thread ([`http`]); the blocking
+//! `POST /v1/flare` remains for simple clients, handed off to a small
+//! blocking pool, capped below that pool's size, and waiting
 //! interruptibly so server shutdown stays bounded.
 
 pub mod controller;

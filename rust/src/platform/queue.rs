@@ -53,7 +53,7 @@
 //! to completion.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
@@ -851,6 +851,14 @@ impl FlareQueue {
 /// per-flare execution threads.
 pub(crate) struct SchedState {
     pub(crate) queue: Mutex<FlareQueue>,
+    /// Batched-admission inbox: `submit_flare` appends here (a short,
+    /// uncontended push) instead of taking the big queue lock — the
+    /// scheduler adopts the whole batch at the start of its next pass
+    /// under a single queue lock, in submission order, so DRR fairness,
+    /// priority, quota, and preemption semantics are untouched. Recovery
+    /// and preempt-requeue bypass the inbox (the scheduler is paused /
+    /// the job re-enters at the head of its lane).
+    pub(crate) inbox: Mutex<Vec<QueuedFlare>>,
     cv: Condvar,
     /// Set by `wake` so a notification between scheduling passes is never
     /// lost (the scheduler re-checks before sleeping).
@@ -861,16 +869,26 @@ pub(crate) struct SchedState {
     /// off, so nothing can be placed under not-yet-restored weights or
     /// quotas. Released by `resume`.
     paused: AtomicBool,
+    /// Scheduler hot-path counters (the control-plane bench reads these
+    /// through `/metrics`): completed passes, flares admitted from the
+    /// inbox, and accumulated active pass time.
+    pub(crate) passes: AtomicU64,
+    pub(crate) admitted: AtomicU64,
+    pub(crate) pass_micros: AtomicU64,
 }
 
 impl SchedState {
     pub(crate) fn new(max_backfill_passes: u32) -> Arc<SchedState> {
         Arc::new(SchedState {
             queue: Mutex::new(FlareQueue::new(max_backfill_passes)),
+            inbox: Mutex::new(Vec::new()),
             cv: Condvar::new(),
             dirty: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
             paused: AtomicBool::new(false),
+            passes: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            pass_micros: AtomicU64::new(0),
         })
     }
 
@@ -909,12 +927,20 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // On the panic path the queue mutex may be poisoned (the panic
             // can originate under the lock); recover the inner state — a
             // second panic here would abort the process.
-            let leftovers = self
-                .0
-                .queue
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .drain();
+            let mut leftovers = std::mem::take(
+                &mut *self
+                    .0
+                    .inbox
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner()),
+            );
+            leftovers.extend(
+                self.0
+                    .queue
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .drain(),
+            );
             for job in leftovers {
                 job.slot.deliver(Err(anyhow!(
                     "scheduler stopped before flare '{}' was placed",
@@ -930,6 +956,18 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // Recovery replay in progress: nothing may be placed until
             // tenant weights and quotas are reinstated.
         } else if let Some(c) = controller.upgrade() {
+            let pass_started = Instant::now();
+            // Batched admission: adopt every flare submitted since the
+            // last pass in one queue lock (in submission order), instead
+            // of paying a queue-lock acquisition per submit.
+            let batch = std::mem::take(&mut *state.inbox.lock().unwrap());
+            if !batch.is_empty() {
+                state.admitted.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                let mut q = state.queue.lock().unwrap();
+                for job in batch {
+                    q.push(job);
+                }
+            }
             // Deadline pass first: a flare whose deadline lapsed while
             // queued must fail fast, never be placed.
             c.expire_overdue_queued();
@@ -952,6 +990,10 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // Nothing placeable left: reclaim capacity for a starved
             // high-priority flare by preempting lower-priority runners.
             c.preempt_for_starved_high_flare();
+            state.passes.fetch_add(1, Ordering::Relaxed);
+            state
+                .pass_micros
+                .fetch_add(pass_started.elapsed().as_micros() as u64, Ordering::Relaxed);
         }
         let guard = state.queue.lock().unwrap();
         if state.shutdown.load(Ordering::Acquire) {

@@ -257,6 +257,87 @@ fn wal_replay_reconstructs_db_contents_for_any_op_interleaving() {
 }
 
 #[test]
+fn sharded_wal_replay_matches_db_under_concurrent_mutation() {
+    // Threads hammer puts and updates (including terminal transitions,
+    // which trigger retention evictions) across ids hashed to different
+    // shards. Whatever interleaving the scheduler produced, replaying the
+    // WAL must reconstruct exactly the records the live db ended up with:
+    // per-id WAL order is staged under the mutated shard's lock, and
+    // evictions log their own `drop_flare` entries, so the last WAL entry
+    // for an id always matches its final in-memory state.
+    forall("sharded replay == db", 8, |g| {
+        let dir = std::env::temp_dir().join(format!(
+            "burstc-prop-shard-{}-{}",
+            std::process::id(),
+            g.seed
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let retention = g.usize(2, 10);
+        let threshold = g.usize(2, 20);
+        let store = Arc::new(
+            DurableStore::open_with_threshold(&dir, threshold).unwrap(),
+        );
+        let db = BurstDb::with_retention(retention);
+        db.attach_store(store.clone());
+
+        let statuses = [
+            FlareStatus::Queued,
+            FlareStatus::Running,
+            FlareStatus::Completed,
+            FlareStatus::Failed,
+            FlareStatus::Cancelled,
+        ];
+        let ids: Vec<String> = (0..16).map(|i| format!("s{i}")).collect();
+        let ops = g.usize(20, 80);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let (db, ids, statuses) = (&db, &ids, &statuses);
+                let seed = g.seed.wrapping_add(t.wrapping_mul(7919));
+                s.spawn(move || {
+                    let mut rng = Pcg::new(seed);
+                    for i in 0..ops {
+                        let id = &ids[rng.usize(0, ids.len())];
+                        let status = statuses[rng.usize(0, statuses.len())];
+                        if rng.usize(0, 3) == 0 {
+                            let mut rec =
+                                FlareRecord::queued(id, "d", "default", Priority::Normal);
+                            rec.status = status;
+                            rec.submit_seq = t * 1000 + i as u64;
+                            rec.outputs = vec![Json::Num(i as f64)];
+                            db.put_flare(rec);
+                        } else {
+                            db.update_flare(id, |r| {
+                                r.status = status;
+                                r.resume_count = r.resume_count.wrapping_add(1);
+                            });
+                        }
+                    }
+                });
+            }
+        });
+
+        // Snapshot the live contents, release the db's store handle, then
+        // replay from disk. Cross-id listing order is scheduler-dependent
+        // and not part of the invariant — compare contents keyed by id.
+        let mut want: std::collections::BTreeMap<String, Json> = Default::default();
+        for (id, _, _) in db.list_flare_summaries(1 << 20) {
+            want.insert(id.clone(), db.get_flare(&id).unwrap().to_json());
+        }
+        drop(db);
+        drop(store);
+
+        let loaded = DurableStore::open(&dir).unwrap().loaded();
+        let mut got: std::collections::BTreeMap<String, Json> = Default::default();
+        for rec_json in &loaded.flares {
+            let id = rec_json.str_or("flare_id", "").to_string();
+            got.insert(id, rec_json.clone());
+        }
+        assert_eq!(got, want, "replayed records diverged from live db");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
 fn checkpoint_wal_replay_matches_in_memory_with_tail_corruption() {
     // Any interleaving of flare puts, status transitions, and worker
     // checkpoints, replayed from disk ⊕ a truncated tail, must
