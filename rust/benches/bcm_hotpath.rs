@@ -22,11 +22,11 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use burstc::bcm::chunk::{self, Op};
-use burstc::bcm::mailbox::Mailbox;
+use burstc::bcm::mailbox::{Bytes, Mailbox};
 use burstc::bcm::{BackendKind, BurstContext, CommFabric, FabricConfig, PackTopology};
 use burstc::cluster::netmodel::NetParams;
 use burstc::util::benchkit::{section, time_iters, Table};
-use burstc::util::bytes::{KIB, MIB};
+use burstc::util::bytes::{self, KIB, MIB};
 use burstc::util::json::Json;
 use burstc::util::rng::Pcg;
 use burstc::util::stats::Summary;
@@ -91,7 +91,7 @@ fn wakeup_latency_poll(samples: usize) -> Summary {
             s.spawn(move || {
                 std::thread::sleep(stagger);
                 *t0c.lock().unwrap() = Some(Instant::now());
-                mb2.put(key2, Arc::new(vec![1u8]));
+                mb2.put(key2, vec![1u8].into());
             });
             loop {
                 if mb.take(&key, Duration::ZERO).is_ok() {
@@ -122,7 +122,7 @@ fn wakeup_latency_event(samples: usize) -> Summary {
             s.spawn(move || {
                 std::thread::sleep(stagger);
                 *t0c.lock().unwrap() = Some(Instant::now());
-                mb2.put(key2, Arc::new(vec![1u8]));
+                mb2.put(key2, vec![1u8].into());
             });
             mb.take(&key, Duration::from_secs(5)).unwrap();
             out.push(t0.lock().unwrap().unwrap().elapsed().as_secs_f64());
@@ -230,6 +230,36 @@ fn main() {
     let ratio = copied as f64 / delivered as f64;
     let legacy_ratio = legacy_copied as f64 / delivered as f64;
 
+    // --- streaming sends: only chunk 0 is framed (and thus copied) ---
+    // A 1 MiB payload over 64 KiB chunks used to materialize all 16 framed
+    // chunks on send; the streaming path slices 15 of them straight from
+    // the source `Bytes` and copies exactly one chunk window.
+    let sf = {
+        let params = NetParams::scaled(1e-9);
+        CommFabric::new(
+            "hot-stream",
+            PackTopology::contiguous(2, 1),
+            BackendKind::DragonflyList.build(&params),
+            &params,
+            FabricConfig {
+                timeout: Duration::from_secs(10),
+                chunk_size: 64 * KIB,
+                ..FabricConfig::default()
+            },
+        )
+    };
+    sf.traffic.reset();
+    let stream_payload: Bytes = vec![2u8; MIB].into();
+    sf.remote_send(Op::Direct, 0, Some(1), 0, &stream_payload).unwrap();
+    let stream_copied = sf.traffic.copied();
+    assert_eq!(
+        stream_copied,
+        (64 * KIB) as u64,
+        "streaming send must copy exactly one chunk window, not the payload"
+    );
+    let got = sf.remote_recv(Op::Direct, 0, Some(1), 0, 1, true).unwrap();
+    assert_eq!(got.len(), MIB);
+
     // --- blocked-taker wakeup latency, poll-slice vs event-driven ---
     let (poll_n, event_n) = if smoke { (8, 40) } else { (50, 200) };
     let poll = wakeup_latency_poll(poll_n);
@@ -240,6 +270,11 @@ fn main() {
         "copied bytes / delivered byte".into(),
         format!("{legacy_ratio:.3}"),
         format!("{ratio:.3}"),
+    ]);
+    t.row(vec![
+        "streamed send copies (1 MiB, 64 KiB chunks)".into(),
+        bytes::human(MIB as u64),
+        bytes::human(stream_copied),
     ]);
     t.row(vec![
         "wakeup latency (median)".into(),
@@ -279,6 +314,8 @@ fn main() {
                 ("copied_per_delivered", ratio.into()),
                 ("legacy_copied_bytes", legacy_copied.into()),
                 ("legacy_copied_per_delivered", legacy_ratio.into()),
+                ("streamed_send_payload_bytes", (MIB as u64).into()),
+                ("streamed_send_copied_bytes", stream_copied.into()),
             ]),
         ),
         (
@@ -344,7 +381,7 @@ fn legacy_tables() {
     // measures lock/queue overhead of the middleware itself.
     {
         let f = fabric(2, 1);
-        let payload = vec![1u8; 4 * MIB];
+        let payload: Bytes = vec![1u8; 4 * MIB].into();
         let mut ctr = 0u64;
         let s = time_iters(20, 200, || {
             f.remote_send(Op::Direct, 0, Some(1), ctr, &payload).unwrap();

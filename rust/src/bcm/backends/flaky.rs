@@ -134,7 +134,7 @@ mod tests {
                         (0..8).map(|d| vec![(w * 8 + d) as u8; 300]).collect();
                     let got = ctx.all_to_all(msgs).unwrap();
                     for (src, m) in got.iter().enumerate() {
-                        assert_eq!(m.as_ref(), &vec![(src * 8 + w) as u8; 300], "w={w}");
+                        assert_eq!(m.as_slice(), &[(src * 8 + w) as u8; 300][..], "w={w}");
                     }
                 });
             }
@@ -219,7 +219,7 @@ mod tests {
         let b = BurstContext::new(1, fabric);
         for i in 0..10u8 {
             a.send(1, vec![i; 200]).unwrap(); // 4 chunks each, all duplicated
-            assert_eq!(b.recv(0).unwrap().as_ref(), &vec![i; 200]);
+            assert_eq!(b.recv(0).unwrap().as_slice(), &[i; 200][..]);
         }
         assert!(flaky.dups_injected.load(Ordering::Relaxed) >= 10);
     }

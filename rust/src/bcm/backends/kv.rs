@@ -293,9 +293,9 @@ mod tests {
     #[test]
     fn put_fetch_roundtrip() {
         let s = KvServer::redis(&fast(), false);
-        s.put("k", Arc::new(vec![1, 2, 3])).unwrap();
+        s.put("k", vec![1, 2, 3].into()).unwrap();
         let v = s.fetch("k", Duration::from_millis(100)).unwrap();
-        assert_eq!(v.as_ref(), &vec![1, 2, 3]);
+        assert_eq!(v.as_slice(), &[1u8, 2, 3][..]);
         // Queue now empty: second fetch times out.
         assert!(s.fetch("k", Duration::from_millis(10)).is_err());
     }
@@ -303,18 +303,18 @@ mod tests {
     #[test]
     fn queue_fifo_order() {
         let s = KvServer::dragonfly(&fast(), false);
-        s.put("q", Arc::new(vec![1])).unwrap();
-        s.put("q", Arc::new(vec![2])).unwrap();
-        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![1]);
-        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![2]);
+        s.put("q", vec![1].into()).unwrap();
+        s.put("q", vec![2].into()).unwrap();
+        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_slice(), &[1u8][..]);
+        assert_eq!(s.fetch("q", Duration::from_millis(10)).unwrap().as_slice(), &[2u8][..]);
     }
 
     #[test]
     fn publish_read_many() {
         let s = KvServer::redis(&fast(), false);
-        s.publish("bc", Arc::new(vec![9])).unwrap();
+        s.publish("bc", vec![9].into()).unwrap();
         for _ in 0..3 {
-            assert_eq!(s.read("bc", Duration::from_millis(10)).unwrap().as_ref(), &vec![9]);
+            assert_eq!(s.read("bc", Duration::from_millis(10)).unwrap().as_slice(), &[9u8][..]);
         }
     }
 
@@ -324,15 +324,15 @@ mod tests {
         let s2 = s.clone();
         let h = std::thread::spawn(move || s2.fetch("late", Duration::from_secs(2)).unwrap());
         std::thread::sleep(Duration::from_millis(30));
-        s.put("late", Arc::new(vec![5])).unwrap();
-        assert_eq!(h.join().unwrap().as_ref(), &vec![5]);
+        s.put("late", vec![5].into()).unwrap();
+        assert_eq!(h.join().unwrap().as_slice(), &[5u8][..]);
     }
 
     #[test]
     fn clear_prefix_scoped() {
         let s = KvServer::redis(&fast(), false);
-        s.put("f1/a", Arc::new(vec![1])).unwrap();
-        s.put("f2/a", Arc::new(vec![2])).unwrap();
+        s.put("f1/a", vec![1].into()).unwrap();
+        s.put("f2/a", vec![2].into()).unwrap();
         s.clear_prefix("f1/");
         assert!(s.fetch("f1/a", Duration::from_millis(10)).is_err());
         assert!(s.fetch("f2/a", Duration::from_millis(10)).is_ok());
@@ -354,7 +354,7 @@ mod tests {
                 for i in 0..16 {
                     let s = &s;
                     scope.spawn(move || {
-                        s.put(&format!("k{i}"), Arc::new(vec![0u8; 8 << 20])).unwrap()
+                        s.put(&format!("k{i}"), vec![0u8; 8 << 20].into()).unwrap()
                     });
                 }
             });
@@ -371,7 +371,7 @@ mod tests {
         let params = NetParams::scaled(1.0);
         let list = KvServer::redis(&params, false);
         let stream = KvServer::redis(&params, true);
-        let payload = Arc::new(vec![0u8; 64 << 20]);
+        let payload = Bytes::from(vec![0u8; 64 << 20]);
         let t1 = Stopwatch::start();
         list.put("a", payload.clone()).unwrap();
         let tl = t1.secs();
@@ -405,7 +405,7 @@ mod tests {
     #[test]
     fn stats_counted() {
         let s = KvServer::redis(&fast(), false);
-        s.put("k", Arc::new(vec![0u8; 10])).unwrap();
+        s.put("k", vec![0u8; 10].into()).unwrap();
         s.fetch("k", Duration::from_millis(10)).unwrap();
         let st = s.stats();
         assert_eq!(st.puts, 1);

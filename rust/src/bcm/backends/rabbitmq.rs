@@ -232,25 +232,25 @@ mod tests {
     #[test]
     fn roundtrip() {
         let b = RabbitBackend::new(&fast());
-        b.put("q", Arc::new(vec![1])).unwrap();
-        assert_eq!(b.fetch("q", Duration::from_millis(10)).unwrap().as_ref(), &vec![1]);
+        b.put("q", vec![1].into()).unwrap();
+        assert_eq!(b.fetch("q", Duration::from_millis(10)).unwrap().as_slice(), &[1u8][..]);
     }
 
     #[test]
     fn rejects_oversized_payload() {
         let b = RabbitBackend::new(&fast());
-        let too_big = Arc::new(vec![0u8; 129 * MIB]);
+        let too_big = Bytes::from(vec![0u8; 129 * MIB]);
         assert!(b.put("k", too_big).is_err());
-        let ok = Arc::new(vec![0u8; MIB]);
+        let ok = Bytes::from(vec![0u8; MIB]);
         assert!(b.put("k", ok).is_ok());
     }
 
     #[test]
     fn fanout_read_many() {
         let b = RabbitBackend::new(&fast());
-        b.publish("x", Arc::new(vec![7])).unwrap();
+        b.publish("x", vec![7].into()).unwrap();
         for _ in 0..4 {
-            assert_eq!(b.read("x", Duration::from_millis(10)).unwrap().as_ref(), &vec![7]);
+            assert_eq!(b.read("x", Duration::from_millis(10)).unwrap().as_slice(), &[7u8][..]);
         }
     }
 
@@ -263,15 +263,15 @@ mod tests {
         let params = NetParams::scaled(0.5);
         let b = RabbitBackend::new(&params);
         // Drain the pipeline's burst allowance so steady-state rate shows.
-        b.put("warmup", Arc::new(vec![0u8; 128 * MIB])).unwrap();
+        b.put("warmup", vec![0u8; 128 * MIB].into()).unwrap();
         let t = crate::util::timing::Stopwatch::start();
-        b.put("single", Arc::new(vec![0u8; 16 * MIB])).unwrap();
+        b.put("single", vec![0u8; 16 * MIB].into()).unwrap();
         let single = t.secs();
         let t = crate::util::timing::Stopwatch::start();
         std::thread::scope(|s| {
             for i in 0..8 {
                 let b = &b;
-                s.spawn(move || b.put(&format!("k{i}"), Arc::new(vec![0u8; 16 * MIB])).unwrap());
+                s.spawn(move || b.put(&format!("k{i}"), vec![0u8; 16 * MIB].into()).unwrap());
             }
         });
         let parallel8 = t.secs();

@@ -222,16 +222,16 @@ mod tests {
     #[test]
     fn roundtrip() {
         let s = S3Backend::new(&fast());
-        s.put("k", Arc::new(vec![3, 4])).unwrap();
-        assert_eq!(s.fetch("k", Duration::from_millis(50)).unwrap().as_ref(), &vec![3, 4]);
+        s.put("k", vec![3, 4].into()).unwrap();
+        assert_eq!(s.fetch("k", Duration::from_millis(50)).unwrap().as_slice(), &[3u8, 4][..]);
     }
 
     #[test]
     fn publish_read_many() {
         let s = S3Backend::new(&fast());
-        s.publish("o", Arc::new(vec![1])).unwrap();
+        s.publish("o", vec![1].into()).unwrap();
         for _ in 0..3 {
-            assert_eq!(s.read("o", Duration::from_millis(50)).unwrap().as_ref(), &vec![1]);
+            assert_eq!(s.read("o", Duration::from_millis(50)).unwrap().as_slice(), &[1u8][..]);
         }
     }
 
@@ -243,13 +243,13 @@ mod tests {
         let params = NetParams::scaled(0.5);
         let s = S3Backend::new(&params);
         let t = Stopwatch::start();
-        s.put("one", Arc::new(vec![0u8; 16 * MIB])).unwrap();
+        s.put("one", vec![0u8; 16 * MIB].into()).unwrap();
         let single = t.secs();
         let t = Stopwatch::start();
         std::thread::scope(|sc| {
             for i in 0..8 {
                 let s = &s;
-                sc.spawn(move || s.put(&format!("k{i}"), Arc::new(vec![0u8; 16 * MIB])).unwrap());
+                sc.spawn(move || s.put(&format!("k{i}"), vec![0u8; 16 * MIB].into()).unwrap());
             }
         });
         let parallel = t.secs();
@@ -265,7 +265,7 @@ mod tests {
         let s = S3Backend::new(&params);
         let t = Stopwatch::start();
         for i in 0..20 {
-            s.put(&format!("t{i}"), Arc::new(vec![])).unwrap();
+            s.put(&format!("t{i}"), vec![].into()).unwrap();
         }
         let took = t.secs();
         let expected = 20.0 * params.s3_put_latency_s * params.time_scale;

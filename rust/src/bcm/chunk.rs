@@ -170,14 +170,26 @@ impl StreamAssembly {
     /// or overflowing chunks are errors.
     pub fn accept<'a>(&mut self, chunk: &'a [u8]) -> Result<Option<(usize, &'a [u8])>> {
         let hdr = Header::decode(chunk)?;
-        let idx = hdr.chunk_idx as usize;
+        self.accept_bare(hdr.chunk_idx as usize, &chunk[HEADER_LEN..])
+    }
+
+    /// Accept a *bare* (header-less) chunk, as shipped by the zero-copy
+    /// send path: only chunk 0 travels framed, so for the rest the index
+    /// comes from the transport key and the offset/size rules derive from
+    /// chunk 0's header (every non-final chunk carries a full window; the
+    /// final chunk is anchored to the payload's end). Same fresh/duplicate
+    /// and bounds semantics as [`StreamAssembly::accept`].
+    pub fn accept_bare<'a>(
+        &mut self,
+        idx: usize,
+        payload: &'a [u8],
+    ) -> Result<Option<(usize, &'a [u8])>> {
         if idx >= self.n_chunks {
             return Err(anyhow!("chunk idx {idx} out of range {}", self.n_chunks));
         }
         if self.seen[idx] {
             return Ok(None); // duplicate — at-least-once tolerated
         }
-        let payload = &chunk[HEADER_LEN..];
         let off = if idx == self.n_chunks - 1 {
             self.total_len.checked_sub(payload.len()).ok_or_else(|| {
                 anyhow!("final chunk larger than payload ({} > {})", payload.len(), self.total_len)
@@ -414,6 +426,33 @@ mod tests {
         assert_eq!(fresh, n, "every chunk delivered exactly once");
         assert_eq!(streamed, reference);
         assert_eq!(streamed, payload);
+    }
+
+    /// Bare (header-less) chunks — the zero-copy send path frames only
+    /// chunk 0 — must land at the same offsets as framed ones, including
+    /// the end-anchored final chunk and duplicate tolerance.
+    #[test]
+    fn bare_chunks_reassemble_like_framed_ones() {
+        let payload: Vec<u8> = (0..3000).map(|i| (i % 17) as u8).collect();
+        let chunk_size = 1024;
+        let chunks = split(Op::Direct, 0, 1, 0, &payload, chunk_size);
+        let hdr = Header::decode(&chunks[0]).unwrap();
+        let mut sa = StreamAssembly::new(&hdr);
+        let mut out = vec![0u8; sa.total_len()];
+        let (off, p) = sa.accept(&chunks[0]).unwrap().unwrap();
+        out[off..off + p.len()].copy_from_slice(p);
+        // The rest arrive bare, in reverse order, each duplicated once.
+        for i in (1..chunks.len()).rev() {
+            let lo = i * chunk_size;
+            let hi = ((i + 1) * chunk_size).min(payload.len());
+            let (off, p) = sa.accept_bare(i, &payload[lo..hi]).unwrap().unwrap();
+            out[off..off + p.len()].copy_from_slice(p);
+            assert!(sa.accept_bare(i, &payload[lo..hi]).unwrap().is_none());
+        }
+        assert!(sa.complete());
+        assert_eq!(out, payload);
+        // Out-of-range bare index errors.
+        assert!(sa.accept_bare(chunks.len(), &[0u8; 1]).is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@ use super::chunk::Op;
 use super::fabric::CommFabric;
 use super::mailbox::Bytes;
 use crate::util::cancel::{CancelReason, CancelToken};
+use crate::util::json::Json;
 
 /// Platform-side checkpoint channel for one flare *run*, shared by every
 /// worker context of the burst. `prior` holds the checkpoints the previous
@@ -181,6 +182,22 @@ impl BurstContext {
         )
     }
 
+    // --- DAG inputs (flare workflows) ---
+
+    /// Outputs of this flare's `idx`-th DAG parent (the flare submitted
+    /// as `after[idx]`): a JSON array with one entry per parent worker,
+    /// staged into this flare's backend by the platform before any worker
+    /// started. Every worker may call this (the staging is read-many);
+    /// workloads with large inputs should have one worker read and
+    /// scatter/share instead. Errors when the flare has no such parent
+    /// (the read times out) or at a cancel/preempt trip.
+    pub fn parent_input(&self, idx: usize) -> Result<Json> {
+        let raw = self.fabric.dag_input(idx)?;
+        let s = std::str::from_utf8(&raw)
+            .map_err(|e| anyhow!("parent input {idx} is not UTF-8: {e}"))?;
+        Json::parse(s).map_err(|e| anyhow!("parent input {idx} is not JSON: {e}"))
+    }
+
     // --- job context (paper §4.2) ---
 
     pub fn burst_size(&self) -> usize {
@@ -249,11 +266,12 @@ impl BurstContext {
             return Err(anyhow!("send: dst {dst} out of range {}", self.burst_size()));
         }
         let t = &self.fabric.topology;
+        let data = Bytes::from(data);
         if t.same_pack(self.worker_id, dst) {
             self.fabric.deliver_local(
                 dst,
                 Self::local_key(op, self.worker_id, ctr),
-                Arc::new(data),
+                data,
             );
             Ok(())
         } else {
@@ -282,7 +300,7 @@ impl BurstContext {
                 self.pack_id(),
                 true,
             )?;
-            Ok(Arc::new(payload))
+            Ok(Bytes::from(payload))
         }
     }
 
@@ -293,7 +311,7 @@ impl BurstContext {
     /// pack** (the pack leader fans it out locally) — remote volume is
     /// proportional to the number of packs, not workers (paper §5.3).
     pub fn broadcast(&self, root: usize, data: Option<Vec<u8>>) -> Result<Bytes> {
-        self.broadcast_shared(root, data.map(Arc::new))
+        self.broadcast_shared(root, data.map(Bytes::from))
     }
 
     /// [`BurstContext::broadcast`] over an already-shared buffer: the root
@@ -329,7 +347,7 @@ impl BurstContext {
         if self.is_leader() {
             let payload =
                 self.fabric.remote_recv(Op::Broadcast, root, None, ctr, my_pack, false)?;
-            let data = Arc::new(payload);
+            let data = Bytes::from(payload);
             for &w in t.members(my_pack) {
                 if w != self.worker_id {
                     self.fabric.deliver_local(w, key.clone(), data.clone());
@@ -428,7 +446,7 @@ impl BurstContext {
 
         // Root pack's leader holds the final value.
         if self.worker_id == root {
-            Ok(Some(Arc::new(acc)))
+            Ok(Some(Bytes::from(acc)))
         } else {
             self.send_op(Op::Reduce, root, acc, ctr)?;
             Ok(None)
@@ -454,9 +472,10 @@ impl BurstContext {
                 self.fabric.deliver_local(
                     dst,
                     Self::local_key(Op::AllToAll, self.worker_id, ctr),
-                    Arc::new(m),
+                    m.into(),
                 );
             } else {
+                let m = Bytes::from(m);
                 self.fabric.remote_send(Op::AllToAll, self.worker_id, Some(dst), ctr, &m)?;
             }
         }
@@ -474,7 +493,7 @@ impl BurstContext {
                     self.pack_id(),
                     true,
                 )?;
-                out.push(Arc::new(payload));
+                out.push(Bytes::from(payload));
             }
         }
         Ok(out)
@@ -496,7 +515,7 @@ impl BurstContext {
         let t = &self.fabric.topology;
         let n = self.burst_size();
         let mut out: Vec<Option<Bytes>> = (0..n).map(|_| None).collect();
-        out[root] = Some(Arc::new(data));
+        out[root] = Some(Bytes::from(data));
         let remote: Vec<usize> =
             (0..n).filter(|&s| s != root && !t.same_pack(self.worker_id, s)).collect();
         let slots: Vec<Mutex<Option<Result<Bytes>>>> =
@@ -549,7 +568,7 @@ impl BurstContext {
             let mut mine = None;
             for (dst, m) in msgs.into_iter().enumerate() {
                 if dst == root {
-                    mine = Some(Arc::new(m));
+                    mine = Some(Bytes::from(m));
                 } else {
                     self.send_op(Op::Scatter, dst, m, ctr)?;
                 }
@@ -572,7 +591,7 @@ impl BurstContext {
         let key = Self::local_key(Op::Scatter, leader, ctr);
         if self.worker_id == leader {
             let data =
-                Arc::new(data.ok_or_else(|| anyhow!("pack_share: leader must supply data"))?);
+                Bytes::from(data.ok_or_else(|| anyhow!("pack_share: leader must supply data"))?);
             for &w in t.members(my_pack) {
                 if w != leader {
                     self.fabric.deliver_local(w, key.clone(), data.clone());

@@ -120,40 +120,63 @@ impl CommFabric {
 
     /// Chunked remote send from `src` to `dst` (worker ids). Broadcast
     /// (one-to-many) uses `publish` and `dst = u32::MAX`.
+    ///
+    /// Streaming: only chunk 0 is framed (header + first window copied
+    /// into a fresh buffer); every later chunk ships as a bare zero-copy
+    /// view of the source payload, so a large send copies ~one chunk of
+    /// bytes instead of the whole payload. The receiver reconstructs the
+    /// bare chunks' offsets from chunk 0's header
+    /// ([`chunk::StreamAssembly::accept_bare`]).
     pub fn remote_send(
         &self,
         op: Op,
         src: usize,
         dst: Option<usize>,
         ctr: u64,
-        payload: &[u8],
+        payload: &Bytes,
     ) -> Result<()> {
         let dst_u32 = dst.map(|d| d as u32).unwrap_or(u32::MAX);
-        let chunks =
-            chunk::split(op, src as u32, dst_u32, ctr, payload, self.config.chunk_size);
-        // Framing copies the payload once into the wire chunks.
-        self.traffic.record_copied(payload.len() as u64);
-        let n = chunks.len();
+        let chunk_size = self.config.chunk_size;
+        let n = payload.len().div_ceil(chunk_size).max(1);
         let src_pack = self.topology.pack_of(src);
         self.nic_tx[src_pack].take(payload.len() as f64);
-        // Fast path: single-chunk messages skip the connection-pool scope
-        // (spawning a thread per small message dominates small-payload cost).
-        if n == 1 {
-            let data = Arc::new(chunks.into_iter().next().unwrap());
+        let put = |key: &str, data: Bytes| -> Result<u64> {
             let len = data.len() as u64;
-            let key = self.chunk_key(op, src as u32, dst_u32, ctr, 0);
             if dst.is_some() {
-                self.backend.put(&key, data)?;
+                self.backend.put(key, data)?;
             } else {
-                self.backend.publish(&key, data)?;
+                self.backend.publish(key, data)?;
             }
             self.traffic.record_backend_op();
             self.traffic.record_remote_tx(len);
+            Ok(len)
+        };
+        // Chunk 0 carries the framing for the whole message — the only
+        // payload bytes the send path copies.
+        let first_len = payload.len().min(chunk_size);
+        let hdr = chunk::Header {
+            op,
+            src: src as u32,
+            dst: dst_u32,
+            counter: ctr,
+            chunk_idx: 0,
+            n_chunks: n as u32,
+            total_len: payload.len() as u32,
+        };
+        let mut first = Vec::with_capacity(chunk::HEADER_LEN + first_len);
+        first.extend_from_slice(&hdr.encode());
+        first.extend_from_slice(&payload[..first_len]);
+        self.traffic.record_copied(first_len as u64);
+        put(&self.chunk_key(op, src as u32, dst_u32, ctr, 0), first.into())?;
+        if n == 1 {
+            // Single-chunk messages also skip the connection-pool scope
+            // (a thread per small message dominates small-payload cost).
             return Ok(());
         }
-        let chunks = Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
-        let next = AtomicUsize::new(0);
-        let width = self.pool_width(src_pack, n);
+        // Remaining chunks: bare views of the payload, shipped concurrently
+        // through the pack pool.
+        let next = AtomicUsize::new(1);
+        let width = self.pool_width(src_pack, n - 1);
         let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|s| {
             for _ in 0..width {
@@ -162,21 +185,12 @@ impl CommFabric {
                     if i >= n {
                         return;
                     }
-                    let data = Arc::new(chunks.lock().unwrap()[i].take().unwrap());
-                    let len = data.len() as u64;
+                    let lo = i * chunk_size;
+                    let hi = ((i + 1) * chunk_size).min(payload.len());
                     let key = self.chunk_key(op, src as u32, dst_u32, ctr, i);
-                    let res = if dst.is_some() {
-                        self.backend.put(&key, data)
-                    } else {
-                        self.backend.publish(&key, data)
-                    };
-                    self.traffic.record_backend_op();
-                    match res {
-                        Ok(()) => self.traffic.record_remote_tx(len),
-                        Err(e) => {
-                            *err.lock().unwrap() = Some(e);
-                            return;
-                        }
+                    if let Err(e) = put(&key, payload.slice(lo, hi)) {
+                        *err.lock().unwrap() = Some(e);
+                        return;
                     }
                 });
             }
@@ -295,11 +309,14 @@ impl CommFabric {
                     }
                     match get(&self.chunk_key(op, src as u32, dst_u32, ctr, i)) {
                         Ok(data) => {
-                            // Dedup + offset under the tracker lock; the
-                            // sink runs inside it too, so consumers see
-                            // serialized, exactly-once chunk deliveries.
+                            // Chunks past the first are bare views (the
+                            // send path frames only chunk 0); the index is
+                            // ours from the key. Dedup + offset under the
+                            // tracker lock; the sink runs inside it too, so
+                            // consumers see serialized, exactly-once chunk
+                            // deliveries.
                             let mut sa = sa.lock().unwrap();
-                            match sa.accept(&data) {
+                            match sa.accept_bare(i, &data) {
                                 Ok(Some((off, p))) => {
                                     self.traffic.record_copied(p.len() as u64);
                                     sink(total, off, p);
@@ -327,6 +344,31 @@ impl CommFabric {
             return Err(anyhow!("streamed receive incomplete: {} chunks missing", sa.missing()));
         }
         Ok(total)
+    }
+
+    /// Stage a DAG input: the platform publishes the outputs of the
+    /// flare's `idx`-th parent under this flare's key prefix before any
+    /// worker starts; workers read them through
+    /// [`super::BurstContext::parent_input`]. Published (read-many, every
+    /// pack may read it) and cleared with the rest of the flare's state at
+    /// [`CommFabric::teardown`].
+    pub fn stage_dag_input(&self, idx: usize, payload: Vec<u8>) -> Result<()> {
+        self.traffic.record_backend_op();
+        self.backend.publish(&format!("f{}/dag/{idx}", self.flare_id), payload.into())
+    }
+
+    /// Read a staged DAG input (see [`CommFabric::stage_dag_input`]),
+    /// wired to the flare's kill switch like every other remote wait.
+    pub fn dag_input(&self, idx: usize) -> Result<Bytes> {
+        self.traffic.record_backend_op();
+        let key = format!("f{}/dag/{idx}", self.flare_id);
+        let data = self.backend.read_cancellable(
+            &key,
+            self.config.timeout,
+            self.config.cancel.as_ref(),
+        )?;
+        self.traffic.record_remote_rx(data.len() as u64);
+        Ok(data)
     }
 
     /// Flare teardown: drop all backend state for this flare.
@@ -359,33 +401,47 @@ mod tests {
     #[test]
     fn remote_roundtrip_multichunk() {
         let f = fabric(4, 2, 128);
-        let payload: Vec<u8> = (0..1000).map(|i| (i % 256) as u8).collect();
+        let payload: Bytes = (0..1000).map(|i| (i % 256) as u8).collect::<Vec<u8>>().into();
         f.remote_send(Op::Direct, 0, Some(2), 5, &payload).unwrap();
         let got = f.remote_recv(Op::Direct, 0, Some(2), 5, 1, true).unwrap();
-        assert_eq!(got, payload);
+        assert_eq!(got, payload.as_slice());
         assert!(f.traffic.remote_tx() >= 1000);
         assert!(f.traffic.ops() >= 8 * 2);
+    }
+
+    /// The send path frames (and therefore copies) only chunk 0; the other
+    /// chunks ship as zero-copy views of the source payload.
+    #[test]
+    fn streaming_send_copies_only_the_first_chunk() {
+        let f = fabric(4, 2, 128);
+        let payload: Bytes = vec![3u8; 1000].into();
+        f.remote_send(Op::Direct, 0, Some(2), 5, &payload).unwrap();
+        assert_eq!(f.traffic.copied(), 128, "send must copy exactly one chunk window");
+        assert!(f.traffic.remote_tx() >= 1000);
+        // The receiver still sees the exact payload.
+        let got = f.remote_recv(Op::Direct, 0, Some(2), 5, 1, true).unwrap();
+        assert_eq!(got, payload.as_slice());
     }
 
     #[test]
     fn publish_read_many_packs() {
         let f = fabric(6, 2, 64);
-        let payload = vec![7u8; 500];
+        let payload: Bytes = vec![7u8; 500].into();
         f.remote_send(Op::Broadcast, 0, None, 1, &payload).unwrap();
         // Two remote packs read the same published chunks.
         for pack in [1, 2] {
             let got = f.remote_recv(Op::Broadcast, 0, None, 1, pack, false).unwrap();
-            assert_eq!(got, payload);
+            assert_eq!(got, payload.as_slice());
         }
     }
 
     #[test]
     fn local_delivery_zero_copy_accounting() {
         let f = fabric(4, 4, 1024);
-        let data: Bytes = Arc::new(vec![1u8; 256]);
+        let data: Bytes = vec![1u8; 256].into();
         f.deliver_local(1, "k".into(), data.clone());
         let got = f.mailbox(1).take("k", Duration::from_millis(10)).unwrap();
-        assert!(Arc::ptr_eq(&data, &got));
+        assert!(data.ptr_eq(&got));
         assert_eq!(f.traffic.local(), 256);
         assert_eq!(f.traffic.remote(), 0);
     }
@@ -440,7 +496,7 @@ mod tests {
     #[test]
     fn streaming_recv_delivers_each_chunk_once() {
         let f = fabric(4, 2, 128);
-        let payload: Vec<u8> = (0..1500).map(|i| (i % 251) as u8).collect();
+        let payload: Bytes = (0..1500).map(|i| (i % 251) as u8).collect::<Vec<u8>>().into();
         f.remote_send(Op::Gather, 0, Some(2), 3, &payload).unwrap();
         let got = Mutex::new(vec![0u8; payload.len()]);
         let calls = AtomicUsize::new(0);
@@ -452,13 +508,13 @@ mod tests {
             .unwrap();
         assert_eq!(total, payload.len());
         assert_eq!(calls.load(Ordering::Relaxed), payload.len().div_ceil(128));
-        assert_eq!(got.into_inner().unwrap(), payload);
+        assert_eq!(got.into_inner().unwrap(), payload.as_slice());
     }
 
     #[test]
     fn teardown_clears_backend() {
         let f = fabric(2, 1, 64);
-        f.remote_send(Op::Direct, 0, Some(1), 0, &[1, 2, 3]).unwrap();
+        f.remote_send(Op::Direct, 0, Some(1), 0, &vec![1, 2, 3].into()).unwrap();
         f.teardown();
         let r = f.remote_recv(Op::Direct, 0, Some(1), 0, 1, true);
         assert!(r.is_err());

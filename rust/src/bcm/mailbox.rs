@@ -22,7 +22,65 @@ use anyhow::{anyhow, Result};
 
 use crate::util::cancel::{CancelToken, WakeTarget};
 
-pub type Bytes = Arc<Vec<u8>>;
+/// Immutable byte payload with cheap clones and zero-copy slicing: an
+/// `Arc`'d buffer plus an offset/length window. Cloning or slicing shares
+/// the backing buffer — the fabric ships chunks of one payload as views
+/// instead of copying each chunk into its own allocation, and local
+/// mailbox delivery is still a pointer hand-off.
+#[derive(Debug, Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// A zero-copy sub-view of `self` covering `lo..hi` (relative to this
+    /// view). Shares the backing buffer; panics if the range is out of
+    /// bounds.
+    pub fn slice(&self, lo: usize, hi: usize) -> Bytes {
+        assert!(lo <= hi && hi <= self.len, "slice {lo}..{hi} out of 0..{}", self.len);
+        Bytes { buf: Arc::clone(&self.buf), off: self.off + lo, len: hi - lo }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Do two views share one backing buffer? (The zero-copy assertion:
+    /// window positions may differ, the allocation must not.)
+    pub fn ptr_eq(&self, other: &Bytes) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { buf: Arc::new(v), off: 0, len }
+    }
+}
 
 /// Slot table plus the set of tokens whose trips already notify this
 /// mailbox.
@@ -143,9 +201,9 @@ mod tests {
     #[test]
     fn put_then_take() {
         let m = Mailbox::new();
-        m.put("a/0".into(), Arc::new(vec![1, 2]));
+        m.put("a/0".into(), vec![1, 2].into());
         let v = m.take("a/0", Duration::from_millis(10)).unwrap();
-        assert_eq!(v.as_ref(), &vec![1, 2]);
+        assert_eq!(v.as_slice(), &[1u8, 2][..]);
         assert!(m.is_empty());
     }
 
@@ -155,8 +213,8 @@ mod tests {
         let m2 = m.clone();
         let h = std::thread::spawn(move || m2.take("k", Duration::from_secs(2)).unwrap());
         std::thread::sleep(Duration::from_millis(30));
-        m.put("k".into(), Arc::new(vec![9]));
-        assert_eq!(h.join().unwrap().as_ref(), &vec![9]);
+        m.put("k".into(), vec![9].into());
+        assert_eq!(h.join().unwrap().as_slice(), &[9u8][..]);
     }
 
     #[test]
@@ -168,16 +226,16 @@ mod tests {
     #[test]
     fn selective_receive_out_of_order() {
         let m = Mailbox::new();
-        m.put("src2/5".into(), Arc::new(vec![2]));
-        m.put("src1/0".into(), Arc::new(vec![1]));
+        m.put("src2/5".into(), vec![2].into());
+        m.put("src1/0".into(), vec![1].into());
         // Taking src1 first even though src2 arrived first.
         assert_eq!(
-            m.take("src1/0", Duration::from_millis(10)).unwrap().as_ref(),
-            &vec![1]
+            m.take("src1/0", Duration::from_millis(10)).unwrap().as_slice(),
+            &[1u8][..]
         );
         assert_eq!(
-            m.take("src2/5", Duration::from_millis(10)).unwrap().as_ref(),
-            &vec![2]
+            m.take("src2/5", Duration::from_millis(10)).unwrap().as_slice(),
+            &[2u8][..]
         );
     }
 
@@ -275,9 +333,23 @@ mod tests {
     #[test]
     fn zero_copy_is_pointer_equal() {
         let m = Mailbox::new();
-        let payload: Bytes = Arc::new(vec![0u8; 1024]);
+        let payload: Bytes = vec![0u8; 1024].into();
         m.put("z".into(), payload.clone());
         let got = m.take("z", Duration::from_millis(10)).unwrap();
-        assert!(Arc::ptr_eq(&payload, &got), "local delivery must not copy");
+        assert!(payload.ptr_eq(&got), "local delivery must not copy");
+    }
+
+    #[test]
+    fn bytes_slices_share_the_backing_buffer() {
+        let b: Bytes = (0u8..100).collect::<Vec<u8>>().into();
+        let mid = b.slice(10, 30);
+        assert_eq!(mid.len(), 20);
+        assert_eq!(mid.as_slice(), &(10u8..30).collect::<Vec<u8>>()[..]);
+        assert!(mid.ptr_eq(&b), "slicing must not copy");
+        // Sub-slicing a view stays within the same buffer and re-offsets.
+        let tail = mid.slice(15, 20);
+        assert_eq!(tail.as_slice(), &[25u8, 26, 27, 28, 29][..]);
+        assert!(tail.ptr_eq(&b));
+        assert!(b.slice(0, 0).is_empty());
     }
 }

@@ -12,17 +12,18 @@
 //! Two invariants keep the delivery path cheap; `benches/bcm_hotpath.rs`
 //! tracks both in `BENCH_fabric.json`:
 //!
-//! - **Zero-copy ownership.** A payload becomes a [`Bytes`]
-//!   (`Arc<Vec<u8>>`) once, at the producer, and every local hand-off —
-//!   mailbox delivery, broadcast fan-out, a reduce result returned at a
-//!   non-leader root, gather/all-to-all inboxes — clones the `Arc`, never
-//!   the bytes. Receivers get shared immutable buffers; anyone who needs
-//!   to mutate clones explicitly (`as_ref().clone()`). The fabric only
-//!   copies payload bytes at the remote boundary (chunk framing on send,
-//!   chunk consumption on receive), so `TrafficStats::copied_bytes` over
-//!   delivered bytes is the figure of merit. Pipelined remote reduce and
-//!   gather fold/store chunks as they stream in, preserving a fixed
-//!   deterministic fold order.
+//! - **Zero-copy ownership.** A payload becomes a [`Bytes`] (a cheaply
+//!   cloneable, sliceable view over one `Arc`-backed buffer) once, at the
+//!   producer, and every local hand-off — mailbox delivery, broadcast
+//!   fan-out, a reduce result returned at a non-leader root,
+//!   gather/all-to-all inboxes — clones the view, never the bytes.
+//!   Receivers get shared immutable buffers; anyone who needs to mutate
+//!   clones explicitly (`to_vec()`). Remote sends stream chunks as
+//!   `Bytes::slice` views of the source buffer — only chunk 0 carries the
+//!   frame header, so the send path copies exactly one chunk window and
+//!   `TrafficStats::copied_bytes` over delivered bytes is the figure of
+//!   merit. Pipelined remote reduce and gather fold/store chunks as they
+//!   stream in, preserving a fixed deterministic fold order.
 //!
 //! - **Event-driven waits.** Blocked takers never poll. A mailbox take or
 //!   backend fetch parks on a condvar; `put` notifies it, and a
@@ -174,7 +175,7 @@ mod tests {
             });
             for (w, inbox) in got.iter().enumerate() {
                 for (src, m) in inbox.iter().enumerate() {
-                    assert_eq!(m.as_ref(), &vec![src as u8, w as u8], "g={g}");
+                    assert_eq!(m.as_slice(), &[src as u8, w as u8][..], "g={g}");
                 }
             }
         }
@@ -203,7 +204,7 @@ mod tests {
         });
         let at_root = got[2].as_ref().unwrap();
         for (src, v) in at_root.iter().enumerate() {
-            assert_eq!(v.as_ref(), &vec![src as u8; 3]);
+            assert_eq!(v.as_slice(), &[src as u8; 3][..]);
         }
         assert!(got[0].is_none() && got[5].is_none());
     }

@@ -9,7 +9,7 @@
 //!     2.5 GiB/s, S3 scales but stays slower).
 
 use crate::bcm::chunk::Op;
-use crate::bcm::{BackendKind, CommFabric, FabricConfig, PackTopology};
+use crate::bcm::{BackendKind, Bytes, CommFabric, FabricConfig, PackTopology};
 use crate::cluster::netmodel::NetParams;
 use crate::util::benchkit::{section, Table};
 use crate::util::bytes::{self, GIB, KIB, MIB};
@@ -46,7 +46,7 @@ fn pair_transfer(kind: BackendKind, payload: usize, chunk: usize, params: &NetPa
     if kind == BackendKind::RabbitMq && chunk > fabric.config.chunk_size {
         return None;
     }
-    let data = vec![0u8; payload];
+    let data: Bytes = vec![0u8; payload].into();
     let sw = Stopwatch::start();
     std::thread::scope(|s| {
         let f1 = fabric.clone();
@@ -130,7 +130,7 @@ fn pair_group_transfer(
     std::thread::scope(|s| {
         for w in 0..half {
             let f = fabric.clone();
-            let data = vec![0u8; payload];
+            let data: Bytes = vec![0u8; payload].into();
             s.spawn(move || f.remote_send(Op::Direct, w, Some(w + half), 0, &data).unwrap());
             let f = fabric.clone();
             s.spawn(move || {

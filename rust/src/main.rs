@@ -76,7 +76,10 @@ const USAGE: &str = "usage: burstctl <serve|deploy|flare|status|cancel|flares|no
   flare       --addr HOST:PORT --def NAME --size N [--param-json JSON]
               [--granularity N] [--faas] [--nowait]
               [--tenant NAME] [--priority low|normal|high]
-              [--deadline-ms N] [--no-preempt]
+              [--deadline-ms N] [--no-preempt] [--after ID1,ID2]
+              (--after holds the flare in waiting_on_parents until every
+               listed flare completes; a failed/cancelled parent fails it
+               fast with status parent_failed)
   status      --addr HOST:PORT --id FLARE_ID
   cancel      --addr HOST:PORT --id FLARE_ID
   flares      --addr HOST:PORT
@@ -248,6 +251,17 @@ fn flare(args: &Args) -> Result<()> {
     // Opt out of scheduler-initiated preemption.
     if args.flag("no-preempt") {
         options.push(("preemptible", Json::Bool(false)));
+    }
+    // DAG edges: run only after these flares complete (comma-separated
+    // ids of already-submitted flares). Pairs naturally with --nowait.
+    if let Some(parents) = args.get("after") {
+        let ids: Vec<Json> = parents
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| Json::Str(p.to_string()))
+            .collect();
+        options.push(("after", Json::Arr(ids)));
     }
     let body = Json::obj(vec![
         ("def", def.into()),

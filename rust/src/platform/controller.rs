@@ -133,6 +133,14 @@ pub struct FlareOptions {
     /// within a priority class, and a flare still queued past it fails
     /// fast with `FlareStatus::Expired`.
     pub deadline_ms: Option<u64>,
+    /// DAG edges: ids of already-submitted flares this one depends on.
+    /// The flare waits outside the DRR lanes (`waiting_on_parents`) until
+    /// every parent reaches `Completed`, then enters the lanes with the
+    /// parents' outputs staged into its backend
+    /// ([`crate::bcm::BurstContext::parent_input`]) and placement biased
+    /// toward the parents' nodes. A parent that ends any other way fails
+    /// this flare fast with [`FlareStatus::ParentFailed`].
+    pub after: Vec<String>,
 }
 
 impl FlareOptions {
@@ -146,6 +154,13 @@ impl FlareOptions {
             priority: j.get("priority").and_then(Json::as_str).map(str::to_string),
             preemptible: j.get("preemptible").and_then(Json::as_bool),
             deadline_ms: j.get("deadline_ms").and_then(Json::as_usize).map(|d| d as u64),
+            after: j
+                .get("after")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                })
+                .unwrap_or_default(),
         }
     }
 }
@@ -499,7 +514,14 @@ impl Controller {
             match this.rebuild_queued(&rec) {
                 Ok(job) => {
                     rec.status = FlareStatus::Queued;
-                    rec.wait_reason = None;
+                    // A DAG child re-enters the waiting-on-parents area,
+                    // not the lanes: completed parents stay done (their
+                    // terminal records were restored above, records replay
+                    // oldest-first) and the first scheduler pass re-resolves
+                    // the edges — failing the child explicitly if a parent
+                    // was itself lost at restart.
+                    rec.wait_reason = (!job.after.is_empty())
+                        .then(|| "waiting_on_parents".to_string());
                     let flare_id = rec.flare_id.clone();
                     this.db.put_flare(rec);
                     // Re-seed the previous process's worker checkpoints
@@ -511,14 +533,19 @@ impl Controller {
                     for (worker, epoch, data) in
                         ckpts_by_flare.remove(&flare_id).unwrap_or_default()
                     {
-                        this.db.put_checkpoint(&flare_id, worker, epoch, Arc::new(data));
+                        this.db.put_checkpoint(&flare_id, worker, epoch, data.into());
                         stats.checkpoints_restored += 1;
                     }
                     this.cancels
                         .lock()
                         .unwrap()
                         .insert(job.flare_id.clone(), job.cancel.clone());
-                    this.sched.queue.lock().unwrap().push(job);
+                    let mut q = this.sched.queue.lock().unwrap();
+                    if job.after.is_empty() {
+                        q.push(job);
+                    } else {
+                        q.park_waiting(job);
+                    }
                     stats.requeued += 1;
                 }
                 Err(e) => {
@@ -643,6 +670,13 @@ impl Controller {
             // warm containers and checkpoints, when it re-registered.
             prior_node: rec.node.clone(),
             infeasible: false,
+            // DAG edges ride the record (and thus the WAL): a re-admitted
+            // child re-enters the waiting area and re-resolves its parents
+            // against the restored records. Parent nodes are re-derived at
+            // promotion time, not persisted — the parents may have been
+            // re-homed by this very recovery.
+            after: rec.after.clone(),
+            parent_nodes: Vec::new(),
         })
     }
 
@@ -749,6 +783,20 @@ impl Controller {
         // Queueing deadline: anchored at submission, so a requeued victim
         // keeps its original deadline along with its original submit time.
         let deadline = opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        // DAG edges: every parent must already be submitted — a typo'd id
+        // would otherwise park the child forever. The list is kept in
+        // submission order, *not* deduplicated: `parent_input(i)` addresses
+        // exactly `after[i]`. A parent may be in any state here (including
+        // already failed — the first scheduler pass fails the child fast).
+        let after = opts.after.clone();
+        for parent in &after {
+            if self.db.get_flare(parent).is_none() {
+                return Err(anyhow!(
+                    "unknown parent flare '{parent}' in `after`: \
+                     parents must be submitted before their children"
+                ));
+            }
+        }
 
         // Admission: a flare that cannot be placed on an *idle* cluster can
         // never run, so reject it now — distinct from "busy, queued". A
@@ -785,6 +833,10 @@ impl Controller {
             deadline_ms: opts.deadline_ms,
             submit_seq,
             spec,
+            after: after.clone(),
+            // A DAG child is admitted but parked outside the lanes until
+            // its parents complete; say so on the record from the start.
+            wait_reason: (!after.is_empty()).then(|| "waiting_on_parents".to_string()),
             ..FlareRecord::queued(&flare_id, def_name, &tenant, priority)
         });
         let slot = Arc::new(ResultSlot::new());
@@ -820,6 +872,8 @@ impl Controller {
             quota_blocked: false,
             prior_node: None,
             infeasible: false,
+            after,
+            parent_nodes: Vec::new(),
         });
         self.sched.wake();
         Ok(FlareHandle { flare_id, slot })
@@ -1086,6 +1140,101 @@ impl Controller {
             });
             self.clear_cancel(&job.flare_id);
             job.slot.deliver(Err(e));
+        }
+    }
+
+    /// DAG admission pass (scheduler loop, before placement): resolve
+    /// every flare parked in the waiting-on-parents holding area against
+    /// its parents' current status. A child whose parents all reached
+    /// `Completed` is promoted into the DRR lanes carrying the parents'
+    /// nodes, so the placer's DAG-locality term stages it where the
+    /// outputs live. A child with a parent in any other terminal state —
+    /// or whose parent record is gone (lost at restart, or evicted by
+    /// retention) — fails fast with [`FlareStatus::ParentFailed`], naming
+    /// the parent and why. That failure is itself terminal-non-completed,
+    /// so it fails *its* children on the next pass: a cancellation fans
+    /// out through every descendant, each failed exactly once (the take
+    /// from the waiting area is the uniqueness point).
+    pub(crate) fn resolve_dag_waiters(&self) {
+        let edges = self.sched.queue.lock().unwrap().waiting_edges();
+        if edges.is_empty() {
+            return;
+        }
+        // Verdicts are computed against the db *without* the queue lock:
+        // parent status reads take shard read locks and must not stall a
+        // submit burst behind the scheduler.
+        enum Verdict {
+            Promote(Vec<String>),
+            Fail(String),
+        }
+        let mut verdicts: Vec<(String, Verdict)> = Vec::new();
+        'child: for (id, after) in edges {
+            let mut parent_nodes = Vec::new();
+            for parent in &after {
+                match self.db.get_flare(parent) {
+                    Some(rec) if rec.status == FlareStatus::Completed => {
+                        // One entry per parent (not deduped): the placer
+                        // weights multi-parent affinity by fraction.
+                        if let Some(n) = rec.node {
+                            parent_nodes.push(n);
+                        }
+                    }
+                    Some(rec) if rec.status.is_terminal() => {
+                        let why = format!(
+                            "parent flare '{parent}' {}{}",
+                            rec.status.name(),
+                            rec.error
+                                .map(|e| format!(": {e}"))
+                                .unwrap_or_default()
+                        );
+                        verdicts.push((id, Verdict::Fail(why)));
+                        continue 'child;
+                    }
+                    Some(_) => continue 'child, // parent live: keep waiting
+                    None => {
+                        let why = format!(
+                            "parent flare '{parent}' is gone \
+                             (lost at restart or evicted)"
+                        );
+                        verdicts.push((id, Verdict::Fail(why)));
+                        continue 'child;
+                    }
+                }
+            }
+            verdicts.push((id, Verdict::Promote(parent_nodes)));
+        }
+        for (id, verdict) in verdicts {
+            // Re-take under the queue lock: a user cancel may have pulled
+            // the child out of the waiting area since the snapshot — it
+            // won, and the slot was already delivered exactly once.
+            let Some(mut job) = self.sched.queue.lock().unwrap().take_waiting(&id)
+            else {
+                continue;
+            };
+            match verdict {
+                Verdict::Promote(parent_nodes) => {
+                    job.parent_nodes = parent_nodes;
+                    self.db.update_flare(&id, |r| {
+                        if r.status == FlareStatus::Queued {
+                            r.wait_reason = None;
+                        }
+                    });
+                    self.sched.queue.lock().unwrap().push(job);
+                }
+                Verdict::Fail(why) => {
+                    let e = anyhow!("flare '{id}' failed before starting: {why}");
+                    self.db.update_flare(&id, |r| {
+                        r.status = FlareStatus::ParentFailed;
+                        r.error = Some(e.to_string());
+                    });
+                    self.clear_cancel(&id);
+                    // Grandchildren fail on the *next* pass — wake it now
+                    // so a deep chain collapses promptly instead of one
+                    // level per poll tick.
+                    self.sched.wake();
+                    job.slot.deliver(Err(e));
+                }
+            }
         }
     }
 
@@ -1462,6 +1611,20 @@ impl Controller {
                 ..FabricConfig::default()
             },
         );
+
+        // DAG input staging: publish each parent's outputs under this
+        // flare's own key prefix *before* any worker starts, so
+        // `BurstContext::parent_input(i)` can read `after[i]`'s results
+        // without ordering hazards. Published read-many (any worker, any
+        // pack) and torn down with the rest of the flare's backend state.
+        for (idx, parent) in job.after.iter().enumerate() {
+            let outputs = self
+                .db
+                .get_flare(parent)
+                .map(|r| Json::Arr(r.outputs))
+                .unwrap_or(Json::Arr(Vec::new()));
+            fabric.stage_dag_input(idx, outputs.to_string().into_bytes())?;
+        }
 
         let timeline = Arc::new(Timeline::new());
         let sw = crate::util::timing::Stopwatch::start();

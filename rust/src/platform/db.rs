@@ -71,6 +71,13 @@ pub fn now_unix_ms() -> u64 {
 /// Default cap on retained *terminal* flare records (oldest evicted first).
 pub const DEFAULT_FLARE_RETENTION: usize = 4096;
 
+/// Cap on the newest-first listing ring: `list_flare_summaries` can see at
+/// most this many of the most recently submitted flares. Far above the
+/// HTTP listing page size (50), far below the retention cap, so the ring
+/// stays cache-sized while listings never miss anything a client can page
+/// to.
+pub const RECENT_LISTING_CAP: usize = 512;
+
 /// Number of flare-record lock shards. A fixed power of two: enough that
 /// concurrent status polls almost never share a shard with an unrelated
 /// mutation, small enough that the per-shard maps stay cache-friendly.
@@ -161,6 +168,10 @@ pub enum FlareStatus {
     /// Its `deadline_ms` passed while it was still queued: failed fast
     /// without ever being placed.
     Expired,
+    /// A DAG parent (an id in `after`) reached a terminal state other
+    /// than `Completed`: the child failed fast without ever entering the
+    /// DRR lanes; see `error` for which parent and why.
+    ParentFailed,
 }
 
 impl FlareStatus {
@@ -172,6 +183,7 @@ impl FlareStatus {
             FlareStatus::Failed => "failed",
             FlareStatus::Cancelled => "cancelled",
             FlareStatus::Expired => "expired",
+            FlareStatus::ParentFailed => "parent_failed",
         }
     }
 
@@ -184,6 +196,7 @@ impl FlareStatus {
                 | FlareStatus::Failed
                 | FlareStatus::Cancelled
                 | FlareStatus::Expired
+                | FlareStatus::ParentFailed
         )
     }
 
@@ -196,6 +209,7 @@ impl FlareStatus {
             "failed" => FlareStatus::Failed,
             "cancelled" => FlareStatus::Cancelled,
             "expired" => FlareStatus::Expired,
+            "parent_failed" => FlareStatus::ParentFailed,
             _ => return None,
         })
     }
@@ -220,6 +234,13 @@ pub struct FlareRecord {
     pub resume_count: u32,
     /// Queueing deadline in milliseconds from submission, when one was set.
     pub deadline_ms: Option<u64>,
+    /// DAG edges: ids of parent flares that must reach `Completed` before
+    /// this one enters the DRR lanes. These double as the parent-output
+    /// refs — at execute time the parents' `outputs` arrays are staged
+    /// into this flare's backend, indexed by position in this list. Rides
+    /// every WAL record so recovery can re-admit a half-finished
+    /// pipeline.
+    pub after: Vec<String>,
     pub outputs: Vec<Json>,
     pub metadata: Json,
     /// Failure description when `status` is `Failed`, `Cancelled`, or
@@ -266,6 +287,7 @@ impl FlareRecord {
             preempt_count: 0,
             resume_count: 0,
             deadline_ms: None,
+            after: Vec::new(),
             outputs: Vec::new(),
             metadata: Json::Null,
             error: None,
@@ -294,6 +316,12 @@ impl FlareRecord {
         ];
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", d.into()));
+        }
+        if !self.after.is_empty() {
+            fields.push((
+                "after",
+                Json::Arr(self.after.iter().map(|p| Json::Str(p.clone())).collect()),
+            ));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::Str(e.clone())));
@@ -343,6 +371,16 @@ impl FlareRecord {
             resume_count: j.get("resume_count").and_then(Json::as_usize).unwrap_or(0)
                 as u32,
             deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
+            after: j
+                .get("after")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default(),
             outputs: j.get("outputs").and_then(Json::as_arr).unwrap_or(&[]).to_vec(),
             metadata: j.get("metadata").cloned().unwrap_or(Json::Null),
             error: j.get("error").and_then(Json::as_str).map(str::to_string),
@@ -427,6 +465,13 @@ pub struct BurstDb {
     /// first). Lock order: a shard lock is always *released* before this
     /// is taken; eviction (under this lock) may take shard locks.
     order: RwLock<FlareOrder>,
+    /// Newest-submitted ids, bounded by [`RECENT_LISTING_CAP`]: the
+    /// listing path snapshots its tail under this one brief mutex instead
+    /// of scanning the `order` index that every submit and terminal
+    /// transition mutates — `GET /v1/flares` can no longer stall the
+    /// submit hot path (and vice versa). A leaf lock: never held while
+    /// taking any other db lock.
+    recent: Mutex<VecDeque<String>>,
     /// Worker checkpoints of live flares, by flare id (dropped when the
     /// flare goes terminal). Lock order: shard → `ckpts`; never the
     /// reverse.
@@ -477,6 +522,7 @@ impl BurstDb {
             defs: Mutex::new(HashMap::new()),
             shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             order: RwLock::new(FlareOrder::default()),
+            recent: Mutex::new(VecDeque::new()),
             ckpts: Mutex::new(HashMap::new()),
             retain_terminal,
             store: OnceLock::new(),
@@ -599,6 +645,14 @@ impl BurstDb {
         if !st.present.contains(id) {
             st.present.insert(id.to_string());
             st.order.push(id.to_string());
+            // First sighting: also enters the bounded listing ring. Held
+            // nested under `order` only to keep ring order == submit
+            // order; nothing else is ever taken under `recent`.
+            let mut recent = self.recent.lock().unwrap();
+            recent.push_back(id.to_string());
+            while recent.len() > RECENT_LISTING_CAP {
+                recent.pop_front();
+            }
         }
         if terminal {
             st.terminal.insert(id.to_string());
@@ -782,17 +836,21 @@ impl BurstDb {
     /// (Deliberately not a full-record listing: cloning whole output
     /// arrays under store locks would stall the scheduler on every poll.)
     ///
-    /// Snapshot-first: the newest ids are copied under the `order` *read*
-    /// lock, then each summary is fetched under its shard's read lock —
-    /// no lock is held across the whole listing, and callers serialize
-    /// the result with no store lock held at all.
+    /// Snapshot-first: the newest ids are copied from the bounded
+    /// `recent` ring under one brief mutex — the `order` index (which
+    /// every submit and terminal transition write-locks) is never touched
+    /// — then each summary is fetched under its shard's read lock. No
+    /// lock is held across the whole listing, and callers serialize the
+    /// result with no store lock held at all. Ids evicted by retention
+    /// may linger in the ring; they are skipped when their shard no
+    /// longer knows them.
     pub fn list_flare_summaries(
         &self,
         limit: usize,
     ) -> Vec<(String, String, FlareStatus)> {
         let ids: Vec<String> = {
-            let st = self.order.read().unwrap();
-            st.order.iter().rev().take(limit).cloned().collect()
+            let recent = self.recent.lock().unwrap();
+            recent.iter().rev().take(limit).cloned().collect()
         };
         ids.iter()
             .filter_map(|id| {
@@ -920,6 +978,7 @@ mod tests {
         rec.metadata = Json::obj(vec![("k", 1.into())]);
         rec.error = Some("worker 0: boom".into());
         rec.submit_seq = 42;
+        rec.after = vec!["rt-parent-a".into(), "rt-parent-b".into()];
         rec.wait_reason = Some("quota_blocked".into());
         rec.spec = Some(Json::obj(vec![("params", Json::Arr(vec![Json::Null]))]));
         rec.node = Some("node-1".into());
@@ -937,6 +996,7 @@ mod tests {
         assert_eq!(rt.metadata, rec.metadata);
         assert_eq!(rt.error.as_deref(), Some("worker 0: boom"));
         assert_eq!(rt.submit_seq, 42);
+        assert_eq!(rt.after, vec!["rt-parent-a".to_string(), "rt-parent-b".to_string()]);
         assert_eq!(rt.submitted_unix_ms, rec.submitted_unix_ms);
         assert_eq!(rt.wait_reason.as_deref(), Some("quota_blocked"));
         assert_eq!(rt.spec, rec.spec);
@@ -950,6 +1010,53 @@ mod tests {
         assert!(FlareRecord::from_json(&j).is_err());
         assert!(FlareStatus::parse("running").is_some());
         assert!(FlareStatus::parse("mystery").is_none());
+    }
+
+    #[test]
+    fn parent_failed_is_terminal_and_round_trips() {
+        assert!(FlareStatus::ParentFailed.is_terminal());
+        assert_eq!(FlareStatus::ParentFailed.name(), "parent_failed");
+        assert_eq!(
+            FlareStatus::parse("parent_failed"),
+            Some(FlareStatus::ParentFailed)
+        );
+        // A record with no DAG edges omits `after` from its JSON.
+        let rec = queued("lone");
+        assert!(rec.to_json().get("after").is_none());
+        let db = BurstDb::new();
+        db.put_flare(queued("dag-child"));
+        db.update_flare("dag-child", |r| {
+            r.status = FlareStatus::ParentFailed;
+            r.error = Some("parent 'dag-parent' cancelled".into());
+        });
+        let rec = db.get_flare("dag-child").unwrap();
+        assert!(rec.status.is_terminal());
+        assert_eq!(rec.error.as_deref(), Some("parent 'dag-parent' cancelled"));
+    }
+
+    #[test]
+    fn listing_ring_is_bounded_and_ordered() {
+        let db = BurstDb::new();
+        for i in 0..(RECENT_LISTING_CAP + 10) {
+            db.put_flare(queued(&format!("r{i}")));
+        }
+        let ids: Vec<String> = db
+            .list_flare_summaries(3)
+            .into_iter()
+            .map(|(id, _, _)| id)
+            .collect();
+        let newest = RECENT_LISTING_CAP + 9;
+        assert_eq!(
+            ids,
+            vec![
+                format!("r{newest}"),
+                format!("r{}", newest - 1),
+                format!("r{}", newest - 2)
+            ]
+        );
+        // The ring is bounded: asking for everything returns at most the
+        // cap, newest first, regardless of how many flares ever existed.
+        assert_eq!(db.list_flare_summaries(usize::MAX).len(), RECENT_LISTING_CAP);
     }
 
     #[test]
@@ -1001,24 +1108,24 @@ mod tests {
         let db = BurstDb::new();
         db.put_flare(queued("f1"));
         assert!(db.checkpoints_for("f1").by_worker.is_empty());
-        db.put_checkpoint("f1", 0, 1, Arc::new(vec![1, 2, 3]));
-        db.put_checkpoint("f1", 3, 1, Arc::new(vec![9]));
+        db.put_checkpoint("f1", 0, 1, vec![1, 2, 3].into());
+        db.put_checkpoint("f1", 3, 1, vec![9].into());
         // Overwrite per worker: the latest payload wins, epoch ratchets.
-        db.put_checkpoint("f1", 0, 2, Arc::new(vec![4, 5]));
+        db.put_checkpoint("f1", 0, 2, vec![4, 5].into());
         let c = db.checkpoints_for("f1");
         assert_eq!(c.epoch, 2);
         assert_eq!(c.by_worker.len(), 2);
-        assert_eq!(c.by_worker[&0].as_ref(), &vec![4, 5]);
-        assert_eq!(c.by_worker[&3].as_ref(), &vec![9]);
+        assert_eq!(c.by_worker[&0].as_slice(), &[4u8, 5][..]);
+        assert_eq!(c.by_worker[&3].as_slice(), &[9u8][..]);
         assert_eq!(c.total_bytes(), 3);
         // A terminal transition discards the flare's checkpoints...
         db.set_flare_status("f1", FlareStatus::Completed);
         assert!(db.checkpoints_for("f1").by_worker.is_empty());
         // ...and a straggler checkpoint cannot resurrect them.
-        db.put_checkpoint("f1", 0, 2, Arc::new(vec![7]));
+        db.put_checkpoint("f1", 0, 2, vec![7].into());
         assert!(db.checkpoints_for("f1").by_worker.is_empty());
         // Unknown flares take no checkpoints either.
-        db.put_checkpoint("ghost", 0, 1, Arc::new(vec![1]));
+        db.put_checkpoint("ghost", 0, 1, vec![1].into());
         assert!(db.checkpoints_for("ghost").by_worker.is_empty());
     }
 

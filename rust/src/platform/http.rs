@@ -19,6 +19,18 @@
 //! should prefer the async `POST /v1/flares` + status polling, which
 //! returns in microseconds.
 //!
+//! **Keep-alive.** Connections persist across requests (HTTP/1.1
+//! semantics): after a response the state machine resets to read the next
+//! head on the same socket — pipelined requests already buffered are
+//! served before the reactor waits for more bytes — so a status poller
+//! pays the TCP handshake once, not per poll. A request carrying
+//! `Connection: close` (what the bundled [`http_request`] client sends)
+//! gets a closing response; protocol errors (`400`/`413`) always close,
+//! since the stream position can no longer be trusted; and one connection
+//! serves at most `MAX_KEEPALIVE_REQUESTS` before being recycled, so no
+//! single client can pin a reactor slot forever. The blocking
+//! `POST /v1/flare` hand-off also closes after its one response.
+//!
 //! Bounded work: open connections are capped (excess stay in the kernel
 //! accept backlog), per-connection buffers are capped by
 //! [`MAX_BODY_BYTES`] / `MAX_HEAD_BYTES`, idle connections are reaped
@@ -108,6 +120,11 @@ const MAX_OPEN_CONNS: usize = 4096;
 /// Idle-connection bound: a connection making no progress (no bytes read
 /// or written) for this long is reaped.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Requests served over one keep-alive connection before the reactor
+/// recycles it (the final response carries `Connection: close`). Bounds
+/// how long any single client can pin a connection slot.
+const MAX_KEEPALIVE_REQUESTS: usize = 1024;
 /// Reactor sleep between ticks when no connection made progress: bounds
 /// added latency at well under a millisecond without spinning a core.
 const IDLE_TICK: Duration = Duration::from_micros(500);
@@ -302,15 +319,20 @@ struct Conn {
     buf: Vec<u8>,
     state: ConnState,
     deadline: Instant,
+    /// Requests served on this connection; at [`MAX_KEEPALIVE_REQUESTS`]
+    /// the next response closes it.
+    served: usize,
 }
 
 enum ConnState {
     /// Buffering the request head (request line + headers).
     ReadHead,
     /// Head parsed and within caps; buffering `content_length` body bytes.
-    ReadBody { method: String, path: String, content_length: usize },
-    /// Response built; flushing it as writability allows.
-    Write { response: Vec<u8>, written: usize },
+    /// `close` records whether the client asked for `Connection: close`.
+    ReadBody { method: String, path: String, content_length: usize, close: bool },
+    /// Response built; flushing it as writability allows. `close` decides
+    /// whether the connection tears down or resets to `ReadHead` after.
+    Write { response: Vec<u8>, written: usize, close: bool },
 }
 
 enum ConnAction {
@@ -330,6 +352,7 @@ impl Conn {
             buf: Vec::new(),
             state: ConnState::ReadHead,
             deadline: Instant::now() + READ_TIMEOUT,
+            served: 0,
         }
     }
 
@@ -339,14 +362,18 @@ impl Conn {
     fn poll(&mut self, c: &Controller, gate: &Arc<BlockingGate>) -> (ConnAction, bool) {
         let mut moved = false;
         loop {
-            if let ConnState::Write { response, written } = &mut self.state {
+            if let ConnState::Write { response, written, close } = &mut self.state {
+                let mut flushed = false;
                 match (&self.stream).write(&response[*written..]) {
                     Ok(0) => return (ConnAction::Close, moved),
                     Ok(n) => {
                         moved = true;
                         *written += n;
                         if *written == response.len() {
-                            return (ConnAction::Close, moved);
+                            if *close {
+                                return (ConnAction::Close, moved);
+                            }
+                            flushed = true;
                         }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -354,6 +381,15 @@ impl Conn {
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(_) => return (ConnAction::Close, moved),
+                }
+                if flushed {
+                    // Keep-alive: reset the parser for the next request on
+                    // this socket. A pipelined request may already be fully
+                    // buffered, so run the parser before waiting on reads.
+                    self.state = ConnState::ReadHead;
+                    if let Some(action) = self.advance(c, gate) {
+                        return (action, moved);
+                    }
                 }
             } else {
                 let mut tmp = [0u8; 4096];
@@ -385,22 +421,26 @@ impl Conn {
                 None => {
                     if self.buf.len() > MAX_HEAD_BYTES {
                         // A head that never terminates cannot grow the
-                        // buffer unboundedly.
+                        // buffer unboundedly. The stream position is
+                        // untrustworthy after a malformed head, so close.
                         self.respond(
                             400,
                             &err_json(format!(
                                 "request head exceeds the {MAX_HEAD_BYTES}-byte cap"
                             )),
+                            true,
                         );
                     }
                     return None;
                 }
                 Some(pos) => {
                     let head = String::from_utf8_lossy(&self.buf[..pos]).to_string();
-                    let (method, path, content_length) = parse_head(&head);
+                    let (method, path, content_length, close) = parse_head(&head);
                     self.buf.drain(..pos + 4);
                     // The declared length is untrusted input: reject
                     // oversized bodies before buffering a single byte.
+                    // The unread body would corrupt the next parse, so
+                    // this response closes the connection.
                     if content_length > MAX_BODY_BYTES {
                         self.respond(
                             413,
@@ -408,21 +448,27 @@ impl Conn {
                                 "request body of {content_length} bytes exceeds \
                                  the {MAX_BODY_BYTES}-byte cap"
                             )),
+                            true,
                         );
                         return None;
                     }
-                    self.state = ConnState::ReadBody { method, path, content_length };
+                    self.state = ConnState::ReadBody { method, path, content_length, close };
                 }
             }
         }
         if let ConnState::ReadBody { content_length, .. } = &self.state {
             if self.buf.len() >= *content_length {
-                let ConnState::ReadBody { method, path, content_length } =
+                let ConnState::ReadBody { method, path, content_length, close } =
                     std::mem::replace(&mut self.state, ConnState::ReadHead)
                 else {
                     unreachable!()
                 };
                 let body = String::from_utf8_lossy(&self.buf[..content_length]).to_string();
+                // Consume the body bytes so a pipelined follow-up request
+                // starts the next head parse at the right offset.
+                self.buf.drain(..content_length);
+                self.served += 1;
+                let close = close || self.served >= MAX_KEEPALIVE_REQUESTS;
                 if method == "POST" && path == "/v1/flare" {
                     // Blocking invoke: parks for the flare's duration, so
                     // it must leave the reactor. Gate first, so blocking
@@ -437,6 +483,7 @@ impl Conn {
                                     "too many concurrent blocking flares; use async \
                                      POST /v1/flares + GET /v1/flares/<id> polling",
                                 ),
+                                close,
                             );
                             return None;
                         }
@@ -444,14 +491,15 @@ impl Conn {
                 }
                 // Every other route is nonblocking: dispatch inline.
                 let (status, payload) = route(&method, &path, &body, c);
-                self.respond(status, &payload);
+                self.respond(status, &payload, close);
             }
         }
         None
     }
 
-    fn respond(&mut self, status: u16, payload: &Json) {
-        self.state = ConnState::Write { response: response_bytes(status, payload), written: 0 };
+    fn respond(&mut self, status: u16, payload: &Json, close: bool) {
+        self.state =
+            ConnState::Write { response: response_bytes(status, payload, close), written: 0, close };
     }
 }
 
@@ -461,31 +509,38 @@ fn head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Parse a request head into (method, path, content-length). Only
-/// `Content-Length` matters to the routes we serve.
-fn parse_head(head: &str) -> (String, String, usize) {
+/// Parse a request head into (method, path, content-length, close).
+/// `Content-Length` sizes the body read; `Connection: close` opts out of
+/// keep-alive (the HTTP/1.1 default is to persist).
+fn parse_head(head: &str) -> (String, String, usize, bool) {
     let mut lines = head.split("\r\n");
     let mut parts = lines.next().unwrap_or("").split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
     let mut content_length = 0usize;
+    let mut close = false;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("connection") {
+                close = v.trim().eq_ignore_ascii_case("close");
             }
         }
     }
-    (method, path, content_length)
+    (method, path, content_length, close)
 }
 
-/// Serialize a complete HTTP/1.1 response (JSON body, `Connection: close`).
-fn response_bytes(status: u16, payload: &Json) -> Vec<u8> {
+/// Serialize a complete HTTP/1.1 response (JSON body). `close` selects the
+/// `Connection` header, which must agree with what the reactor then does
+/// with the socket.
+fn response_bytes(status: u16, payload: &Json, close: bool) -> Vec<u8> {
     let body = payload.to_string();
     format!(
-        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
         status_text(status),
-        body.len()
+        body.len(),
+        if close { "close" } else { "keep-alive" }
     )
     .into_bytes()
 }
@@ -498,7 +553,8 @@ fn serve_blocking(job: BlockingJob, c: &Controller, stop: &AtomicBool) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(READ_TIMEOUT));
     let (status, payload) = blocking_flare(&body, c, stop);
-    let _ = (&stream).write_all(&response_bytes(status, &payload));
+    // The socket left the reactor for good, so this response always closes.
+    let _ = (&stream).write_all(&response_bytes(status, &payload, true));
 }
 
 fn blocking_flare(body: &str, c: &Controller, stop: &AtomicBool) -> (u16, Json) {
@@ -1024,6 +1080,65 @@ mod tests {
         // The worker survives to serve the next request.
         let h = http_request(&addr, "GET", "/healthz", None).unwrap();
         assert_eq!(h.str_or("status", ""), "ok");
+    }
+
+    /// Read exactly one HTTP response off a socket that stays open
+    /// afterwards (keep-alive), using Content-Length to find the end.
+    fn read_one_response(s: &mut TcpStream) -> String {
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 1024];
+        loop {
+            if let Some(pos) = head_end(&buf) {
+                let head = String::from_utf8_lossy(&buf[..pos]).to_string();
+                let cl = head
+                    .split("\r\n")
+                    .filter_map(|l| l.split_once(':'))
+                    .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+                    .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+                    .unwrap_or(0);
+                if buf.len() >= pos + 4 + cl {
+                    return String::from_utf8_lossy(&buf[..pos + 4 + cl]).to_string();
+                }
+            }
+            let n = s.read(&mut tmp).unwrap();
+            assert!(n > 0, "server closed a keep-alive connection early");
+            buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_on_one_connection() {
+        let (_srv, addr) = setup();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        // Several requests down the same socket, including a pipelined
+        // pair sent back-to-back before reading either response.
+        for _ in 0..2 {
+            write!(s, "GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n").unwrap();
+            let resp = read_one_response(&mut s);
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+            assert!(resp.contains("Connection: keep-alive"), "{resp}");
+        }
+        write!(
+            s,
+            "GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n\
+             GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n"
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let resp = read_one_response(&mut s);
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        }
+        // An explicit `Connection: close` ends the session: the response
+        // echoes it and the server hangs up afterwards.
+        write!(
+            s,
+            "GET /healthz HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut rest = String::new();
+        BufReader::new(&s).read_to_string(&mut rest).unwrap();
+        assert!(rest.starts_with("HTTP/1.1 200"), "{rest}");
+        assert!(rest.contains("Connection: close"), "{rest}");
     }
 
     #[test]

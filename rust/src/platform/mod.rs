@@ -23,7 +23,9 @@
 //!   anti-starvation pass budget stops the queue scheduling past it.
 //! * **place** — the cluster placement engine ([`node::NodeRegistry`])
 //!   scores every alive node (fit, locality, fragmentation) against its
-//!   approximate free-vCPU view, records an explainable per-candidate
+//!   approximate free-vCPU view — the locality term also pulls a DAG
+//!   child toward the nodes that ran its parents, recorded per candidate
+//!   as `dag_locality` — records an explainable per-candidate
 //!   decision on the flare record, and asks the winner's
 //!   [`node::NodeAgent`] to admit; a refusal (stale view, node concurrency
 //!   cap) triggers spillback to the next-best node up to a bounded budget
@@ -57,7 +59,7 @@
 //!
 //! ```text
 //!            submit_flare
-//!                 │
+//!                 │ (`after` parents pending ⇒ waiting_on_parents, below)
 //!                 ▼                    deadline passed
 //!            ┌─ queued ──────────────────────────────────▶ expired
 //!            │    │  ▲
@@ -78,7 +80,26 @@
 //!     every terminal transition drops the flare's checkpoints
 //! ```
 //!
-//! `completed`, `failed`, `cancelled`, and `expired` are terminal; the
+//! DAG flares (submitted with `after` parent ids) enter through a holding
+//! area *outside* the DRR lanes, so blocked children consume no backfill
+//! passes and skew no lane deficits; `Controller::recover` sends a
+//! half-finished pipeline's children back through it, where their edges
+//! re-resolve against the restored records:
+//!
+//! ```text
+//!   submit_flare ───▶ waiting_on_parents ──┬──▶ queued (as above, with
+//!     (`after` non-empty)                  │     placement biased toward
+//!       every parent completed ────────────┘     the parents' nodes — the
+//!                                                `dag_locality` term)
+//!       a parent failed / cancelled /
+//!       expired / record gone ────────────────▶ parent_failed (terminal;
+//!                                                fails fast, fanning out
+//!                                                so every descendant
+//!                                                fails exactly once)
+//! ```
+//!
+//! `completed`, `failed`, `cancelled`, `expired`, and `parent_failed` are
+//! terminal; the
 //! `running → queued` preempt edge is the only backward transition, taken
 //! at most `max_preempts` times per flare (the livelock guard), never for
 //! flares submitted with `preemptible = false`, and always lost to a

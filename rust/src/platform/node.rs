@@ -44,10 +44,14 @@ pub const DEFAULT_HEARTBEAT_INTERVAL_MS: u64 = 1_000;
 /// declares it dead and fails over its flares.
 pub const DEFAULT_HEARTBEAT_MISS_BUDGET: u32 = 3;
 
-/// Placement-score weights: best-fit packing dominates, locality to the
-/// flare's previous node breaks ties (warm containers, checkpoint
-/// affinity), and a small defragmentation term prefers plans that leave
-/// fewer partially-used invokers behind.
+/// Placement-score weights: best-fit packing dominates, locality breaks
+/// ties, and a small defragmentation term prefers plans that leave fewer
+/// partially-used invokers behind. Locality is the stronger of two
+/// affinities: the flare's previous node (warm containers, checkpoint
+/// affinity) and **DAG staging** — the fraction of the flare's parents
+/// that ran on the candidate, so a child stage lands where its parents'
+/// outputs already live (the paper's locality argument applied across
+/// jobs, not just within one).
 const W_FIT: f64 = 0.6;
 const W_LOCALITY: f64 = 0.3;
 const W_DEFRAG: f64 = 0.1;
@@ -504,14 +508,18 @@ impl NodeRegistry {
 
 /// Score one plannable candidate. `fit` is best-fit bin packing (the
 /// fuller the node ends up, the higher), `locality` rewards the flare's
-/// prior node (warm containers, checkpoint affinity), and `defrag`
-/// penalizes plans that leave many invokers partially free.
+/// prior node (warm containers, checkpoint affinity) or — whichever is
+/// stronger — the nodes its DAG parents ran on (`parent_nodes`, one entry
+/// per parent, so the fraction weights multi-parent affinity), and
+/// `defrag` penalizes plans that leave many invokers partially free.
+/// Returns `(score, fit, locality, dag_locality, defrag)`.
 fn score_candidate(
     entry: &NodeEntry,
     packs: &[PackSpec],
     prior_node: Option<&str>,
+    parent_nodes: &[String],
     name: &str,
-) -> (f64, f64, f64, f64) {
+) -> (f64, f64, f64, f64, f64) {
     let total = entry.agent.total_vcpus();
     let total_sum: usize = total.iter().sum();
     let mut free_after = entry.view.clone();
@@ -524,7 +532,14 @@ fn score_candidate(
     } else {
         (total_sum - free_sum.min(total_sum)) as f64 / total_sum as f64
     };
-    let locality = if prior_node == Some(name) { 1.0 } else { 0.0 };
+    let prior = if prior_node == Some(name) { 1.0 } else { 0.0 };
+    let dag = if parent_nodes.is_empty() {
+        0.0
+    } else {
+        parent_nodes.iter().filter(|n| n.as_str() == name).count() as f64
+            / parent_nodes.len() as f64
+    };
+    let locality = prior.max(dag);
     let partial = free_after
         .iter()
         .zip(total.iter())
@@ -536,7 +551,7 @@ fn score_candidate(
         1.0 - partial as f64 / total.len() as f64
     };
     let score = W_FIT * fit + W_LOCALITY * locality + W_DEFRAG * defrag;
-    (score, fit, locality, defrag)
+    (score, fit, locality, dag, defrag)
 }
 
 impl Placer for NodeRegistry {
@@ -592,10 +607,11 @@ impl Placer for NodeRegistry {
                             );
                         }
                         Ok(packs) => {
-                            let (score, fit, locality, defrag) = score_candidate(
+                            let (score, fit, locality, dag, defrag) = score_candidate(
                                 entry,
                                 &packs,
                                 job.prior_node.as_deref(),
+                                &job.parent_nodes,
                                 name,
                             );
                             cand_log.insert(
@@ -605,6 +621,7 @@ impl Placer for NodeRegistry {
                                     ("score", Json::Num(score)),
                                     ("fit", Json::Num(fit)),
                                     ("locality", Json::Num(locality)),
+                                    ("dag_locality", Json::Num(dag)),
                                     ("defrag", Json::Num(defrag)),
                                 ]),
                             );
@@ -705,6 +722,8 @@ mod tests {
             quota_blocked: false,
             prior_node: prior.map(str::to_string),
             infeasible: false,
+            after: Vec::new(),
+            parent_nodes: Vec::new(),
         }
     }
 
@@ -747,6 +766,34 @@ mod tests {
         reg.release("node-a", &p.packs);
         let p = reg.place(&job(4, Some("node-b"))).expect("placeable");
         assert_eq!(p.node, "node-b");
+    }
+
+    #[test]
+    fn dag_locality_stages_children_on_parent_majority_node() {
+        // Equal nodes, no prior node: the DAG term alone flips the winner
+        // toward where most parents ran, and the decision records the
+        // per-candidate contribution.
+        let reg = registry_with(&[("node-a", 1, 8), ("node-b", 1, 8)]);
+        let mut j = job(4, None);
+        j.parent_nodes = vec!["node-b".into(), "node-b".into(), "node-a".into()];
+        let p = reg.place(&j).expect("placeable");
+        assert_eq!(p.node, "node-b");
+        let cands = p.decision.get("candidates").unwrap().as_arr().unwrap();
+        let dag_of = |n: &str| {
+            cands
+                .iter()
+                .find(|c| c.get("node").unwrap().as_str() == Some(n))
+                .and_then(|c| c.get("dag_locality"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert!((dag_of("node-b") - 2.0 / 3.0).abs() < 1e-9);
+        assert!((dag_of("node-a") - 1.0 / 3.0).abs() < 1e-9);
+        // Prior-node affinity still wins when it is the stronger signal.
+        reg.release("node-b", &p.packs);
+        let mut j = job(4, Some("node-a"));
+        j.parent_nodes = vec!["node-a".into(), "node-b".into()];
+        assert_eq!(reg.place(&j).expect("placeable").node, "node-a");
     }
 
     #[test]

@@ -362,7 +362,7 @@ mod tests {
         // Worker 2 has prior state from a "previous run"; everyone saves a
         // fresh checkpoint naming their worker id.
         let prior: std::collections::HashMap<usize, crate::bcm::Bytes> =
-            [(2usize, Arc::new(vec![42u8]))].into_iter().collect();
+            [(2usize, vec![42u8].into())].into_iter().collect();
         let saved: Arc<std::sync::Mutex<Vec<(usize, Vec<u8>)>>> =
             Arc::new(std::sync::Mutex::new(Vec::new()));
         let saved2 = saved.clone();
@@ -371,7 +371,7 @@ mod tests {
         });
         assert_eq!(ckpt.prior_workers(), 1);
         let work: WorkFn = Arc::new(|_, ctx| {
-            let restored = ctx.restore().map(|b| b.as_ref().clone());
+            let restored = ctx.restore().map(|b| b.to_vec());
             ctx.checkpoint(vec![ctx.worker_id as u8]);
             Ok(Json::Num(restored.map_or(-1.0, |b| b[0] as f64)))
         });

@@ -168,6 +168,14 @@ pub struct QueuedFlare {
     /// failed or every candidate refused within the spillback budget
     /// (surfaced as `wait_reason=no_feasible_node`); cleared each scan.
     pub infeasible: bool,
+    /// DAG edges: parent flare ids that must reach `Completed` before this
+    /// flare leaves the waiting-on-parents holding area and enters the DRR
+    /// lanes. Empty for ordinary (non-DAG) flares.
+    pub after: Vec<String>,
+    /// Nodes the parents ran on, resolved when the last parent completes:
+    /// the placer's DAG-locality term scores this flare toward these nodes
+    /// so a child stage lands where its parents' outputs already live.
+    pub parent_nodes: Vec<String>,
 }
 
 /// One-shot result mailbox shared by the execution thread and the waiter.
@@ -474,11 +482,22 @@ impl TenantPolicy {
 pub struct FlareQueue {
     tenants: Vec<TenantLane>,
     max_backfill_passes: u32,
+    /// Waiting-on-parents holding area, **outside** the DRR lanes: a DAG
+    /// child parks here until every parent reaches `Completed`, so a
+    /// blocked child neither consumes backfill passes nor skews lane
+    /// deficits while it cannot possibly be placed. FIFO by admission;
+    /// promotion into the lanes goes through the ordinary `push` (so
+    /// priority/EDF ordering applies from the moment it is runnable).
+    waiting: VecDeque<QueuedFlare>,
 }
 
 impl FlareQueue {
     pub fn new(max_backfill_passes: u32) -> FlareQueue {
-        FlareQueue { tenants: Vec::new(), max_backfill_passes }
+        FlareQueue {
+            tenants: Vec::new(),
+            max_backfill_passes,
+            waiting: VecDeque::new(),
+        }
     }
 
     /// Set a tenant's fair-share weight (creating its lane if needed).
@@ -623,6 +642,9 @@ impl FlareQueue {
     /// Remove and return every queued flare whose deadline has passed: the
     /// scheduler fails these fast with `FlareStatus::Expired` instead of
     /// letting them occupy the queue they can no longer benefit from.
+    /// Children in the waiting-on-parents area are covered too — a
+    /// deadline lapses the same whether a flare waits on capacity or on a
+    /// parent.
     pub fn take_expired(&mut self, now: Instant) -> Vec<QueuedFlare> {
         let mut out = Vec::new();
         for lane in &mut self.tenants {
@@ -635,7 +657,44 @@ impl FlareQueue {
                 }
             }
         }
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if self.waiting[i].deadline.is_some_and(|d| now >= d) {
+                out.push(self.waiting.remove(i).expect("index in range"));
+            } else {
+                i += 1;
+            }
+        }
         out
+    }
+
+    /// Park a DAG child in the waiting-on-parents holding area (outside
+    /// the DRR lanes — no backfill passes, no deficit skew while blocked).
+    pub fn park_waiting(&mut self, job: QueuedFlare) {
+        self.waiting.push_back(job);
+    }
+
+    /// Snapshot of the holding area: `(flare_id, after)` per waiting
+    /// child. The controller resolves parent statuses against the db with
+    /// no queue lock held, then promotes/fails by id.
+    pub fn waiting_edges(&self) -> Vec<(String, Vec<String>)> {
+        self.waiting
+            .iter()
+            .map(|j| (j.flare_id.clone(), j.after.clone()))
+            .collect()
+    }
+
+    /// Remove one child from the holding area by id (promotion to the
+    /// lanes, fail-fast, or cancellation). `None` when a concurrent
+    /// cancel already took it.
+    pub fn take_waiting(&mut self, flare_id: &str) -> Option<QueuedFlare> {
+        let i = self.waiting.iter().position(|j| j.flare_id == flare_id)?;
+        self.waiting.remove(i)
+    }
+
+    /// Number of children parked on unfinished parents.
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
     }
 
     /// Burst size of the queued flare of `class` that has waited longest
@@ -690,11 +749,11 @@ impl FlareQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.tenants.iter().map(|t| t.jobs.len()).sum()
+        self.tenants.iter().map(|t| t.jobs.len()).sum::<usize>() + self.waiting.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tenants.iter().all(|t| t.jobs.is_empty())
+        self.tenants.iter().all(|t| t.jobs.is_empty()) && self.waiting.is_empty()
     }
 
     /// Queue depth per tenant, lanes with pending flares only, sorted by
@@ -711,17 +770,21 @@ impl FlareQueue {
     }
 
     /// Remove a queued flare by id (the cancel-while-queued kill path).
+    /// Children parked on unfinished parents are cancellable too.
     pub fn remove(&mut self, flare_id: &str) -> Option<QueuedFlare> {
         for lane in &mut self.tenants {
             if let Some(i) = lane.jobs.iter().position(|j| j.flare_id == flare_id) {
                 return lane.jobs.remove(i);
             }
         }
-        None
+        self.take_waiting(flare_id)
     }
 
     pub(crate) fn drain(&mut self) -> Vec<QueuedFlare> {
-        self.tenants.iter_mut().flat_map(|t| t.jobs.drain(..)).collect()
+        let mut out: Vec<QueuedFlare> =
+            self.tenants.iter_mut().flat_map(|t| t.jobs.drain(..)).collect();
+        out.extend(self.waiting.drain(..));
+        out
     }
 
     /// Remove and return the first flare that can be placed right now,
@@ -965,9 +1028,19 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
                 state.admitted.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 let mut q = state.queue.lock().unwrap();
                 for job in batch {
-                    q.push(job);
+                    if job.after.is_empty() {
+                        q.push(job);
+                    } else {
+                        // DAG child: park outside the lanes until its
+                        // parents resolve (the pass below promotes
+                        // already-satisfied children immediately).
+                        q.park_waiting(job);
+                    }
                 }
             }
+            // DAG pass: promote children whose parents all completed into
+            // the lanes, fail fast the ones whose parents failed.
+            c.resolve_dag_waiters();
             // Deadline pass first: a flare whose deadline lapsed while
             // queued must fail fast, never be placed.
             c.expire_overdue_queued();
@@ -1044,6 +1117,8 @@ mod tests {
             quota_blocked: false,
             prior_node: None,
             infeasible: false,
+            after: Vec::new(),
+            parent_nodes: Vec::new(),
         }
     }
 
@@ -1228,6 +1303,50 @@ mod tests {
         assert_eq!(q.depth_by_tenant(), vec![("a".to_string(), 1)]);
         assert_eq!(pop_release(&mut q, &pool), "a2");
         assert!(q.depth_by_tenant().is_empty());
+    }
+
+    #[test]
+    fn waiting_area_is_outside_the_drr_lanes() {
+        let pool = InvokerPool::new(&ClusterSpec::uniform(1, 4));
+        // A backfill budget of 1: if the parked child counted as a
+        // skipped flare, the second pop below would trip the starvation
+        // guard and place nothing.
+        let mut q = FlareQueue::new(1);
+        let mut child = job_for("child", 4, "dag", Priority::Normal);
+        child.after = vec!["parent".to_string()];
+        q.park_waiting(child);
+        assert_eq!(q.waiting_len(), 1);
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        assert_eq!(q.waiting_edges(), vec![("child".into(), vec!["parent".into()])]);
+        // Other flares place freely, repeatedly, past the parked child —
+        // it consumes no backfill passes and skews no deficits.
+        q.push(job_for("o1", 4, "other", Priority::Normal));
+        q.push(job_for("o2", 4, "other", Priority::Normal));
+        assert_eq!(pop_release(&mut q, &pool), "o1");
+        assert_eq!(pop_release(&mut q, &pool), "o2");
+        // The child is invisible to placement until promoted...
+        assert!(q.pop_placeable(&pool).is_none());
+        // ...and promotion is an ordinary push into its lane.
+        let promoted = q.take_waiting("child").unwrap();
+        q.push(promoted);
+        assert_eq!(q.waiting_len(), 0);
+        assert_eq!(pop_release(&mut q, &pool), "child");
+        // `remove` (cancellation) reaches parked children too.
+        let mut c2 = job_for("c2", 4, "dag", Priority::Normal);
+        c2.after = vec!["parent".to_string()];
+        q.park_waiting(c2);
+        assert_eq!(q.remove("c2").unwrap().flare_id, "c2");
+        assert!(q.take_waiting("c2").is_none());
+        // Expiry reaches the holding area: a deadline lapses the same
+        // whether a flare waits on capacity or on a parent.
+        let mut c3 = job_with_deadline("c3", 4, Some(0));
+        c3.after = vec!["parent".to_string()];
+        q.park_waiting(c3);
+        let expired = q.take_expired(Instant::now() + Duration::from_millis(1));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].flare_id, "c3");
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -54,7 +54,7 @@ fn header_mismatch_is_detected() {
     // A chunk stored under the right key but with a wrong counter inside
     // must be rejected, not silently accepted.
     let f = fabric(2, 1, 200);
-    f.remote_send(Op::Direct, 0, Some(1), 7, &[1, 2, 3]).unwrap();
+    f.remote_send(Op::Direct, 0, Some(1), 7, &vec![1, 2, 3].into()).unwrap();
     let err = f.remote_recv(Op::Direct, 0, Some(1), 8, 1, true);
     assert!(err.is_err()); // counter 8 was never sent → timeout
 }
@@ -83,15 +83,15 @@ fn single_worker_burst_degenerates_gracefully() {
     let f = fabric(1, 1, 1_000);
     let ctx = BurstContext::new(0, f);
     let b = ctx.broadcast(0, Some(vec![1, 2])).unwrap();
-    assert_eq!(b.as_ref(), &vec![1, 2]);
+    assert_eq!(b.as_slice(), &[1u8, 2][..]);
     let r = ctx
         .reduce(0, vec![5], &|_a: &mut Vec<u8>, _b: &[u8]| {})
         .unwrap();
-    assert_eq!(r.unwrap().as_ref(), &vec![5]);
+    assert_eq!(r.unwrap().as_slice(), &[5u8][..]);
     let a = ctx.all_to_all(vec![vec![9]]).unwrap();
-    assert_eq!(a[0].as_ref(), &vec![9]);
+    assert_eq!(a[0].as_slice(), &[9u8][..]);
     let g = ctx.gather(0, vec![3]).unwrap().unwrap();
-    assert_eq!(g[0].as_ref(), &vec![3]);
+    assert_eq!(g[0].as_slice(), &[3u8][..]);
     ctx.barrier().unwrap();
 }
 
@@ -163,7 +163,7 @@ fn pack_share_in_faas_mode_is_identity() {
             s.spawn(move || {
                 let ctx = BurstContext::new(w, f);
                 let got = ctx.pack_share(Some(vec![w as u8])).unwrap();
-                assert_eq!(got.as_ref(), &vec![w as u8]);
+                assert_eq!(got.as_slice(), &[w as u8][..]);
             });
         }
     });

@@ -381,7 +381,7 @@ fn checkpoint_wal_replay_matches_in_memory_with_tail_corruption() {
                 2 | 3 => {
                     let worker = g.usize(0, 4);
                     let data = g.vec_u8(64);
-                    db.put_checkpoint(id, worker, i as u64, Arc::new(data));
+                    db.put_checkpoint(id, worker, i as u64, data.into());
                 }
                 // A status transition (may go terminal → drops the
                 // flare's checkpoints).

@@ -31,11 +31,17 @@ fn tmp_dir(name: &str) -> PathBuf {
 
 /// Copy the state files the way a crash leaves them: whatever is on disk
 /// right now, while the original controller still owns the directory.
+/// Recurses so the `ckpt/` side-file directory rides along.
 fn copy_state(src: &Path, dst: &Path) {
     fs::create_dir_all(dst).unwrap();
     for entry in fs::read_dir(src).unwrap() {
         let entry = entry.unwrap();
-        fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+        let to = dst.join(entry.file_name());
+        if entry.file_type().unwrap().is_dir() {
+            copy_state(&entry.path(), &to);
+        } else {
+            fs::copy(entry.path(), to).unwrap();
+        }
     }
 }
 
@@ -411,4 +417,110 @@ fn restart_of_a_restart_keeps_history_stable() {
     drop(b);
     let _ = fs::remove_dir_all(&dir1);
     let _ = fs::remove_dir_all(&dir2);
+}
+
+/// Satellite (ISSUE 9): a pipeline interrupted mid-flight resumes without
+/// re-running completed parents. At the crash, stage A is completed, B
+/// (after A) is running parked on a gate, and C (after B) holds in the
+/// waiting-on-parents area. The recovered controller keeps A as terminal
+/// history (its work fn never runs again), re-admits B through the
+/// waiting area (its edge re-resolves against the restored records), and
+/// holds C until B completes.
+#[test]
+fn kill_and_restart_resumes_half_finished_pipeline() {
+    let dir_a = tmp_dir("dag-a");
+    let dir_b = tmp_dir("dag-b");
+    let runs: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    register_work("recovery-dag-marker", marker_work(&runs));
+    let gate = Arc::new(Mutex::new(false));
+    register_work("recovery-dag-gated", gated_work(&gate));
+
+    let a = recover(1, 8, &dir_a);
+    a.deploy("stage", "recovery-dag-marker", hetero(2)).unwrap();
+    a.deploy("mid", "recovery-dag-gated", hetero(2)).unwrap();
+    // A completes...
+    let pa = {
+        let params = vec![Json::obj(vec![("m", "A".into())]); 2];
+        a.flare("stage", params, &FlareOptions::default()).unwrap()
+    };
+    // ...B (after A) is promoted into the lanes and parks on the gate...
+    let ob = FlareOptions { after: vec![pa.flare_id.clone()], ..Default::default() };
+    let pb = a.submit_flare("mid", vec![Json::Null; 2], &ob).unwrap();
+    assert!(wait_status(&a, &pb.flare_id, FlareStatus::Running));
+    // ...C (after B) holds in the waiting-on-parents area.
+    let oc = FlareOptions { after: vec![pb.flare_id.clone()], ..Default::default() };
+    let pc = {
+        let params = vec![Json::obj(vec![("m", "C".into())]); 2];
+        a.submit_flare("stage", params, &oc).unwrap()
+    };
+    assert_eq!(a.flare_status(&pc.flare_id), Some(FlareStatus::Queued));
+    assert_eq!(runs.lock().unwrap().clone(), vec!["A"]);
+
+    // Crash mid-pipeline: copy the state as-is, then shut the old
+    // process's pipeline down (cancel fans out to its C) so the shared
+    // gate later releases only the recovered B.
+    copy_state(&dir_a, &dir_b);
+    let _ = a.cancel_flare(&pb.flare_id);
+    assert!(wait_status(&a, &pb.flare_id, FlareStatus::Cancelled));
+    assert!(wait_status(&a, &pc.flare_id, FlareStatus::ParentFailed));
+
+    let b = recover(1, 8, &dir_b);
+    let stats = b.recovery_stats();
+    assert_eq!(stats.terminal_restored, 1, "{stats:?}"); // A
+    assert_eq!(stats.requeued, 2, "{stats:?}"); // B + C
+
+    // B's edge re-resolved against the restored terminal A → it runs
+    // again; C re-entered the waiting area, not the lanes.
+    assert!(wait_status(&b, &pb.flare_id, FlareStatus::Running));
+    let rec_c = b.db.get_flare(&pc.flare_id).unwrap();
+    assert_eq!(rec_c.status, FlareStatus::Queued);
+    assert_eq!(rec_c.wait_reason.as_deref(), Some("waiting_on_parents"));
+
+    // Open the gate: the pipeline drains through B, then C.
+    *gate.lock().unwrap() = true;
+    assert!(wait_status(&b, &pb.flare_id, FlareStatus::Completed));
+    assert!(wait_status(&b, &pc.flare_id, FlareStatus::Completed));
+    // The completed parent never re-ran: exactly one "A" marker, with
+    // C's single run after it.
+    assert_eq!(runs.lock().unwrap().clone(), vec!["A", "C"]);
+
+    drop(a);
+    drop(b);
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
+
+/// A DAG child whose parent record is gone after the restart (its WAL
+/// entry lost with the crash, or evicted by retention) must fail fast
+/// with `ParentFailed` naming the missing parent — not wait forever on an
+/// edge nobody will ever resolve.
+#[test]
+fn missing_parent_after_restart_fails_child_fast() {
+    let dir = tmp_dir("dag-orphan");
+    register_work("recovery-dag-noop", Arc::new(|_p, _ctx| Ok(Json::Null)));
+    {
+        let store = DurableStore::open(&dir).unwrap();
+        store.append_def("orph", "recovery-dag-noop", &hetero(2)).unwrap();
+        let mut rec =
+            FlareRecord::queued("orph-child", "orph", "default", Priority::Normal);
+        rec.submit_seq = 1;
+        rec.after = vec!["orph-parent-never-recorded".into()];
+        rec.wait_reason = Some("waiting_on_parents".into());
+        rec.spec = Some(Json::obj(vec![
+            ("params", Json::Arr(vec![Json::Null; 2])),
+            ("granularity", 2.into()),
+            ("strategy", "heterogeneous".into()),
+        ]));
+        store.append_flare(&rec.to_json()).unwrap();
+    }
+    let c = recover(1, 4, &dir);
+    assert_eq!(c.recovery_stats().requeued, 1);
+    assert!(wait_status(&c, "orph-child", FlareStatus::ParentFailed));
+    let err = c.db.get_flare("orph-child").unwrap().error.unwrap();
+    assert!(
+        err.contains("orph-parent-never-recorded") && err.contains("gone"),
+        "{err}"
+    );
+    drop(c);
+    let _ = fs::remove_dir_all(&dir);
 }

@@ -4,7 +4,9 @@
 //! under saturation, priority placement, the cancellation kill path,
 //! preempt-and-requeue (saturation reclaim, the `preemptible = false`
 //! opt-out, the preempt-count livelock guard, the cancel-beats-requeue
-//! race), EDF ordering, and queued-deadline expiry.
+//! race), EDF ordering, queued-deadline expiry, and DAG workflows
+//! (`after` edges: parent-output hand-off, the waiting-on-parents holding
+//! area, and cancellation fan-out).
 //! These use plain registered work functions (no app datasets), gated by
 //! condvars so the tests control exactly when capacity frees.
 
@@ -857,4 +859,119 @@ fn raising_quota_unblocks_waiting_flares() {
             .find(|p| p.tenant == "t")
             .is_some_and(|p| p.placed_vcpus == 0)
     }));
+}
+
+/// DAG happy path: a two-stage chain hands the parent's outputs to the
+/// child through the backend — `parent_input(0)` returns exactly the
+/// parent's output array, staged before any child worker starts.
+#[test]
+fn dag_chain_passes_parent_outputs_to_child() {
+    register_work(
+        "sched-dag-src",
+        Arc::new(|_p, ctx: &burstc::bcm::BurstContext| {
+            Ok(Json::Num((ctx.worker_id * 10) as f64))
+        }),
+    );
+    register_work(
+        "sched-dag-sum",
+        Arc::new(|_p, ctx: &burstc::bcm::BurstContext| {
+            let parents = ctx.parent_input(0)?;
+            let total: f64 = parents
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_f64)
+                .sum();
+            Ok(Json::Num(total))
+        }),
+    );
+    let c = Controller::test_platform(1, 8, 1e-6);
+    c.deploy("dag-src", "sched-dag-src", hetero()).unwrap();
+    c.deploy("dag-sum", "sched-dag-sum", hetero()).unwrap();
+    let a = c.flare("dag-src", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    let opts = FlareOptions { after: vec![a.flare_id.clone()], ..Default::default() };
+    let b = c.flare("dag-sum", vec![Json::Null; 2], &opts).unwrap();
+    // Every child worker read A's outputs 0 + 10 + 20 + 30.
+    assert!(b.outputs.iter().all(|o| o.as_f64() == Some(60.0)), "{:?}", b.outputs);
+}
+
+/// A DAG child must hold in the waiting-on-parents area while its parent
+/// runs — even with the cluster otherwise idle — and only enter the lanes
+/// once the parent completes.
+#[test]
+fn dag_child_waits_for_running_parent_despite_free_capacity() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-dag-gated", Gate::work(&gate));
+    register_work("sched-dag-noop", noop());
+    let c = Controller::test_platform(1, 16, 1e-6);
+    c.deploy("dag-gate", "sched-dag-gated", hetero()).unwrap();
+    c.deploy("dag-wait", "sched-dag-noop", hetero()).unwrap();
+    let a = c.submit_flare("dag-gate", vec![Json::Null; 2], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &a.flare_id, FlareStatus::Running));
+    let opts = FlareOptions { after: vec![a.flare_id.clone()], ..Default::default() };
+    let b = c.submit_flare("dag-wait", vec![Json::Null; 2], &opts).unwrap();
+    // 14 free vCPUs, but the child stays parked outside the DRR lanes.
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(c.flare_status(&b.flare_id), Some(FlareStatus::Queued));
+    let rec = c.db.get_flare(&b.flare_id).unwrap();
+    assert_eq!(rec.wait_reason.as_deref(), Some("waiting_on_parents"));
+    gate.open();
+    assert!(a.wait().is_ok());
+    assert!(b.wait().is_ok());
+}
+
+/// Cancelling a parent fans out through every descendant: over a diamond
+/// A → (B, C) → D, each of B, C, D lands in `ParentFailed` exactly once,
+/// with an error naming the terminal parent one edge up, and no capacity
+/// is left reserved.
+#[test]
+fn parent_cancellation_fans_out_to_every_descendant() {
+    let gate = Arc::new(Gate::default());
+    register_work("sched-dag-dia-gate", Gate::preemptible_work(&gate));
+    register_work("sched-dag-dia-noop", noop());
+    let c = Controller::test_platform(1, 16, 1e-6);
+    c.deploy("dia-root", "sched-dag-dia-gate", hetero()).unwrap();
+    c.deploy("dia-stage", "sched-dag-dia-noop", hetero()).unwrap();
+    let a = c.submit_flare("dia-root", vec![Json::Null; 2], &FlareOptions::default()).unwrap();
+    assert!(wait_status(&c, &a.flare_id, FlareStatus::Running));
+    let after_a = FlareOptions { after: vec![a.flare_id.clone()], ..Default::default() };
+    let b = c.submit_flare("dia-stage", vec![Json::Null; 2], &after_a).unwrap();
+    let c2 = c.submit_flare("dia-stage", vec![Json::Null; 2], &after_a).unwrap();
+    let after_bc = FlareOptions {
+        after: vec![b.flare_id.clone(), c2.flare_id.clone()],
+        ..Default::default()
+    };
+    let d = c.submit_flare("dia-stage", vec![Json::Null; 2], &after_bc).unwrap();
+
+    c.cancel_flare(&a.flare_id).unwrap();
+    assert!(wait_status(&c, &a.flare_id, FlareStatus::Cancelled));
+    for id in [&b.flare_id, &c2.flare_id, &d.flare_id] {
+        assert!(wait_status(&c, id, FlareStatus::ParentFailed), "descendant {id}");
+    }
+    // The middle tier blames the cancelled root; the sink blames a
+    // parent-failed middle flare — one edge per level, no skipping.
+    let err_b = c.db.get_flare(&b.flare_id).unwrap().error.unwrap();
+    assert!(err_b.contains(&a.flare_id) && err_b.contains("cancelled"), "{err_b}");
+    let err_d = c.db.get_flare(&d.flare_id).unwrap().error.unwrap();
+    assert!(
+        (err_d.contains(&b.flare_id) || err_d.contains(&c2.flare_id))
+            && err_d.contains("parent_failed"),
+        "{err_d}"
+    );
+    // Each handle observes the terminal error exactly once, and the
+    // fan-out consumed no capacity.
+    assert!(b.wait().is_err() && c2.wait().is_err() && d.wait().is_err());
+    assert!(wait_until(|| c.pool.free_vcpus() == vec![16]));
+}
+
+/// DAG edges are validated at submit: naming a parent that was never
+/// submitted is an error, not a flare that waits forever.
+#[test]
+fn unknown_parent_rejected_at_submit() {
+    register_work("sched-dag-val", noop());
+    let c = Controller::test_platform(1, 8, 1e-6);
+    c.deploy("dag-val", "sched-dag-val", hetero()).unwrap();
+    let opts = FlareOptions { after: vec!["no-such-flare".into()], ..Default::default() };
+    let err = c.submit_flare("dag-val", vec![Json::Null; 2], &opts).unwrap_err();
+    assert!(err.to_string().contains("unknown parent"), "{err}");
 }
