@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -21,6 +21,7 @@ use anyhow::{anyhow, Result};
 use super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::util::cancel::{CancelToken, Waker};
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Upper bound on one blocking wait slice in the *polled* cancellable-wait
 /// fallback below. Backends with native waker wiring never pay this; the
@@ -117,15 +118,22 @@ pub fn polled_cancellable(
 /// Per-token waker registry for a backend: holds the strong waker handles
 /// (the token stores only `Weak`s) so each token is wired up exactly once
 /// per backend, and the blocked-wait fast path allocates nothing per wait.
-#[derive(Default)]
 pub struct CancelWakers {
-    registered: Mutex<HashMap<usize, Arc<Waker>>>,
+    registered: RankedMutex<HashMap<usize, Arc<Waker>>>,
+}
+
+impl Default for CancelWakers {
+    fn default() -> CancelWakers {
+        CancelWakers {
+            registered: RankedMutex::new(LockRank::BackendRegistered, HashMap::new()),
+        }
+    }
 }
 
 impl std::fmt::Debug for CancelWakers {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("CancelWakers")
-            .field("registered", &self.registered.lock().unwrap().len())
+            .field("registered", &self.registered.lock().len())
             .finish()
     }
 }
@@ -135,7 +143,7 @@ impl CancelWakers {
     /// first sight. Callers must not hold any lock the waker itself takes:
     /// an already-tripped token invokes the waker inline.
     pub fn ensure(&self, token: &CancelToken, make: impl FnOnce() -> Arc<Waker>) {
-        let mut reg = self.registered.lock().unwrap();
+        let mut reg = self.registered.lock();
         if reg.contains_key(&token.id()) {
             return;
         }

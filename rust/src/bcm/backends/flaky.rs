@@ -13,11 +13,11 @@ use anyhow::Result;
 use super::super::backend::{BackendStats, RemoteBackend};
 use super::super::mailbox::Bytes;
 use crate::util::rng::Pcg;
-use std::sync::Mutex;
+use crate::util::sync::{LockRank, RankedMutex};
 
 pub struct FlakyBackend {
     inner: Arc<dyn RemoteBackend>,
-    rng: Mutex<Pcg>,
+    rng: RankedMutex<Pcg>,
     /// Probability of duplicating a put/publish (at-least-once injection).
     pub dup_prob: f64,
     pub dups_injected: AtomicU64,
@@ -27,14 +27,14 @@ impl FlakyBackend {
     pub fn wrap(inner: Arc<dyn RemoteBackend>, seed: u64, dup_prob: f64) -> Arc<FlakyBackend> {
         Arc::new(FlakyBackend {
             inner,
-            rng: Mutex::new(Pcg::new(seed)),
+            rng: RankedMutex::new(LockRank::Leaf, Pcg::new(seed)),
             dup_prob,
             dups_injected: AtomicU64::new(0),
         })
     }
 
     fn flip(&self) -> bool {
-        self.rng.lock().unwrap().f64() < self.dup_prob
+        self.rng.lock().f64() < self.dup_prob
     }
 }
 

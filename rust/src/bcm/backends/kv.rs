@@ -18,7 +18,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -28,6 +28,7 @@ use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
 use crate::util::cancel::{CancelToken, Waker};
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -39,8 +40,8 @@ struct ShardStore {
 struct Shard {
     /// Executor: service time is paid under this lock (models the shard's
     /// single event-loop thread).
-    executor: Mutex<()>,
-    store: Mutex<ShardStore>,
+    executor: RankedMutex<()>,
+    store: RankedMutex<ShardStore>,
     cv: Condvar,
 }
 
@@ -72,8 +73,8 @@ impl KvServer {
             shards: Arc::new(
                 (0..shards.max(1))
                     .map(|_| Shard {
-                        executor: Mutex::new(()),
-                        store: Mutex::new(ShardStore::default()),
+                        executor: RankedMutex::new(LockRank::KvExecutor, ()),
+                        store: RankedMutex::new(LockRank::BackendStore, ShardStore::default()),
                         cv: Condvar::new(),
                     })
                     .collect(),
@@ -97,7 +98,7 @@ impl KvServer {
                         // Briefly take the store lock before notifying so a
                         // waiter between its reason() check and its wait
                         // never misses the trip.
-                        drop(sh.store.lock().unwrap());
+                        drop(sh.store.lock());
                         sh.cv.notify_all();
                     }
                 }
@@ -145,7 +146,7 @@ impl KvServer {
 
     /// Pay an op's service time on the shard's executor thread.
     fn serve(&self, shard: &Shard, bytes: usize) {
-        let _exec = shard.executor.lock().unwrap();
+        let _exec = shard.executor.lock();
         let t = self.op_latency_s + bytes as f64 * self.per_byte_s;
         precise_sleep(secs_f64(t * self.time_scale));
     }
@@ -162,7 +163,7 @@ impl RemoteBackend for KvServer {
         self.serve(shard, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = shard.store.lock().unwrap();
+        let mut st = shard.store.lock();
         st.queues.entry(key.to_string()).or_default().push_back(data);
         shard.cv.notify_all();
         Ok(())
@@ -184,7 +185,7 @@ impl RemoteBackend for KvServer {
         let shard = self.shard_of(key);
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = shard.store.lock().unwrap();
+            let mut st = shard.store.lock();
             loop {
                 if let Some(q) = st.queues.get_mut(key) {
                     if let Some(v) = q.pop_front() {
@@ -202,7 +203,7 @@ impl RemoteBackend for KvServer {
                 if now >= deadline {
                     return Err(anyhow!("{}: fetch('{key}') timed out", self.name));
                 }
-                let (g, _) = shard.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&shard.cv, deadline - now);
                 st = g;
             }
         };
@@ -219,7 +220,7 @@ impl RemoteBackend for KvServer {
         self.serve(shard, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = shard.store.lock().unwrap();
+        let mut st = shard.store.lock();
         st.published.insert(key.to_string(), data);
         shard.cv.notify_all();
         Ok(())
@@ -241,7 +242,7 @@ impl RemoteBackend for KvServer {
         let shard = self.shard_of(key);
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = shard.store.lock().unwrap();
+            let mut st = shard.store.lock();
             loop {
                 if let Some(v) = st.published.get(key) {
                     break v.clone();
@@ -257,7 +258,7 @@ impl RemoteBackend for KvServer {
                 if now >= deadline {
                     return Err(anyhow!("{}: read('{key}') timed out", self.name));
                 }
-                let (g, _) = shard.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&shard.cv, deadline - now);
                 st = g;
             }
         };
@@ -270,7 +271,7 @@ impl RemoteBackend for KvServer {
 
     fn clear_prefix(&self, prefix: &str) {
         for shard in &self.shards {
-            let mut st = shard.store.lock().unwrap();
+            let mut st = shard.store.lock();
             st.queues.retain(|k, _| !k.starts_with(prefix));
             st.published.retain(|k, _| !k.starts_with(prefix));
         }

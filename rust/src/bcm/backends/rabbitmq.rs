@@ -9,7 +9,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -19,6 +19,7 @@ use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
 use crate::util::cancel::{CancelToken, Waker};
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -29,10 +30,18 @@ struct BrokerStore {
 
 /// The waitable broker state, `Arc`-shared so cancel-trip wakers can poke
 /// the condvar without keeping the whole backend alive.
-#[derive(Default)]
 struct BrokerWait {
-    store: Mutex<BrokerStore>,
+    store: RankedMutex<BrokerStore>,
     cv: Condvar,
+}
+
+impl Default for BrokerWait {
+    fn default() -> BrokerWait {
+        BrokerWait {
+            store: RankedMutex::new(LockRank::BackendStore, BrokerStore::default()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 pub struct RabbitBackend {
@@ -75,7 +84,7 @@ impl RabbitBackend {
         self.wakers.ensure(token, || {
             Arc::new(move || {
                 if let Some(w) = wait.upgrade() {
-                    drop(w.store.lock().unwrap());
+                    drop(w.store.lock());
                     w.cv.notify_all();
                 }
             }) as Arc<Waker>
@@ -107,7 +116,7 @@ impl RemoteBackend for RabbitBackend {
         self.serve(data.len())?;
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.direct.entry(key.to_string()).or_default().push_back(data);
         self.wait.cv.notify_all();
         Ok(())
@@ -128,7 +137,7 @@ impl RemoteBackend for RabbitBackend {
         }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.wait.store.lock().unwrap();
+            let mut st = self.wait.store.lock();
             loop {
                 if let Some(q) = st.direct.get_mut(key) {
                     if let Some(v) = q.pop_front() {
@@ -145,7 +154,7 @@ impl RemoteBackend for RabbitBackend {
                 if now >= deadline {
                     return Err(anyhow!("rabbitmq: fetch('{key}') timed out"));
                 }
-                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&self.wait.cv, deadline - now);
                 st = g;
             }
         };
@@ -159,7 +168,7 @@ impl RemoteBackend for RabbitBackend {
         self.serve(data.len())?;
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.fanout.insert(key.to_string(), data);
         self.wait.cv.notify_all();
         Ok(())
@@ -180,7 +189,7 @@ impl RemoteBackend for RabbitBackend {
         }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.wait.store.lock().unwrap();
+            let mut st = self.wait.store.lock();
             loop {
                 if let Some(v) = st.fanout.get(key) {
                     break v.clone();
@@ -195,7 +204,7 @@ impl RemoteBackend for RabbitBackend {
                 if now >= deadline {
                     return Err(anyhow!("rabbitmq: read('{key}') timed out"));
                 }
-                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&self.wait.cv, deadline - now);
                 st = g;
             }
         };
@@ -206,7 +215,7 @@ impl RemoteBackend for RabbitBackend {
     }
 
     fn clear_prefix(&self, prefix: &str) {
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.direct.retain(|k, _| !k.starts_with(prefix));
         st.fanout.retain(|k, _| !k.starts_with(prefix));
     }

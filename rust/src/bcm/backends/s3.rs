@@ -9,7 +9,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -19,6 +19,7 @@ use super::super::mailbox::Bytes;
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
 use crate::util::cancel::{CancelToken, Waker};
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 #[derive(Default)]
@@ -29,10 +30,18 @@ struct S3Store {
 
 /// The waitable object state, `Arc`-shared so cancel-trip wakers can poke
 /// the condvar without keeping the whole backend alive.
-#[derive(Default)]
 struct S3Wait {
-    store: Mutex<S3Store>,
+    store: RankedMutex<S3Store>,
     cv: Condvar,
+}
+
+impl Default for S3Wait {
+    fn default() -> S3Wait {
+        S3Wait {
+            store: RankedMutex::new(LockRank::BackendStore, S3Store::default()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 pub struct S3Backend {
@@ -69,7 +78,7 @@ impl S3Backend {
         self.wakers.ensure(token, || {
             Arc::new(move || {
                 if let Some(w) = wait.upgrade() {
-                    drop(w.store.lock().unwrap());
+                    drop(w.store.lock());
                     w.cv.notify_all();
                 }
             }) as Arc<Waker>
@@ -95,7 +104,7 @@ impl RemoteBackend for S3Backend {
         self.serve(self.put_latency_s, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.queues.entry(key.to_string()).or_default().push_back(data);
         self.wait.cv.notify_all();
         Ok(())
@@ -118,7 +127,7 @@ impl RemoteBackend for S3Backend {
         // with rate-limited existence checks, then pay the GET.
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.wait.store.lock().unwrap();
+            let mut st = self.wait.store.lock();
             loop {
                 if let Some(q) = st.queues.get_mut(key) {
                     if let Some(v) = q.pop_front() {
@@ -135,7 +144,7 @@ impl RemoteBackend for S3Backend {
                 if now >= deadline {
                     return Err(anyhow!("s3: fetch('{key}') timed out"));
                 }
-                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&self.wait.cv, deadline - now);
                 st = g;
             }
         };
@@ -151,7 +160,7 @@ impl RemoteBackend for S3Backend {
         self.serve(self.put_latency_s, data.len());
         self.counters.puts.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_in.fetch_add(data.len() as u64, Ordering::Relaxed);
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.objects.insert(key.to_string(), data);
         self.wait.cv.notify_all();
         Ok(())
@@ -172,7 +181,7 @@ impl RemoteBackend for S3Backend {
         }
         let deadline = Instant::now() + timeout;
         let data = {
-            let mut st = self.wait.store.lock().unwrap();
+            let mut st = self.wait.store.lock();
             loop {
                 if let Some(v) = st.objects.get(key) {
                     break v.clone();
@@ -187,7 +196,7 @@ impl RemoteBackend for S3Backend {
                 if now >= deadline {
                     return Err(anyhow!("s3: read('{key}') timed out"));
                 }
-                let (g, _) = self.wait.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = st.wait_timeout(&self.wait.cv, deadline - now);
                 st = g;
             }
         };
@@ -199,7 +208,7 @@ impl RemoteBackend for S3Backend {
     }
 
     fn clear_prefix(&self, prefix: &str) {
-        let mut st = self.wait.store.lock().unwrap();
+        let mut st = self.wait.store.lock();
         st.queues.retain(|k, _| !k.starts_with(prefix));
         st.objects.retain(|k, _| !k.starts_with(prefix));
     }

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -22,6 +22,7 @@ use super::fabric::CommFabric;
 use super::mailbox::Bytes;
 use crate::util::cancel::{CancelReason, CancelToken};
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Platform-side checkpoint channel for one flare *run*, shared by every
 /// worker context of the burst. `prior` holds the checkpoints the previous
@@ -70,9 +71,9 @@ pub struct BurstContext {
     /// The flare run's checkpoint channel (detached outside the platform).
     ckpt: Arc<CheckpointChannel>,
     /// Per-destination send counters (at-least-once bookkeeping, §4.5).
-    send_ctrs: Mutex<HashMap<(Op, usize), u64>>,
+    send_ctrs: RankedMutex<HashMap<(Op, usize), u64>>,
     /// Per-source receive counters.
-    recv_ctrs: Mutex<HashMap<(Op, usize), u64>>,
+    recv_ctrs: RankedMutex<HashMap<(Op, usize), u64>>,
     /// Collective-call counter; SPMD programs call collectives in the same
     /// order on every worker, so these agree across the burst.
     coll_ctr: AtomicU64,
@@ -104,8 +105,8 @@ impl BurstContext {
             fabric,
             cancel,
             ckpt,
-            send_ctrs: Mutex::new(HashMap::new()),
-            recv_ctrs: Mutex::new(HashMap::new()),
+            send_ctrs: RankedMutex::new(LockRank::Leaf, HashMap::new()),
+            recv_ctrs: RankedMutex::new(LockRank::Leaf, HashMap::new()),
             coll_ctr: AtomicU64::new(0),
         }
     }
@@ -230,7 +231,7 @@ impl BurstContext {
     }
 
     fn next_send(&self, op: Op, dst: usize) -> u64 {
-        let mut m = self.send_ctrs.lock().unwrap();
+        let mut m = self.send_ctrs.lock();
         let c = m.entry((op, dst)).or_insert(0);
         let v = *c;
         *c += 1;
@@ -238,7 +239,7 @@ impl BurstContext {
     }
 
     fn next_recv(&self, op: Op, src: usize) -> u64 {
-        let mut m = self.recv_ctrs.lock().unwrap();
+        let mut m = self.recv_ctrs.lock();
         let c = m.entry((op, src)).or_insert(0);
         let v = *c;
         *c += 1;
@@ -518,8 +519,8 @@ impl BurstContext {
         out[root] = Some(Bytes::from(data));
         let remote: Vec<usize> =
             (0..n).filter(|&s| s != root && !t.same_pack(self.worker_id, s)).collect();
-        let slots: Vec<Mutex<Option<Result<Bytes>>>> =
-            remote.iter().map(|_| Mutex::new(None)).collect();
+        let slots: Vec<RankedMutex<Option<Result<Bytes>>>> =
+            remote.iter().map(|_| RankedMutex::new(LockRank::Leaf, None)).collect();
         let next = AtomicU64::new(0);
         let width = remote.len().min(self.fabric.config.pool_cap).max(1);
         std::thread::scope(|s| -> Result<()> {
@@ -528,8 +529,7 @@ impl BurstContext {
                     s.spawn(|| loop {
                         let i = next.fetch_add(1, Ordering::Relaxed) as usize;
                         let Some(&src) = remote.get(i) else { return };
-                        *slots[i].lock().unwrap() =
-                            Some(self.recv_op(Op::Gather, src, ctr));
+                        *slots[i].lock() = Some(self.recv_op(Op::Gather, src, ctr));
                     });
                 }
             }
@@ -542,11 +542,8 @@ impl BurstContext {
             Ok(())
         })?;
         for (i, slot) in slots.into_iter().enumerate() {
-            out[remote[i]] = Some(
-                slot.into_inner()
-                    .unwrap()
-                    .expect("gather remote receiver did not run")?,
-            );
+            out[remote[i]] =
+                Some(slot.into_inner().expect("gather remote receiver did not run")?);
         }
         Ok(Some(out.into_iter().map(|b| b.expect("gather slot unfilled")).collect()))
     }

@@ -3,7 +3,7 @@
 //! IO with a per-pack connection pool, and traffic accounting.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -17,6 +17,7 @@ use crate::cluster::tokenbucket::TokenBucket;
 use crate::metrics::TrafficStats;
 use crate::util::bytes::MIB;
 use crate::util::cancel::CancelToken;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Fabric configuration.
 #[derive(Debug, Clone)]
@@ -177,7 +178,7 @@ impl CommFabric {
         // through the pack pool.
         let next = AtomicUsize::new(1);
         let width = self.pool_width(src_pack, n - 1);
-        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let err: RankedMutex<Option<anyhow::Error>> = RankedMutex::new(LockRank::Leaf, None);
         std::thread::scope(|s| {
             for _ in 0..width {
                 s.spawn(|| loop {
@@ -189,13 +190,13 @@ impl CommFabric {
                     let hi = ((i + 1) * chunk_size).min(payload.len());
                     let key = self.chunk_key(op, src as u32, dst_u32, ctr, i);
                     if let Err(e) = put(&key, payload.slice(lo, hi)) {
-                        *err.lock().unwrap() = Some(e);
+                        *err.lock() = Some(e);
                         return;
                     }
                 });
             }
         });
-        match err.into_inner().unwrap() {
+        match err.into_inner() {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -214,18 +215,18 @@ impl CommFabric {
         reader_pack: usize,
         consume: bool,
     ) -> Result<Vec<u8>> {
-        let buf: Mutex<Vec<u8>> = Mutex::new(Vec::new());
+        let buf: RankedMutex<Vec<u8>> = RankedMutex::new(LockRank::Leaf, Vec::new());
         let total =
             self.remote_recv_streaming(op, src, dst, ctr, reader_pack, consume, &|total,
                                                                                   off,
                                                                                   p| {
-                let mut b = buf.lock().unwrap();
+                let mut b = buf.lock();
                 if b.len() < total {
                     b.resize(total, 0);
                 }
                 b[off..off + p.len()].copy_from_slice(p);
             })?;
-        let b = buf.into_inner().unwrap();
+        let b = buf.into_inner();
         debug_assert_eq!(b.len(), total);
         Ok(b)
     }
@@ -296,10 +297,10 @@ impl CommFabric {
         // Remaining chunks fetched concurrently through the pack pool and
         // handed to the sink as they land.
         let n = hdr.n_chunks as usize;
-        let sa = Mutex::new(sa);
+        let sa = RankedMutex::new(LockRank::Leaf, sa);
         let next = AtomicUsize::new(1);
         let width = self.pool_width(reader_pack, n - 1);
-        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let err: RankedMutex<Option<anyhow::Error>> = RankedMutex::new(LockRank::Leaf, None);
         std::thread::scope(|s| {
             for _ in 0..width {
                 s.spawn(|| loop {
@@ -315,7 +316,7 @@ impl CommFabric {
                             // tracker lock; the sink runs inside it too, so
                             // consumers see serialized, exactly-once chunk
                             // deliveries.
-                            let mut sa = sa.lock().unwrap();
+                            let mut sa = sa.lock();
                             match sa.accept_bare(i, &data) {
                                 Ok(Some((off, p))) => {
                                     self.traffic.record_copied(p.len() as u64);
@@ -323,23 +324,23 @@ impl CommFabric {
                                 }
                                 Ok(None) => {}
                                 Err(e) => {
-                                    *err.lock().unwrap() = Some(e);
+                                    *err.lock() = Some(e);
                                     return;
                                 }
                             }
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e);
+                            *err.lock() = Some(e);
                             return;
                         }
                     }
                 });
             }
         });
-        if let Some(e) = err.into_inner().unwrap() {
+        if let Some(e) = err.into_inner() {
             return Err(e);
         }
-        let sa = sa.into_inner().unwrap();
+        let sa = sa.into_inner();
         if !sa.complete() {
             return Err(anyhow!("streamed receive incomplete: {} chunks missing", sa.missing()));
         }
@@ -498,17 +499,17 @@ mod tests {
         let f = fabric(4, 2, 128);
         let payload: Bytes = (0..1500).map(|i| (i % 251) as u8).collect::<Vec<u8>>().into();
         f.remote_send(Op::Gather, 0, Some(2), 3, &payload).unwrap();
-        let got = Mutex::new(vec![0u8; payload.len()]);
+        let got = RankedMutex::new(LockRank::Leaf, vec![0u8; payload.len()]);
         let calls = AtomicUsize::new(0);
         let total = f
             .remote_recv_streaming(Op::Gather, 0, Some(2), 3, 1, true, &|_, off, p| {
                 calls.fetch_add(1, Ordering::Relaxed);
-                got.lock().unwrap()[off..off + p.len()].copy_from_slice(p);
+                got.lock()[off..off + p.len()].copy_from_slice(p);
             })
             .unwrap();
         assert_eq!(total, payload.len());
         assert_eq!(calls.load(Ordering::Relaxed), payload.len().div_ceil(128));
-        assert_eq!(got.into_inner().unwrap(), payload.as_slice());
+        assert_eq!(got.into_inner(), payload.as_slice());
     }
 
     #[test]

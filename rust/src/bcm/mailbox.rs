@@ -15,12 +15,13 @@
 //! blocked-take fast path allocates nothing per wait.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::util::cancel::{CancelToken, WakeTarget};
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Immutable byte payload with cheap clones and zero-copy slicing: an
 /// `Arc`'d buffer plus an offset/length window. Cloning or slicing shares
@@ -93,10 +94,18 @@ struct Inner {
     registered: HashSet<usize>,
 }
 
-#[derive(Default)]
 struct Shared {
-    inner: Mutex<Inner>,
+    inner: RankedMutex<Inner>,
     cv: Condvar,
+}
+
+impl Default for Shared {
+    fn default() -> Shared {
+        Shared {
+            inner: RankedMutex::new(LockRank::MailboxInner, Inner::default()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 impl WakeTarget for Shared {
@@ -104,7 +113,7 @@ impl WakeTarget for Shared {
     /// a taker between its `reason()` check and its wait can never miss the
     /// wakeup.
     fn wake(&self) {
-        drop(self.inner.lock().unwrap());
+        drop(self.inner.lock());
         self.cv.notify_all();
     }
 }
@@ -130,7 +139,7 @@ impl Mailbox {
     /// Duplicate keys overwrite — at-least-once delivery upstream means the
     /// payload for a key is always identical.
     pub fn put(&self, key: String, data: Bytes) {
-        self.shared.inner.lock().unwrap().slots.insert(key, data);
+        self.shared.inner.lock().slots.insert(key, data);
         self.shared.cv.notify_all();
     }
 
@@ -151,7 +160,7 @@ impl Mailbox {
         cancel: Option<&CancelToken>,
     ) -> Result<Bytes> {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.shared.inner.lock().unwrap();
+        let mut inner = self.shared.inner.lock();
         if let Some(token) = cancel {
             if inner.registered.insert(token.id()) {
                 // First wait on this token: register the mailbox itself as
@@ -161,7 +170,7 @@ impl Mailbox {
                 drop(inner);
                 let target: Arc<dyn WakeTarget> = self.shared.clone();
                 token.register_wake_target(&target);
-                inner = self.shared.inner.lock().unwrap();
+                inner = self.shared.inner.lock();
             }
         }
         loop {
@@ -180,13 +189,13 @@ impl Mailbox {
             if now >= deadline {
                 return Err(anyhow!("mailbox take timed out waiting for '{key}'"));
             }
-            let (guard, _t) = self.shared.cv.wait_timeout(inner, deadline - now).unwrap();
+            let (guard, _t) = inner.wait_timeout(&self.shared.cv, deadline - now);
             inner = guard;
         }
     }
 
     pub fn len(&self) -> usize {
-        self.shared.inner.lock().unwrap().slots.len()
+        self.shared.inner.lock().slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -304,7 +313,7 @@ mod tests {
             // one registration rather than creating another.
             let _ = m.take_cancellable("never", Duration::from_millis(1), Some(&token));
         }
-        assert_eq!(m.shared.inner.lock().unwrap().registered.len(), 1);
+        assert_eq!(m.shared.inner.lock().registered.len(), 1);
     }
 
     #[test]
@@ -328,6 +337,52 @@ mod tests {
             .take_cancellable("never", Duration::from_millis(30), Some(&token))
             .unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn no_lost_wakeup_under_put_vs_trip_races() {
+        // Lost-wakeup regression: `wake()` briefly acquires the slot lock
+        // before notifying so a trip landing between a taker's `reason()`
+        // check and its wait cannot vanish. Race a delivery thread and a
+        // preempt thread against a blocked taker many times; every round
+        // must resolve promptly (delivered payload or named trip), never by
+        // sleeping out the full timeout.
+        for round in 0..200u32 {
+            let m = Mailbox::new();
+            let token = CancelToken::new();
+            let m2 = m.clone();
+            let t2 = token.clone();
+            let taker = std::thread::spawn(move || {
+                m2.take_cancellable("race", Duration::from_secs(30), Some(&t2))
+            });
+            let m3 = m.clone();
+            let putter = std::thread::spawn(move || {
+                if round % 2 == 0 {
+                    std::thread::yield_now();
+                }
+                m3.put("race".into(), vec![1].into());
+            });
+            let t3 = token.clone();
+            let tripper = std::thread::spawn(move || {
+                if round % 3 == 0 {
+                    std::thread::yield_now();
+                }
+                t3.preempt();
+            });
+            let sw = Instant::now();
+            let out = taker.join().unwrap();
+            putter.join().unwrap();
+            tripper.join().unwrap();
+            match out {
+                Ok(v) => assert_eq!(v.as_slice(), &[1u8][..]),
+                Err(e) => assert!(e.to_string().contains("preempted"), "{e}"),
+            }
+            assert!(
+                sw.elapsed() < Duration::from_secs(5),
+                "round {round}: taker hung {:?} — a wakeup was lost",
+                sw.elapsed()
+            );
+        }
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //! limits on the simulated backends (NIC caps, S3 request throttling,
 //! RabbitMQ pipeline throughput).
 
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::timing::precise_sleep;
 
 #[derive(Debug)]
@@ -19,13 +19,17 @@ struct State {
 pub struct TokenBucket {
     rate: f64,
     cap: f64,
-    state: Mutex<State>,
+    state: RankedMutex<State>,
 }
 
 impl TokenBucket {
     pub fn new(rate: f64, cap: f64) -> TokenBucket {
         assert!(rate > 0.0 && cap > 0.0);
-        TokenBucket { rate, cap, state: Mutex::new(State { tokens: cap, last: Instant::now() }) }
+        TokenBucket {
+            rate,
+            cap,
+            state: RankedMutex::new(LockRank::Leaf, State { tokens: cap, last: Instant::now() }),
+        }
     }
 
     /// Take `n` tokens, blocking until available. The balance is allowed to
@@ -33,7 +37,7 @@ impl TokenBucket {
     /// the refill rate instead of letting them all pay in parallel.
     pub fn take(&self, n: f64) {
         let wait = {
-            let mut s = self.state.lock().unwrap();
+            let mut s = self.state.lock();
             let now = Instant::now();
             s.tokens =
                 (s.tokens + now.duration_since(s.last).as_secs_f64() * self.rate).min(self.cap);

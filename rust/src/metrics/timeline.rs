@@ -3,9 +3,8 @@
 //! these, and the simultaneity metrics (range, MAD) are computed over the
 //! per-worker start times.
 
-use std::sync::Mutex;
-
 use crate::util::stats::{self, Summary};
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Execution phases a worker moves through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -49,9 +48,15 @@ pub struct TimelineEvent {
 }
 
 /// Thread-safe event sink.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Timeline {
-    events: Mutex<Vec<TimelineEvent>>,
+    events: RankedMutex<Vec<TimelineEvent>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Timeline {
+        Timeline { events: RankedMutex::new(LockRank::Leaf, Vec::new()) }
+    }
 }
 
 impl Timeline {
@@ -60,11 +65,11 @@ impl Timeline {
     }
 
     pub fn record(&self, ev: TimelineEvent) {
-        self.events.lock().unwrap().push(ev);
+        self.events.lock().push(ev);
     }
 
     pub fn events(&self) -> Vec<TimelineEvent> {
-        self.events.lock().unwrap().clone()
+        self.events.lock().clone()
     }
 
     /// Per-worker start times for a given phase (e.g. `Work` start times =
@@ -72,7 +77,6 @@ impl Timeline {
     pub fn phase_starts(&self, phase: Phase) -> Vec<f64> {
         self.events
             .lock()
-            .unwrap()
             .iter()
             .filter(|e| e.phase == phase)
             .map(|e| e.start_s)
@@ -82,7 +86,6 @@ impl Timeline {
     pub fn phase_durations(&self, phase: Phase) -> Vec<f64> {
         self.events
             .lock()
-            .unwrap()
             .iter()
             .filter(|e| e.phase == phase)
             .map(|e| e.end_s - e.start_s)

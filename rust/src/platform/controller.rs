@@ -35,7 +35,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -63,6 +63,7 @@ use crate::metrics::{Timeline, TrafficStats};
 use crate::util::cancel::{CancelReason, CancelToken};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Default cap on how many times one flare may be preempted and requeued
 /// (the livelock guard: at the cap it stops being selectable as a victim).
@@ -276,16 +277,18 @@ pub struct Controller {
     pub net: NetParams,
     /// Backends are created per kind on first use and shared across flares
     /// (they are the remote *servers*).
-    backends: Mutex<Vec<(BackendKind, Arc<dyn RemoteBackend>)>>,
-    rng: Mutex<Pcg>,
+    backends: RankedMutex<Vec<(BackendKind, Arc<dyn RemoteBackend>)>>,
+    rng: RankedMutex<Pcg>,
     next_flare: AtomicU64,
     /// Shared with the scheduler thread and flare execution threads.
     sched: Arc<SchedState>,
-    sched_thread: Mutex<Option<JoinHandle<()>>>,
+    sched_thread: RankedMutex<Option<JoinHandle<()>>>,
     /// Cancel tokens of every non-terminal flare, by id (the kill path).
-    cancels: Mutex<HashMap<String, CancelToken>>,
+    /// Rank `Cancels`: token trips under it cascade into waker locks.
+    cancels: RankedMutex<HashMap<String, CancelToken>>,
     /// Currently placed flares, by id: the preemption policy's view.
-    running: Mutex<HashMap<String, RunningFlare>>,
+    /// Rank `Running`: held across node-status reads and token trips.
+    running: RankedMutex<HashMap<String, RunningFlare>>,
     /// Placement sequence counter (recency order for victim selection).
     next_seq: AtomicU64,
     /// Preemption policy knobs (see [`Controller::set_preemption_policy`]).
@@ -300,11 +303,12 @@ pub struct Controller {
     /// reference for deploy/flare appends). `None` = in-memory only.
     store: Option<Arc<DurableStore>>,
     /// What `Controller::recover` replayed (zeroes for a fresh start).
-    recovery: Mutex<RecoveryStats>,
+    recovery: RankedMutex<RecoveryStats>,
     /// Flare id → wait reason currently written on its db record
     /// (`quota_blocked` / `no_feasible_node`), so `sync_wait_reasons`
-    /// only writes — and WALs — on transitions.
-    wait_marked: Mutex<HashMap<String, &'static str>>,
+    /// only writes — and WALs — on transitions. Held across the db
+    /// writes, hence its rank below `FlareShard`.
+    wait_marked: RankedMutex<HashMap<String, &'static str>>,
 }
 
 impl Controller {
@@ -366,13 +370,13 @@ impl Controller {
                 nodes,
                 cost,
                 net,
-                backends: Mutex::new(Vec::new()),
-                rng: Mutex::new(Pcg::new(0xb5_2024)),
+                backends: RankedMutex::new(LockRank::Leaf, Vec::new()),
+                rng: RankedMutex::new(LockRank::Leaf, Pcg::new(0xb5_2024)),
                 next_flare: AtomicU64::new(1),
                 sched,
-                sched_thread: Mutex::new(Some(handle)),
-                cancels: Mutex::new(HashMap::new()),
-                running: Mutex::new(HashMap::new()),
+                sched_thread: RankedMutex::new(LockRank::Leaf, Some(handle)),
+                cancels: RankedMutex::new(LockRank::Cancels, HashMap::new()),
+                running: RankedMutex::new(LockRank::Running, HashMap::new()),
                 next_seq: AtomicU64::new(0),
                 preempt_enabled: AtomicBool::new(true),
                 max_preempts: AtomicU32::new(DEFAULT_MAX_PREEMPTS),
@@ -380,8 +384,8 @@ impl Controller {
                 expired_total: AtomicU64::new(0),
                 resumed_total: AtomicU64::new(0),
                 store,
-                recovery: Mutex::new(RecoveryStats::default()),
-                wait_marked: Mutex::new(HashMap::new()),
+                recovery: RankedMutex::new(LockRank::Leaf, RecoveryStats::default()),
+                wait_marked: RankedMutex::new(LockRank::WaitMarked, HashMap::new()),
             }
         })
     }
@@ -452,7 +456,7 @@ impl Controller {
         // Lifetime billing meters are re-seeded from their last settled
         // absolute totals (usage entries replay as idempotent overwrites).
         {
-            let mut q = this.sched.queue.lock().unwrap();
+            let mut q = this.sched.queue.lock();
             for (tenant, weight, quota) in &loaded.tenants {
                 q.set_tenant_weight(tenant, *weight);
                 q.set_tenant_quota(tenant, *quota);
@@ -502,7 +506,7 @@ impl Controller {
             // rather than silently rescheduling it somewhere else.
             if let Some(node) = rec.node.clone() {
                 if !this.nodes.has_node(&node) {
-                    rec.status = FlareStatus::Failed;
+                    rec.set_status(FlareStatus::Failed);
                     rec.error = Some(format!(
                         "lost at restart: node '{node}' was not re-registered"
                     ));
@@ -513,7 +517,7 @@ impl Controller {
             }
             match this.rebuild_queued(&rec) {
                 Ok(job) => {
-                    rec.status = FlareStatus::Queued;
+                    rec.set_status(FlareStatus::Queued);
                     // A DAG child re-enters the waiting-on-parents area,
                     // not the lanes: completed parents stay done (their
                     // terminal records were restored above, records replay
@@ -538,9 +542,8 @@ impl Controller {
                     }
                     this.cancels
                         .lock()
-                        .unwrap()
                         .insert(job.flare_id.clone(), job.cancel.clone());
-                    let mut q = this.sched.queue.lock().unwrap();
+                    let mut q = this.sched.queue.lock();
                     if job.after.is_empty() {
                         q.push(job);
                     } else {
@@ -550,7 +553,7 @@ impl Controller {
                 }
                 Err(e) => {
                     let msg = format!("lost at restart: {e}");
-                    rec.status = FlareStatus::Failed;
+                    rec.set_status(FlareStatus::Failed);
                     rec.error = Some(msg);
                     this.db.put_flare(rec);
                     stats.lost_work += 1;
@@ -580,7 +583,7 @@ impl Controller {
         if let Err(e) = store.force_snapshot() {
             eprintln!("burstc: post-recovery snapshot failed: {e}");
         }
-        *this.recovery.lock().unwrap() = stats;
+        *this.recovery.lock() = stats;
         this.sched.resume();
         Ok(this)
     }
@@ -690,7 +693,7 @@ impl Controller {
 
     /// What recovery replayed (zeroes when the controller started fresh).
     pub fn recovery_stats(&self) -> RecoveryStats {
-        *self.recovery.lock().unwrap()
+        *self.recovery.lock()
     }
 
     /// Convenience: paper-like test platform with a compressed time scale.
@@ -712,7 +715,7 @@ impl Controller {
     }
 
     pub fn backend(&self, kind: BackendKind) -> Arc<dyn RemoteBackend> {
-        let mut v = self.backends.lock().unwrap();
+        let mut v = self.backends.lock();
         if let Some((_, b)) = v.iter().find(|(k, _)| *k == kind) {
             return b.clone();
         }
@@ -841,13 +844,13 @@ impl Controller {
         });
         let slot = Arc::new(ResultSlot::new());
         let cancel = CancelToken::new();
-        self.cancels.lock().unwrap().insert(flare_id.clone(), cancel.clone());
+        self.cancels.lock().insert(flare_id.clone(), cancel.clone());
         // Batched admission: submission only appends to the scheduler's
         // inbox (a short, rarely contended push) — the scheduler adopts
         // the whole batch into the DRR queue at the start of its next
         // pass, so a burst of submitters never serializes on the queue
         // lock a scheduling pass is holding.
-        self.sched.inbox.lock().unwrap().push(QueuedFlare {
+        self.sched.inbox.lock().push(QueuedFlare {
             flare_id: flare_id.clone(),
             def_name: def_name.to_string(),
             work,
@@ -901,16 +904,16 @@ impl Controller {
     /// queued from the caller's point of view; the scheduler adopts them
     /// at its next pass).
     pub fn queued_flares(&self) -> usize {
-        let queued = self.sched.queue.lock().unwrap().len();
-        queued + self.sched.inbox.lock().unwrap().len()
+        let queued = self.sched.queue.lock().len();
+        queued + self.sched.inbox.lock().len()
     }
 
     /// Queue depth per tenant (lanes with pending flares only, by name),
     /// counting inbox submissions toward their tenant so metrics never
     /// under-report between admission batches.
     pub fn queued_by_tenant(&self) -> Vec<(String, usize)> {
-        let mut depth = self.sched.queue.lock().unwrap().depth_by_tenant();
-        let inbox = self.sched.inbox.lock().unwrap();
+        let mut depth = self.sched.queue.lock().depth_by_tenant();
+        let inbox = self.sched.inbox.lock();
         for job in inbox.iter() {
             match depth.iter_mut().find(|(t, _)| *t == job.tenant) {
                 Some((_, n)) => *n += 1,
@@ -935,7 +938,7 @@ impl Controller {
 
     /// Queued flares currently waiting on their tenant's hard vCPU quota.
     pub fn quota_blocked_flares(&self) -> usize {
-        self.sched.queue.lock().unwrap().quota_blocked_ids().len()
+        self.sched.queue.lock().quota_blocked_ids().len()
     }
 
     /// Set a tenant's fair-share weight (a weight-2 lane is entitled to
@@ -943,7 +946,7 @@ impl Controller {
     /// durable store is attached.
     pub fn set_tenant_weight(&self, tenant: &str, weight: f64) {
         let policy = {
-            let mut q = self.sched.queue.lock().unwrap();
+            let mut q = self.sched.queue.lock();
             q.set_tenant_weight(tenant, weight);
             q.policy(tenant)
         };
@@ -956,7 +959,7 @@ impl Controller {
     /// Persisted when a durable store is attached.
     pub fn set_tenant_quota(&self, tenant: &str, quota: Option<usize>) {
         let policy = {
-            let mut q = self.sched.queue.lock().unwrap();
+            let mut q = self.sched.queue.lock();
             q.set_tenant_quota(tenant, quota);
             q.policy(tenant)
         };
@@ -967,7 +970,7 @@ impl Controller {
 
     /// Every tenant lane's policy and live usage (the `/v1/tenants` view).
     pub fn tenant_policies(&self) -> Vec<TenantPolicy> {
-        self.sched.queue.lock().unwrap().tenant_policies()
+        self.sched.queue.lock().tenant_policies()
     }
 
     fn persist_tenant(&self, tenant: &str, policy: Option<(f64, Option<usize>)>) {
@@ -987,7 +990,7 @@ impl Controller {
     /// transitions.
     pub(crate) fn sync_wait_reasons(&self) {
         let (quota, infeasible) = {
-            let q = self.sched.queue.lock().unwrap();
+            let q = self.sched.queue.lock();
             (q.quota_blocked_ids(), q.infeasible_ids())
         };
         let mut now: HashMap<String, &'static str> = HashMap::new();
@@ -997,7 +1000,7 @@ impl Controller {
         for id in infeasible {
             now.entry(id).or_insert("no_feasible_node");
         }
-        let mut marked = self.wait_marked.lock().unwrap();
+        let mut marked = self.wait_marked.lock();
         for (id, reason) in &now {
             if marked.get(id) != Some(reason) {
                 self.db.update_flare(id, |r| {
@@ -1026,7 +1029,7 @@ impl Controller {
     /// carries the *absolute* total, so replay is an idempotent overwrite
     /// (`GET /v1/tenants/<id>/usage` survives restarts).
     fn settle_usage(&self, tenant: &str, provisional: f64, measured: f64) {
-        let total = self.sched.queue.lock().unwrap().settle(tenant, provisional, measured);
+        let total = self.sched.queue.lock().settle(tenant, provisional, measured);
         if let Some(store) = &self.store {
             if let Err(e) = store.append_entry(DurableStore::entry_usage(tenant, total)) {
                 eprintln!("burstc: WAL append failed for tenant '{tenant}' usage: {e}");
@@ -1037,12 +1040,12 @@ impl Controller {
     /// Lifetime settled vCPU·seconds billed to a tenant (`None`: the
     /// tenant has no lane — it never submitted and has no policy).
     pub fn tenant_usage(&self, tenant: &str) -> Option<f64> {
-        self.sched.queue.lock().unwrap().usage_of(tenant)
+        self.sched.queue.lock().usage_of(tenant)
     }
 
     /// Drop a terminal flare's cancel token from the kill-path registry.
     fn clear_cancel(&self, flare_id: &str) {
-        self.cancels.lock().unwrap().remove(flare_id);
+        self.cancels.lock().remove(flare_id);
     }
 
     /// The kill path (`DELETE /v1/flares/<id>`). A queued flare is removed
@@ -1056,19 +1059,19 @@ impl Controller {
         // not yet adopted by a scheduling pass) or in the queue proper —
         // → pull it out before it is ever placed.
         let inboxed = {
-            let mut inbox = self.sched.inbox.lock().unwrap();
+            let mut inbox = self.sched.inbox.lock();
             inbox
                 .iter()
                 .position(|j| j.flare_id == flare_id)
                 .map(|i| inbox.remove(i))
         };
-        let queued =
-            inboxed.or_else(|| self.sched.queue.lock().unwrap().remove(flare_id));
+        let queued = inboxed.or_else(|| self.sched.queue.lock().remove(flare_id));
         if let Some(job) = queued {
             job.cancel.cancel();
             self.db.update_flare(flare_id, |r| {
-                r.status = FlareStatus::Cancelled;
-                r.error = Some("cancelled while queued".into());
+                if r.set_status(FlareStatus::Cancelled) {
+                    r.error = Some("cancelled while queued".into());
+                }
             });
             self.clear_cancel(flare_id);
             // A cancelled flare frees its (virtual) spot: re-scan the queue.
@@ -1086,7 +1089,7 @@ impl Controller {
         // after it (caught at the next placement's pre-check) — it can
         // never fall between and be lost.
         {
-            let cancels = self.cancels.lock().unwrap();
+            let cancels = self.cancels.lock();
             if let Some(t) = cancels.get(flare_id) {
                 t.cancel();
                 return Ok(CancelOutcome::CancellingRunning);
@@ -1126,7 +1129,7 @@ impl Controller {
     /// Fail fast every queued flare whose deadline lapsed (scheduler pass):
     /// terminal [`FlareStatus::Expired`], waiter unblocked with an error.
     pub(crate) fn expire_overdue_queued(&self) {
-        let expired = self.sched.queue.lock().unwrap().take_expired(Instant::now());
+        let expired = self.sched.queue.lock().take_expired(Instant::now());
         for job in expired {
             self.expired_total.fetch_add(1, Ordering::Relaxed);
             let e = anyhow!(
@@ -1135,8 +1138,9 @@ impl Controller {
                 job.submitted.secs()
             );
             self.db.update_flare(&job.flare_id, |r| {
-                r.status = FlareStatus::Expired;
-                r.error = Some(e.to_string());
+                if r.set_status(FlareStatus::Expired) {
+                    r.error = Some(e.to_string());
+                }
             });
             self.clear_cancel(&job.flare_id);
             job.slot.deliver(Err(e));
@@ -1156,7 +1160,7 @@ impl Controller {
     /// out through every descendant, each failed exactly once (the take
     /// from the waiting area is the uniqueness point).
     pub(crate) fn resolve_dag_waiters(&self) {
-        let edges = self.sched.queue.lock().unwrap().waiting_edges();
+        let edges = self.sched.queue.lock().waiting_edges();
         if edges.is_empty() {
             return;
         }
@@ -1207,8 +1211,7 @@ impl Controller {
             // Re-take under the queue lock: a user cancel may have pulled
             // the child out of the waiting area since the snapshot — it
             // won, and the slot was already delivered exactly once.
-            let Some(mut job) = self.sched.queue.lock().unwrap().take_waiting(&id)
-            else {
+            let Some(mut job) = self.sched.queue.lock().take_waiting(&id) else {
                 continue;
             };
             match verdict {
@@ -1219,13 +1222,14 @@ impl Controller {
                             r.wait_reason = None;
                         }
                     });
-                    self.sched.queue.lock().unwrap().push(job);
+                    self.sched.queue.lock().push(job);
                 }
                 Verdict::Fail(why) => {
                     let e = anyhow!("flare '{id}' failed before starting: {why}");
                     self.db.update_flare(&id, |r| {
-                        r.status = FlareStatus::ParentFailed;
-                        r.error = Some(e.to_string());
+                        if r.set_status(FlareStatus::ParentFailed) {
+                            r.error = Some(e.to_string());
+                        }
                     });
                     self.clear_cancel(&id);
                     // Grandchildren fail on the *next* pass — wake it now
@@ -1248,10 +1252,10 @@ impl Controller {
         if !self.preempt_enabled.load(Ordering::Relaxed) {
             return;
         }
-        let starved = self.sched.queue.lock().unwrap().oldest_of_class(Priority::High);
+        let starved = self.sched.queue.lock().oldest_of_class(Priority::High);
         let Some(burst_size) = starved else { return };
         let max = self.max_preempts.load(Ordering::Relaxed);
-        let mut running = self.running.lock().unwrap();
+        let mut running = self.running.lock();
         // vCPUs already being reclaimed by in-flight preemptions count as
         // covered *on their node*: successive scheduler passes must not
         // pile on victims, and reclaim on node A cannot unblock node B.
@@ -1314,7 +1318,7 @@ impl Controller {
         if dead.is_empty() {
             return;
         }
-        let mut running = self.running.lock().unwrap();
+        let mut running = self.running.lock();
         for r in running.values_mut() {
             if dead.contains(&r.node) && !r.preempting {
                 r.preempting = true;
@@ -1340,11 +1344,10 @@ impl Controller {
         // job, fail it cleanly, and release the reservation — panicking
         // here would kill the scheduler loop and hang every waiter.
         let name = format!("flare-{}", job.flare_id);
-        let payload = Arc::new(Mutex::new(Some((job, placement))));
+        let payload = Arc::new(RankedMutex::new(LockRank::Leaf, Some((job, placement))));
         let payload2 = payload.clone();
         let spawned = std::thread::Builder::new().name(name).spawn(move || {
-            let (mut job, placement) =
-                payload2.lock().unwrap().take().expect("payload set");
+            let (mut job, placement) = payload2.lock().take().expect("payload set");
             // Cancel raced the pop→spawn window: release untouched capacity
             // and finish as `Cancelled` without ever starting the packs.
             if job.cancel.is_cancelled() {
@@ -1354,8 +1357,9 @@ impl Controller {
                 c.settle_usage(&job.tenant, job.charged, 0.0);
                 let e = anyhow!("flare '{}' cancelled before placement", job.flare_id);
                 c.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Cancelled;
-                    r.error = Some(e.to_string());
+                    if r.set_status(FlareStatus::Cancelled) {
+                        r.error = Some(e.to_string());
+                    }
                 });
                 c.clear_cancel(&job.flare_id);
                 sched.wake();
@@ -1364,7 +1368,7 @@ impl Controller {
             }
             // Register with the preemption policy's view of the cluster.
             let seq = c.next_seq.fetch_add(1, Ordering::Relaxed);
-            c.running.lock().unwrap().insert(
+            c.running.lock().insert(
                 job.flare_id.clone(),
                 RunningFlare {
                     priority: job.priority,
@@ -1404,13 +1408,14 @@ impl Controller {
             let queue_wait_s = job.submitted.secs();
             let resume_count = job.resume_count;
             c.db.update_flare(&job.flare_id, |r| {
-                r.status = FlareStatus::Running;
-                r.wait_reason = None;
-                r.resume_count = resume_count;
-                // Explainable placement: which node won, at what score,
-                // and why each other candidate was rejected.
-                r.node = Some(placement.node.clone());
-                r.placement = Some(placement.decision.clone());
+                if r.set_status(FlareStatus::Running) {
+                    r.wait_reason = None;
+                    r.resume_count = resume_count;
+                    // Explainable placement: which node won, at what score,
+                    // and why each other candidate was rejected.
+                    r.node = Some(placement.node.clone());
+                    r.placement = Some(placement.decision.clone());
+                }
             });
             // A panic must neither strand the waiter in `wait()` nor
             // leak the reservation (released by guard inside).
@@ -1426,12 +1431,13 @@ impl Controller {
             .unwrap_or_else(|_| {
                 let e = anyhow!("flare '{}' execution panicked", job.flare_id);
                 c.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Failed;
-                    r.error = Some(e.to_string());
+                    if r.set_status(FlareStatus::Failed) {
+                        r.error = Some(e.to_string());
+                    }
                 });
                 Err(e)
             });
-            c.running.lock().unwrap().remove(&job.flare_id);
+            c.running.lock().remove(&job.flare_id);
             // A preempted flare (and only a preempted one — a user kill
             // wins when both raced) is requeued instead of completing.
             // `execute_placed` read the token earlier than this check, so
@@ -1458,13 +1464,15 @@ impl Controller {
                 // cancel tripped before the check above. Without this the
                 // record would be stuck `Running` forever — unkillable,
                 // never evicted, re-admitted after a restart.
+                let to = if job.cancel.user_cancelled() {
+                    FlareStatus::Cancelled
+                } else {
+                    FlareStatus::Failed
+                };
                 c.db.update_flare(&job.flare_id, |r| {
-                    if !r.status.is_terminal() {
-                        r.status = if job.cancel.user_cancelled() {
-                            FlareStatus::Cancelled
-                        } else {
-                            FlareStatus::Failed
-                        };
+                    // `set_status` refuses terminal rewrites, which is
+                    // exactly the old `!is_terminal()` guard.
+                    if r.set_status(to) {
                         r.error = Some(e.to_string());
                     }
                 });
@@ -1473,7 +1481,12 @@ impl Controller {
             job.slot.deliver(result);
         });
         if spawned.is_err() {
-            if let Some((job, placement)) = payload.lock().unwrap().take() {
+            // Take the payload *before* the `if let` so the lock guard is
+            // dropped ahead of the lower-ranked node-registry acquisition
+            // inside (if-let scrutinee temporaries live to the end of the
+            // block).
+            let recovered = payload.lock().take();
+            if let Some((job, placement)) = recovered {
                 this.nodes.release(&placement.node, &placement.packs);
                 this.settle_usage(&job.tenant, job.charged, 0.0);
                 let e = anyhow!(
@@ -1481,8 +1494,9 @@ impl Controller {
                     job.flare_id
                 );
                 this.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Failed;
-                    r.error = Some(e.to_string());
+                    if r.set_status(FlareStatus::Failed) {
+                        r.error = Some(e.to_string());
+                    }
                 });
                 this.clear_cancel(&job.flare_id);
                 // The freed capacity must reach queued flares now, not at
@@ -1506,14 +1520,15 @@ impl Controller {
             // the user bit is already on the old token (abort the requeue
             // below), or any later cancel lands on the fresh token and is
             // caught at the next placement's pre-check.
-            let mut cancels = this.cancels.lock().unwrap();
+            let mut cancels = this.cancels.lock();
             if job.cancel.user_cancelled() {
                 cancels.remove(&job.flare_id);
                 drop(cancels);
                 let e = anyhow!("flare '{}' cancelled", job.flare_id);
                 this.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Cancelled;
-                    r.error = Some(e.to_string());
+                    if r.set_status(FlareStatus::Cancelled) {
+                        r.error = Some(e.to_string());
+                    }
                 });
                 this.sched.wake();
                 job.slot.deliver(Err(e));
@@ -1527,11 +1542,12 @@ impl Controller {
         job.preempt_count += 1;
         let preempt_count = job.preempt_count;
         this.db.update_flare(&flare_id, |r| {
-            r.status = FlareStatus::Queued;
-            r.preempt_count = preempt_count;
-            r.error = None;
+            if r.set_status(FlareStatus::Queued) {
+                r.preempt_count = preempt_count;
+                r.error = None;
+            }
         });
-        this.sched.queue.lock().unwrap().requeue_preempted(job);
+        this.sched.queue.lock().requeue_preempted(job);
         this.sched.wake();
         // A user cancel can land in the swap→push window above: it finds
         // neither a queued job to remove nor an execution to unwind, only
@@ -1540,13 +1556,12 @@ impl Controller {
         // saturated cluster could postpone indefinitely. (A cancel landing
         // after the push is handled by `cancel_flare` itself: exactly one
         // side wins the queue removal.)
-        if fresh.user_cancelled()
-            && this.sched.queue.lock().unwrap().remove(&flare_id).is_some()
-        {
+        if fresh.user_cancelled() && this.sched.queue.lock().remove(&flare_id).is_some() {
             let e = anyhow!("flare '{flare_id}' cancelled");
             this.db.update_flare(&flare_id, |r| {
-                r.status = FlareStatus::Cancelled;
-                r.error = Some(e.to_string());
+                if r.set_status(FlareStatus::Cancelled) {
+                    r.error = Some(e.to_string());
+                }
             });
             this.clear_cancel(&flare_id);
             slot.deliver(Err(e));
@@ -1591,7 +1606,7 @@ impl Controller {
 
         // Modeled start-up latencies (container creation dominates, §5.1).
         let startup = {
-            let mut rng = self.rng.lock().unwrap();
+            let mut rng = self.rng.lock();
             model_startup(packs, &self.cost, job.faas, &mut rng)
         };
         let topo = PackTopology::new(
@@ -1662,9 +1677,10 @@ impl Controller {
                     queue_wait_s,
                 };
                 self.db.update_flare(&job.flare_id, |r| {
-                    r.status = FlareStatus::Completed;
-                    r.outputs = res.outputs.clone();
-                    r.metadata = res.summary_json();
+                    if r.set_status(FlareStatus::Completed) {
+                        r.outputs = res.outputs.clone();
+                        r.metadata = res.summary_json();
+                    }
                 });
                 Ok(res)
             }
@@ -1680,8 +1696,9 @@ impl Controller {
                 };
                 if let Some(status) = status {
                     self.db.update_flare(&job.flare_id, |r| {
-                        r.status = status;
-                        r.error = Some(e.to_string());
+                        if r.set_status(status) {
+                            r.error = Some(e.to_string());
+                        }
                     });
                 }
                 Err(e)
@@ -1693,7 +1710,7 @@ impl Controller {
 impl Drop for Controller {
     fn drop(&mut self) {
         self.sched.shutdown();
-        if let Some(h) = self.sched_thread.lock().unwrap().take() {
+        if let Some(h) = self.sched_thread.lock().take() {
             // The scheduler's own `Weak::upgrade` can make it the thread
             // that drops the last `Arc<Controller>`; never self-join — the
             // shutdown flag alone ends the loop.

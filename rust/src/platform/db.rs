@@ -34,6 +34,12 @@
 //! lock one at a time. Holding a shard lock while waiting on `order` is a
 //! deadlock and must never be introduced.
 //!
+//! This is no longer prose-only: every lock here is a
+//! [`RankedMutex`]/[`RankedRwLock`] (`OrderIndex < FlareShard <
+//! RecentIndex < Ckpts < Defs < WalDrain < WalQueue`) and debug builds
+//! panic on any out-of-order acquire. The crate-wide rank list lives in
+//! the **Lock taxonomy** section of [`crate::platform`]'s module docs.
+//!
 //! ## WAL ordering invariant (PR 5, preserved across shards)
 //!
 //! Every WAL entry is staged on `wal_queue` **under the mutated shard's
@@ -50,7 +56,8 @@
 //! revived it between victim selection and removal).
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, Result};
 
@@ -58,6 +65,7 @@ use super::queue::Priority;
 use super::store::DurableStore;
 use crate::bcm::{BackendKind, BurstContext, Bytes};
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex, RankedRwLock};
 
 /// Milliseconds since the Unix epoch (wall clock — survives restarts,
 /// unlike the `Instant`-based stopwatches used for queue-wait timing).
@@ -200,6 +208,27 @@ impl FlareStatus {
         )
     }
 
+    // lint: transition-table-begin
+    /// The legal status-transition table — the single source of truth,
+    /// shared by [`BurstDb::update_flare`]'s runtime check, the
+    /// [`FlareRecord::set_status`] checked mutator every caller outside
+    /// this module uses, and `xtask lint`'s static check (which parses the
+    /// arms between these markers). Self-transitions are legal (idempotent
+    /// rewrites of non-status fields ride through `update_flare`);
+    /// terminal states transition nowhere; `Running → Queued` is the
+    /// preempt-requeue path; `Expired` is reachable only from `Queued`
+    /// because the deadline is a *queueing* deadline.
+    pub fn can_transition(self, to: FlareStatus) -> bool {
+        use FlareStatus::*;
+        match (self, to) {
+            (a, b) if a == b => true,
+            (Queued, Running | Failed | Cancelled | Expired | ParentFailed) => true,
+            (Running, Completed | Failed | Cancelled | Queued) => true,
+            _ => false,
+        }
+    }
+    // lint: transition-table-end
+
     /// Inverse of [`FlareStatus::name`] (WAL replay).
     pub fn parse(s: &str) -> Option<FlareStatus> {
         Some(match s {
@@ -300,6 +329,23 @@ impl FlareRecord {
         }
     }
 
+    /// Checked status mutator: applies the transition only when the table
+    /// ([`FlareStatus::can_transition`]) allows it, returning whether it
+    /// was applied. All status writes outside `platform/db.rs` go through
+    /// here (`xtask lint` bans raw `.status =` writes elsewhere), so
+    /// tolerant call sites — a cancel racing a concurrent completion —
+    /// degrade to a no-op instead of corrupting a terminal record.
+    /// [`BurstDb::update_flare`] re-checks as a backstop and counts
+    /// anything that slips through.
+    pub fn set_status(&mut self, to: FlareStatus) -> bool {
+        if self.status.can_transition(to) {
+            self.status = to;
+            true
+        } else {
+            false
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("flare_id", Json::Str(self.flare_id.clone())),
@@ -397,19 +443,21 @@ impl FlareRecord {
     }
 }
 
-/// Process-wide registry of compiled `work` functions.
-static WORK_REGISTRY: RwLock<Option<HashMap<String, WorkFn>>> = RwLock::new(None);
+/// Process-wide registry of compiled `work` functions. A leaf lock:
+/// lookups clone the `Arc` and release immediately, acquiring nothing
+/// while held.
+static WORK_REGISTRY: RankedRwLock<Option<HashMap<String, WorkFn>>> =
+    RankedRwLock::new(LockRank::Leaf, None);
 
 /// Register a work function under a name (apps call this at setup).
 pub fn register_work(name: &str, f: WorkFn) {
-    let mut reg = WORK_REGISTRY.write().unwrap();
+    let mut reg = WORK_REGISTRY.write();
     reg.get_or_insert_with(HashMap::new).insert(name.to_string(), f);
 }
 
 pub fn lookup_work(name: &str) -> Result<WorkFn> {
     WORK_REGISTRY
         .read()
-        .unwrap()
         .as_ref()
         .and_then(|m| m.get(name).cloned())
         .ok_or_else(|| anyhow!("work function '{name}' not registered"))
@@ -418,7 +466,6 @@ pub fn lookup_work(name: &str) -> Result<WorkFn> {
 pub fn registered_work_names() -> Vec<String> {
     let mut v: Vec<String> = WORK_REGISTRY
         .read()
-        .unwrap()
         .as_ref()
         .map(|m| m.keys().cloned().collect())
         .unwrap_or_default();
@@ -457,25 +504,26 @@ struct FlareOrder {
 
 /// The platform database.
 pub struct BurstDb {
-    defs: Mutex<HashMap<String, BurstDefinition>>,
+    defs: RankedMutex<HashMap<String, BurstDefinition>>,
     /// Flare records, sharded by id hash (see the module docs): status
     /// reads take one shard's read lock and nothing else.
-    shards: [RwLock<HashMap<String, FlareRecord>>; FLARE_SHARDS],
+    shards: [RankedRwLock<HashMap<String, FlareRecord>>; FLARE_SHARDS],
     /// Submission order + retention state (for `list_flares`, newest
     /// first). Lock order: a shard lock is always *released* before this
-    /// is taken; eviction (under this lock) may take shard locks.
-    order: RwLock<FlareOrder>,
+    /// is taken; eviction (under this lock) may take shard locks —
+    /// which is why `OrderIndex` ranks *below* `FlareShard`.
+    order: RankedRwLock<FlareOrder>,
     /// Newest-submitted ids, bounded by [`RECENT_LISTING_CAP`]: the
     /// listing path snapshots its tail under this one brief mutex instead
     /// of scanning the `order` index that every submit and terminal
     /// transition mutates — `GET /v1/flares` can no longer stall the
-    /// submit hot path (and vice versa). A leaf lock: never held while
-    /// taking any other db lock.
-    recent: Mutex<VecDeque<String>>,
+    /// submit hot path (and vice versa). Never held while taking any
+    /// other db lock.
+    recent: RankedMutex<VecDeque<String>>,
     /// Worker checkpoints of live flares, by flare id (dropped when the
     /// flare goes terminal). Lock order: shard → `ckpts`; never the
     /// reverse.
-    ckpts: Mutex<HashMap<String, FlareCheckpoints>>,
+    ckpts: RankedMutex<HashMap<String, FlareCheckpoints>>,
     /// Retention cap on terminal records (oldest evicted first); live
     /// (queued/running) records never count against it.
     retain_terminal: usize,
@@ -490,10 +538,13 @@ pub struct BurstDb {
     /// or a snapshot compaction.
     store: OnceLock<Arc<DurableStore>>,
     /// Sequenced WAL items awaiting append, in db-mutation order.
-    wal_queue: Mutex<VecDeque<WalItem>>,
+    wal_queue: RankedMutex<VecDeque<WalItem>>,
     /// Single-drainer gate: held across the pop→append loop so two
     /// concurrent drains cannot reorder entries between queue and disk.
-    wal_drain: Mutex<()>,
+    wal_drain: RankedMutex<()>,
+    /// Status transitions rejected by the legal-transition table
+    /// (exported as `illegal_transitions_total` in `/metrics`).
+    illegal_transitions: AtomicU64,
 }
 
 /// One staged unit of durable work. Checkpoints stay a separate variant so
@@ -519,15 +570,18 @@ impl BurstDb {
     /// A database keeping at most `retain_terminal` terminal flare records.
     pub fn with_retention(retain_terminal: usize) -> BurstDb {
         BurstDb {
-            defs: Mutex::new(HashMap::new()),
-            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
-            order: RwLock::new(FlareOrder::default()),
-            recent: Mutex::new(VecDeque::new()),
-            ckpts: Mutex::new(HashMap::new()),
+            defs: RankedMutex::new(LockRank::Defs, HashMap::new()),
+            shards: std::array::from_fn(|_| {
+                RankedRwLock::new(LockRank::FlareShard, HashMap::new())
+            }),
+            order: RankedRwLock::new(LockRank::OrderIndex, FlareOrder::default()),
+            recent: RankedMutex::new(LockRank::RecentIndex, VecDeque::new()),
+            ckpts: RankedMutex::new(LockRank::Ckpts, HashMap::new()),
             retain_terminal,
             store: OnceLock::new(),
-            wal_queue: Mutex::new(VecDeque::new()),
-            wal_drain: Mutex::new(()),
+            wal_queue: RankedMutex::new(LockRank::WalQueue, VecDeque::new()),
+            wal_drain: RankedMutex::new(LockRank::WalDrain, ()),
+            illegal_transitions: AtomicU64::new(0),
         }
     }
 
@@ -541,7 +595,7 @@ impl BurstDb {
     }
 
     /// The shard holding a flare id.
-    fn shard(&self, id: &str) -> &RwLock<HashMap<String, FlareRecord>> {
+    fn shard(&self, id: &str) -> &RankedRwLock<HashMap<String, FlareRecord>> {
         &self.shards[Self::shard_idx(id)]
     }
 
@@ -567,7 +621,7 @@ impl BurstDb {
 
     fn stage_item(&self, item: WalItem) {
         if self.store.get().is_some() {
-            self.wal_queue.lock().unwrap().push_back(item);
+            self.wal_queue.lock().push_back(item);
         }
     }
 
@@ -577,9 +631,9 @@ impl BurstDb {
     /// control plane down.
     fn drain_wal(&self) {
         let Some(store) = self.store.get() else { return };
-        let _drainer = self.wal_drain.lock().unwrap();
+        let _drainer = self.wal_drain.lock();
         loop {
-            let item = self.wal_queue.lock().unwrap().pop_front();
+            let item = self.wal_queue.lock().pop_front();
             let Some(item) = item else { return };
             let r = match item {
                 WalItem::Entry(entry) => store.append_entry(entry),
@@ -610,7 +664,7 @@ impl BurstDb {
             if excess == 0 || !terminal.contains(id) {
                 return true;
             }
-            let mut shard = self.shards[Self::shard_idx(id)].write().unwrap();
+            let mut shard = self.shards[Self::shard_idx(id)].write();
             match shard.get(id).map(|r| r.status.is_terminal()) {
                 Some(true) => {
                     shard.remove(id);
@@ -641,14 +695,14 @@ impl BurstDb {
     /// Record a mutated id's order/retention state and run eviction if it
     /// is (or just became) terminal. Called with no shard lock held.
     fn note_in_order(&self, id: &str, terminal: bool) {
-        let mut st = self.order.write().unwrap();
+        let mut st = self.order.write();
         if !st.present.contains(id) {
             st.present.insert(id.to_string());
             st.order.push(id.to_string());
             // First sighting: also enters the bounded listing ring. Held
             // nested under `order` only to keep ring order == submit
             // order; nothing else is ever taken under `recent`.
-            let mut recent = self.recent.lock().unwrap();
+            let mut recent = self.recent.lock();
             recent.push_back(id.to_string());
             while recent.len() > RECENT_LISTING_CAP {
                 recent.pop_front();
@@ -670,7 +724,7 @@ impl BurstDb {
             // mutations): concurrent re-deploys of one name must reach
             // the WAL in the order their in-memory inserts won, or a
             // restart would silently serve the loser's definition.
-            let mut defs = self.defs.lock().unwrap();
+            let mut defs = self.defs.lock();
             self.stage_entry(DurableStore::entry_def(&def.name, &def.work_name, &def.conf));
             defs.insert(def.name.clone(), def);
         }
@@ -681,18 +735,22 @@ impl BurstDb {
     pub fn get_def(&self, name: &str) -> Result<BurstDefinition> {
         self.defs
             .lock()
-            .unwrap()
             .get(name)
             .cloned()
             .ok_or_else(|| anyhow!("burst definition '{name}' not found"))
     }
 
     pub fn list_defs(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.defs.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = self.defs.lock().keys().cloned().collect();
         v.sort();
         v
     }
 
+    /// Insert (or fully overwrite) a flare record. Deliberately *not*
+    /// checked against the transition table: this is the WAL-replay /
+    /// re-put primitive, and recovery must be able to land any persisted
+    /// state. Incremental mutations go through [`BurstDb::update_flare`],
+    /// which is checked.
     pub fn put_flare(&self, rec: FlareRecord) {
         let mut rec = rec;
         let terminal = rec.status.is_terminal();
@@ -705,7 +763,7 @@ impl BurstDb {
         let id = rec.flare_id.clone();
         let rec_json = rec.to_json();
         {
-            let mut shard = self.shard(&id).write().unwrap();
+            let mut shard = self.shard(&id).write();
             shard.insert(id.clone(), rec);
             // Staged under the shard lock: per-id WAL order == per-id
             // mutation order (see the module docs).
@@ -723,17 +781,26 @@ impl BurstDb {
     /// neither with reads of other flares nor with mutations in other
     /// shards.
     pub fn get_flare(&self, id: &str) -> Option<FlareRecord> {
-        self.shard(id).read().unwrap().get(id).cloned()
+        self.shard(id).read().get(id).cloned()
     }
 
     /// Apply a mutation to an existing flare record (status transitions,
     /// attaching outputs). Returns whether the id was found — an unknown
     /// id used to be a *silent* no-op, which let recovery and cancel races
     /// hide lost updates; now it reports `false` (and warns once).
+    ///
+    /// Status changes are checked against [`FlareStatus::can_transition`]:
+    /// an illegal transition is rejected — the previous status is restored
+    /// (the closure's other field mutations stand), the rejection counted
+    /// for `/metrics` — and, when the record was *not* already terminal, a
+    /// `debug_assert!` trips so tests catch the buggy caller. Illegal
+    /// writes against an already-terminal record are rejected without
+    /// asserting: a late cancel racing a concurrent completion is a benign
+    /// straggler, not a caller bug.
     pub fn update_flare(&self, id: &str, f: impl FnOnce(&mut FlareRecord)) -> bool {
         let became_terminal;
         {
-            let mut shard = self.shard(id).write().unwrap();
+            let mut shard = self.shard(id).write();
             let Some(rec) = shard.get_mut(id) else {
                 static WARNED: std::sync::Once = std::sync::Once::new();
                 WARNED.call_once(|| {
@@ -744,7 +811,22 @@ impl BurstDb {
                 });
                 return false;
             };
+            let prev = rec.status;
             f(rec);
+            if !prev.can_transition(rec.status) {
+                let attempted = rec.status;
+                rec.status = prev;
+                self.illegal_transitions.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "burstc: illegal flare transition {} -> {} rejected for '{id}'",
+                    prev.name(),
+                    attempted.name()
+                );
+                debug_assert!(
+                    prev.is_terminal(),
+                    "illegal flare transition {prev:?} -> {attempted:?} for '{id}'"
+                );
+            }
             became_terminal = rec.status.is_terminal();
             if became_terminal {
                 rec.spec = None;
@@ -766,7 +848,15 @@ impl BurstDb {
     }
 
     pub fn set_flare_status(&self, id: &str, status: FlareStatus) -> bool {
+        // A raw status write on purpose: `update_flare` is the layer that
+        // checks the transition table (and counts what it rejects).
         self.update_flare(id, |r| r.status = status)
+    }
+
+    /// Number of status transitions rejected by the legal-transition
+    /// table since startup (`illegal_transitions_total` in `/metrics`).
+    pub fn illegal_transitions(&self) -> u64 {
+        self.illegal_transitions.load(Ordering::Relaxed)
     }
 
     // --- worker checkpoints (checkpoint/resume) ---
@@ -785,14 +875,14 @@ impl BurstDb {
             // `drop_checkpoints` entry always lands after this checkpoint
             // entry, and a straggler arriving after the transition sees
             // the terminal status and is dropped.
-            let shard = self.shard(flare_id).read().unwrap();
+            let shard = self.shard(flare_id).read();
             let live = shard
                 .get(flare_id)
                 .is_some_and(|r| !r.status.is_terminal());
             if !live {
                 return;
             }
-            let mut ckpts = self.ckpts.lock().unwrap();
+            let mut ckpts = self.ckpts.lock();
             let slot = ckpts.entry(flare_id.to_string()).or_default();
             slot.epoch = slot.epoch.max(epoch);
             // Staging is a pointer push: the payload rides as an `Arc`
@@ -814,19 +904,14 @@ impl BurstDb {
     /// The latest worker checkpoints of a flare (empty when it has none).
     /// Payloads are `Arc`s, so this clones pointers, not data.
     pub fn checkpoints_for(&self, flare_id: &str) -> FlareCheckpoints {
-        self.ckpts
-            .lock()
-            .unwrap()
-            .get(flare_id)
-            .cloned()
-            .unwrap_or_default()
+        self.ckpts.lock().get(flare_id).cloned().unwrap_or_default()
     }
 
     /// Drop a flare's checkpoints and stage the WAL drop entry. Called
     /// with the flare's shard *write* lock held, on every terminal
     /// transition (lock order: shard → `ckpts`).
     fn drop_checkpoints_locked(&self, flare_id: &str) {
-        if self.ckpts.lock().unwrap().remove(flare_id).is_some() {
+        if self.ckpts.lock().remove(flare_id).is_some() {
             self.stage_entry(DurableStore::entry_drop_checkpoints(flare_id));
         }
     }
@@ -849,14 +934,13 @@ impl BurstDb {
         limit: usize,
     ) -> Vec<(String, String, FlareStatus)> {
         let ids: Vec<String> = {
-            let recent = self.recent.lock().unwrap();
+            let recent = self.recent.lock();
             recent.iter().rev().take(limit).cloned().collect()
         };
         ids.iter()
             .filter_map(|id| {
                 self.shard(id)
                     .read()
-                    .unwrap()
                     .get(id)
                     .map(|r| (r.flare_id.clone(), r.def_name.clone(), r.status))
             })
@@ -867,6 +951,7 @@ impl BurstDb {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     fn noop() -> WorkFn {
         Arc::new(|_p, _ctx| Ok(Json::Null))
@@ -1119,6 +1204,7 @@ mod tests {
         assert_eq!(c.by_worker[&3].as_slice(), &[9u8][..]);
         assert_eq!(c.total_bytes(), 3);
         // A terminal transition discards the flare's checkpoints...
+        db.set_flare_status("f1", FlareStatus::Running);
         db.set_flare_status("f1", FlareStatus::Completed);
         assert!(db.checkpoints_for("f1").by_worker.is_empty());
         // ...and a straggler checkpoint cannot resurrect them.
@@ -1177,11 +1263,14 @@ mod tests {
         for i in 0..6 {
             db.put_flare(queued(&format!("f{i}")));
         }
-        // f0 stays queued, f1 runs forever; f2..f5 reach terminal states.
+        // f0 stays queued, f1 runs forever; f2..f5 reach terminal states
+        // (completions pass through Running — the transition table holds).
         db.set_flare_status("f1", FlareStatus::Running);
+        db.set_flare_status("f2", FlareStatus::Running);
         db.set_flare_status("f2", FlareStatus::Completed);
         db.set_flare_status("f3", FlareStatus::Failed);
         db.set_flare_status("f4", FlareStatus::Cancelled);
+        db.set_flare_status("f5", FlareStatus::Running);
         db.set_flare_status("f5", FlareStatus::Completed);
         // Cap 2: the two oldest terminal records (f2, f3) were evicted the
         // moment f4/f5 went terminal; live records are untouched.
@@ -1270,5 +1359,75 @@ mod tests {
         }
         writer.join().unwrap();
         assert_eq!(db.get_flare(&wid).unwrap().status, FlareStatus::Running);
+    }
+
+    #[test]
+    fn transition_table_legal_and_illegal() {
+        use FlareStatus::*;
+        // Legal paths.
+        assert!(Queued.can_transition(Running));
+        assert!(Queued.can_transition(Expired));
+        assert!(Queued.can_transition(ParentFailed));
+        assert!(Running.can_transition(Completed));
+        assert!(Running.can_transition(Queued)); // preempt-requeue
+        assert!(Completed.can_transition(Completed)); // idempotent rewrite
+        // Illegal paths.
+        assert!(!Queued.can_transition(Completed)); // skips Running
+        assert!(!Running.can_transition(Expired)); // deadline is queue-only
+        assert!(!Completed.can_transition(Running)); // terminal -> live
+        assert!(!Completed.can_transition(Failed)); // terminal -> terminal
+        assert!(!Expired.can_transition(Queued));
+        // Terminal states transition nowhere but themselves.
+        for from in [Completed, Failed, Cancelled, Expired, ParentFailed] {
+            for to in [Queued, Running, Completed, Failed, Cancelled] {
+                assert_eq!(from.can_transition(to), from == to, "{from:?}->{to:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_status_applies_only_legal_transitions() {
+        let mut rec = queued("cs-1");
+        assert!(rec.set_status(FlareStatus::Running));
+        assert!(!rec.set_status(FlareStatus::Expired));
+        assert_eq!(rec.status, FlareStatus::Running);
+        assert!(rec.set_status(FlareStatus::Completed));
+        assert!(!rec.set_status(FlareStatus::Queued));
+        assert_eq!(rec.status, FlareStatus::Completed);
+    }
+
+    #[test]
+    fn update_flare_rejects_terminal_rewrites() {
+        let db = BurstDb::new();
+        db.put_flare(queued("t1"));
+        db.set_flare_status("t1", FlareStatus::Running);
+        db.set_flare_status("t1", FlareStatus::Completed);
+        assert_eq!(db.illegal_transitions(), 0);
+        // A straggler cancel after completion: rejected and counted, but
+        // no assert — the record was already terminal (benign race).
+        assert!(db.set_flare_status("t1", FlareStatus::Cancelled));
+        assert_eq!(db.get_flare("t1").unwrap().status, FlareStatus::Completed);
+        assert_eq!(db.illegal_transitions(), 1);
+        // Terminal -> non-terminal is rejected the same way.
+        assert!(db.set_flare_status("t1", FlareStatus::Queued));
+        assert_eq!(db.get_flare("t1").unwrap().status, FlareStatus::Completed);
+        assert_eq!(db.illegal_transitions(), 2);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn update_flare_asserts_on_live_record_violations() {
+        let db = BurstDb::new();
+        db.put_flare(queued("live-1"));
+        // Queued -> Completed without Running is a caller bug: the
+        // debug_assert trips so tests catch it. (The panic poisons the
+        // record's shard; this throwaway db is not touched afterwards.)
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            db.set_flare_status("live-1", FlareStatus::Completed);
+        }));
+        let err = r.expect_err("Queued -> Completed must trip the debug_assert");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("illegal flare transition"), "{msg}");
+        assert_eq!(db.illegal_transitions(), 1);
     }
 }

@@ -6,30 +6,32 @@
 //! limited concurrency, so more packs ⇒ longer, more dispersed start-up —
 //! exactly the granularity effect of Fig. 5.
 
-use std::sync::Mutex;
-
 use anyhow::{anyhow, Result};
 
 use super::packing::PackSpec;
 use crate::cluster::costmodel::CostModel;
 use crate::cluster::ClusterSpec;
 use crate::util::rng::Pcg;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Tracked free capacity per invoker.
 pub struct InvokerPool {
-    free: Mutex<Vec<usize>>,
+    free: RankedMutex<Vec<usize>>,
     total: Vec<usize>,
 }
 
 impl InvokerPool {
     pub fn new(cluster: &ClusterSpec) -> InvokerPool {
         let caps: Vec<usize> = cluster.machines.iter().map(|m| m.vcpus).collect();
-        InvokerPool { free: Mutex::new(caps.clone()), total: caps }
+        InvokerPool {
+            free: RankedMutex::new(LockRank::PoolFree, caps.clone()),
+            total: caps,
+        }
     }
 
     /// Snapshot of free vCPUs (the controller's load view).
     pub fn free_vcpus(&self) -> Vec<usize> {
-        self.free.lock().unwrap().clone()
+        self.free.lock().clone()
     }
 
     /// Per-invoker total capacity (the idle-cluster view, used by submit-time
@@ -46,7 +48,7 @@ impl InvokerPool {
 
     /// Atomically reserve the capacity for a pack plan.
     pub fn reserve(&self, packs: &[PackSpec]) -> Result<()> {
-        let mut free = self.free.lock().unwrap();
+        let mut free = self.free.lock();
         // Validate first, then commit.
         let mut needed = vec![0usize; free.len()];
         for p in packs {
@@ -67,7 +69,7 @@ impl InvokerPool {
     }
 
     pub fn release(&self, packs: &[PackSpec]) {
-        let mut free = self.free.lock().unwrap();
+        let mut free = self.free.lock();
         for p in packs {
             free[p.invoker_id] += p.vcpus();
             debug_assert!(free[p.invoker_id] <= self.total[p.invoker_id]);

@@ -123,8 +123,8 @@
 //!   eviction; a status read takes a single shard's read lock, so reads
 //!   scale with polling clients and never stall behind an unrelated
 //!   writer. WAL entries are still staged under the mutated shard's lock
-//!   (per-id order is all replay needs — see [`db`]'s module docs for the
-//!   lock hierarchy and ordering invariant).
+//!   (per-id order is all replay needs — see the **Lock taxonomy**
+//!   section below and [`db`]'s module docs for the ordering invariant).
 //!
 //! ```text
 //!   submit ──▶ inbox (one mutex push) ─┐        status poll
@@ -211,6 +211,61 @@
 //! `POST /v1/flare` remains for simple clients, handed off to a small
 //! blocking pool, capped below that pool's size, and waiting
 //! interruptibly so server shutdown stays bounded.
+//!
+//! # Lock taxonomy
+//!
+//! This section is the **authoritative** lock-ordering reference for the
+//! whole crate (PR 10); the prose notes that used to live per-module all
+//! point here. Every long-lived `Mutex`/`RwLock` is a
+//! [`crate::util::sync::RankedMutex`] / [`crate::util::sync::RankedRwLock`]
+//! carrying one of the [`crate::util::sync::LockRank`]s below (`xtask
+//! lint` rejects raw locks), and a thread may only acquire a rank **≥**
+//! every rank it already holds — debug builds enforce this at runtime and
+//! accumulate the observed order graph (`tests/lock_order.rs` asserts it
+//! stays acyclic). Equal ranks guard parallel, disjoint instances (db
+//! shards, per-node pools, per-worker mailboxes) and never acquire
+//! siblings. Outermost (lowest level) first:
+//!
+//! | rank (level) | owner module | guards |
+//! |---|---|---|
+//! | `TimingTest` (0) | `util/timing.rs` | wall-clock test serialization; held across whole tests, so outermost |
+//! | `Inbox` (10) | `platform/queue.rs` | scheduler submit inbox (batched admission) |
+//! | `WaitMarked` (15) | `platform/controller.rs` | flares parked with a wait reason |
+//! | `Cancels` (20) | `platform/controller.rs` | live cancel-token map |
+//! | `Running` (25) | `platform/controller.rs` | running-flare registry |
+//! | `SchedQueue` (30) | `platform/queue.rs` | the DRR queue (the scheduler condvar's mutex) |
+//! | `NodesMap` (35) | `platform/node.rs` | `NodeRegistry` node map |
+//! | `WarmInvokers` (40) | `platform/node.rs` | `NodeAgent` warm-invoker set |
+//! | `PoolFree` (45) | `platform/invoker.rs` | `InvokerPool` free list (per node) |
+//! | `OrderIndex` (50) | `platform/db.rs` | flare order index |
+//! | `FlareShard` (55) | `platform/db.rs` | flare record shards (parallel instances) |
+//! | `RecentIndex` (60) | `platform/db.rs` | recent-terminal ring |
+//! | `Ckpts` (65) | `platform/db.rs` | checkpoint payloads |
+//! | `Defs` (70) | `platform/db.rs` | burst definitions |
+//! | `WalDrain` (75) | `platform/db.rs` | WAL drain serialization |
+//! | `WalQueue` (80) | `platform/db.rs` | WAL staging queue |
+//! | `StoreFlusher` (82) | `platform/store.rs` | flusher-thread handle |
+//! | `StoreStop` (83) | `platform/store.rs` | flusher stop flag (its condvar's mutex) |
+//! | `StoreInner` (85) | `platform/store.rs` | durable store state (held across file IO) |
+//! | `BackendRegistered` (90) | `bcm/backend.rs` | per-token registered cancel wakers |
+//! | `TokenWakers` (95) | `util/cancel.rs` | cancel-token waker list |
+//! | `MailboxInner` (100) | `bcm/mailbox.rs` | mailbox state (its condvar's mutex; per worker) |
+//! | `KvExecutor` (105) | `bcm/backends/kv.rs` | per-shard executor serialization |
+//! | `BackendStore` (110) | `bcm/backends/{kv,rabbitmq,s3}.rs` | backend store (condvar mutex) |
+//! | `ResultSlot` (115) | `platform/queue.rs` | per-flare result slot (its condvar's mutex) |
+//! | `Leaf` (120) | crate-wide | innermost never-nesting locks: token buckets, timelines, the object store, fabric scratch, the engine pool, RNGs |
+//!
+//! Load-bearing edges the numbering encodes: the scheduler walks
+//! `Inbox → SchedQueue → NodesMap → PoolFree → FlareShard` (admission,
+//! placement, then the status write); every db mutation stages its WAL
+//! entry `FlareShard → WalQueue` *under* the shard lock (per-id replay
+//! order — `xtask lint` keeps the staging fns private to `db.rs`);
+//! cancellation fans out `Cancels → TokenWakers → MailboxInner` (trip the
+//! token, snapshot wakers, wake blocked collectives); and the store
+//! flusher drains `WalQueue → StoreInner` off the hot path. Numeric gaps
+//! are deliberate — new ranks slot in without renumbering. Poisoning
+//! policy (propagate on mutation paths, recover-and-log on read paths)
+//! lives with the wrappers in [`crate::util::sync`].
 
 pub mod controller;
 pub mod db;

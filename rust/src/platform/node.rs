@@ -24,7 +24,7 @@
 
 use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -33,6 +33,7 @@ use super::invoker::InvokerPool;
 use super::packing::{plan, PackSpec, PackingStrategy};
 use super::queue::{place_with_spillback, QueuedFlare, SPILLBACK_RETRIES};
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Node name used by the single-node constructors (`Controller::new`).
 pub const DEFAULT_NODE: &str = "node-0";
@@ -117,7 +118,7 @@ pub struct NodeAgent {
     /// registry and is eventually declared dead.
     heartbeats: AtomicBool,
     /// Invoker ids that have hosted at least one pack (warm).
-    warm_invokers: Mutex<HashSet<usize>>,
+    warm_invokers: RankedMutex<HashSet<usize>>,
 }
 
 impl NodeAgent {
@@ -131,7 +132,7 @@ impl NodeAgent {
             warm_starts: AtomicU64::new(0),
             refusals: AtomicU64::new(0),
             heartbeats: AtomicBool::new(true),
-            warm_invokers: Mutex::new(HashSet::new()),
+            warm_invokers: RankedMutex::new(LockRank::WarmInvokers, HashSet::new()),
         }
     }
 
@@ -168,7 +169,7 @@ impl NodeAgent {
             self.refusals.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!("node '{}' refused placement: {e}", self.name));
         }
-        let mut warm = self.warm_invokers.lock().unwrap();
+        let mut warm = self.warm_invokers.lock();
         for p in packs {
             if warm.insert(p.invoker_id) {
                 self.cold_starts.fetch_add(1, Ordering::Relaxed);
@@ -292,8 +293,8 @@ type Clock = Arc<dyn Fn() -> u64 + Send + Sync>;
 /// liveness, their approximate resource views, and the placement engine
 /// over them (see the module docs for the scoring model).
 pub struct NodeRegistry {
-    nodes: Mutex<BTreeMap<String, NodeEntry>>,
-    clock: Mutex<Clock>,
+    nodes: RankedMutex<BTreeMap<String, NodeEntry>>,
+    clock: RankedMutex<Clock>,
     heartbeat_interval_ms: AtomicU64,
     miss_budget: AtomicU32,
     spillbacks: AtomicU64,
@@ -312,8 +313,11 @@ impl NodeRegistry {
     pub fn new() -> NodeRegistry {
         let anchor = Instant::now();
         NodeRegistry {
-            nodes: Mutex::new(BTreeMap::new()),
-            clock: Mutex::new(Arc::new(move || anchor.elapsed().as_millis() as u64)),
+            nodes: RankedMutex::new(LockRank::NodesMap, BTreeMap::new()),
+            clock: RankedMutex::new(
+                LockRank::Leaf,
+                Arc::new(move || anchor.elapsed().as_millis() as u64) as Clock,
+            ),
             heartbeat_interval_ms: AtomicU64::new(DEFAULT_HEARTBEAT_INTERVAL_MS),
             miss_budget: AtomicU32::new(DEFAULT_HEARTBEAT_MISS_BUDGET),
             spillbacks: AtomicU64::new(0),
@@ -330,7 +334,7 @@ impl NodeRegistry {
         let agent = Arc::new(NodeAgent::new(name, pool));
         let view = agent.free_vcpus();
         let now = self.now_ms();
-        self.nodes.lock().unwrap().insert(
+        self.nodes.lock().insert(
             name.to_string(),
             NodeEntry { agent: agent.clone(), view, last_heartbeat_ms: now, alive: true },
         );
@@ -339,11 +343,12 @@ impl NodeRegistry {
 
     /// Swap the clock heartbeat aging is measured against (tests pin it).
     pub fn set_clock(&self, clock: Clock) {
-        *self.clock.lock().unwrap() = clock;
+        *self.clock.lock() = clock;
     }
 
     pub fn now_ms(&self) -> u64 {
-        (self.clock.lock().unwrap())()
+        let clock = self.clock.lock().clone();
+        clock()
     }
 
     /// Tune liveness: heartbeat interval and miss budget.
@@ -368,7 +373,7 @@ impl NodeRegistry {
     pub fn pulse(&self) {
         let now = self.now_ms();
         let interval = self.heartbeat_interval_ms();
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = self.nodes.lock();
         for entry in nodes.values_mut() {
             if !entry.agent.heartbeating() {
                 continue;
@@ -388,7 +393,7 @@ impl NodeRegistry {
         let now = self.now_ms();
         let cutoff = self.heartbeat_interval_ms() * self.miss_budget() as u64;
         let mut newly_dead = Vec::new();
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = self.nodes.lock();
         for (name, entry) in nodes.iter_mut() {
             if entry.alive && now.saturating_sub(entry.last_heartbeat_ms) > cutoff {
                 entry.alive = false;
@@ -404,7 +409,8 @@ impl NodeRegistry {
     /// it to inject a deliberately stale view and open the race window.
     pub fn ingest_view(&self, name: &str, view: Vec<usize>) {
         let now = self.now_ms();
-        if let Some(entry) = self.nodes.lock().unwrap().get_mut(name) {
+        let mut nodes = self.nodes.lock();
+        if let Some(entry) = nodes.get_mut(name) {
             entry.view = view;
             entry.last_heartbeat_ms = now;
             entry.alive = true;
@@ -416,7 +422,7 @@ impl NodeRegistry {
     /// (the heartbeat interval only bounds *staleness*, not release
     /// visibility in-process).
     pub fn release(&self, name: &str, packs: &[PackSpec]) {
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = self.nodes.lock();
         if let Some(entry) = nodes.get_mut(name) {
             entry.agent.release_packs(packs);
             entry.view = entry.agent.free_vcpus();
@@ -424,15 +430,15 @@ impl NodeRegistry {
     }
 
     pub fn agent(&self, name: &str) -> Option<Arc<NodeAgent>> {
-        self.nodes.lock().unwrap().get(name).map(|e| e.agent.clone())
+        self.nodes.lock().get(name).map(|e| e.agent.clone())
     }
 
     pub fn has_node(&self, name: &str) -> bool {
-        self.nodes.lock().unwrap().contains_key(name)
+        self.nodes.lock().contains_key(name)
     }
 
     pub fn node_names(&self) -> Vec<String> {
-        self.nodes.lock().unwrap().keys().cloned().collect()
+        self.nodes.lock().keys().cloned().collect()
     }
 
     /// Largest single-node capacity: the admission bound for one flare
@@ -440,7 +446,6 @@ impl NodeRegistry {
     pub fn max_node_capacity(&self) -> usize {
         self.nodes
             .lock()
-            .unwrap()
             .values()
             .map(|e| e.agent.total_vcpus().iter().sum())
             .max()
@@ -450,7 +455,7 @@ impl NodeRegistry {
     /// Submit-time feasibility: can *some* node host this shape on an idle
     /// cluster? Returns the last node's planning error when none can.
     pub fn plan_check(&self, strategy: PackingStrategy, burst_size: usize) -> Result<()> {
-        let nodes = self.nodes.lock().unwrap();
+        let nodes = self.nodes.lock();
         let mut last_err = anyhow!("no nodes registered");
         for entry in nodes.values() {
             match plan(strategy, burst_size, entry.agent.total_vcpus()) {
@@ -465,7 +470,6 @@ impl NodeRegistry {
         let now = self.now_ms();
         self.nodes
             .lock()
-            .unwrap()
             .iter()
             .map(|(name, e)| NodeStatus {
                 name: name.clone(),
@@ -484,7 +488,7 @@ impl NodeRegistry {
     }
 
     pub fn alive_count(&self) -> (usize, usize) {
-        let nodes = self.nodes.lock().unwrap();
+        let nodes = self.nodes.lock();
         let alive = nodes.values().filter(|e| e.alive).count();
         (alive, nodes.len() - alive)
     }
@@ -558,7 +562,6 @@ impl Placer for NodeRegistry {
     fn total_free(&self) -> usize {
         self.nodes
             .lock()
-            .unwrap()
             .values()
             .filter(|e| e.alive)
             .map(|e| e.view.iter().sum::<usize>())
@@ -581,7 +584,7 @@ impl Placer for NodeRegistry {
             // the node's pool lock and must not nest inside ours).
             let mut best: Option<(String, Arc<NodeAgent>, f64, Vec<PackSpec>)> = None;
             {
-                let mut nodes = self.nodes.lock().unwrap();
+                let mut nodes = self.nodes.lock();
                 for (name, entry) in nodes.iter() {
                     if refused.contains(name) {
                         continue; // reject reason already logged
@@ -676,7 +679,7 @@ impl Placer for NodeRegistry {
                             ("reject", Json::Str(format!("refused placement: {e}"))),
                         ]),
                     );
-                    let mut nodes = self.nodes.lock().unwrap();
+                    let mut nodes = self.nodes.lock();
                     if let Some(entry) = nodes.get_mut(&name) {
                         entry.view = entry.agent.free_vcpus();
                     }
@@ -819,7 +822,7 @@ mod tests {
             capped.set_max_concurrent(Some(0));
             let view = capped.free_vcpus();
             let now = reg.now_ms();
-            reg.nodes.lock().unwrap().insert(
+            reg.nodes.lock().insert(
                 "node-a".into(),
                 NodeEntry {
                     agent: Arc::new(capped),

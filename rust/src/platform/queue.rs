@@ -54,7 +54,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Condvar, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -67,6 +67,7 @@ use super::packing::{plan, PackSpec, PackingStrategy};
 use crate::bcm::BackendKind;
 use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex};
 use crate::util::timing::Stopwatch;
 
 /// How often a blocked flare may be passed by backfilled smaller flares
@@ -180,27 +181,30 @@ pub struct QueuedFlare {
 
 /// One-shot result mailbox shared by the execution thread and the waiter.
 pub(crate) struct ResultSlot {
-    result: Mutex<Option<Result<FlareResult>>>,
+    result: RankedMutex<Option<Result<FlareResult>>>,
     cv: Condvar,
 }
 
 impl ResultSlot {
     pub(crate) fn new() -> ResultSlot {
-        ResultSlot { result: Mutex::new(None), cv: Condvar::new() }
+        ResultSlot {
+            result: RankedMutex::new(LockRank::ResultSlot, None),
+            cv: Condvar::new(),
+        }
     }
 
     pub(crate) fn deliver(&self, r: Result<FlareResult>) {
-        *self.result.lock().unwrap() = Some(r);
+        *self.result.lock() = Some(r);
         self.cv.notify_all();
     }
 
     fn wait_take(&self) -> Result<FlareResult> {
-        let mut guard = self.result.lock().unwrap();
+        let mut guard = self.result.lock();
         loop {
             if let Some(r) = guard.take() {
                 return r;
             }
-            guard = self.cv.wait(guard).unwrap();
+            guard = guard.wait(&self.cv);
         }
     }
 
@@ -208,7 +212,7 @@ impl ResultSlot {
     /// arrives later) for a subsequent wait.
     fn wait_take_timeout(&self, timeout: Duration) -> Option<Result<FlareResult>> {
         let deadline = Instant::now() + timeout;
-        let mut guard = self.result.lock().unwrap();
+        let mut guard = self.result.lock();
         loop {
             if let Some(r) = guard.take() {
                 return Some(r);
@@ -217,13 +221,13 @@ impl ResultSlot {
             if now >= deadline {
                 return None;
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = guard.wait_timeout(&self.cv, deadline - now);
             guard = g;
         }
     }
 
     fn is_done(&self) -> bool {
-        self.result.lock().unwrap().is_some()
+        self.result.lock().is_some()
     }
 }
 
@@ -913,7 +917,7 @@ impl FlareQueue {
 /// State shared between the controller, the scheduler thread, and the
 /// per-flare execution threads.
 pub(crate) struct SchedState {
-    pub(crate) queue: Mutex<FlareQueue>,
+    pub(crate) queue: RankedMutex<FlareQueue>,
     /// Batched-admission inbox: `submit_flare` appends here (a short,
     /// uncontended push) instead of taking the big queue lock — the
     /// scheduler adopts the whole batch at the start of its next pass
@@ -921,7 +925,7 @@ pub(crate) struct SchedState {
     /// priority, quota, and preemption semantics are untouched. Recovery
     /// and preempt-requeue bypass the inbox (the scheduler is paused /
     /// the job re-enters at the head of its lane).
-    pub(crate) inbox: Mutex<Vec<QueuedFlare>>,
+    pub(crate) inbox: RankedMutex<Vec<QueuedFlare>>,
     cv: Condvar,
     /// Set by `wake` so a notification between scheduling passes is never
     /// lost (the scheduler re-checks before sleeping).
@@ -943,8 +947,11 @@ pub(crate) struct SchedState {
 impl SchedState {
     pub(crate) fn new(max_backfill_passes: u32) -> Arc<SchedState> {
         Arc::new(SchedState {
-            queue: Mutex::new(FlareQueue::new(max_backfill_passes)),
-            inbox: Mutex::new(Vec::new()),
+            queue: RankedMutex::new(
+                LockRank::SchedQueue,
+                FlareQueue::new(max_backfill_passes),
+            ),
+            inbox: RankedMutex::new(LockRank::Inbox, Vec::new()),
             cv: Condvar::new(),
             dirty: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
@@ -990,20 +997,8 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // On the panic path the queue mutex may be poisoned (the panic
             // can originate under the lock); recover the inner state — a
             // second panic here would abort the process.
-            let mut leftovers = std::mem::take(
-                &mut *self
-                    .0
-                    .inbox
-                    .lock()
-                    .unwrap_or_else(|poisoned| poisoned.into_inner()),
-            );
-            leftovers.extend(
-                self.0
-                    .queue
-                    .lock()
-                    .unwrap_or_else(|poisoned| poisoned.into_inner())
-                    .drain(),
-            );
+            let mut leftovers = std::mem::take(&mut *self.0.inbox.lock_recover());
+            leftovers.extend(self.0.queue.lock_recover().drain());
             for job in leftovers {
                 job.slot.deliver(Err(anyhow!(
                     "scheduler stopped before flare '{}' was placed",
@@ -1023,10 +1018,10 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // Batched admission: adopt every flare submitted since the
             // last pass in one queue lock (in submission order), instead
             // of paying a queue-lock acquisition per submit.
-            let batch = std::mem::take(&mut *state.inbox.lock().unwrap());
+            let batch = std::mem::take(&mut *state.inbox.lock());
             if !batch.is_empty() {
                 state.admitted.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                let mut q = state.queue.lock().unwrap();
+                let mut q = state.queue.lock();
                 for job in batch {
                     if job.after.is_empty() {
                         q.push(job);
@@ -1048,8 +1043,7 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
             // dead, and fail over their flares.
             c.node_maintenance();
             loop {
-                let placed =
-                    state.queue.lock().unwrap().pop_placeable(c.nodes.as_ref());
+                let placed = state.queue.lock().pop_placeable(c.nodes.as_ref());
                 match placed {
                     Some((job, placement)) => {
                         Controller::spawn_execution(&c, job, placement, &state)
@@ -1068,16 +1062,13 @@ pub(crate) fn scheduler_loop(state: Arc<SchedState>, controller: Weak<Controller
                 .pass_micros
                 .fetch_add(pass_started.elapsed().as_micros() as u64, Ordering::Relaxed);
         }
-        let guard = state.queue.lock().unwrap();
+        let guard = state.queue.lock();
         if state.shutdown.load(Ordering::Acquire) {
             break;
         }
         if !state.dirty.swap(false, Ordering::AcqRel) {
             // Timeout bounds the window of any missed wake-up.
-            let _ = state
-                .cv
-                .wait_timeout(guard, Duration::from_millis(25))
-                .unwrap();
+            let _ = guard.wait_timeout(&state.cv, Duration::from_millis(25));
         }
     }
 }

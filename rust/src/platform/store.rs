@@ -73,7 +73,7 @@ use std::collections::BTreeMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -81,6 +81,7 @@ use anyhow::{anyhow, Context, Result};
 use super::db::BurstConfig;
 use crate::util::bytes::{crc32, from_base64};
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// WAL entries accumulated before the state is compacted into a snapshot
 /// and the log truncated.
@@ -315,7 +316,7 @@ impl Inner {
 /// "≤ interval" only under steady traffic.
 struct Flusher {
     /// `(stopped, wake)`: set + notify to shut the thread down.
-    stop: Arc<(Mutex<bool>, Condvar)>,
+    stop: Arc<(RankedMutex<bool>, Condvar)>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -323,9 +324,9 @@ struct Flusher {
 pub struct DurableStore {
     dir: PathBuf,
     snapshot_threshold: usize,
-    inner: Arc<Mutex<Inner>>,
+    inner: Arc<RankedMutex<Inner>>,
     /// Live timer flusher while the policy is `Group` (see [`Flusher`]).
-    flusher: Mutex<Option<Flusher>>,
+    flusher: RankedMutex<Option<Flusher>>,
     /// Orphaned side-files deleted by the open-time sweep (observability).
     swept_ckpt_files: usize,
 }
@@ -499,8 +500,8 @@ impl DurableStore {
         Ok(DurableStore {
             dir: dir.to_path_buf(),
             snapshot_threshold,
-            inner: Arc::new(Mutex::new(inner)),
-            flusher: Mutex::new(None),
+            inner: Arc::new(RankedMutex::new(LockRank::StoreInner, inner)),
+            flusher: RankedMutex::new(LockRank::StoreFlusher, None),
             swept_ckpt_files: swept,
         })
     }
@@ -530,7 +531,7 @@ impl DurableStore {
     /// [`DurableStore::open`] this is exactly what the previous process
     /// left on disk — the input to `Controller::recover`'s replay.
     pub fn loaded(&self) -> LoadedState {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         let mut checkpoints = Vec::new();
         let mut bad_payloads = 0usize;
         for (flare_id, by_worker) in &inner.checkpoints {
@@ -566,7 +567,7 @@ impl DurableStore {
 
     /// WAL entries since the last snapshot (observability / tests).
     pub fn wal_entries(&self) -> usize {
-        self.inner.lock().unwrap().wal_entries
+        self.inner.lock().wal_entries
     }
 
     /// Orphaned checkpoint side-files deleted by the open-time sweep.
@@ -578,7 +579,7 @@ impl DurableStore {
     /// the historical flush-only behavior). Switching to `Group` starts the
     /// timer flusher; switching away stops it.
     pub fn set_fsync_policy(&self, policy: FsyncPolicy) {
-        self.inner.lock().unwrap().fsync = policy;
+        self.inner.lock().fsync = policy;
         self.stop_flusher();
         if let FsyncPolicy::Group(interval) = policy {
             self.spawn_flusher(interval);
@@ -591,7 +592,7 @@ impl DurableStore {
     /// next append to piggyback on.
     fn spawn_flusher(&self, interval: Duration) {
         let interval = interval.max(Duration::from_millis(1));
-        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop = Arc::new((RankedMutex::new(LockRank::StoreStop, false), Condvar::new()));
         let thread_stop = stop.clone();
         let inner = self.inner.clone();
         let join = std::thread::Builder::new()
@@ -599,14 +600,12 @@ impl DurableStore {
             .spawn(move || loop {
                 {
                     let (lock, cv) = &*thread_stop;
-                    let (stopped, _) = cv
-                        .wait_timeout(lock.lock().unwrap(), interval)
-                        .unwrap();
+                    let (stopped, _) = lock.lock().wait_timeout(cv, interval);
                     if *stopped {
                         return;
                     }
                 }
-                let mut inner = inner.lock().unwrap();
+                let mut inner = inner.lock();
                 if inner.dirty && matches!(inner.fsync, FsyncPolicy::Group(_)) {
                     if inner.wal.sync_data().is_ok() {
                         inner.fsyncs += 1;
@@ -616,14 +615,14 @@ impl DurableStore {
                 }
             })
             .expect("spawning WAL flusher thread");
-        *self.flusher.lock().unwrap() = Some(Flusher { stop, join: Some(join) });
+        *self.flusher.lock() = Some(Flusher { stop, join: Some(join) });
     }
 
     fn stop_flusher(&self) {
-        let Some(mut flusher) = self.flusher.lock().unwrap().take() else { return };
+        let Some(mut flusher) = self.flusher.lock().take() else { return };
         {
             let (lock, cv) = &*flusher.stop;
-            *lock.lock().unwrap() = true;
+            *lock.lock() = true;
             cv.notify_all();
         }
         if let Some(join) = flusher.join.take() {
@@ -633,7 +632,7 @@ impl DurableStore {
 
     /// Lifetime count of WAL `fdatasync` calls (observability / tests).
     pub fn fsyncs(&self) -> u64 {
-        self.inner.lock().unwrap().fsyncs
+        self.inner.lock().fsyncs
     }
 
     // --- WAL entry constructors ---
@@ -736,7 +735,7 @@ impl DurableStore {
         epoch: u64,
         data: &[u8],
     ) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let file = ckpt_file_name(flare_id);
         let path = self.dir.join(CKPT_DIR).join(&file);
         let mut f = OpenOptions::new()
@@ -764,7 +763,7 @@ impl DurableStore {
     /// always exactly one line), fsynced per the policy, then compacted if
     /// the log grew past the threshold.
     fn append(&self, entry: Json) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         self.append_locked(&mut inner, entry)
     }
 
@@ -832,7 +831,7 @@ impl DurableStore {
     /// (recovery calls this after replay so repeated restarts do not
     /// re-accumulate replayed entries).
     pub fn force_snapshot(&self) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         self.snapshot_locked(&mut inner)
     }
 

@@ -11,12 +11,12 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::sync::{LockRank, RankedMutex};
 
 /// Parsed artifact manifest (written by `make artifacts`).
 #[derive(Debug, Clone)]
@@ -245,13 +245,14 @@ impl EnginePool {
     }
 }
 
-static GLOBAL_POOL: Mutex<Option<std::sync::Arc<EnginePool>>> = Mutex::new(None);
+static GLOBAL_POOL: RankedMutex<Option<std::sync::Arc<EnginePool>>> =
+    RankedMutex::new(LockRank::Leaf, None);
 
 /// The process-wide engine pool, created on first use from
 /// `$BURSTC_ARTIFACTS` (default `./artifacts`), with `$BURSTC_ENGINES`
 /// engine threads (default 1 — this image has a single CPU).
 pub fn global_pool() -> Result<std::sync::Arc<EnginePool>> {
-    let mut g = GLOBAL_POOL.lock().unwrap();
+    let mut g = GLOBAL_POOL.lock();
     if let Some(p) = g.as_ref() {
         return Ok(p.clone());
     }

@@ -8,18 +8,19 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::cluster::netmodel::NetParams;
 use crate::cluster::tokenbucket::TokenBucket;
+use crate::util::sync::{LockRank, RankedMutex, RankedRwLock};
 use crate::util::timing::{precise_sleep, secs_f64};
 
 /// Simulated object store.
 pub struct ObjectStore {
     params: NetParams,
-    objects: RwLock<HashMap<String, Arc<Vec<u8>>>>,
+    objects: RankedRwLock<HashMap<String, Arc<Vec<u8>>>>,
     get_rate: TokenBucket,
     put_rate: TokenBucket,
     pub stats: StoreStats,
@@ -43,7 +44,7 @@ impl ObjectStore {
             get_rate: TokenBucket::new(params.s3_get_rate / scale, params.s3_get_rate),
             put_rate: TokenBucket::new(params.s3_put_rate / scale, params.s3_put_rate),
             params,
-            objects: RwLock::new(HashMap::new()),
+            objects: RankedRwLock::new(LockRank::Leaf, HashMap::new()),
             stats: StoreStats::default(),
         })
     }
@@ -59,7 +60,7 @@ impl ObjectStore {
         self.serve(self.params.s3_put_latency_s, data.len());
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
-        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data));
+        self.objects.write().insert(key.to_string(), Arc::new(data));
     }
 
     /// GET a whole object over one connection.
@@ -68,7 +69,6 @@ impl ObjectStore {
         let obj = self
             .objects
             .read()
-            .unwrap()
             .get(key)
             .cloned()
             .ok_or_else(|| anyhow!("no such key: {key}"))?;
@@ -85,7 +85,6 @@ impl ObjectStore {
         let obj = self
             .objects
             .read()
-            .unwrap()
             .get(key)
             .cloned()
             .ok_or_else(|| anyhow!("no such key: {key}"))?;
@@ -109,7 +108,7 @@ impl ObjectStore {
             return Ok(self.get(key)?.as_ref().clone());
         }
         let chunk = total.div_ceil(conns);
-        let out = Mutex::new(vec![0u8; total]);
+        let out = RankedMutex::new(LockRank::Leaf, vec![0u8; total]);
         std::thread::scope(|s| -> Result<()> {
             let mut handles = Vec::new();
             for c in 0..conns {
@@ -123,7 +122,7 @@ impl ObjectStore {
                 let out = &out;
                 handles.push(s.spawn(move || -> Result<()> {
                     let part = store.get_range(&key, off, len)?;
-                    out.lock().unwrap()[off..off + len].copy_from_slice(&part);
+                    out.lock()[off..off + len].copy_from_slice(&part);
                     Ok(())
                 }));
             }
@@ -132,26 +131,25 @@ impl ObjectStore {
             }
             Ok(())
         })?;
-        Ok(out.into_inner().unwrap())
+        Ok(out.into_inner())
     }
 
     pub fn size(&self, key: &str) -> Option<usize> {
-        self.objects.read().unwrap().get(key).map(|o| o.len())
+        self.objects.read().get(key).map(|o| o.len())
     }
 
     pub fn exists(&self, key: &str) -> bool {
-        self.objects.read().unwrap().contains_key(key)
+        self.objects.read().contains_key(key)
     }
 
     pub fn delete(&self, key: &str) {
-        self.objects.write().unwrap().remove(key);
+        self.objects.write().remove(key);
     }
 
     pub fn list_prefix(&self, prefix: &str) -> Vec<String> {
         let mut keys: Vec<String> = self
             .objects
             .read()
-            .unwrap()
             .keys()
             .filter(|k| k.starts_with(prefix))
             .cloned()
@@ -162,7 +160,7 @@ impl ObjectStore {
 
     /// Insert without paying modeled costs (test/bench setup).
     pub fn preload(&self, key: &str, data: Vec<u8>) {
-        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data));
+        self.objects.write().insert(key.to_string(), Arc::new(data));
     }
 }
 

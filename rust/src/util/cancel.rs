@@ -48,7 +48,9 @@
 //!   performs no `Arc<Waker>` allocation per (mailbox, token) pair.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Weak};
+
+use crate::util::sync::{LockRank, RankedMutex};
 
 const USER: u8 = 1 << 0;
 const PREEMPT: u8 = 1 << 1;
@@ -119,10 +121,18 @@ impl CancelReason {
     }
 }
 
-#[derive(Default)]
 struct Inner {
     bits: AtomicU8,
-    wakers: Mutex<Vec<WakerEntry>>,
+    wakers: RankedMutex<Vec<WakerEntry>>,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            bits: AtomicU8::new(0),
+            wakers: RankedMutex::new(LockRank::TokenWakers, Vec::new()),
+        }
+    }
 }
 
 impl std::fmt::Debug for Inner {
@@ -153,7 +163,7 @@ impl CancelToken {
     /// immediately (register-then-check still recommended for waiters).
     pub fn register_waker(&self, waker: &Arc<Waker>) {
         {
-            let mut ws = self.0.wakers.lock().unwrap();
+            let mut ws = self.0.wakers.lock();
             ws.retain(WakerEntry::is_live);
             ws.push(WakerEntry::Closure(Arc::downgrade(waker)));
         }
@@ -169,7 +179,7 @@ impl CancelToken {
     /// token has already tripped.
     pub fn register_wake_target(&self, target: &Arc<dyn WakeTarget>) {
         {
-            let mut ws = self.0.wakers.lock().unwrap();
+            let mut ws = self.0.wakers.lock();
             ws.retain(WakerEntry::is_live);
             ws.push(WakerEntry::Target(Arc::downgrade(target)));
         }
@@ -184,7 +194,6 @@ impl CancelToken {
             .0
             .wakers
             .lock()
-            .unwrap()
             .iter()
             .filter_map(|w| match w {
                 WakerEntry::Closure(c) => c.upgrade().map(LiveWaker::Closure),
@@ -324,7 +333,7 @@ mod tests {
             h.fetch_add(100, Ordering::SeqCst);
         });
         t.register_waker(&live); // registration also prunes dead entries
-        assert!(t.0.wakers.lock().unwrap().len() <= 2);
+        assert!(t.0.wakers.lock().len() <= 2);
         t.cancel();
         assert_eq!(hits.load(Ordering::SeqCst), 100);
     }
@@ -364,6 +373,6 @@ mod tests {
         let live = Arc::new(CountingTarget(AtomicUsize::new(0)));
         let live_dyn: Arc<dyn WakeTarget> = live.clone();
         t.register_wake_target(&live_dyn);
-        assert!(t.0.wakers.lock().unwrap().len() <= 1);
+        assert!(t.0.wakers.lock().len() <= 1);
     }
 }

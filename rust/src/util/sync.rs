@@ -1,0 +1,893 @@
+//! Ranked lock wrappers enforcing the project's lock hierarchy.
+//!
+//! Every long-lived `Mutex`/`RwLock` in the crate is a [`RankedMutex`] /
+//! [`RankedRwLock`] carrying a static [`LockRank`]. The taxonomy — every
+//! rank, its owner module, and the nesting rationale — is documented in one
+//! authoritative place: the **Lock taxonomy** section of
+//! [`crate::platform`]'s module docs. The rule is simple:
+//!
+//! > A thread may only acquire a lock whose rank is **greater than or equal
+//! > to** every rank it already holds.
+//!
+//! Equal ranks are permitted because same-rank locks guard *parallel,
+//! disjoint* instances (the 16 flare shards, per-node invoker pools,
+//! per-worker mailboxes); ordering between distinct instances of one rank
+//! is the owner module's responsibility and none acquire siblings today.
+//!
+//! In debug/test builds (`cfg(debug_assertions)`) each thread tracks its
+//! held ranks: an out-of-order acquire panics naming **both** acquisition
+//! sites, and every observed `held → acquired` rank pair is accumulated in
+//! a process-global lock-order graph. [`cycles`] reports cycles in that
+//! graph — potential deadlocks that never actually hit — and
+//! [`write_dot_if_requested`] dumps the graph as Graphviz DOT when
+//! `BURSTC_LOCK_GRAPH=<path>` is set (the CI lock-order artifact).
+//! Release builds compile the wrappers down to plain `std::sync` with zero
+//! overhead: the guards are transparent newtypes and no tracking exists.
+//!
+//! Poisoning policy (one place instead of scattered `.unwrap()`s):
+//! mutation paths use [`RankedMutex::lock`] / [`RankedRwLock::write`],
+//! which **propagate** a poison as a panic naming the lock — a worker that
+//! observed torn state must not keep going. Read/cleanup paths use
+//! [`RankedMutex::lock_recover`] / [`RankedRwLock::read_recover`], which
+//! **recover** the inner value and log once — one worker panic must not
+//! wedge the whole control plane (the scheduler's drain-on-exit and
+//! metrics snapshots use these).
+
+use std::fmt;
+use std::sync::{Condvar, WaitTimeoutResult};
+use std::time::Duration;
+
+/// The crate-wide lock hierarchy, outermost (lowest) first. See the
+/// "Lock taxonomy" section in [`crate::platform`] for every rank's owner
+/// module and the nesting rationale. Numeric gaps are deliberate: new
+/// ranks slot in without renumbering.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum LockRank {
+    /// `util/timing.rs` — wall-clock test serialization (held across whole
+    /// tests, so it must be the outermost rank).
+    TimingTest = 0,
+    /// `platform/queue.rs` — scheduler submit inbox.
+    Inbox = 10,
+    /// `platform/controller.rs` — flares marked with a wait reason.
+    WaitMarked = 15,
+    /// `platform/controller.rs` — live cancel-token map.
+    Cancels = 20,
+    /// `platform/controller.rs` — running-flare registry.
+    Running = 25,
+    /// `platform/queue.rs` — the DRR queue (the scheduler condvar's mutex).
+    SchedQueue = 30,
+    /// `platform/node.rs` — `NodeRegistry` node map.
+    NodesMap = 35,
+    /// `platform/node.rs` — `NodeAgent` warm-invoker set.
+    WarmInvokers = 40,
+    /// `platform/invoker.rs` — `InvokerPool` free list (per node).
+    PoolFree = 45,
+    /// `platform/db.rs` — flare order index.
+    OrderIndex = 50,
+    /// `platform/db.rs` — flare record shards (parallel instances).
+    FlareShard = 55,
+    /// `platform/db.rs` — recent-terminal ring.
+    RecentIndex = 60,
+    /// `platform/db.rs` — checkpoint payloads.
+    Ckpts = 65,
+    /// `platform/db.rs` — burst definitions.
+    Defs = 70,
+    /// `platform/db.rs` — WAL drain serialization.
+    WalDrain = 75,
+    /// `platform/db.rs` — WAL staging queue.
+    WalQueue = 80,
+    /// `platform/store.rs` — flusher-thread handle.
+    StoreFlusher = 82,
+    /// `platform/store.rs` — flusher stop flag (its condvar's mutex).
+    StoreStop = 83,
+    /// `platform/store.rs` — durable store state (held across file IO).
+    StoreInner = 85,
+    /// `bcm/backend.rs` — per-token registered cancel wakers.
+    BackendRegistered = 90,
+    /// `util/cancel.rs` — cancel-token waker list.
+    TokenWakers = 95,
+    /// `bcm/mailbox.rs` — mailbox state (its condvar's mutex; per worker).
+    MailboxInner = 100,
+    /// `bcm/backends/kv.rs` — per-shard executor serialization.
+    KvExecutor = 105,
+    /// `bcm/backends/{kv,rabbitmq,s3}.rs` — backend store (condvar mutex).
+    BackendStore = 110,
+    /// `platform/queue.rs` — per-flare result slot (its condvar's mutex).
+    ResultSlot = 115,
+    /// Fine-grained innermost locks that never nest further: token
+    /// buckets, timelines, the object store, fabric scratch buffers, the
+    /// engine pool, RNGs, clocks, the blocking-pool receiver.
+    Leaf = 120,
+}
+
+impl LockRank {
+    /// Every rank, outermost first (drives the DOT node order).
+    pub const ALL: [LockRank; 26] = [
+        LockRank::TimingTest,
+        LockRank::Inbox,
+        LockRank::WaitMarked,
+        LockRank::Cancels,
+        LockRank::Running,
+        LockRank::SchedQueue,
+        LockRank::NodesMap,
+        LockRank::WarmInvokers,
+        LockRank::PoolFree,
+        LockRank::OrderIndex,
+        LockRank::FlareShard,
+        LockRank::RecentIndex,
+        LockRank::Ckpts,
+        LockRank::Defs,
+        LockRank::WalDrain,
+        LockRank::WalQueue,
+        LockRank::StoreFlusher,
+        LockRank::StoreStop,
+        LockRank::StoreInner,
+        LockRank::BackendRegistered,
+        LockRank::TokenWakers,
+        LockRank::MailboxInner,
+        LockRank::KvExecutor,
+        LockRank::BackendStore,
+        LockRank::ResultSlot,
+        LockRank::Leaf,
+    ];
+
+    pub fn level(self) -> u8 {
+        self as u8
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LockRank::TimingTest => "TimingTest",
+            LockRank::Inbox => "Inbox",
+            LockRank::WaitMarked => "WaitMarked",
+            LockRank::Cancels => "Cancels",
+            LockRank::Running => "Running",
+            LockRank::SchedQueue => "SchedQueue",
+            LockRank::NodesMap => "NodesMap",
+            LockRank::WarmInvokers => "WarmInvokers",
+            LockRank::PoolFree => "PoolFree",
+            LockRank::OrderIndex => "OrderIndex",
+            LockRank::FlareShard => "FlareShard",
+            LockRank::RecentIndex => "RecentIndex",
+            LockRank::Ckpts => "Ckpts",
+            LockRank::Defs => "Defs",
+            LockRank::WalDrain => "WalDrain",
+            LockRank::WalQueue => "WalQueue",
+            LockRank::StoreFlusher => "StoreFlusher",
+            LockRank::StoreStop => "StoreStop",
+            LockRank::StoreInner => "StoreInner",
+            LockRank::BackendRegistered => "BackendRegistered",
+            LockRank::TokenWakers => "TokenWakers",
+            LockRank::MailboxInner => "MailboxInner",
+            LockRank::KvExecutor => "KvExecutor",
+            LockRank::BackendStore => "BackendStore",
+            LockRank::ResultSlot => "ResultSlot",
+            LockRank::Leaf => "Leaf",
+        }
+    }
+
+    fn from_level(level: u8) -> Option<LockRank> {
+        LockRank::ALL.iter().copied().find(|r| r.level() == level)
+    }
+}
+
+impl fmt::Debug for LockRank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}({})", self.name(), self.level())
+    }
+}
+
+impl fmt::Display for LockRank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Debug-build tracking: per-thread held set + process-global order graph.
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod track {
+    use super::LockRank;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::panic::Location;
+
+    thread_local! {
+        /// Ranks this thread currently holds, with their acquisition sites
+        /// (acquisition order; a small vec — lock depth is single digits).
+        static HELD: RefCell<Vec<(LockRank, &'static Location<'static>)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    /// Observed `held → acquired` rank pairs with the first-seen pair of
+    /// acquisition sites. A raw `std::sync::Mutex` by necessity (tracking
+    /// the tracker would recurse); this is the one allowed raw-lock site.
+    // lint: allow(raw-lock)
+    static EDGES: std::sync::Mutex<Option<HashMap<(u8, u8), (String, String)>>> =
+        std::sync::Mutex::new(None);
+
+    fn record_edge(
+        from: LockRank,
+        from_site: &'static Location<'static>,
+        to: LockRank,
+        to_site: &'static Location<'static>,
+    ) {
+        let mut g = EDGES.lock().unwrap_or_else(|p| p.into_inner());
+        g.get_or_insert_with(HashMap::new)
+            .entry((from.level(), to.level()))
+            .or_insert_with(|| (from_site.to_string(), to_site.to_string()));
+    }
+
+    /// Check + record an acquisition. Panics (before the std lock is
+    /// touched) on an out-of-order acquire, naming both sites. The
+    /// violating edge is recorded *first*, so the cycle it creates is
+    /// visible in the graph the regression test inspects.
+    pub fn acquire(rank: LockRank, site: &'static Location<'static>) {
+        let conflict = HELD.with(|h| {
+            let held = h.borrow();
+            for &(hr, hs) in held.iter() {
+                if hr != rank {
+                    record_edge(hr, hs, rank, site);
+                }
+            }
+            held.iter().copied().find(|&(hr, _)| hr.level() > rank.level())
+        });
+        if let Some((hr, hs)) = conflict {
+            panic!(
+                "lock-order violation: acquiring {rank:?} at {site} \
+                 while holding {hr:?} acquired at {hs} \
+                 (see the Lock taxonomy in platform/mod.rs)"
+            );
+        }
+        HELD.with(|h| h.borrow_mut().push((rank, site)));
+    }
+
+    /// Drop-side bookkeeping: pop the most recent entry of this rank.
+    pub fn release(rank: LockRank) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&(r, _)| r == rank) {
+                held.remove(i);
+            }
+        });
+    }
+
+    /// Snapshot of the observed lock-order edges.
+    pub fn edges() -> Vec<((u8, u8), (String, String))> {
+        let g = EDGES.lock().unwrap_or_else(|p| p.into_inner());
+        g.as_ref()
+            .map(|m| m.iter().map(|(k, v)| (*k, v.clone())).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Observed lock-order edges as `(from, to)` rank pairs with the
+/// first-seen acquisition sites. Empty in release builds.
+pub fn lock_order_edges() -> Vec<((LockRank, LockRank), (String, String))> {
+    #[cfg(debug_assertions)]
+    {
+        track::edges()
+            .into_iter()
+            .filter_map(|((f, t), sites)| {
+                Some(((LockRank::from_level(f)?, LockRank::from_level(t)?), sites))
+            })
+            .collect()
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        Vec::new()
+    }
+}
+
+/// Cycles in the observed lock-order graph — potential deadlocks that
+/// never actually hit. Each cycle is reported once as the rank sequence
+/// `[a, b, ..., a]`. Empty in release builds and in a healthy test run.
+pub fn cycles() -> Vec<Vec<LockRank>> {
+    let mut adj: std::collections::HashMap<u8, Vec<u8>> = std::collections::HashMap::new();
+    for ((from, to), _) in lock_order_edges() {
+        adj.entry(from.level()).or_default().push(to.level());
+    }
+    let mut found: Vec<Vec<LockRank>> = Vec::new();
+    let mut done: std::collections::HashSet<u8> = std::collections::HashSet::new();
+    for &start in adj.keys() {
+        if done.contains(&start) {
+            continue;
+        }
+        // DFS from `start` looking for a path back to `start`.
+        let mut stack: Vec<(u8, usize)> = vec![(start, 0)];
+        let mut path: Vec<u8> = vec![start];
+        let mut on_path: std::collections::HashSet<u8> = [start].into_iter().collect();
+        'dfs: while let Some((node, idx)) = stack.pop() {
+            let next = adj.get(&node).and_then(|n| n.get(idx)).copied();
+            match next {
+                None => {
+                    on_path.remove(&node);
+                    path.pop();
+                }
+                Some(n) => {
+                    stack.push((node, idx + 1));
+                    if n == start {
+                        let mut cyc: Vec<LockRank> =
+                            path.iter().filter_map(|&l| LockRank::from_level(l)).collect();
+                        if let Some(first) = cyc.first().copied() {
+                            cyc.push(first);
+                        }
+                        found.push(cyc);
+                        break 'dfs; // one cycle per start node is plenty
+                    }
+                    if !on_path.contains(&n) && adj.contains_key(&n) {
+                        on_path.insert(n);
+                        path.push(n);
+                        stack.push((n, 0));
+                    }
+                }
+            }
+        }
+        done.insert(start);
+    }
+    found
+}
+
+/// Render the observed lock-order graph as Graphviz DOT (edge tooltips
+/// carry the first-seen acquisition sites; back-edges — rank inversions —
+/// are drawn red).
+pub fn lock_order_dot() -> String {
+    let mut out = String::from("digraph lock_order {\n  rankdir=TB;\n");
+    let edges = lock_order_edges();
+    let mut used: std::collections::HashSet<u8> = std::collections::HashSet::new();
+    for ((f, t), _) in &edges {
+        used.insert(f.level());
+        used.insert(t.level());
+    }
+    for r in LockRank::ALL {
+        if used.contains(&r.level()) {
+            out.push_str(&format!("  {} [label=\"{} ({})\"];\n", r.name(), r.name(), r.level()));
+        }
+    }
+    let mut sorted = edges;
+    sorted.sort_by_key(|((f, t), _)| (f.level(), t.level()));
+    for ((f, t), (fs, ts)) in sorted {
+        let color = if f.level() > t.level() { " color=red" } else { "" };
+        out.push_str(&format!(
+            "  {} -> {} [tooltip=\"{} -> {}\"{}];\n",
+            f.name(),
+            t.name(),
+            fs.replace('"', "'"),
+            ts.replace('"', "'"),
+            color
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write the lock-order DOT graph to `$BURSTC_LOCK_GRAPH` if that env var
+/// is set (CI uploads the file as an artifact). Called at test teardown by
+/// `tests/lock_order.rs`; a no-op otherwise.
+pub fn write_dot_if_requested() {
+    if let Ok(path) = std::env::var("BURSTC_LOCK_GRAPH") {
+        if !path.is_empty() {
+            let _ = std::fs::write(path, lock_order_dot());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Debug-build wrappers: tracked guards.
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod imp {
+    use super::{track, Condvar, Duration, LockRank, WaitTimeoutResult};
+    use std::ops::{Deref, DerefMut};
+    use std::panic::Location;
+    use std::sync;
+
+    pub struct RankedMutex<T> {
+        rank: LockRank,
+        inner: sync::Mutex<T>,
+    }
+
+    /// Guard over a [`RankedMutex`]. The inner std guard lives in an
+    /// `Option` so condvar waits can hand it to `Condvar::wait*` and
+    /// re-wrap the returned guard without re-entering rank tracking (the
+    /// rank stays "held" for the duration of the wait — a blocked waiter
+    /// acquires nothing, so this cannot create false edges).
+    pub struct MutexGuard<'a, T> {
+        inner: Option<sync::MutexGuard<'a, T>>,
+        rank: LockRank,
+    }
+
+    impl<T> RankedMutex<T> {
+        pub const fn new(rank: LockRank, value: T) -> RankedMutex<T> {
+            RankedMutex { rank, inner: sync::Mutex::new(value) }
+        }
+
+        pub fn rank(&self) -> LockRank {
+            self.rank
+        }
+
+        /// Lock, propagating a poison as a panic naming the lock
+        /// (mutation-path policy).
+        #[track_caller]
+        pub fn lock(&self) -> MutexGuard<'_, T> {
+            let site = Location::caller();
+            track::acquire(self.rank, site);
+            let inner = self
+                .inner
+                .lock()
+                .unwrap_or_else(|_| panic!("{:?} poisoned at {site}", self.rank));
+            MutexGuard { inner: Some(inner), rank: self.rank }
+        }
+
+        /// Lock, recovering from a poison (read/cleanup-path policy): the
+        /// inner value is taken as-is and the event logged once per call.
+        #[track_caller]
+        pub fn lock_recover(&self) -> MutexGuard<'_, T> {
+            let site = Location::caller();
+            track::acquire(self.rank, site);
+            let inner = self.inner.lock().unwrap_or_else(|p| {
+                eprintln!("recovering poisoned {:?} at {site}", self.rank);
+                p.into_inner()
+            });
+            MutexGuard { inner: Some(inner), rank: self.rank }
+        }
+
+        /// Consume the mutex, returning the inner value (panics with
+        /// context if a holder panicked — matches `.into_inner().unwrap()`).
+        #[track_caller]
+        pub fn into_inner(self) -> T {
+            self.inner
+                .into_inner()
+                .unwrap_or_else(|_| panic!("{:?} poisoned in into_inner", self.rank))
+        }
+    }
+
+    impl<T> std::fmt::Debug for RankedMutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("RankedMutex").field("rank", &self.rank).finish_non_exhaustive()
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard taken for a condvar wait")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard taken for a condvar wait")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // `inner` is `None` only mid-wait (ownership moved into the
+            // condvar); the re-wrapped guard does the final release.
+            if self.inner.is_some() {
+                track::release(self.rank);
+            }
+        }
+    }
+
+    impl<'a, T> MutexGuard<'a, T> {
+        /// Block on `cv`, atomically releasing the lock; re-locks before
+        /// returning. The rank stays held for tracking purposes.
+        pub fn wait(mut self, cv: &Condvar) -> MutexGuard<'a, T> {
+            let rank = self.rank;
+            let inner = self.inner.take().expect("guard already taken");
+            drop(self); // no release: inner is None
+            let inner = cv
+                .wait(inner)
+                .unwrap_or_else(|_| panic!("{rank:?} poisoned during condvar wait"));
+            MutexGuard { inner: Some(inner), rank }
+        }
+
+        /// [`MutexGuard::wait`] with a timeout.
+        pub fn wait_timeout(
+            mut self,
+            cv: &Condvar,
+            dur: Duration,
+        ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+            let rank = self.rank;
+            let inner = self.inner.take().expect("guard already taken");
+            drop(self);
+            let (inner, timed_out) = cv
+                .wait_timeout(inner, dur)
+                .unwrap_or_else(|_| panic!("{rank:?} poisoned during condvar wait"));
+            (MutexGuard { inner: Some(inner), rank }, timed_out)
+        }
+    }
+
+    pub struct RankedRwLock<T> {
+        rank: LockRank,
+        inner: sync::RwLock<T>,
+    }
+
+    pub struct RwLockReadGuard<'a, T> {
+        inner: Option<sync::RwLockReadGuard<'a, T>>,
+        rank: LockRank,
+    }
+
+    pub struct RwLockWriteGuard<'a, T> {
+        inner: Option<sync::RwLockWriteGuard<'a, T>>,
+        rank: LockRank,
+    }
+
+    impl<T> RankedRwLock<T> {
+        pub const fn new(rank: LockRank, value: T) -> RankedRwLock<T> {
+            RankedRwLock { rank, inner: sync::RwLock::new(value) }
+        }
+
+        pub fn rank(&self) -> LockRank {
+            self.rank
+        }
+
+        /// Shared lock, propagating a poison as a panic naming the lock.
+        #[track_caller]
+        pub fn read(&self) -> RwLockReadGuard<'_, T> {
+            let site = Location::caller();
+            track::acquire(self.rank, site);
+            let inner = self
+                .inner
+                .read()
+                .unwrap_or_else(|_| panic!("{:?} poisoned at {site}", self.rank));
+            RwLockReadGuard { inner: Some(inner), rank: self.rank }
+        }
+
+        /// Shared lock, recovering from a poison (read-path policy).
+        #[track_caller]
+        pub fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+            let site = Location::caller();
+            track::acquire(self.rank, site);
+            let inner = self.inner.read().unwrap_or_else(|p| {
+                eprintln!("recovering poisoned {:?} at {site}", self.rank);
+                p.into_inner()
+            });
+            RwLockReadGuard { inner: Some(inner), rank: self.rank }
+        }
+
+        /// Exclusive lock, propagating a poison as a panic naming the lock
+        /// (mutation-path policy).
+        #[track_caller]
+        pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+            let site = Location::caller();
+            track::acquire(self.rank, site);
+            let inner = self
+                .inner
+                .write()
+                .unwrap_or_else(|_| panic!("{:?} poisoned at {site}", self.rank));
+            RwLockWriteGuard { inner: Some(inner), rank: self.rank }
+        }
+    }
+
+    impl<T> std::fmt::Debug for RankedRwLock<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("RankedRwLock").field("rank", &self.rank).finish_non_exhaustive()
+        }
+    }
+
+    impl<T> Deref for RwLockReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("read guard taken")
+        }
+    }
+
+    impl<T> Drop for RwLockReadGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.is_some() {
+                track::release(self.rank);
+            }
+        }
+    }
+
+    impl<T> Deref for RwLockWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("write guard taken")
+        }
+    }
+
+    impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("write guard taken")
+        }
+    }
+
+    impl<T> Drop for RwLockWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.is_some() {
+                track::release(self.rank);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Release-build wrappers: transparent newtypes over std::sync, zero overhead.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(debug_assertions))]
+mod imp {
+    use super::{Condvar, Duration, LockRank, WaitTimeoutResult};
+    use std::ops::{Deref, DerefMut};
+    use std::sync;
+
+    pub struct RankedMutex<T> {
+        rank: LockRank,
+        inner: sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T>(sync::MutexGuard<'a, T>);
+
+    impl<T> RankedMutex<T> {
+        pub const fn new(rank: LockRank, value: T) -> RankedMutex<T> {
+            RankedMutex { rank, inner: sync::Mutex::new(value) }
+        }
+
+        pub fn rank(&self) -> LockRank {
+            self.rank
+        }
+
+        #[track_caller]
+        pub fn lock(&self) -> MutexGuard<'_, T> {
+            MutexGuard(
+                self.inner.lock().unwrap_or_else(|_| panic!("{:?} poisoned", self.rank)),
+            )
+        }
+
+        pub fn lock_recover(&self) -> MutexGuard<'_, T> {
+            MutexGuard(self.inner.lock().unwrap_or_else(|p| {
+                eprintln!("recovering poisoned {:?}", self.rank);
+                p.into_inner()
+            }))
+        }
+
+        #[track_caller]
+        pub fn into_inner(self) -> T {
+            self.inner
+                .into_inner()
+                .unwrap_or_else(|_| panic!("{:?} poisoned in into_inner", self.rank))
+        }
+    }
+
+    impl<T> std::fmt::Debug for RankedMutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("RankedMutex").field("rank", &self.rank).finish_non_exhaustive()
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.0
+        }
+    }
+
+    impl<'a, T> MutexGuard<'a, T> {
+        pub fn wait(self, cv: &Condvar) -> MutexGuard<'a, T> {
+            MutexGuard(cv.wait(self.0).unwrap_or_else(|_| panic!("poisoned in wait")))
+        }
+
+        pub fn wait_timeout(
+            self,
+            cv: &Condvar,
+            dur: Duration,
+        ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+            let (g, t) = cv
+                .wait_timeout(self.0, dur)
+                .unwrap_or_else(|_| panic!("poisoned in wait_timeout"));
+            (MutexGuard(g), t)
+        }
+    }
+
+    pub struct RankedRwLock<T> {
+        rank: LockRank,
+        inner: sync::RwLock<T>,
+    }
+
+    pub struct RwLockReadGuard<'a, T>(sync::RwLockReadGuard<'a, T>);
+    pub struct RwLockWriteGuard<'a, T>(sync::RwLockWriteGuard<'a, T>);
+
+    impl<T> RankedRwLock<T> {
+        pub const fn new(rank: LockRank, value: T) -> RankedRwLock<T> {
+            RankedRwLock { rank, inner: sync::RwLock::new(value) }
+        }
+
+        pub fn rank(&self) -> LockRank {
+            self.rank
+        }
+
+        #[track_caller]
+        pub fn read(&self) -> RwLockReadGuard<'_, T> {
+            RwLockReadGuard(
+                self.inner.read().unwrap_or_else(|_| panic!("{:?} poisoned", self.rank)),
+            )
+        }
+
+        pub fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+            RwLockReadGuard(self.inner.read().unwrap_or_else(|p| {
+                eprintln!("recovering poisoned {:?}", self.rank);
+                p.into_inner()
+            }))
+        }
+
+        #[track_caller]
+        pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+            RwLockWriteGuard(
+                self.inner.write().unwrap_or_else(|_| panic!("{:?} poisoned", self.rank)),
+            )
+        }
+    }
+
+    impl<T> std::fmt::Debug for RankedRwLock<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("RankedRwLock").field("rank", &self.rank).finish_non_exhaustive()
+        }
+    }
+
+    impl<T> Deref for RwLockReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    impl<T> Deref for RwLockWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.0
+        }
+    }
+}
+
+pub use imp::{MutexGuard, RankedMutex, RankedRwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_roundtrip_and_deref() {
+        let m = RankedMutex::new(LockRank::Leaf, 41);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+        assert_eq!(m.rank(), LockRank::Leaf);
+        assert_eq!(m.into_inner(), 42);
+
+        let rw = RankedRwLock::new(LockRank::Leaf, vec![1, 2]);
+        rw.write().push(3);
+        assert_eq!(rw.read().len(), 3);
+        assert_eq!(*rw.read_recover(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn in_order_nesting_is_silent() {
+        let outer = RankedMutex::new(LockRank::SchedQueue, ());
+        let inner = RankedMutex::new(LockRank::FlareShard, ());
+        let _a = outer.lock();
+        let _b = inner.lock(); // 30 -> 55: fine
+    }
+
+    #[test]
+    fn same_rank_nesting_is_allowed() {
+        // Parallel instances (db shards, per-node pools) share a rank.
+        let a = RankedMutex::new(LockRank::FlareShard, ());
+        let b = RankedMutex::new(LockRank::FlareShard, ());
+        let _a = a.lock();
+        let _b = b.lock();
+    }
+
+    #[test]
+    fn condvar_wait_timeout_keeps_rank_held() {
+        let m = Arc::new(RankedMutex::new(LockRank::MailboxInner, false));
+        let cv = Arc::new(std::sync::Condvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                let (g2, timed_out) = g.wait_timeout(&cv2, std::time::Duration::from_secs(5));
+                g = g2;
+                if timed_out.timed_out() {
+                    return false;
+                }
+            }
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        *m.lock() = true;
+        cv.notify_all();
+        assert!(t.join().unwrap(), "waiter saw the flag");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn lock_recover_recovers_a_poisoned_mutex() {
+        let m = Arc::new(RankedMutex::new(LockRank::Leaf, 7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*m.lock_recover(), 7, "value recovered after a holder panic");
+    }
+
+    /// The deadlock-regression satellite: two ranked locks acquired in
+    /// inverted order on two threads. The inverting thread panics with
+    /// both acquisition sites, and the inversion edge shows up as a cycle
+    /// in the process-global lock-order graph.
+    ///
+    /// This test deliberately pollutes this *unit-test binary's* graph
+    /// with a cycle, which is why the zero-cycle assertion lives in the
+    /// separate `tests/lock_order.rs` integration binary.
+    #[cfg(debug_assertions)]
+    #[test]
+    fn inverted_acquisition_panics_and_reports_cycle() {
+        let low = Arc::new(RankedMutex::new(LockRank::Cancels, ()));
+        let high = Arc::new(RankedMutex::new(LockRank::TokenWakers, ()));
+
+        // Thread 1: the legal order (low then high) seeds the forward edge.
+        {
+            let (low, high) = (low.clone(), high.clone());
+            std::thread::spawn(move || {
+                let _a = low.lock();
+                let _b = high.lock();
+            })
+            .join()
+            .expect("legal order must not panic");
+        }
+
+        // Thread 2: the inversion. Must panic naming both sites.
+        let res = {
+            let (low, high) = (low.clone(), high.clone());
+            std::thread::spawn(move || {
+                let _b = high.lock();
+                let _a = low.lock(); // out of order: 20 while holding 95
+            })
+            .join()
+        };
+        let err = res.expect_err("inverted acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("lock-order violation"), "{msg}");
+        assert!(msg.contains("Cancels"), "names the acquired rank: {msg}");
+        assert!(msg.contains("TokenWakers"), "names the held rank: {msg}");
+        assert!(msg.contains("sync.rs"), "carries acquisition sites: {msg}");
+
+        // Both directions were recorded, so the tracker reports the cycle.
+        let cycle = cycles()
+            .into_iter()
+            .find(|c| {
+                c.contains(&LockRank::Cancels) && c.contains(&LockRank::TokenWakers)
+            })
+            .expect("the inversion must appear as a cycle in the order graph");
+        assert!(cycle.len() >= 3, "cycle closes on itself: {cycle:?}");
+
+        // And the DOT rendering carries the red back-edge for the artifact.
+        let dot = lock_order_dot();
+        assert!(dot.contains("TokenWakers -> Cancels ["), "{dot}");
+        assert!(dot.contains("color=red"), "inversion edge is highlighted: {dot}");
+    }
+}

@@ -8,6 +8,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{LockRank, MutexGuard, RankedMutex};
+
 /// Sleep for `d` (no spinning; see module docs).
 pub fn precise_sleep(d: Duration) {
     if d.is_zero() {
@@ -23,9 +25,11 @@ pub fn secs_f64(s: f64) -> Duration {
 
 /// Serialization lock for wall-clock-sensitive tests: ratio assertions on a
 /// single-CPU box are only meaningful when contention tests don't overlap.
-pub fn timing_test_lock() -> std::sync::MutexGuard<'static, ()> {
-    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+/// Ranked lowest ([`LockRank::TimingTest`]) because a test holds it across
+/// whole workloads that acquire everything else.
+pub fn timing_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: RankedMutex<()> = RankedMutex::new(LockRank::TimingTest, ());
+    LOCK.lock_recover()
 }
 
 /// Simple stopwatch.

@@ -1,0 +1,101 @@
+//! Lock-hierarchy regression: drive a representative platform workload —
+//! deploy/flare through the scheduler, collectives over two remote
+//! backends, preemptive cancellation racing running workers — and assert
+//! the process-global lock-order graph that debug builds accumulate (see
+//! `util/sync.rs`) contains only descending-into-higher-rank edges and no
+//! cycles.
+//!
+//! The inverse case (an inverted acquisition panics and *does* report a
+//! cycle) lives in `util/sync.rs`'s unit tests, in a different process, so
+//! its deliberately poisoned graph cannot leak into this assertion.
+//!
+//! Set `BURSTC_LOCK_GRAPH=<path>` to dump the observed graph as Graphviz
+//! DOT at the end of the run (CI uploads it as an artifact).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use burstc::platform::{register_work, BurstConfig, Controller, FlareOptions};
+use burstc::util::json::Json;
+use burstc::util::sync::{cycles, lock_order_edges, write_dot_if_requested};
+
+#[test]
+fn platform_workload_produces_an_acyclic_lock_order_graph() {
+    // Collective-heavy work: a reduce + broadcast round per flare touches
+    // mailboxes, the remote backend, and the fabric scratch locks.
+    register_work(
+        "lockorder-sum",
+        Arc::new(|_p: &Json, ctx| {
+            let mine = (ctx.worker_id as u64).to_le_bytes().to_vec();
+            let fold = |a: &mut Vec<u8>, b: &[u8]| {
+                let x = u64::from_le_bytes(a[..8].try_into().unwrap());
+                let y = u64::from_le_bytes(b[..8].try_into().unwrap());
+                *a = (x + y).to_le_bytes().to_vec();
+            };
+            let reduced = ctx.reduce(0, mine, &fold)?;
+            let got = ctx.broadcast_shared(0, reduced)?;
+            let total = u64::from_le_bytes(got[..8].try_into().unwrap());
+            Ok(Json::obj(vec![("total", (total as f64).into())]))
+        }),
+    );
+    // Cancellable work: sliced spinning with a cooperative cancel point,
+    // so cancel_flare races live workers through the token-waker path.
+    register_work(
+        "lockorder-spin",
+        Arc::new(|_p: &Json, ctx| {
+            let end = Instant::now() + Duration::from_millis(80);
+            while Instant::now() < end {
+                ctx.check_cancel()?;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Ok(Json::Null)
+        }),
+    );
+
+    let c = Controller::test_platform(2, 8, 1e-6);
+    let expected: f64 = (0..8).sum::<usize>() as f64;
+    for (i, kind) in burstc::bcm::BackendKind::all().iter().take(2).enumerate() {
+        let def = format!("lo-sum-{i}");
+        c.deploy(
+            &def,
+            "lockorder-sum",
+            BurstConfig {
+                granularity: 4,
+                strategy: "homogeneous".into(),
+                backend: *kind,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let params = vec![Json::Null; 8];
+        let r = c.flare(&def, params, &FlareOptions::default()).unwrap();
+        assert_eq!(r.outputs.len(), 8);
+        let total = r.outputs[0].get("total").unwrap().as_f64().unwrap();
+        assert_eq!(total, expected, "{kind:?}");
+    }
+
+    // Cancellation racing running workers: either outcome (cancelled
+    // mid-run or completed first) is fine — the point is the lock traffic.
+    c.deploy("lo-spin", "lockorder-spin", BurstConfig::default()).unwrap();
+    let h = c.submit_flare("lo-spin", vec![Json::Null; 4], &FlareOptions::default()).unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    let _ = c.cancel_flare(&h.flare_id);
+    let _ = h.wait();
+
+    if cfg!(debug_assertions) {
+        let edges = lock_order_edges();
+        assert!(!edges.is_empty(), "the workload must have nested ranked locks");
+        for ((from, to), (from_site, to_site)) in &edges {
+            assert!(
+                from.level() < to.level(),
+                "rank inversion {from:?} -> {to:?} ({from_site} then {to_site})"
+            );
+        }
+        assert!(cycles().is_empty(), "lock-order graph has a cycle: {:?}", cycles());
+    } else {
+        // Release builds compile the tracker out entirely.
+        assert!(lock_order_edges().is_empty());
+        assert!(cycles().is_empty());
+    }
+    write_dot_if_requested();
+}

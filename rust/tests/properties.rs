@@ -194,8 +194,11 @@ fn wal_replay_reconstructs_db_contents_for_any_op_interleaving() {
                     let id = format!("f{}", g.usize(0, 12));
                     let status = *g.choice(&statuses);
                     let err = g.bool();
+                    // `set_status` (not a raw write): random picks produce
+                    // illegal transitions, which both runs must refuse
+                    // identically.
                     let apply = |r: &mut FlareRecord| {
-                        r.status = status;
+                        r.set_status(status);
                         if err {
                             r.error = Some("prop fault".into());
                         }
@@ -307,7 +310,7 @@ fn sharded_wal_replay_matches_db_under_concurrent_mutation() {
                             db.put_flare(rec);
                         } else {
                             db.update_flare(id, |r| {
-                                r.status = status;
+                                r.set_status(status);
                                 r.resume_count = r.resume_count.wrapping_add(1);
                             });
                         }
@@ -387,7 +390,9 @@ fn checkpoint_wal_replay_matches_in_memory_with_tail_corruption() {
                 // flare's checkpoints).
                 _ => {
                     let status = *g.choice(&statuses);
-                    db.update_flare(id, |r| r.status = status);
+                    db.update_flare(id, |r| {
+                        r.set_status(status);
+                    });
                 }
             }
         }

@@ -1,0 +1,654 @@
+//! Project lint: concurrency-correctness rules the compiler cannot enforce.
+//!
+//! `cargo run -p xtask -- lint` scans `rust/src` and fails (exit 1) on:
+//!
+//! * **raw-lock** — a raw `std::sync::Mutex`/`RwLock` outside
+//!   `util/sync.rs`. Every lock must be a `RankedMutex`/`RankedRwLock`
+//!   carrying a `LockRank`, or the deadlock tracker has a blind spot.
+//! * **illegal-transition** — a direct `.status =` write outside
+//!   `platform/db.rs`. Status moves must go through
+//!   `FlareRecord::set_status` / `BurstDb::update_flare`, which enforce
+//!   the one legal transition table (kept between the
+//!   `lint: transition-table-begin/end` markers in db.rs — the lint also
+//!   fails if those markers disappear).
+//! * **wal-outside-lock** — `stage_entry`/`stage_item` referenced outside
+//!   `platform/db.rs`, or declared `pub` inside it. WAL staging is only
+//!   correct under the mutated shard's write lock, so it must stay private
+//!   to the module that owns that invariant.
+//! * **blocking-in-reactor** — a blocking call (`sleep`, `wait`, blocking
+//!   reads/writes, `recv`, `join`) inside a `lint: reactor-begin/end`
+//!   region. The HTTP reactor is a single event loop; one blocked
+//!   iteration stalls every connection.
+//!
+//! Escape hatch: append `// lint: allow(<rule>)` to the offending line (or
+//! the line above it) to acknowledge a deliberate exception. `#[cfg(test)]`
+//! modules are skipped for raw-lock and illegal-transition — tests may
+//! build gates and fixtures however they like.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {}
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            return ExitCode::from(2);
+        }
+    }
+    // xtask lives at rust/xtask; the crate sources are at rust/src.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for f in &files {
+        let raw = match std::fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", f.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = f
+            .strip_prefix(&root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        violations.extend(lint_file(&rel, &raw));
+    }
+    if violations.is_empty() {
+        println!("xtask lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every rule over one file. `rel` is the path relative to `src/`
+/// (forward slashes).
+pub fn lint_file(rel: &str, raw: &str) -> Vec<Violation> {
+    let masked = mask(raw);
+    let test_spans = test_mod_spans(&masked);
+    let lines: Vec<&str> = raw.lines().collect();
+    let mut out = Vec::new();
+    rule_raw_lock(rel, raw, &masked, &test_spans, &lines, &mut out);
+    rule_illegal_transition(rel, raw, &masked, &test_spans, &lines, &mut out);
+    rule_wal_outside_lock(rel, raw, &masked, &test_spans, &lines, &mut out);
+    rule_blocking_in_reactor(rel, raw, &masked, &lines, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------- masking
+
+/// Blank out comment and string-literal contents (with spaces, preserving
+/// newlines) so token scans cannot match inside them.
+fn mask(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let mut depth = 1;
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else {
+                        out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                out.push(b' ');
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' if i + 1 < b.len() => {
+                            out.push(b' ');
+                            out.push(b' ');
+                            i += 2;
+                        }
+                        b'"' => {
+                            out.push(b' ');
+                            i += 1;
+                            break;
+                        }
+                        c => {
+                            out.push(if c == b'\n' { b'\n' } else { b' ' });
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            // Raw strings: r"..." / r#"..."# (any hash count).
+            b'r' if i + 1 < b.len()
+                && (b[i + 1] == b'"' || b[i + 1] == b'#')
+                && !prev_is_ident(b, i) =>
+            {
+                let mut j = i + 1;
+                let mut hashes = 0;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    for _ in i..=j {
+                        out.push(b' ');
+                    }
+                    i = j + 1;
+                    'raw: while i < b.len() {
+                        if b[i] == b'"' {
+                            let mut k = i + 1;
+                            let mut h = 0;
+                            while k < b.len() && b[k] == b'#' && h < hashes {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                for _ in i..k {
+                                    out.push(b' ');
+                                }
+                                i = k;
+                                break 'raw;
+                            }
+                        }
+                        out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                        i += 1;
+                    }
+                } else {
+                    out.push(b[i]);
+                    i += 1;
+                }
+            }
+            // Char literal (vs lifetime): 'x' or '\x' with a closing quote.
+            b'\'' if is_char_literal(b, i) => {
+                out.push(b' ');
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' if i + 1 < b.len() => {
+                            out.push(b' ');
+                            out.push(b' ');
+                            i += 2;
+                        }
+                        b'\'' => {
+                            out.push(b' ');
+                            i += 1;
+                            break;
+                        }
+                        c => {
+                            out.push(if c == b'\n' { b'\n' } else { b' ' });
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    // 'a' or '\n' (escape): closing quote 2 or 3 bytes on; `'a` (lifetime)
+    // has none.
+    if i + 2 < b.len() && b[i + 1] == b'\\' {
+        return true; // escaped char literal
+    }
+    i + 2 < b.len() && b[i + 2] == b'\''
+}
+
+// ---------------------------------------------------------- test-mod spans
+
+/// Byte ranges of `#[cfg(test)] mod ... { ... }` blocks (in masked text).
+fn test_mod_spans(masked: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut from = 0;
+    while let Some(off) = masked[from..].find("#[cfg(test)]") {
+        let attr = from + off;
+        from = attr + 12;
+        // Brace-match from the first `{` after the attribute (covers the
+        // following `mod tests { ... }`, or a cfg(test)-gated item).
+        let Some(open_rel) = masked[from..].find('{') else { break };
+        let open = from + open_rel;
+        let mut depth = 0usize;
+        let mut end = masked.len();
+        for (k, c) in masked[open..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = open + k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        spans.push((attr, end));
+        from = end;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], pos: usize) -> bool {
+    spans.iter().any(|&(a, b)| pos >= a && pos < b)
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn line_of(src: &str, pos: usize) -> usize {
+    src[..pos].bytes().filter(|&b| b == b'\n').count() + 1
+}
+
+/// `// lint: allow(<rule>)` on the violation line or the one above it.
+fn allowed(lines: &[&str], line: usize, rule: &str) -> bool {
+    let tag = format!("lint: allow({rule})");
+    let here = lines.get(line - 1).is_some_and(|l| l.contains(&tag));
+    let above = line >= 2 && lines.get(line - 2).is_some_and(|l| l.contains(&tag));
+    here || above
+}
+
+/// All occurrences of `token` in `masked` that stand on identifier
+/// boundaries (no `[A-Za-z0-9_]` immediately before, nor after when the
+/// token itself ends in an identifier character).
+fn token_positions(masked: &str, token: &str) -> Vec<usize> {
+    let mb = masked.as_bytes();
+    let tb = token.as_bytes();
+    // Boundary checks apply only where the token itself is identifier-like:
+    // `.wait(` starts with `.` and is always preceded by an identifier.
+    let starts_ident = tb.first().is_some_and(|&c| c.is_ascii_alphanumeric() || c == b'_');
+    let ends_ident = tb.last().is_some_and(|&c| c.is_ascii_alphanumeric() || c == b'_');
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = masked[from..].find(token) {
+        let pos = from + off;
+        from = pos + 1;
+        if starts_ident && prev_is_ident(mb, pos) {
+            continue;
+        }
+        if ends_ident {
+            let after = pos + tb.len();
+            if after < mb.len() && (mb[after].is_ascii_alphanumeric() || mb[after] == b'_') {
+                continue;
+            }
+        }
+        out.push(pos);
+    }
+    out
+}
+
+// ------------------------------------------------------------------ rules
+
+const RAW_LOCK: &str = "raw-lock";
+const ILLEGAL_TRANSITION: &str = "illegal-transition";
+const WAL_OUTSIDE_LOCK: &str = "wal-outside-lock";
+const BLOCKING_IN_REACTOR: &str = "blocking-in-reactor";
+
+fn rule_raw_lock(
+    rel: &str,
+    raw: &str,
+    masked: &str,
+    test_spans: &[(usize, usize)],
+    lines: &[&str],
+    out: &mut Vec<Violation>,
+) {
+    if rel.ends_with("util/sync.rs") {
+        return;
+    }
+    const TOKENS: &[&str] = &[
+        "std::sync::Mutex",
+        "std::sync::RwLock",
+        "Mutex::new(",
+        "RwLock::new(",
+        "Mutex<",
+        "RwLock<",
+    ];
+    let mut seen_lines = Vec::new();
+    for token in TOKENS {
+        for pos in token_positions(masked, token) {
+            if in_spans(test_spans, pos) {
+                continue;
+            }
+            let line = line_of(raw, pos);
+            if seen_lines.contains(&line) || allowed(lines, line, RAW_LOCK) {
+                continue;
+            }
+            seen_lines.push(line);
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: RAW_LOCK,
+                msg: format!(
+                    "raw `{token}` — use util::sync::RankedMutex/RankedRwLock with a LockRank"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_illegal_transition(
+    rel: &str,
+    raw: &str,
+    masked: &str,
+    test_spans: &[(usize, usize)],
+    lines: &[&str],
+    out: &mut Vec<Violation>,
+) {
+    if rel.ends_with("platform/db.rs") {
+        // The one module allowed to write `.status` raw — but only while
+        // the legal-transition table is present and marked.
+        for marker in ["lint: transition-table-begin", "lint: transition-table-end"] {
+            if !raw.contains(marker) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: 1,
+                    rule: ILLEGAL_TRANSITION,
+                    msg: format!("missing `{marker}` marker around can_transition"),
+                });
+            }
+        }
+        return;
+    }
+    for pos in token_positions(masked, ".status") {
+        // `.status =` (assignment), not `.status ==` / `.status` reads.
+        let rest = masked[pos + ".status".len()..].trim_start();
+        if rest.starts_with('=') && !rest.starts_with("==") {
+            let line = line_of(raw, pos);
+            if in_spans(test_spans, pos) || allowed(lines, line, ILLEGAL_TRANSITION) {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: ILLEGAL_TRANSITION,
+                msg: "direct `.status =` write — use FlareRecord::set_status (checked \
+                      against the transition table) via BurstDb::update_flare"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn rule_wal_outside_lock(
+    rel: &str,
+    raw: &str,
+    masked: &str,
+    test_spans: &[(usize, usize)],
+    lines: &[&str],
+    out: &mut Vec<Violation>,
+) {
+    if rel.ends_with("platform/db.rs") {
+        // Staging must stay private: a `pub` staging fn would let callers
+        // enqueue WAL entries outside the shard-lock scope that orders them.
+        for name in ["fn stage_entry", "fn stage_item"] {
+            for pos in token_positions(masked, name) {
+                let before = &masked[pos.saturating_sub(16)..pos];
+                if before.contains("pub") {
+                    let line = line_of(raw, pos);
+                    if allowed(lines, line, WAL_OUTSIDE_LOCK) {
+                        continue;
+                    }
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line,
+                        rule: WAL_OUTSIDE_LOCK,
+                        msg: format!(
+                            "`{name}` must stay private — WAL staging is only ordered \
+                             under the mutated shard's write lock"
+                        ),
+                    });
+                }
+            }
+        }
+        return;
+    }
+    for name in ["stage_entry(", "stage_item("] {
+        for pos in token_positions(masked, name) {
+            let line = line_of(raw, pos);
+            if in_spans(test_spans, pos) || allowed(lines, line, WAL_OUTSIDE_LOCK) {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: WAL_OUTSIDE_LOCK,
+                msg: format!(
+                    "`{name}..)` outside platform/db.rs — WAL staging must happen \
+                     inside db.rs under the shard write lock"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_blocking_in_reactor(
+    rel: &str,
+    raw: &str,
+    masked: &str,
+    lines: &[&str],
+    out: &mut Vec<Violation>,
+) {
+    // Region markers live in comments, so they are read from the raw lines.
+    let mut regions: Vec<(usize, usize)> = Vec::new(); // 1-based line ranges
+    let mut open: Option<usize> = None;
+    for (i, l) in lines.iter().enumerate() {
+        if l.contains("lint: reactor-begin") {
+            if open.is_some() {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: BLOCKING_IN_REACTOR,
+                    msg: "nested `lint: reactor-begin` (previous region unclosed)".into(),
+                });
+            }
+            open = Some(i + 1);
+        } else if l.contains("lint: reactor-end") {
+            match open.take() {
+                Some(b) => regions.push((b, i + 1)),
+                None => out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: BLOCKING_IN_REACTOR,
+                    msg: "`lint: reactor-end` without a matching begin".into(),
+                }),
+            }
+        }
+    }
+    if let Some(b) = open {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: b,
+            rule: BLOCKING_IN_REACTOR,
+            msg: "`lint: reactor-begin` never closed".into(),
+        });
+    }
+    if regions.is_empty() {
+        return;
+    }
+    const BLOCKING: &[&str] = &[
+        "thread::sleep",
+        "precise_sleep(",
+        "read_to_end",
+        "read_exact",
+        "write_all",
+        ".wait(",
+        ".wait_timeout(",
+        ".recv()",
+        ".join()",
+    ];
+    for token in BLOCKING {
+        for pos in token_positions(masked, token) {
+            let line = line_of(raw, pos);
+            if !regions.iter().any(|&(b, e)| line > b && line < e) {
+                continue;
+            }
+            if allowed(lines, line, BLOCKING_IN_REACTOR) {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: BLOCKING_IN_REACTOR,
+                msg: format!(
+                    "blocking call `{token}..` inside a reactor region — the event \
+                     loop must never block"
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------ tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(found: &[Violation]) -> Vec<&'static str> {
+        found.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn raw_lock_fires_on_seeded_violation() {
+        let src = "fn f() { let m = std::sync::Mutex::new(()); let _ = m; }\n";
+        let v = lint_file("platform/foo.rs", src);
+        assert!(rules(&v).contains(&RAW_LOCK), "{v:?}");
+    }
+
+    #[test]
+    fn raw_lock_ignores_ranked_wrappers_and_sync_rs() {
+        let ok = "fn f() { let m = RankedMutex::new(LockRank::Leaf, ()); let _ = m; }\n";
+        assert!(lint_file("platform/foo.rs", ok).is_empty());
+        let raw = "fn f() { let m = std::sync::Mutex::new(()); let _ = m; }\n";
+        assert!(lint_file("util/sync.rs", raw).is_empty());
+    }
+
+    #[test]
+    fn raw_lock_skips_test_mods_comments_and_allows() {
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn g() { let _ = Mutex::new(0); }\n}\n";
+        assert!(lint_file("platform/foo.rs", in_test).is_empty());
+        let in_comment = "// a Mutex::new( in prose\nfn f() {}\n";
+        assert!(lint_file("platform/foo.rs", in_comment).is_empty());
+        let escaped = "static G: std::sync::Mutex<u8> = std::sync::Mutex::new(0); // lint: allow(raw-lock)\n";
+        assert!(lint_file("platform/foo.rs", escaped).is_empty());
+    }
+
+    #[test]
+    fn illegal_transition_fires_outside_db() {
+        let src = "fn f(r: &mut FlareRecord) { r.status = FlareStatus::Completed; }\n";
+        let v = lint_file("platform/controller.rs", src);
+        assert!(rules(&v).contains(&ILLEGAL_TRANSITION), "{v:?}");
+        // Reads and comparisons are fine.
+        let ok = "fn f(r: &FlareRecord) -> bool { r.status == FlareStatus::Queued }\n";
+        assert!(lint_file("platform/controller.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn illegal_transition_requires_db_markers() {
+        let no_markers = "fn can_transition() {}\n";
+        let v = lint_file("platform/db.rs", no_markers);
+        assert_eq!(rules(&v), vec![ILLEGAL_TRANSITION, ILLEGAL_TRANSITION]);
+        let with = "// lint: transition-table-begin\nfn can_transition() {}\n// lint: transition-table-end\nfn f(r: &mut FlareRecord) { r.status = FlareStatus::Queued; }\n";
+        assert!(lint_file("platform/db.rs", with).is_empty());
+    }
+
+    #[test]
+    fn wal_staging_fires_outside_db_and_on_pub_decl() {
+        let outside = "fn f(db: &BurstDb) { db.stage_entry(Json::Null); }\n";
+        let v = lint_file("platform/controller.rs", outside);
+        assert!(rules(&v).contains(&WAL_OUTSIDE_LOCK), "{v:?}");
+        let pub_decl = "// lint: transition-table-begin\n// lint: transition-table-end\nimpl BurstDb { pub fn stage_entry(&self) {} }\n";
+        let v = lint_file("platform/db.rs", pub_decl);
+        assert!(rules(&v).contains(&WAL_OUTSIDE_LOCK), "{v:?}");
+        let private = "// lint: transition-table-begin\n// lint: transition-table-end\nimpl BurstDb { fn stage_entry(&self) {} }\n";
+        assert!(lint_file("platform/db.rs", private).is_empty());
+    }
+
+    #[test]
+    fn blocking_in_reactor_fires_inside_region_only() {
+        let bad = "// lint: reactor-begin\nfn f() { std::thread::sleep(D); }\n// lint: reactor-end\n";
+        let v = lint_file("platform/http.rs", bad);
+        assert!(rules(&v).contains(&BLOCKING_IN_REACTOR), "{v:?}");
+        let outside = "fn f() { std::thread::sleep(D); }\n";
+        assert!(lint_file("platform/http.rs", outside).is_empty());
+        let escaped = "// lint: reactor-begin\nfn f() { std::thread::sleep(D); // lint: allow(blocking-in-reactor)\n}\n// lint: reactor-end\n";
+        assert!(lint_file("platform/http.rs", escaped).is_empty());
+    }
+
+    #[test]
+    fn unbalanced_reactor_markers_are_violations() {
+        let unclosed = "// lint: reactor-begin\nfn f() {}\n";
+        assert!(rules(&lint_file("a.rs", unclosed)).contains(&BLOCKING_IN_REACTOR));
+        let stray_end = "fn f() {}\n// lint: reactor-end\n";
+        assert!(rules(&lint_file("a.rs", stray_end)).contains(&BLOCKING_IN_REACTOR));
+    }
+
+    #[test]
+    fn masking_handles_strings_and_nested_comments() {
+        let src = "let s = \"Mutex::new(\"; /* outer /* Mutex::new( */ still comment */ let c = 'x';\n";
+        let m = mask(src);
+        assert!(!m.contains("Mutex::new("), "{m}");
+        assert_eq!(m.len(), src.len());
+        assert!(lint_file("platform/foo.rs", src).is_empty());
+    }
+}
